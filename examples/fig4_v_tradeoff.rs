@@ -1,0 +1,84 @@
+//! Figure 4: the V trade-off — time-averaged energy (a, c) and
+//! time-averaged objective (b, d) vs. rounds for ν ∈ {1e3, 1e4, 1e5, 1e6}.
+//!
+//! Pure control-plane experiment (no learning needed): larger V favors
+//! the objective at the cost of slower convergence of the time-average
+//! energy toward the budget Ē — the classic Lyapunov O(1/V)/O(V) split.
+//! Runs on the full 120-device fleet over the paper horizons and averages
+//! `--repeats` seeds (paper: 30).
+//!
+//! ```text
+//! cargo run --release --example fig4_v_tradeoff -- --repeats 30
+//! ```
+
+use lroa::config::Policy;
+use lroa::fl::{Server, SimMode};
+use lroa::harness::Args;
+use lroa::metrics::{mean_series, Recorder};
+
+fn run_once(args: &Args, dataset: &str, nu: f64, seed: u64) -> lroa::Result<Recorder> {
+    let mut cfg = args.config(dataset)?;
+    cfg.control.nu = nu;
+    cfg.train.policy = Policy::Lroa;
+    cfg.train.seed = seed;
+    // Control-plane-only: use the paper horizons even in quick mode, and
+    // the paper's data density (CIFAR's 50k/120 ≈ 417 samples/device) so
+    // the energy constraint (16) actually binds — that is the regime
+    // where V matters.
+    cfg.train.rounds = args.rounds.unwrap_or(if dataset == "cifar" { 2000 } else { 1000 });
+    cfg.train.samples_per_device = (300, 500);
+    cfg.system.energy_budget_j = if dataset == "cifar" { 15.0 } else { 5.0 };
+    let mut server = Server::new(cfg, SimMode::ControlPlaneOnly)?;
+    server.run()?;
+    Ok(std::mem::take(&mut server.recorder))
+}
+
+fn main() -> lroa::Result<()> {
+    let args = Args::parse();
+    let nus = [1e3, 1e4, 1e5, 1e6];
+    for dataset in args.datasets() {
+        println!("=== fig4 ({dataset}): nu sweep, {} repeat(s) ===", args.repeats);
+        // Same budget run_once uses (paper defaults, not quick-scaled).
+        let budget = if dataset == "cifar" { 15.0 } else { 5.0 };
+
+        let mut rows: Vec<(f64, Vec<f64>, Vec<f64>)> = Vec::new();
+        for &nu in &nus {
+            let mut energy_series = Vec::new();
+            let mut objective_series = Vec::new();
+            for rep in 0..args.repeats {
+                let rec = run_once(&args, &dataset, nu, 1 + rep as u64)?;
+                energy_series.push(rec.time_avg_energy());
+                objective_series.push(rec.time_avg_objective());
+            }
+            rows.push((nu, mean_series(&energy_series), mean_series(&objective_series)));
+            let (e, o) = (rows.last().unwrap().1.last().unwrap(), rows.last().unwrap().2.last().unwrap());
+            eprintln!("[fig4] {dataset} nu={nu:.0e}: time-avg energy {e:.3} J (budget {budget} J), objective {o:.3}");
+        }
+
+        // CSV in the paper's series shape.
+        let dir = std::path::PathBuf::from("runs/fig4");
+        std::fs::create_dir_all(&dir)?;
+        let mut csv = String::from("round");
+        for &nu in &nus {
+            csv += &format!(",energy_nu{nu:.0e},objective_nu{nu:.0e}");
+        }
+        csv.push('\n');
+        let len = rows[0].1.len();
+        for t in 0..len {
+            csv += &t.to_string();
+            for (_, e, o) in &rows {
+                csv += &format!(",{:.6},{:.6}", e[t], o[t]);
+            }
+            csv.push('\n');
+        }
+        let path = dir.join(format!("{dataset}.csv"));
+        std::fs::write(&path, csv)?;
+
+        println!("\n{:<10} {:>22} {:>22}  (budget {budget} J)", "nu", "final time-avg energy", "final time-avg obj");
+        for (nu, e, o) in &rows {
+            println!("{:<10.0e} {:>22.3} {:>22.3}", nu, e.last().unwrap(), o.last().unwrap());
+        }
+        println!("series: {}\n", path.display());
+    }
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! Figures 5 & 6: impact of the sampling frequency K ∈ {2, 4, 6}.
+//!
+//! For each K, LROA and Uni-D run full training; the paper grid-searches
+//! µ ∈ {0.1, 1, 10} × ν ∈ {1e4, 1e5, 1e6} per K and reports the best
+//! time/accuracy trade-off.  Quick mode uses the default (µ=1, ν=1e5);
+//! `--grid` enables the full 3×3 search per K as in the paper.
+//!
+//! ```text
+//! cargo run --release --example fig5_6_k -- --dataset cifar
+//! cargo run --release --example fig5_6_k -- --grid --full    # paper scale
+//! ```
+
+use lroa::config::Policy;
+use lroa::fl::SimMode;
+use lroa::harness::{self, Args};
+use lroa::metrics::Recorder;
+
+fn main() -> lroa::Result<()> {
+    let args = Args::parse();
+    let grid_search = std::env::args().any(|a| a == "--grid");
+    let ks = [2usize, 4, 6];
+
+    for dataset in args.datasets() {
+        println!("=== fig5/6 ({dataset}): K sweep {ks:?}, grid={grid_search} ===");
+        let mut all: Vec<Recorder> = Vec::new();
+
+        for &k in &ks {
+            for (policy, pname) in [(Policy::Lroa, "LROA"), (Policy::UniformDynamic, "Uni-D")] {
+                let grid: Vec<(f64, f64)> = if grid_search {
+                    [0.1, 1.0, 10.0]
+                        .iter()
+                        .flat_map(|&mu| [1e4, 1e5, 1e6].iter().map(move |&nu| (mu, nu)))
+                        .collect()
+                } else {
+                    vec![(1.0, 1e5)]
+                };
+
+                // Pick the best (accuracy-filtered, min total time) as in §VII-B.3.
+                let mut best: Option<Recorder> = None;
+                for (mu, nu) in grid {
+                    let mut cfg = args.config(&dataset)?;
+                    cfg.system.k = k;
+                    cfg.control.mu = mu;
+                    cfg.control.nu = nu;
+                    let label = format!("{pname}-{dataset}-K{k}-mu{mu}-nu{nu:.0e}");
+                    let rec = harness::run_policy(cfg, policy, SimMode::Full, &label)?;
+                    let better = match &best {
+                        None => true,
+                        Some(b) => {
+                            // Accuracy within 1 point of the best seen -> prefer faster.
+                            let (ba, ra) = (b.final_accuracy(), rec.final_accuracy());
+                            ra > ba + 0.01
+                                || ((ra - ba).abs() <= 0.01 && rec.total_time_s() < b.total_time_s())
+                        }
+                    };
+                    if better {
+                        best = Some(rec);
+                    }
+                }
+                let mut rec = best.expect("at least one grid point");
+                rec.label = format!("{pname}-{dataset}-K{k}");
+                all.push(rec);
+            }
+        }
+
+        harness::save_all(&args.out_dir("fig5_6"), &all)?;
+        harness::print_series(&all);
+        println!(
+            "{:<22} {:>14} {:>12}   (expect: larger K => more time, higher final acc; LROA < Uni-D time at each K)",
+            "run", "total time [s]", "final acc"
+        );
+        for rec in &all {
+            println!("{:<22} {:>14.1} {:>12.4}", rec.label, rec.total_time_s(), rec.final_accuracy());
+        }
+        println!();
+    }
+    Ok(())
+}

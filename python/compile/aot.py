@@ -1,0 +1,138 @@
+"""AOT bridge: lower the L2 entry points to HLO text artifacts.
+
+``python -m compile.aot --out-dir ../artifacts`` writes, per model variant:
+
+    artifacts/<variant>/init.hlo.txt
+    artifacts/<variant>/train_step.hlo.txt
+    artifacts/<variant>/eval_batch.hlo.txt
+    artifacts/<variant>/aggregate.hlo.txt
+
+plus ``artifacts/manifest.json`` describing every artifact's shapes so the
+rust runtime can marshal buffers without re-deriving model geometry.
+
+Interchange format is HLO **text**, not serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly.  Lowering uses ``return_tuple=True``
+so the rust side always unwraps a tuple.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def entry_points(cfg: M.ModelConfig):
+    """(name, fn, example_args) for every exported computation of a variant."""
+    d = cfg.dim
+    h, w = cfg.input_hw
+    c = cfg.input_c
+    bt, be, km = cfg.train_batch, cfg.eval_batch, cfg.k_max
+
+    return [
+        (
+            "init",
+            lambda seed: (M.init(cfg, seed),),
+            (_spec((), jnp.int32),),
+        ),
+        (
+            "train_step",
+            lambda t, m, x, y, lr: M.train_step(cfg, t, m, x, y, lr),
+            (
+                _spec((d,)),
+                _spec((d,)),
+                _spec((bt, h, w, c)),
+                _spec((bt,), jnp.int32),
+                _spec((), jnp.float32),
+            ),
+        ),
+        (
+            "eval_batch",
+            lambda t, x, y, mask: M.eval_batch(cfg, t, x, y, mask),
+            (
+                _spec((d,)),
+                _spec((be, h, w, c)),
+                _spec((be,), jnp.int32),
+                _spec((be,)),
+            ),
+        ),
+        (
+            "aggregate",
+            lambda t, deltas, coefs: (M.aggregate(cfg, t, deltas, coefs),),
+            (_spec((d,)), _spec((km, d)), _spec((km,))),
+        ),
+    ]
+
+
+def manifest_entry(cfg: M.ModelConfig) -> dict:
+    return {
+        "dim": cfg.dim,
+        "model_bits": cfg.model_bits,
+        "input_hw": list(cfg.input_hw),
+        "input_c": cfg.input_c,
+        "num_classes": cfg.num_classes,
+        "train_batch": cfg.train_batch,
+        "eval_batch": cfg.eval_batch,
+        "k_max": cfg.k_max,
+        "layers": [
+            {"name": s.name, "shape": list(s.shape), "size": s.size}
+            for s in cfg.layers
+        ],
+        "artifacts": ["init", "train_step", "eval_batch", "aggregate"],
+    }
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--variants", default="femnist,cifar", help="comma-separated variant names"
+    )
+    args = parser.parse_args()
+
+    variants = [v for v in args.variants.split(",") if v]
+    manifest = {"format": "hlo-text", "variants": {}}
+
+    for name in variants:
+        cfg = M.VARIANTS[name]
+        out_dir = os.path.join(args.out_dir, name)
+        os.makedirs(out_dir, exist_ok=True)
+        for fn_name, fn, example in entry_points(cfg):
+            lowered = jax.jit(fn).lower(*example)
+            text = to_hlo_text(lowered)
+            path = os.path.join(out_dir, f"{fn_name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"[aot] {name}/{fn_name}: d={cfg.dim} -> {path} ({len(text)} chars)")
+        manifest["variants"][name] = manifest_entry(cfg)
+
+    man_path = os.path.join(args.out_dir, "manifest.json")
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote {man_path}")
+
+
+if __name__ == "__main__":
+    main()

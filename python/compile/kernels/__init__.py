@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels for the LROA federated-learning stack.
+
+Every kernel is authored for TPU idioms (MXU-shaped tiles, VMEM block
+schedules expressed via ``BlockSpec``) but lowered with ``interpret=True``
+so the emitted HLO runs on any PJRT backend, including the rust CPU client
+on the request path.  Correctness oracles live in :mod:`ref` and are
+enforced by ``python/tests``.
+"""
+
+from .aggregate import weighted_aggregate
+from .matmul import matmul_bias_act
+from .sgd_momentum import sgd_momentum_update
+
+__all__ = ["matmul_bias_act", "sgd_momentum_update", "weighted_aggregate"]

@@ -1,0 +1,81 @@
+"""Weighted client-delta aggregation (Pallas, eq. (4) of the paper).
+
+Server-side model aggregation under adaptive sampling:
+
+    theta' = theta + sum_k coef_k * delta_k,
+    coef_k = w_{n_k} / (K * q_{n_k})     (inverse-probability re-weighting)
+
+``deltas`` arrives stacked ``[K_max, d]``; unused slots carry ``coef = 0``
+so one compiled artifact serves every sampling frequency ``K <= K_max``.
+The kernel blocks the parameter axis and keeps the K reduction inside a
+block — a single pass over HBM (K+1 streams in, 1 out), the fusion a CUDA
+version would get from a custom reduction kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# See sgd_momentum.py: one block per call on the CPU interpret path,
+# VMEM-sized blocks under the TPU profile.
+import os as _os
+
+BLOCK = 65_536 if _os.environ.get("LROA_BLOCK_PROFILE", "cpu") == "tpu" else 1 << 21
+
+
+def _agg_kernel(theta_ref, deltas_ref, coefs_ref, o_ref):
+    # deltas block: [K_max, blk]; coefs: [K_max].  The reduction stays in
+    # VMEM registers; jnp.dot maps it onto the vector unit.
+    acc = jnp.dot(coefs_ref[...], deltas_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = theta_ref[...] + acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def weighted_aggregate(
+    theta: jax.Array,
+    deltas: jax.Array,
+    coefs: jax.Array,
+    *,
+    block: int = BLOCK,
+) -> jax.Array:
+    """``theta + coefs @ deltas`` over the flat parameter axis.
+
+    Args:
+      theta: ``[d]`` flat global model.
+      deltas: ``[K_max, d]`` stacked client model deltas.
+      coefs: ``[K_max]`` aggregation coefficients (0 for unused slots).
+
+    Returns:
+      ``[d]`` updated flat global model.
+    """
+    if theta.ndim != 1 or deltas.ndim != 2 or coefs.ndim != 1:
+        raise ValueError(f"bad ranks: t{theta.shape} d{deltas.shape} c{coefs.shape}")
+    if deltas.shape != (coefs.shape[0], theta.shape[0]):
+        raise ValueError(f"shape mismatch: t{theta.shape} d{deltas.shape} c{coefs.shape}")
+
+    d = theta.shape[0]
+    k_max = coefs.shape[0]
+    blk = min(block, d)
+    rem = (-d) % blk
+
+    theta_p = jnp.pad(theta, (0, rem)) if rem else theta
+    deltas_p = jnp.pad(deltas, ((0, 0), (0, rem))) if rem else deltas
+
+    out = pl.pallas_call(
+        _agg_kernel,
+        grid=((d + rem) // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((k_max, blk), lambda i: (0, i)),
+            pl.BlockSpec((k_max,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d + rem,), theta.dtype),
+        interpret=True,
+    )(theta_p, deltas_p, coefs)
+
+    return out[:d]

@@ -1,0 +1,143 @@
+"""Tiled matmul with fused bias + activation (Pallas, TPU-idiom).
+
+This is the compute hot-spot of every dense layer in the model's forward
+and backward passes.  The CUDA analogue would tile for shared memory and
+tensor cores; here the same insight is expressed for the TPU memory
+hierarchy:
+
+* the grid iterates over ``(M/bm, N/bn, K/bk)`` output/reduction tiles,
+* ``BlockSpec`` index maps describe the HBM -> VMEM schedule (the role
+  threadblock indexing plays on GPU),
+* partial products accumulate in an f32 VMEM scratch tile that is only
+  written back on the last reduction step (input-tile double buffering is
+  provided by the Pallas pipeline),
+* bias add + activation are fused into the epilogue so activations never
+  round-trip through HBM.
+
+Lowered with ``interpret=True``: on CPU-PJRT the kernel executes as plain
+HLO; on a real TPU the identical source compiles to a Mosaic kernel
+targeting the 128x128 MXU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes come in two profiles:
+#
+# * ``tpu`` — 128-multiple tiles sized for ~16 MB VMEM with double
+#   buffering; what the identical kernel source would use when compiled
+#   by Mosaic for the real MXU.
+# * ``cpu`` (default here) — the artifacts in this repo execute the
+#   interpret-lowered HLO on the CPU PJRT client, where every grid step
+#   pays a while-loop + dynamic-slice round trip; covering each axis with
+#   as few blocks as possible is ~14x faster end-to-end (see
+#   EXPERIMENTS.md §Perf).  ``BLOCK_M`` is set above any activation-row
+#   count we emit so the M axis is never split or padded.
+#
+# Select with LROA_BLOCK_PROFILE=tpu|cpu at AOT time.
+import os as _os
+
+if _os.environ.get("LROA_BLOCK_PROFILE", "cpu") == "tpu":
+    BLOCK_M, BLOCK_N, BLOCK_K = 256, 128, 128
+else:
+    BLOCK_M, BLOCK_N, BLOCK_K = 1 << 20, 512, 4096
+
+ACTIVATIONS = ("linear", "relu", "tanh")
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, activation: str, n_k: int):
+    """One (bm, bn) output tile; grid axis 2 walks the K reduction."""
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU-shaped partial product, accumulated in f32 regardless of input dtype.
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k_step == n_k - 1)
+    def _epilogue():
+        acc = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        if activation == "relu":
+            acc = jnp.maximum(acc, 0.0)
+        elif activation == "tanh":
+            acc = jnp.tanh(acc)
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _pad_to(x: jax.Array, multiple: int, axis: int) -> jax.Array:
+    rem = (-x.shape[axis]) % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("activation", "block_m", "block_n", "block_k")
+)
+def matmul_bias_act(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    activation: str = "linear",
+    block_m: int = BLOCK_M,
+    block_n: int = BLOCK_N,
+    block_k: int = BLOCK_K,
+) -> jax.Array:
+    """``act(x @ w + b)`` computed by the tiled Pallas kernel.
+
+    Args:
+      x: ``[M, K]`` input activations.
+      w: ``[K, N]`` weights.
+      b: ``[N]`` bias.
+      activation: one of ``linear | relu | tanh``.
+
+    Returns:
+      ``[M, N]`` activations with the dtype of ``x``.
+    """
+    if activation not in ACTIVATIONS:
+        raise ValueError(f"activation must be one of {ACTIVATIONS}, got {activation!r}")
+    if x.ndim != 2 or w.ndim != 2 or b.ndim != 1:
+        raise ValueError(f"bad ranks: x{x.shape} w{w.shape} b{b.shape}")
+    if x.shape[1] != w.shape[0] or w.shape[1] != b.shape[0]:
+        raise ValueError(f"shape mismatch: x{x.shape} w{w.shape} b{b.shape}")
+
+    m, k = x.shape
+    _, n = w.shape
+
+    # Shrink blocks for small problems so no axis pads beyond one tile.
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+
+    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(w, bk, 0), bn, 1)
+    bp = _pad_to(b, bn, 0)
+
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    n_k = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, activation=activation, n_k=n_k),
+        grid=(mp // bm, np_ // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+            pl.BlockSpec((bn,), lambda i, j, s: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        # f32 accumulator tile held in VMEM across the K reduction.
+        scratch_shapes=[pl.MemorySpace.ANY((bm, bn), jnp.float32)],
+        interpret=True,
+    )(xp, wp, bp)
+
+    return out[:m, :n]

@@ -1,0 +1,46 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the specification: the kernels in this package must match the
+oracles to float tolerance across shapes and dtypes.  ``python/tests``
+enforces the equivalence with hypothesis-driven shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_bias_act_ref(
+    x: jax.Array, w: jax.Array, b: jax.Array, *, activation: str = "linear"
+) -> jax.Array:
+    """Oracle for :func:`kernels.matmul.matmul_bias_act`."""
+    out = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)) + b.astype(jnp.float32)
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation == "tanh":
+        out = jnp.tanh(out)
+    elif activation != "linear":
+        raise ValueError(f"unknown activation {activation!r}")
+    return out.astype(x.dtype)
+
+
+def sgd_momentum_update_ref(
+    params: jax.Array,
+    momentum: jax.Array,
+    grad: jax.Array,
+    lr: jax.Array,
+    *,
+    rho: float = 0.9,
+) -> tuple[jax.Array, jax.Array]:
+    """Oracle for :func:`kernels.sgd_momentum.sgd_momentum_update`."""
+    m_new = rho * momentum + grad
+    p_new = params - lr * m_new
+    return p_new, m_new
+
+
+def weighted_aggregate_ref(
+    theta: jax.Array, deltas: jax.Array, coefs: jax.Array
+) -> jax.Array:
+    """Oracle for :func:`kernels.aggregate.weighted_aggregate`."""
+    return theta + jnp.einsum("k,kd->d", coefs, deltas).astype(theta.dtype)

@@ -1,0 +1,298 @@
+"""Layer-2 JAX model: federated CNN train/eval/aggregate steps.
+
+The paper trains a ResNet-18 on CIFAR-10 and a 6.6M-param CNN on FEMNIST.
+We substitute two compact CNNs on synthetic non-IID tasks (see
+DESIGN.md §4) with the identical federated semantics:
+
+* ``init(seed) -> theta``                      flat-parameter He init,
+* ``train_step(theta, m, x, y, lr)``           one momentum-SGD minibatch,
+* ``eval_batch(theta, x, y, mask)``            masked loss-sum / correct-count,
+* ``aggregate(theta, deltas, coefs)``          eq. (4) re-weighted aggregation.
+
+All entry points operate on the **flat** parameter vector so the rust
+coordinator treats model state as an opaque ``Vec<f32>``.
+
+Pallas is the compute hot-spot in *both* directions: every dense layer
+(including convolutions, routed through im2col patches) is a
+``custom_vjp`` whose forward and backward matmuls are the L1 Pallas
+kernel, and the optimizer update / server aggregation are the fused L1
+elementwise kernels.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.aggregate import weighted_aggregate
+from .kernels.matmul import matmul_bias_act
+from .kernels.sgd_momentum import sgd_momentum_update
+
+# ---------------------------------------------------------------------------
+# Pallas-backed dense layer with custom VJP (kernel on fwd AND bwd paths).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x: jax.Array, w: jax.Array, b: jax.Array, activation: str) -> jax.Array:
+    """``act(x @ w + b)`` via the Pallas tiled-matmul kernel."""
+    return matmul_bias_act(x, w, b, activation=activation)
+
+
+def _dense_fwd(x, w, b, activation):
+    out = matmul_bias_act(x, w, b, activation=activation)
+    return out, (x, w, out)
+
+
+def _dense_bwd(activation, res, dy):
+    x, w, out = res
+    if activation == "relu":
+        g = dy * (out > 0).astype(dy.dtype)
+    elif activation == "tanh":
+        g = dy * (1.0 - out * out)
+    else:  # linear
+        g = dy
+    zero_k = jnp.zeros((w.shape[0],), dtype=g.dtype)
+    zero_n = jnp.zeros((w.shape[1],), dtype=g.dtype)
+    # dx = g @ w.T, dw = x.T @ g — both through the Pallas kernel.
+    dx = matmul_bias_act(g, w.T, zero_k, activation="linear")
+    dw = matmul_bias_act(x.T, g, zero_n, activation="linear")
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Parameter spec / flat <-> tree plumbing.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One named parameter tensor in the flat layout."""
+
+    name: str
+    shape: tuple[int, ...]
+
+    @property
+    def size(self) -> int:
+        out = 1
+        for s in self.shape:
+            out *= s
+        return out
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture + export-time shape configuration for one variant."""
+
+    name: str
+    input_hw: tuple[int, int]
+    input_c: int
+    num_classes: int
+    conv_channels: tuple[int, ...]
+    conv_kernel: int
+    hidden: int
+    train_batch: int
+    eval_batch: int
+    k_max: int
+    layers: tuple[LayerSpec, ...] = field(default=(), compare=False)
+
+    def __post_init__(self):
+        object.__setattr__(self, "layers", tuple(self._build_layers()))
+
+    def _build_layers(self):
+        h, w = self.input_hw
+        c_in = self.input_c
+        specs = []
+        for i, c_out in enumerate(self.conv_channels):
+            k = self.conv_kernel
+            specs.append(LayerSpec(f"conv{i}_w", (k * k * c_in, c_out)))
+            specs.append(LayerSpec(f"conv{i}_b", (c_out,)))
+            # 'SAME' conv followed by 2x2 max-pool.
+            h, w = h // 2, w // 2
+            c_in = c_out
+        flat = h * w * c_in
+        specs.append(LayerSpec("fc0_w", (flat, self.hidden)))
+        specs.append(LayerSpec("fc0_b", (self.hidden,)))
+        specs.append(LayerSpec("fc1_w", (self.hidden, self.num_classes)))
+        specs.append(LayerSpec("fc1_b", (self.num_classes,)))
+        return specs
+
+    @property
+    def dim(self) -> int:
+        """Total flat parameter count ``d``."""
+        return sum(s.size for s in self.layers)
+
+    @property
+    def model_bits(self) -> int:
+        """Model update size in bits (paper's ``M = 32 d``)."""
+        return 32 * self.dim
+
+
+VARIANTS: dict[str, ModelConfig] = {
+    # FEMNIST-like: 28x28x1, 62 classes (digits+upper+lower), writer-shift
+    # non-IID.  ~114k params.
+    "femnist": ModelConfig(
+        name="femnist",
+        input_hw=(28, 28),
+        input_c=1,
+        num_classes=62,
+        conv_channels=(8, 16),
+        conv_kernel=5,
+        hidden=128,
+        train_batch=32,
+        eval_batch=64,
+        k_max=8,
+    ),
+    # CIFAR-like: 32x32x3, 10 classes, Dirichlet(0.5) label-skew.  ~140k params.
+    "cifar": ModelConfig(
+        name="cifar",
+        input_hw=(32, 32),
+        input_c=3,
+        num_classes=10,
+        conv_channels=(16, 32),
+        conv_kernel=3,
+        hidden=64,
+        train_batch=32,
+        eval_batch=64,
+        k_max=8,
+    ),
+}
+
+
+def unflatten(cfg: ModelConfig, theta: jax.Array) -> dict[str, jax.Array]:
+    """Slice the flat vector into named parameter tensors."""
+    params = {}
+    off = 0
+    for spec in cfg.layers:
+        params[spec.name] = lax.dynamic_slice_in_dim(theta, off, spec.size).reshape(
+            spec.shape
+        )
+        off += spec.size
+    return params
+
+
+def flatten_tree(cfg: ModelConfig, tree: dict[str, jax.Array]) -> jax.Array:
+    """Concatenate named tensors back into the flat layout."""
+    return jnp.concatenate([tree[s.name].reshape(-1) for s in cfg.layers])
+
+
+# ---------------------------------------------------------------------------
+# Forward pass.
+# ---------------------------------------------------------------------------
+
+
+def _conv_block(x: jax.Array, w: jax.Array, b: jax.Array, kernel: int) -> jax.Array:
+    """SAME conv (as im2col patches + Pallas dense) + ReLU + 2x2 max-pool.
+
+    ``conv_general_dilated_patches`` is a plain (differentiable) XLA data
+    movement op; all FLOPs flow through the Pallas matmul.
+    """
+    n, h, wd, c = x.shape
+    patches = lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kernel, kernel),
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # [N, H, W, C*k*k]
+    cols = patches.reshape(n * h * wd, c * kernel * kernel)
+    out = dense(cols, w, b, "relu").reshape(n, h, wd, w.shape[1])
+    # 2x2 max-pool, stride 2.
+    return lax.reduce_window(
+        out, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def forward(cfg: ModelConfig, theta: jax.Array, x: jax.Array) -> jax.Array:
+    """Logits for a batch ``x: [B, H, W, C]`` under flat params ``theta``."""
+    p = unflatten(cfg, theta)
+    h = x
+    for i in range(len(cfg.conv_channels)):
+        h = _conv_block(h, p[f"conv{i}_w"], p[f"conv{i}_b"], cfg.conv_kernel)
+    h = h.reshape(h.shape[0], -1)
+    h = dense(h, p["fc0_w"], p["fc0_b"], "relu")
+    return dense(h, p["fc1_w"], p["fc1_b"], "linear")
+
+
+def _cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Per-example cross-entropy, numerically stable."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return logz - gold
+
+
+# ---------------------------------------------------------------------------
+# Exported entry points.
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(cfg: ModelConfig, theta: jax.Array, x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.mean(_cross_entropy(forward(cfg, theta, x), y))
+
+
+def train_step(
+    cfg: ModelConfig,
+    theta: jax.Array,
+    momentum: jax.Array,
+    x: jax.Array,
+    y: jax.Array,
+    lr: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One momentum-SGD minibatch step on flat parameters.
+
+    Returns ``(theta', momentum', batch_loss)``.
+    """
+    loss, grad = jax.value_and_grad(lambda t: loss_fn(cfg, t, x, y))(theta)
+    theta_new, m_new = sgd_momentum_update(theta, momentum, grad, lr, rho=0.9)
+    return theta_new, m_new, loss
+
+
+def eval_batch(
+    cfg: ModelConfig,
+    theta: jax.Array,
+    x: jax.Array,
+    y: jax.Array,
+    mask: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Masked evaluation: ``(sum of ce loss, count of correct)`` over mask==1."""
+    logits = forward(cfg, theta, x)
+    ce = _cross_entropy(logits, y)
+    pred = jnp.argmax(logits, axis=-1)
+    loss_sum = jnp.sum(ce * mask)
+    correct = jnp.sum((pred == y).astype(jnp.float32) * mask)
+    return loss_sum, correct
+
+
+def init(cfg: ModelConfig, seed: jax.Array) -> jax.Array:
+    """He-initialized flat parameter vector from an int32 seed scalar."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for spec in cfg.layers:
+        key, sub = jax.random.split(key)
+        if spec.name.endswith("_b"):
+            chunks.append(jnp.zeros(spec.size, jnp.float32))
+        else:
+            fan_in = spec.shape[0]
+            std = jnp.sqrt(2.0 / fan_in)
+            # Damp the classifier head so initial logits are near zero and
+            # the starting loss sits at ~log(num_classes).
+            if spec.name == "fc1_w":
+                std = std * 0.1
+            chunks.append(jax.random.normal(sub, (spec.size,), jnp.float32) * std)
+    return jnp.concatenate(chunks)
+
+
+def aggregate(
+    cfg: ModelConfig, theta: jax.Array, deltas: jax.Array, coefs: jax.Array
+) -> jax.Array:
+    """Eq. (4): ``theta + sum_k coef_k * delta_k`` via the Pallas kernel."""
+    del cfg
+    return weighted_aggregate(theta, deltas, coefs)

@@ -1,0 +1,69 @@
+"""AOT pipeline: lowering works, HLO text is parseable, manifest is honest."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def femnist():
+    return M.VARIANTS["femnist"]
+
+
+def test_entry_points_cover_contract(femnist):
+    names = [name for name, _, _ in aot.entry_points(femnist)]
+    assert names == ["init", "train_step", "eval_batch", "aggregate"]
+
+
+def test_manifest_entry_is_consistent(femnist):
+    entry = aot.manifest_entry(femnist)
+    assert entry["dim"] == femnist.dim
+    assert entry["model_bits"] == 32 * femnist.dim
+    assert sum(l["size"] for l in entry["layers"]) == femnist.dim
+    json.dumps(entry)  # must be serializable
+
+
+@pytest.mark.parametrize("fn_name", ["init", "aggregate"])
+def test_small_entry_points_lower_to_hlo_text(femnist, fn_name):
+    eps = {name: (fn, ex) for name, fn, ex in aot.entry_points(femnist)}
+    fn, example = eps[fn_name]
+    lowered = jax.jit(fn).lower(*example)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule"), text[:80]
+    assert "ENTRY" in text
+
+
+def test_lowered_init_executes(femnist):
+    eps = {name: (fn, ex) for name, fn, ex in aot.entry_points(femnist)}
+    fn, _ = eps["init"]
+    (theta,) = jax.jit(fn)(jnp.int32(0))
+    assert theta.shape == (femnist.dim,)
+    assert bool(jnp.isfinite(theta).all())
+
+
+def test_artifacts_on_disk_match_manifest_if_built():
+    import os
+
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    man_path = os.path.join(root, "manifest.json")
+    if not os.path.exists(man_path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(man_path) as f:
+        man = json.load(f)
+    assert man["format"] == "hlo-text"
+    for name, entry in man["variants"].items():
+        cfg = M.VARIANTS[name]
+        assert entry["dim"] == cfg.dim
+        for fn_name in entry["artifacts"]:
+            path = os.path.join(root, name, f"{fn_name}.hlo.txt")
+            assert os.path.exists(path), path
+            with open(path) as f:
+                head = f.read(64)
+            assert head.startswith("HloModule")

@@ -1,0 +1,174 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (and the activation set) and asserts allclose
+against ref.py — the core correctness signal for the compute layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul_bias_act, sgd_momentum_update, weighted_aggregate
+from compile.kernels.ref import (
+    matmul_bias_act_ref,
+    sgd_momentum_update_ref,
+    weighted_aggregate_ref,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(jax.random.PRNGKey(key), shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul + bias + activation
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    act=st.sampled_from(["linear", "relu", "tanh"]),
+)
+def test_matmul_matches_ref_across_shapes(m, k, n, act):
+    x = rand(1, (m, k))
+    w = rand(2, (k, n))
+    b = rand(3, (n,))
+    out = matmul_bias_act(x, w, b, activation=act)
+    ref = matmul_bias_act_ref(x, w, b, activation=act)
+    assert out.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("shape", [(128, 128, 128), (65, 130, 67), (1, 1, 1), (256, 64, 32)])
+def test_matmul_block_boundary_shapes(shape):
+    m, k, n = shape
+    x = rand(4, (m, k))
+    w = rand(5, (k, n))
+    b = rand(6, (n,))
+    out = matmul_bias_act(x, w, b, activation="relu")
+    ref = matmul_bias_act_ref(x, w, b, activation="relu")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_matmul_custom_blocks():
+    x, w, b = rand(7, (100, 40)), rand(8, (40, 60)), rand(9, (60,))
+    out = matmul_bias_act(x, w, b, activation="linear", block_m=32, block_n=16, block_k=8)
+    ref = matmul_bias_act_ref(x, w, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_matmul_bf16_inputs_accumulate_in_f32():
+    x = rand(10, (64, 64), jnp.bfloat16)
+    w = rand(11, (64, 64), jnp.bfloat16)
+    b = rand(12, (64,), jnp.bfloat16)
+    out = matmul_bias_act(x, w, b, activation="linear")
+    assert out.dtype == jnp.bfloat16
+    ref = matmul_bias_act_ref(x, w, b)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=5e-2, atol=5e-2
+    )
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        matmul_bias_act(rand(1, (4, 5)), rand(2, (6, 7)), rand(3, (7,)))
+    with pytest.raises(ValueError):
+        matmul_bias_act(rand(1, (4, 5)), rand(2, (5, 7)), rand(3, (8,)))
+    with pytest.raises(ValueError):
+        matmul_bias_act(rand(1, (4, 5)), rand(2, (5, 7)), rand(3, (7,)), activation="gelu")
+
+
+# ---------------------------------------------------------------------------
+# fused SGD momentum
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    d=st.integers(1, 40_000),
+    rho=st.sampled_from([0.0, 0.5, 0.9, 0.99]),
+    lr=st.floats(1e-4, 1.0),
+)
+def test_sgd_matches_ref(d, rho, lr):
+    p = rand(20, (d,))
+    m = rand(21, (d,), scale=0.1)
+    g = rand(22, (d,), scale=0.5)
+    p2, m2 = sgd_momentum_update(p, m, g, jnp.float32(lr), rho=rho)
+    pr, mr = sgd_momentum_update_ref(p, m, g, jnp.float32(lr), rho=rho)
+    np.testing.assert_allclose(np.asarray(p2), np.asarray(pr), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(m2), np.asarray(mr), rtol=1e-6, atol=1e-6)
+
+
+def test_sgd_block_boundaries():
+    for d in [8192, 8193, 16384, 123]:
+        p, m, g = rand(23, (d,)), rand(24, (d,)), rand(25, (d,))
+        p2, m2 = sgd_momentum_update(p, m, g, jnp.float32(0.1))
+        pr, mr = sgd_momentum_update_ref(p, m, g, jnp.float32(0.1))
+        np.testing.assert_allclose(np.asarray(p2), np.asarray(pr), rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(m2), np.asarray(mr), rtol=1e-6, atol=1e-6)
+
+
+def test_sgd_lr_is_traced_not_baked():
+    # Same compiled fn must serve different lr values.
+    d = 1000
+    p, m, g = rand(26, (d,)), jnp.zeros(d), rand(27, (d,))
+    p_a, _ = sgd_momentum_update(p, m, g, jnp.float32(0.1))
+    p_b, _ = sgd_momentum_update(p, m, g, jnp.float32(0.2))
+    delta_a = np.asarray(p - p_a)
+    delta_b = np.asarray(p - p_b)
+    np.testing.assert_allclose(2 * delta_a, delta_b, rtol=1e-5, atol=1e-6)
+
+
+def test_sgd_rejects_shape_mismatch():
+    with pytest.raises(ValueError):
+        sgd_momentum_update(rand(1, (10,)), rand(2, (11,)), rand(3, (10,)), jnp.float32(0.1))
+
+
+# ---------------------------------------------------------------------------
+# weighted aggregation (eq. 4)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=st.integers(1, 30_000), k=st.integers(1, 8))
+def test_aggregate_matches_ref(d, k):
+    theta = rand(30, (d,))
+    deltas = rand(31, (k, d), scale=0.3)
+    coefs = rand(32, (k,), scale=2.0)
+    out = weighted_aggregate(theta, deltas, coefs)
+    ref = weighted_aggregate_ref(theta, deltas, coefs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_aggregate_zero_coefs_are_identity():
+    d, k = 5000, 4
+    theta = rand(33, (d,))
+    deltas = rand(34, (k, d))
+    out = weighted_aggregate(theta, deltas, jnp.zeros(k))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(theta), rtol=1e-7)
+
+
+def test_aggregate_is_linear_in_coefs():
+    d, k = 2048, 3
+    theta = jnp.zeros(d)
+    deltas = rand(35, (k, d))
+    c1 = jnp.array([1.0, 0.0, 0.0])
+    c2 = jnp.array([0.0, 2.0, 0.5])
+    a = weighted_aggregate(theta, deltas, c1)
+    b = weighted_aggregate(theta, deltas, c2)
+    ab = weighted_aggregate(theta, deltas, c1 + c2)
+    np.testing.assert_allclose(np.asarray(a + b), np.asarray(ab), rtol=1e-5, atol=1e-6)
+
+
+def test_aggregate_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        weighted_aggregate(rand(1, (10,)), rand(2, (3, 11)), rand(3, (3,)))
+    with pytest.raises(ValueError):
+        weighted_aggregate(rand(1, (10,)), rand(2, (3, 10)), rand(3, (4,)))

@@ -1,0 +1,135 @@
+"""L2 model correctness: shapes, gradients, training signal, exports."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels.ref import matmul_bias_act_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module", params=["femnist", "cifar"])
+def cfg(request):
+    return M.VARIANTS[request.param]
+
+
+def batch_for(cfg, b, seed=0):
+    h, w = cfg.input_hw
+    x = jax.random.normal(jax.random.PRNGKey(seed), (b, h, w, cfg.input_c))
+    y = jax.random.randint(jax.random.PRNGKey(seed + 1), (b,), 0, cfg.num_classes)
+    return x, y
+
+
+def test_dim_matches_layer_sum(cfg):
+    assert cfg.dim == sum(s.size for s in cfg.layers)
+    assert cfg.model_bits == 32 * cfg.dim
+
+
+def test_init_shapes_and_stats(cfg):
+    theta = M.init(cfg, jnp.int32(0))
+    assert theta.shape == (cfg.dim,)
+    p = M.unflatten(cfg, theta)
+    for spec in cfg.layers:
+        assert p[spec.name].shape == spec.shape
+        if spec.name.endswith("_b"):
+            assert float(jnp.abs(p[spec.name]).max()) == 0.0
+    # He init: weight std ~ sqrt(2/fan_in).
+    w = p["fc0_w"]
+    expect = np.sqrt(2.0 / w.shape[0])
+    assert 0.5 * expect < float(w.std()) < 1.5 * expect
+
+
+def test_flatten_unflatten_roundtrip(cfg):
+    theta = M.init(cfg, jnp.int32(3))
+    tree = M.unflatten(cfg, theta)
+    back = M.flatten_tree(cfg, tree)
+    np.testing.assert_array_equal(np.asarray(theta), np.asarray(back))
+
+
+def test_forward_shapes(cfg):
+    theta = M.init(cfg, jnp.int32(1))
+    x, _ = batch_for(cfg, 4)
+    logits = M.forward(cfg, theta, x)
+    assert logits.shape == (4, cfg.num_classes)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_initial_loss_near_log_classes(cfg):
+    theta = M.init(cfg, jnp.int32(2))
+    x, y = batch_for(cfg, 16)
+    loss = M.loss_fn(cfg, theta, x, y)
+    expect = np.log(cfg.num_classes)
+    assert 0.3 * expect < float(loss) < 3.0 * expect
+
+
+def test_dense_custom_vjp_matches_pure_jnp_grads(cfg):
+    """The Pallas-backed dense (fwd+bwd) must differentiate like jnp."""
+    key = jax.random.PRNGKey(9)
+    x = jax.random.normal(key, (6, 20))
+    w = jax.random.normal(jax.random.PRNGKey(10), (20, 8)) * 0.2
+    b = jax.random.normal(jax.random.PRNGKey(11), (8,)) * 0.1
+
+    def loss_pallas(w, b):
+        return jnp.sum(M.dense(x, w, b, "relu") ** 2)
+
+    def loss_ref(w, b):
+        return jnp.sum(matmul_bias_act_ref(x, w, b, activation="relu") ** 2)
+
+    gp = jax.grad(loss_pallas, argnums=(0, 1))(w, b)
+    gr = jax.grad(loss_ref, argnums=(0, 1))(w, b)
+    np.testing.assert_allclose(np.asarray(gp[0]), np.asarray(gr[0]), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gp[1]), np.asarray(gr[1]), rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("act", ["linear", "relu", "tanh"])
+def test_dense_activations_differentiate(act):
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 10))
+    w = jax.random.normal(jax.random.PRNGKey(1), (10, 5)) * 0.3
+    b = jnp.zeros(5)
+    g = jax.grad(lambda w: jnp.sum(M.dense(x, w, b, act)))(w)
+    assert bool(jnp.isfinite(g).all())
+    assert float(jnp.abs(g).max()) > 0.0
+
+
+def test_train_step_reduces_loss_on_fixed_batch(cfg):
+    theta = M.init(cfg, jnp.int32(5))
+    mom = jnp.zeros_like(theta)
+    x, y = batch_for(cfg, 8, seed=42)
+    losses = []
+    for _ in range(6):
+        theta, mom, loss = M.train_step(cfg, theta, mom, x, y, jnp.float32(0.05))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+def test_train_step_momentum_accumulates(cfg):
+    theta = M.init(cfg, jnp.int32(6))
+    mom = jnp.zeros_like(theta)
+    x, y = batch_for(cfg, 8)
+    _, mom1, _ = M.train_step(cfg, theta, mom, x, y, jnp.float32(0.05))
+    assert float(jnp.abs(mom1).max()) > 0.0
+
+
+def test_eval_batch_mask(cfg):
+    theta = M.init(cfg, jnp.int32(7))
+    x, y = batch_for(cfg, 10)
+    full = M.eval_batch(cfg, theta, x, y, jnp.ones(10))
+    none = M.eval_batch(cfg, theta, x, y, jnp.zeros(10))
+    half_mask = jnp.array([1.0] * 5 + [0.0] * 5)
+    half = M.eval_batch(cfg, theta, x, y, half_mask)
+    assert float(none[0]) == 0.0 and float(none[1]) == 0.0
+    assert 0.0 < float(half[0]) < float(full[0])
+    assert 0 <= float(full[1]) <= 10
+
+
+def test_aggregate_entry_point(cfg):
+    theta = M.init(cfg, jnp.int32(8))
+    k = cfg.k_max
+    deltas = jax.random.normal(jax.random.PRNGKey(12), (k, cfg.dim)) * 0.01
+    coefs = jnp.zeros(k).at[0].set(0.5).at[1].set(0.25)
+    out = M.aggregate(cfg, theta, deltas, coefs)
+    expect = theta + 0.5 * deltas[0] + 0.25 * deltas[1]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,54 @@
+//! Bench: eq. (4) aggregation — the PJRT Pallas-kernel artifact vs a
+//! native rust loop, across model sizes, plus the surrounding buffer
+//! marshalling. Shows where the server-side aggregation time goes.
+
+use lroa::bench::bencher_from_args;
+use lroa::runtime::Engine;
+
+/// Native reference: theta + sum_k coef_k * delta_k.
+fn native_aggregate(theta: &[f32], deltas: &[&[f32]], coefs: &[f32], out: &mut Vec<f32>) {
+    out.clear();
+    out.extend_from_slice(theta);
+    for (delta, &c) in deltas.iter().zip(coefs) {
+        for (o, &d) in out.iter_mut().zip(*delta) {
+            *o += c * d;
+        }
+    }
+}
+
+fn main() {
+    let mut b = bencher_from_args();
+
+    // Native aggregation across model sizes (the last is the paper's
+    // FEMNIST CNN size, 6.6M params).
+    for &d in &[111_902usize, 1_000_000, 6_603_710] {
+        let theta: Vec<f32> = (0..d).map(|i| (i as f32 * 1e-4).sin()).collect();
+        let d0: Vec<f32> = theta.iter().map(|x| x * 0.01).collect();
+        let d1: Vec<f32> = theta.iter().map(|x| x * -0.02).collect();
+        let coefs = [0.6f32, 1.2];
+        let mut out = Vec::with_capacity(d);
+        b.bench(&format!("aggregate/native/d={d}"), || {
+            native_aggregate(&theta, &[&d0, &d1], &coefs, &mut out);
+            out.len()
+        });
+    }
+
+    // PJRT kernel artifact (includes literal marshalling both ways).
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        for variant in ["femnist", "cifar"] {
+            let eng = Engine::from_dir(std::path::Path::new("artifacts"), variant).unwrap();
+            let d = eng.dim();
+            let theta: Vec<f32> = (0..d).map(|i| (i as f32 * 1e-4).sin()).collect();
+            let d0: Vec<f32> = theta.iter().map(|x| x * 0.01).collect();
+            let d1: Vec<f32> = theta.iter().map(|x| x * -0.02).collect();
+            let coefs = [0.6f32, 1.2];
+            b.bench(&format!("aggregate/pjrt-pallas/{variant}(d={d})"), || {
+                eng.aggregate(&theta, &[&d0, &d1], &coefs).unwrap()
+            });
+        }
+    } else {
+        eprintln!("artifacts missing: skipping PJRT aggregation bench");
+    }
+
+    b.report();
+}

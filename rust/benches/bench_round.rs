@@ -1,0 +1,50 @@
+//! Bench: one full simulated round (control + sampling + queues + metrics)
+//! for every policy, control-plane-only — the coordinator's request path
+//! with the PJRT compute excluded.  Plus one full-stack round (with PJRT
+//! local training) when artifacts are present.
+
+use lroa::bench::bencher_from_args;
+use lroa::config::{Config, Policy};
+use lroa::fl::{Server, SimMode};
+
+fn main() {
+    let mut b = bencher_from_args();
+
+    for policy in [
+        Policy::Lroa,
+        Policy::UniformDynamic,
+        Policy::UniformStatic,
+        Policy::DivFl,
+    ] {
+        let mut cfg = Config::for_dataset("cifar").unwrap();
+        cfg.train.policy = policy;
+        cfg.train.rounds = 1_000_000; // never reached; we drive rounds manually
+        let mut server = Server::new(cfg, SimMode::ControlPlaneOnly).unwrap();
+        let mut t = 0usize;
+        b.bench(&format!("round/control-plane/{policy}"), || {
+            server.round(t).unwrap();
+            t += 1;
+        });
+    }
+
+    // Full-stack round including PJRT local training, if artifacts exist.
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let mut cfg = Config::for_dataset("femnist").unwrap();
+        cfg.system.num_devices = 24;
+        cfg.train.policy = Policy::Lroa;
+        cfg.train.samples_per_device = (40, 80);
+        cfg.train.test_samples = 64;
+        cfg.train.rounds = 1_000_000;
+        cfg.train.eval_every = 1_000_000_007; // exclude evaluation from the loop cost
+        let mut server = Server::new(cfg, SimMode::Full).unwrap();
+        let mut t = 1usize; // t=0 would evaluate (t % eval_every == 0)
+        b.bench("round/full-stack/LROA+pjrt", || {
+            server.round(t).unwrap();
+            t += 1;
+        });
+    } else {
+        eprintln!("artifacts missing: skipping full-stack round bench");
+    }
+
+    b.report();
+}

@@ -1,0 +1,50 @@
+//! Bench: client selection — K-with-replacement categorical sampling and
+//! the DivFL greedy facility-location loop (the paper's most expensive
+//! baseline selector, O(N²·K) naive) across fleet sizes.
+
+use lroa::bench::bencher_from_args;
+use lroa::rng::Rng;
+use lroa::sampling::{sample_by_probability, DivFlState, Projector};
+
+fn main() {
+    let mut b = bencher_from_args();
+
+    for &n in &[120usize, 480, 1920] {
+        let mut rng = Rng::new(3);
+        let probs: Vec<f64> = {
+            let raw: Vec<f64> = (0..n).map(|_| rng.range(0.1, 1.0)).collect();
+            let s: f64 = raw.iter().sum();
+            raw.into_iter().map(|x| x / s).collect()
+        };
+        let weights = vec![1.0 / n as f64; n];
+        for &k in &[2usize, 6] {
+            b.bench(&format!("sample/with-replacement/N={n}/K={k}"), || {
+                sample_by_probability(&probs, &weights, k, &mut rng)
+            });
+        }
+    }
+
+    // DivFL greedy (warm state: all clients embedded).
+    for &n in &[120usize, 480] {
+        let mut st = DivFlState::new(n, 32);
+        let proj = Projector::new(32, 1);
+        let mut rng = Rng::new(5);
+        for i in 0..n {
+            let delta: Vec<f32> = (0..256).map(|_| rng.normal() as f32).collect();
+            st.observe(i, proj.project(&delta));
+        }
+        let weights = vec![1.0 / n as f64; n];
+        for &k in &[2usize, 6] {
+            b.bench(&format!("sample/divfl-greedy/N={n}/K={k}"), || {
+                st.select(&weights, k)
+            });
+        }
+    }
+
+    // Embedding projection of a full model delta.
+    let proj = Projector::new(32, 9);
+    let delta: Vec<f32> = (0..136_874).map(|i| (i as f32 * 1e-3).sin()).collect();
+    b.bench("sample/divfl-project/d=136874", || proj.project(&delta));
+
+    b.report();
+}

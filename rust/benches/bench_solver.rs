@@ -1,0 +1,54 @@
+//! Bench: Algorithm 2 (the per-round LROA solve) vs fleet size, plus the
+//! individual f/p/q blocks.  The control plane must stay far below the
+//! modeled per-round latency (seconds) — targets: << 10 ms at N = 120.
+
+use lroa::bench::bencher_from_args;
+use lroa::config::{ControlConfig, SystemConfig};
+use lroa::control::{freq, power, sum, LroaSolver};
+use lroa::rng::Rng;
+use lroa::system::Fleet;
+
+fn main() {
+    let mut b = bencher_from_args();
+    let model_bits = 32.0 * 136_874.0;
+
+    for &n in &[30usize, 120, 480, 1920] {
+        let sys = SystemConfig {
+            num_devices: n,
+            ..SystemConfig::default()
+        };
+        let mut rng = Rng::new(7);
+        let fleet = Fleet::generate(&sys, (50, 400), &mut rng);
+        let h: Vec<f64> = (0..n).map(|_| rng.range(0.01, 0.5)).collect();
+        let queues: Vec<f64> = (0..n).map(|_| rng.range(0.0, 20.0)).collect();
+        let mut solver = LroaSolver::new(sys, ControlConfig::default(), 10.0, 1e4, model_bits);
+
+        b.bench(&format!("algorithm2/N={n}"), || {
+            solver.solve_round(&fleet.devices, fleet.weights(), &h, &queues)
+        });
+    }
+
+    // Block-level breakdown at the paper's N = 120.
+    let n = 120;
+    let sys = SystemConfig::default();
+    let mut rng = Rng::new(9);
+    let fleet = Fleet::generate(&sys, (50, 400), &mut rng);
+    let h: Vec<f64> = (0..n).map(|_| rng.range(0.01, 0.5)).collect();
+    let queues: Vec<f64> = (0..n).map(|_| rng.range(0.0, 20.0)).collect();
+    let q = vec![1.0 / n as f64; n];
+    let mut out = Vec::new();
+    b.bench("block/theorem2-freq", || {
+        freq::solve_freqs(&fleet.devices, 1e4, &q, &queues, 2, &mut out)
+    });
+    b.bench("block/theorem3-power", || {
+        power::solve_powers(&fleet.devices, 1e4, &q, &h, &queues, 2, sys.noise_w, &mut out)
+    });
+    let a2: Vec<f64> = (0..n).map(|i| 10.0 + i as f64).collect();
+    let a3: Vec<f64> = fleet.weights().iter().map(|w| 1e4 * 10.0 * w * w).collect();
+    let e: Vec<f64> = queues.clone();
+    b.bench("block/sum-q", || {
+        sum::solve(&q, &a2, &a3, &e, 2, 1e-6, 1e-6, 200)
+    });
+
+    b.report();
+}

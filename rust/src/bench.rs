@@ -1,0 +1,194 @@
+//! Self-contained timing harness for `cargo bench`.
+//!
+//! The offline registry carries no `criterion`; this module provides the
+//! subset the benches need — warmup, calibrated iteration counts, robust
+//! statistics (median / p10 / p90), and aligned human-readable reporting —
+//! with zero dependencies.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    pub iters: u64,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    pub mean: Duration,
+}
+
+impl Sample {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.median.as_secs_f64()
+    }
+}
+
+/// Minimal criterion-like bench runner.
+pub struct Bencher {
+    /// Target measurement time per case.
+    pub measure_time: Duration,
+    /// Warmup time per case.
+    pub warmup_time: Duration,
+    /// Number of timed batches (statistics samples).
+    pub batches: usize,
+    results: Vec<Sample>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            measure_time: Duration::from_secs(2),
+            warmup_time: Duration::from_millis(300),
+            batches: 20,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick preset for CI / smoke runs.
+    pub fn quick() -> Self {
+        Self {
+            measure_time: Duration::from_millis(400),
+            warmup_time: Duration::from_millis(100),
+            batches: 8,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, preventing the compiler from discarding its result.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &Sample {
+        // Warmup + calibration: how many iters fit in one batch?
+        let warm_start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while warm_start.elapsed() < self.warmup_time || warm_iters < 1 {
+            std::hint::black_box(f());
+            warm_iters += 1;
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+        let batch_time = self.measure_time.as_secs_f64() / self.batches as f64;
+        let iters_per_batch = ((batch_time / per_iter).ceil() as u64).max(1);
+
+        let mut batch_means: Vec<f64> = Vec::with_capacity(self.batches);
+        for _ in 0..self.batches {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_batch {
+                std::hint::black_box(f());
+            }
+            batch_means.push(t0.elapsed().as_secs_f64() / iters_per_batch as f64);
+        }
+        batch_means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pick = |p: f64| -> Duration {
+            let idx = ((batch_means.len() - 1) as f64 * p).round() as usize;
+            Duration::from_secs_f64(batch_means[idx])
+        };
+        let mean =
+            Duration::from_secs_f64(batch_means.iter().sum::<f64>() / batch_means.len() as f64);
+        let sample = Sample {
+            name: name.to_string(),
+            iters: iters_per_batch * self.batches as u64,
+            median: pick(0.5),
+            p10: pick(0.1),
+            p90: pick(0.9),
+            mean,
+        };
+        self.results.push(sample);
+        self.results.last().unwrap()
+    }
+
+    /// Print the aligned report for all cases run so far.
+    pub fn report(&self) {
+        let width = self
+            .results
+            .iter()
+            .map(|s| s.name.len())
+            .max()
+            .unwrap_or(4)
+            .max(4);
+        println!(
+            "{:width$}  {:>12} {:>12} {:>12} {:>10}",
+            "name",
+            "median",
+            "p10",
+            "p90",
+            "iters",
+            width = width
+        );
+        for s in &self.results {
+            println!(
+                "{:width$}  {:>12} {:>12} {:>12} {:>10}",
+                s.name,
+                fmt_duration(s.median),
+                fmt_duration(s.p10),
+                fmt_duration(s.p90),
+                s.iters,
+                width = width
+            );
+        }
+    }
+
+    pub fn results(&self) -> &[Sample] {
+        &self.results
+    }
+}
+
+/// Human duration: ns/µs/ms/s with 3 significant places.
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+/// `--quick` flag helper shared by the bench binaries.
+pub fn bencher_from_args() -> Bencher {
+    if std::env::args().any(|a| a == "--quick") || std::env::var("LROA_BENCH_QUICK").is_ok() {
+        Bencher::quick()
+    } else {
+        Bencher::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher {
+            measure_time: Duration::from_millis(50),
+            warmup_time: Duration::from_millis(5),
+            batches: 4,
+            results: Vec::new(),
+        };
+        let s = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(std::hint::black_box(i) * i);
+            }
+            acc
+        });
+        assert!(s.median.as_nanos() > 0);
+        assert!(s.p10 <= s.median && s.median <= s.p90);
+        assert!(s.iters >= 4);
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert_eq!(fmt_duration(Duration::from_nanos(500)), "500ns");
+        assert_eq!(fmt_duration(Duration::from_micros(1500)), "1.50ms");
+        assert_eq!(fmt_duration(Duration::from_secs(2)), "2.00s");
+        assert!(fmt_duration(Duration::from_micros(12)).ends_with("µs"));
+    }
+}

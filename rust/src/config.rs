@@ -1,0 +1,491 @@
+//! Experiment configuration: paper §VII-A defaults, config files, CLI overrides.
+//!
+//! Format is an INI/TOML-subset (`[section]` + `key = value` lines with
+//! `#` comments), parsed without external deps.  Every knob can also be
+//! overridden on the command line as `--section.key=value`, and the
+//! effective config is dumped at the top of each run for provenance.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+use crate::Result;
+
+/// Which policy drives sampling + resource allocation (paper §VII-A).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// LROA: adaptive sampling + dynamic `f`/`p` (the paper's method).
+    Lroa,
+    /// Uni-D: uniform sampling, LROA's dynamic `f`/`p`.
+    UniformDynamic,
+    /// Uni-S: uniform sampling, static mid-power + energy-balance `f`.
+    UniformStatic,
+    /// DivFL: submodular diverse selection, static resources (as adapted in the paper).
+    DivFl,
+}
+
+impl Policy {
+    pub fn parse(s: &str) -> Result<Policy> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "lroa" => Policy::Lroa,
+            "uni-d" | "unid" | "uniform-dynamic" => Policy::UniformDynamic,
+            "uni-s" | "unis" | "uniform-static" => Policy::UniformStatic,
+            "divfl" => Policy::DivFl,
+            other => anyhow::bail!("unknown policy {other:?} (lroa|uni-d|uni-s|divfl)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Lroa => "LROA",
+            Policy::UniformDynamic => "Uni-D",
+            Policy::UniformStatic => "Uni-S",
+            Policy::DivFl => "DivFL",
+        }
+    }
+}
+
+impl fmt::Display for Policy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Mobile-edge system parameters (paper §III + §VII-A defaults).
+#[derive(Clone, Debug)]
+pub struct SystemConfig {
+    /// Number of edge devices `N`.
+    pub num_devices: usize,
+    /// Sampling frequency `K` (draws with replacement per round).
+    pub k: usize,
+    /// Local epochs `E`.
+    pub local_epochs: usize,
+    /// Total uplink bandwidth `B` [Hz].
+    pub bandwidth_hz: f64,
+    /// Background noise power `N0` [W].
+    pub noise_w: f64,
+    /// Mean of the exponential channel gain `h_n^t`.
+    pub channel_mean: f64,
+    /// Channel-gain outlier clip (paper: [0.01, 0.5]).
+    pub channel_clip: (f64, f64),
+    /// Transmit power bounds `p_min`/`p_max` [W].
+    pub p_min_w: f64,
+    pub p_max_w: f64,
+    /// CPU frequency bounds `f_min`/`f_max` [Hz].
+    pub f_min_hz: f64,
+    pub f_max_hz: f64,
+    /// Effective capacitance coefficient `alpha_n`.
+    pub alpha: f64,
+    /// CPU cycles per sample `c_n`.
+    pub cycles_per_sample: f64,
+    /// Per-device, per-round energy budget `Ē_n` [J].
+    pub energy_budget_j: f64,
+    /// Model update size `M` [bits]; 0 = take from the artifact manifest.
+    pub model_bits: f64,
+    /// Downlink rate `r_{n,d}` [bit/s]; the paper ignores download cost
+    /// ("we ignore download cost and only consider upload time"), so 0
+    /// disables the download term.
+    pub downlink_bps: f64,
+    /// Degree of *device* heterogeneity: each device's `c_n`, `alpha_n`
+    /// and bounds are scaled by Uniform[1-h, 1+h].  0 reproduces the
+    /// paper's homogeneous default ("all devices ... same communication
+    /// and computation resources, except for different channels").
+    pub hardware_spread: f64,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        // Paper §VII-A, CIFAR-10 column.
+        Self {
+            num_devices: 120,
+            k: 2,
+            local_epochs: 2,
+            bandwidth_hz: 1e6,
+            noise_w: 0.01,
+            channel_mean: 0.1,
+            channel_clip: (0.01, 0.5),
+            p_min_w: 0.001,
+            p_max_w: 0.1,
+            f_min_hz: 1.0e9,
+            f_max_hz: 2.0e9,
+            alpha: 2e-28,
+            cycles_per_sample: 3.0e9,
+            energy_budget_j: 15.0,
+            model_bits: 0.0,
+            downlink_bps: 0.0,
+            hardware_spread: 0.0,
+        }
+    }
+}
+
+impl SystemConfig {
+    /// FEMNIST column of §VII-A.
+    pub fn femnist() -> Self {
+        Self {
+            cycles_per_sample: 2.0e9,
+            energy_budget_j: 5.0,
+            ..Self::default()
+        }
+    }
+}
+
+/// LROA control knobs (paper §VI + §VII-B.1).
+#[derive(Clone, Debug)]
+pub struct ControlConfig {
+    /// λ scale factor µ (λ = µ·λ0).
+    pub mu: f64,
+    /// V scale factor ν (V = ν·V0).
+    pub nu: f64,
+    /// Explicit λ override (>0 wins over µ·λ0).
+    pub lambda_explicit: f64,
+    /// Explicit V override (>0 wins over ν·V0).
+    pub v_explicit: f64,
+    /// Outer-loop stopping tolerance ε0 (Algorithm 2).
+    pub eps_outer: f64,
+    /// SUM inner-loop stopping tolerance ε1.
+    pub eps_inner: f64,
+    /// Iteration caps (defensive; the loops converge well before these).
+    pub max_outer_iters: usize,
+    pub max_inner_iters: usize,
+    /// Probability floor keeping `q_n` in (0, 1].
+    pub q_min: f64,
+}
+
+impl Default for ControlConfig {
+    fn default() -> Self {
+        Self {
+            mu: 1.0,
+            nu: 1e5,
+            lambda_explicit: 0.0,
+            v_explicit: 0.0,
+            eps_outer: 1e-4,
+            eps_inner: 1e-6,
+            max_outer_iters: 50,
+            max_inner_iters: 200,
+            q_min: 1e-6,
+        }
+    }
+}
+
+/// Federated training loop parameters (paper §VII-A).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Model/dataset variant: `femnist` or `cifar`.
+    pub dataset: String,
+    /// Total communication rounds `T`.
+    pub rounds: usize,
+    /// Initial learning rate (paper: 0.05 CIFAR, 0.1 FEMNIST).
+    pub lr0: f64,
+    /// LR is halved at these fractions of `rounds` (paper: 50%, 75%).
+    pub lr_decay_at: (f64, f64),
+    /// Samples per synthetic device: lo..hi (uniform; FEMNIST filter is >= 50).
+    pub samples_per_device: (usize, usize),
+    /// Test-set size for global evaluation.
+    pub test_samples: usize,
+    /// Evaluate every this many rounds.
+    pub eval_every: usize,
+    /// Master seed.
+    pub seed: u64,
+    /// Policy under test.
+    pub policy: Policy,
+    /// Class-separation / noise ratio of the synthetic task (higher = easier).
+    pub data_snr: f64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            dataset: "cifar".into(),
+            rounds: 2000,
+            lr0: 0.05,
+            lr_decay_at: (0.5, 0.75),
+            samples_per_device: (50, 400),
+            test_samples: 1024,
+            eval_every: 10,
+            seed: 1,
+            policy: Policy::Lroa,
+            data_snr: 1.5,
+        }
+    }
+}
+
+/// The full experiment configuration.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    pub system: SystemConfig,
+    pub control: ControlConfig,
+    pub train: TrainConfig,
+    /// Where AOT artifacts live.
+    pub artifacts_dir: String,
+    /// Where run outputs (CSV/JSON) go.
+    pub out_dir: String,
+}
+
+impl Config {
+    /// Paper defaults for a dataset name (`cifar` | `femnist`).
+    pub fn for_dataset(dataset: &str) -> Result<Config> {
+        let mut cfg = Config {
+            artifacts_dir: "artifacts".into(),
+            out_dir: "runs".into(),
+            ..Config::default()
+        };
+        match dataset {
+            "cifar" => {
+                cfg.train.dataset = "cifar".into();
+                cfg.train.rounds = 2000;
+                cfg.train.lr0 = 0.05;
+                // 10-class label-skew task: harder SNR so accuracy climbs
+                // gradually over the horizon instead of saturating.
+                cfg.train.data_snr = 0.4;
+            }
+            "femnist" => {
+                cfg.system = SystemConfig::femnist();
+                cfg.train.dataset = "femnist".into();
+                cfg.train.rounds = 1000;
+                cfg.train.lr0 = 0.1;
+            }
+            other => anyhow::bail!("unknown dataset {other:?} (cifar|femnist)"),
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a `[section] key = value` file, over the paper defaults.
+    pub fn from_file(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)?;
+        let kvs = parse_ini(&text)?;
+        let mut cfg = match kvs.get("train.dataset").map(String::as_str) {
+            Some(ds) => Config::for_dataset(ds)?,
+            None => Config::for_dataset("cifar")?,
+        };
+        for (k, v) in &kvs {
+            cfg.set(k, v)?;
+        }
+        Ok(cfg)
+    }
+
+    /// Apply `--section.key=value` CLI overrides (skips non-config args).
+    pub fn apply_cli<S: AsRef<str>>(&mut self, args: &[S]) -> Result<()> {
+        for a in args {
+            let a = a.as_ref();
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    if k.contains('.') {
+                        self.set(k, v)?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Set one dotted key. Unknown keys are hard errors (typo safety).
+    pub fn set(&mut self, key: &str, val: &str) -> Result<()> {
+        let f = || -> Result<f64> {
+            val.parse::<f64>()
+                .map_err(|e| anyhow::anyhow!("bad float for {key}: {e}"))
+        };
+        let u = || -> Result<usize> {
+            val.parse::<usize>()
+                .map_err(|e| anyhow::anyhow!("bad int for {key}: {e}"))
+        };
+        match key {
+            "system.num_devices" => self.system.num_devices = u()?,
+            "system.k" => self.system.k = u()?,
+            "system.local_epochs" => self.system.local_epochs = u()?,
+            "system.bandwidth_hz" => self.system.bandwidth_hz = f()?,
+            "system.noise_w" => self.system.noise_w = f()?,
+            "system.channel_mean" => self.system.channel_mean = f()?,
+            "system.channel_clip_lo" => self.system.channel_clip.0 = f()?,
+            "system.channel_clip_hi" => self.system.channel_clip.1 = f()?,
+            "system.p_min_w" => self.system.p_min_w = f()?,
+            "system.p_max_w" => self.system.p_max_w = f()?,
+            "system.f_min_hz" => self.system.f_min_hz = f()?,
+            "system.f_max_hz" => self.system.f_max_hz = f()?,
+            "system.alpha" => self.system.alpha = f()?,
+            "system.cycles_per_sample" => self.system.cycles_per_sample = f()?,
+            "system.energy_budget_j" => self.system.energy_budget_j = f()?,
+            "system.model_bits" => self.system.model_bits = f()?,
+            "system.downlink_bps" => self.system.downlink_bps = f()?,
+            "system.hardware_spread" => self.system.hardware_spread = f()?,
+            "control.mu" => self.control.mu = f()?,
+            "control.nu" => self.control.nu = f()?,
+            "control.lambda" => self.control.lambda_explicit = f()?,
+            "control.v" => self.control.v_explicit = f()?,
+            "control.eps_outer" => self.control.eps_outer = f()?,
+            "control.eps_inner" => self.control.eps_inner = f()?,
+            "control.max_outer_iters" => self.control.max_outer_iters = u()?,
+            "control.max_inner_iters" => self.control.max_inner_iters = u()?,
+            "control.q_min" => self.control.q_min = f()?,
+            "train.dataset" => self.train.dataset = val.into(),
+            "train.rounds" => self.train.rounds = u()?,
+            "train.lr0" => self.train.lr0 = f()?,
+            "train.lr_decay_at_1" => self.train.lr_decay_at.0 = f()?,
+            "train.lr_decay_at_2" => self.train.lr_decay_at.1 = f()?,
+            "train.samples_lo" => self.train.samples_per_device.0 = u()?,
+            "train.samples_hi" => self.train.samples_per_device.1 = u()?,
+            "train.test_samples" => self.train.test_samples = u()?,
+            "train.eval_every" => self.train.eval_every = u()?,
+            "train.seed" => self.train.seed = val.parse()?,
+            "train.policy" => self.train.policy = Policy::parse(val)?,
+            "train.data_snr" => self.train.data_snr = f()?,
+            "run.artifacts_dir" => self.artifacts_dir = val.into(),
+            "run.out_dir" => self.out_dir = val.into(),
+            other => anyhow::bail!("unknown config key {other:?}"),
+        }
+        Ok(())
+    }
+
+    /// Sanity-check invariants before a run.
+    pub fn validate(&self) -> Result<()> {
+        let s = &self.system;
+        anyhow::ensure!(s.num_devices > 0, "num_devices must be > 0");
+        anyhow::ensure!(s.k > 0 && s.k <= s.num_devices, "need 0 < K <= N");
+        anyhow::ensure!(s.p_min_w > 0.0 && s.p_min_w <= s.p_max_w, "bad power bounds");
+        anyhow::ensure!(s.f_min_hz > 0.0 && s.f_min_hz <= s.f_max_hz, "bad freq bounds");
+        anyhow::ensure!(
+            s.channel_clip.0 > 0.0 && s.channel_clip.0 < s.channel_clip.1,
+            "bad channel clip"
+        );
+        anyhow::ensure!(s.bandwidth_hz > 0.0 && s.noise_w > 0.0, "bad B/N0");
+        anyhow::ensure!(s.energy_budget_j > 0.0, "bad energy budget");
+        let c = &self.control;
+        anyhow::ensure!(c.q_min > 0.0 && c.q_min < 1.0 / s.num_devices as f64, "bad q_min");
+        anyhow::ensure!(c.eps_outer > 0.0 && c.eps_inner > 0.0, "bad tolerances");
+        let t = &self.train;
+        anyhow::ensure!(t.rounds > 0 && t.lr0 > 0.0, "bad train params");
+        anyhow::ensure!(
+            t.samples_per_device.0 > 0 && t.samples_per_device.0 <= t.samples_per_device.1,
+            "bad samples_per_device"
+        );
+        Ok(())
+    }
+
+    /// Human/machine-readable dump of every effective knob.
+    pub fn dump(&self) -> String {
+        let s = &self.system;
+        let c = &self.control;
+        let t = &self.train;
+        format!(
+            "[system] N={} K={} E={} B={:.3e} N0={} h_mean={} clip=({},{}) p=({},{}) f=({:.2e},{:.2e}) alpha={:.2e} c_n={:.2e} Ebar={} M_bits={} spread={}\n\
+             [control] mu={} nu={} lambda*={} V*={} eps=({},{}) iters=({},{}) q_min={}\n\
+             [train] dataset={} rounds={} lr0={} decay=({},{}) samples=({},{}) test={} eval_every={} seed={} policy={} snr={}",
+            s.num_devices, s.k, s.local_epochs, s.bandwidth_hz, s.noise_w, s.channel_mean,
+            s.channel_clip.0, s.channel_clip.1, s.p_min_w, s.p_max_w, s.f_min_hz, s.f_max_hz,
+            s.alpha, s.cycles_per_sample, s.energy_budget_j, s.model_bits, s.hardware_spread,
+            c.mu, c.nu, c.lambda_explicit, c.v_explicit, c.eps_outer, c.eps_inner,
+            c.max_outer_iters, c.max_inner_iters, c.q_min,
+            t.dataset, t.rounds, t.lr0, t.lr_decay_at.0, t.lr_decay_at.1,
+            t.samples_per_device.0, t.samples_per_device.1, t.test_samples, t.eval_every,
+            t.seed, t.policy, t.data_snr,
+        )
+    }
+}
+
+/// Parse `[section]` + `key = value` lines into dotted keys.
+fn parse_ini(text: &str) -> Result<BTreeMap<String, String>> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+            section = name.trim().to_string();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        out.insert(key, v.trim().trim_matches('"').to_string());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults() {
+        let cfg = Config::for_dataset("cifar").unwrap();
+        assert_eq!(cfg.system.num_devices, 120);
+        assert_eq!(cfg.system.k, 2);
+        assert_eq!(cfg.system.local_epochs, 2);
+        assert_eq!(cfg.system.energy_budget_j, 15.0);
+        assert_eq!(cfg.system.cycles_per_sample, 3.0e9);
+        assert_eq!(cfg.train.rounds, 2000);
+        assert_eq!(cfg.train.lr0, 0.05);
+
+        let fem = Config::for_dataset("femnist").unwrap();
+        assert_eq!(fem.system.energy_budget_j, 5.0);
+        assert_eq!(fem.system.cycles_per_sample, 2.0e9);
+        assert_eq!(fem.train.rounds, 1000);
+        assert_eq!(fem.train.lr0, 0.1);
+        assert!(fem.validate().is_ok());
+    }
+
+    #[test]
+    fn ini_parse_and_set() {
+        let text = r#"
+            # comment
+            [system]
+            k = 4
+            bandwidth_hz = 2e6   # inline comment
+            [train]
+            dataset = "femnist"
+            policy = lroa
+        "#;
+        let kvs = parse_ini(text).unwrap();
+        assert_eq!(kvs.get("system.k").unwrap(), "4");
+        assert_eq!(kvs.get("train.dataset").unwrap(), "femnist");
+
+        let mut cfg = Config::for_dataset("femnist").unwrap();
+        for (k, v) in &kvs {
+            cfg.set(k, v).unwrap();
+        }
+        assert_eq!(cfg.system.k, 4);
+        assert_eq!(cfg.system.bandwidth_hz, 2e6);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut cfg = Config::for_dataset("cifar").unwrap();
+        cfg.apply_cli(&["--control.mu=10", "--train.rounds=50", "positional", "--flag"])
+            .unwrap();
+        assert_eq!(cfg.control.mu, 10.0);
+        assert_eq!(cfg.train.rounds, 50);
+    }
+
+    #[test]
+    fn unknown_key_is_error() {
+        let mut cfg = Config::default();
+        assert!(cfg.set("system.doesnotexist", "1").is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut cfg = Config::for_dataset("cifar").unwrap();
+        cfg.system.k = 0;
+        assert!(cfg.validate().is_err());
+        cfg.system.k = 500; // > N
+        assert!(cfg.validate().is_err());
+        let mut cfg2 = Config::for_dataset("cifar").unwrap();
+        cfg2.system.p_min_w = -1.0;
+        assert!(cfg2.validate().is_err());
+    }
+
+    #[test]
+    fn policy_parse() {
+        assert_eq!(Policy::parse("lroa").unwrap(), Policy::Lroa);
+        assert_eq!(Policy::parse("Uni-D").unwrap(), Policy::UniformDynamic);
+        assert_eq!(Policy::parse("uni-s").unwrap(), Policy::UniformStatic);
+        assert_eq!(Policy::parse("divfl").unwrap(), Policy::DivFl);
+        assert!(Policy::parse("nope").is_err());
+    }
+}

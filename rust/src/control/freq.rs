@@ -1,0 +1,152 @@
+//! Theorem 2: closed-form optimal CPU frequency (sub-problem P2.1.1).
+//!
+//! Per device the P2.1.1 objective is
+//! `Ω₁/f + Ω₂ f²` with `Ω₁ = V E q c D` (latency price) and
+//! `Ω₂ = ½ Q s E α c D` (energy price, `s = 1-(1-q)^K`), minimized at
+//! `f' = (Ω₁ / 2Ω₂)^{1/3} = (V q / (Q s α))^{1/3}`, clipped to
+//! `[f_min, f_max]`.
+
+use crate::system::{selection_probability, Device};
+
+/// The unclipped stationary point `(V q / (Q s α))^{1/3}`; `+inf` when the
+/// energy price `Q s` vanishes (empty queue ⇒ run flat out).
+#[inline]
+pub fn stationary_freq(v: f64, q_n: f64, queue: f64, k: usize, alpha: f64) -> f64 {
+    let sel = selection_probability(q_n, k);
+    let denom = queue * sel * alpha;
+    if denom <= 0.0 {
+        return f64::INFINITY;
+    }
+    (v * q_n / denom).cbrt()
+}
+
+/// Theorem 2 solution for one device.
+#[inline]
+pub fn optimal_freq(dev: &Device, v: f64, q_n: f64, queue: f64, k: usize) -> f64 {
+    stationary_freq(v, q_n, queue, k, dev.alpha).clamp(dev.f_min_hz, dev.f_max_hz)
+}
+
+/// Theorem 2 for the whole fleet.
+pub fn solve_freqs(devices: &[Device], v: f64, q: &[f64], queues: &[f64], k: usize, out: &mut Vec<f64>) {
+    out.clear();
+    out.extend(
+        devices
+            .iter()
+            .zip(q.iter().zip(queues))
+            .map(|(dev, (&qn, &queue))| optimal_freq(dev, v, qn, queue, k)),
+    );
+}
+
+/// The per-device P2.1.1 objective (used by tests and the alternating
+/// loop's convergence diagnostics).
+pub fn p211_objective(
+    dev: &Device,
+    local_epochs: usize,
+    v: f64,
+    q_n: f64,
+    queue: f64,
+    k: usize,
+    f_hz: f64,
+) -> f64 {
+    let ecd = local_epochs as f64 * dev.cycles_per_sample * dev.data_size as f64;
+    let sel = selection_probability(q_n, k);
+    queue * sel * dev.alpha * ecd * f_hz * f_hz / 2.0 + v * q_n * ecd / f_hz
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev() -> Device {
+        Device {
+            id: 0,
+            data_size: 200,
+            cycles_per_sample: 3.0e9,
+            alpha: 2e-28,
+            f_min_hz: 1.0e9,
+            f_max_hz: 2.0e9,
+            p_min_w: 0.001,
+            p_max_w: 0.1,
+            energy_budget_j: 15.0,
+        }
+    }
+
+    #[test]
+    fn matches_formula() {
+        let d = dev();
+        let (v, q, queue, k) = (1e5, 0.01, 3.0, 2);
+        let sel = 1.0 - (1.0 - 0.01f64).powi(2);
+        let expect = (v * q / (queue * sel * d.alpha)).cbrt();
+        let f = stationary_freq(v, q, queue, k, d.alpha);
+        assert!((f - expect).abs() / expect < 1e-12);
+    }
+
+    #[test]
+    fn empty_queue_runs_flat_out() {
+        let d = dev();
+        assert_eq!(optimal_freq(&d, 1e5, 0.1, 0.0, 2), d.f_max_hz);
+    }
+
+    #[test]
+    fn stationary_point_minimizes_objective_numerically() {
+        let d = dev();
+        let (v, q, k, e) = (2.0e4, 0.05, 2, 2);
+        // Pick a queue level that puts the stationary point inside the box.
+        let mut queue = 1.0;
+        let mut fstar = optimal_freq(&d, v, q, queue, k);
+        // Scan queue until interior.
+        for _ in 0..60 {
+            if fstar > d.f_min_hz * 1.01 && fstar < d.f_max_hz * 0.99 {
+                break;
+            }
+            queue *= if fstar >= d.f_max_hz * 0.99 { 2.0 } else { 0.5 };
+            fstar = optimal_freq(&d, v, q, queue, k);
+        }
+        assert!(
+            fstar > d.f_min_hz * 1.01 && fstar < d.f_max_hz * 0.99,
+            "could not find interior point, fstar={fstar}"
+        );
+        let obj_star = p211_objective(&d, e, v, q, queue, k, fstar);
+        // Grid scan: no frequency beats the closed form.
+        let mut best_grid = f64::INFINITY;
+        for i in 0..=2000 {
+            let f = d.f_min_hz + (d.f_max_hz - d.f_min_hz) * i as f64 / 2000.0;
+            best_grid = best_grid.min(p211_objective(&d, e, v, q, queue, k, f));
+        }
+        assert!(obj_star <= best_grid + best_grid.abs() * 1e-6);
+    }
+
+    #[test]
+    fn boundary_projection() {
+        let d = dev();
+        // Huge queue price -> clamp at f_min.
+        assert_eq!(optimal_freq(&d, 1.0, 0.01, 1e12, 2), d.f_min_hz);
+        // Tiny queue price -> clamp at f_max.
+        assert_eq!(optimal_freq(&d, 1e12, 0.5, 1e-12, 2), d.f_max_hz);
+    }
+
+    #[test]
+    fn monotonicity_in_prices() {
+        let d = dev();
+        // More queue pressure -> lower frequency (save energy).
+        let f_lo_q = optimal_freq(&d, 1e5, 0.05, 1.0, 2);
+        let f_hi_q = optimal_freq(&d, 1e5, 0.05, 100.0, 2);
+        assert!(f_hi_q <= f_lo_q);
+        // Larger V (latency matters more) -> higher frequency.
+        let f_lo_v = optimal_freq(&d, 1e3, 0.05, 10.0, 2);
+        let f_hi_v = optimal_freq(&d, 1e6, 0.05, 10.0, 2);
+        assert!(f_hi_v >= f_lo_v);
+    }
+
+    #[test]
+    fn fleet_solve_matches_per_device() {
+        let devs: Vec<Device> = (0..5).map(|id| Device { id, ..dev() }).collect();
+        let q = [0.1, 0.2, 0.3, 0.2, 0.2];
+        let queues = [0.0, 1.0, 5.0, 10.0, 0.5];
+        let mut out = Vec::new();
+        solve_freqs(&devs, 1e5, &q, &queues, 2, &mut out);
+        for i in 0..5 {
+            assert_eq!(out[i], optimal_freq(&devs[i], 1e5, q[i], queues[i], 2));
+        }
+    }
+}

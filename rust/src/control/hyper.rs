@@ -1,0 +1,111 @@
+//! λ₀ / V₀ estimation — the hyper-parameter rule of §VII-B.1.
+//!
+//! The paper anchors the two LROA knobs at data-derived scales:
+//!
+//! * `λ₀ = T₀ / F₀` where `T₀` is the estimated per-round time at midpoint
+//!   controls and `F₀` the sampling-error surrogate `Σ w_n²/q_n` at
+//!   `q = w` (which is exactly `Σ w_n = 1`, kept in general form here);
+//! * `V₀ = a₀² / (T₀ + λ F₀)` where `a₀` estimates the per-round energy
+//!   residual of eq. (20) at midpoint controls (and `Q₀ = a₀`).
+//!
+//! Runtime then scales them: `λ = µ λ₀`, `V = ν V₀`.
+
+use crate::config::SystemConfig;
+use crate::system::{selection_probability, Device, RoundCosts};
+
+/// Estimated per-round quantities at midpoint controls and mean channel.
+#[derive(Clone, Debug)]
+pub struct HyperEstimate {
+    pub t0: f64,
+    pub f0: f64,
+    pub a0: f64,
+    pub lambda0: f64,
+}
+
+impl HyperEstimate {
+    /// `V₀` for a given final λ (= µ·λ₀).
+    pub fn v0(&self, lambda: f64) -> f64 {
+        self.a0 * self.a0 / (self.t0 + lambda * self.f0)
+    }
+}
+
+/// Compute the §VII-B.1 estimates for a fleet.
+pub fn estimate(cfg: &SystemConfig, devices: &[Device], weights: &[f64], model_bits: f64) -> HyperEstimate {
+    let n = devices.len();
+    let f_mid: Vec<f64> = devices.iter().map(|d| 0.5 * (d.f_min_hz + d.f_max_hz)).collect();
+    let p_mid: Vec<f64> = devices.iter().map(|d| 0.5 * (d.p_min_w + d.p_max_w)).collect();
+    let h_mean = vec![cfg.channel_mean; n];
+
+    let costs = RoundCosts::evaluate(cfg, devices, model_bits, &h_mean, &f_mid, &p_mid);
+
+    // T0: mean per-device round time at midpoint controls.
+    let t0 = costs.time_s.iter().sum::<f64>() / n as f64;
+
+    // F0: Σ w²/q at q = w  (= Σ w = 1 exactly; kept generic).
+    let f0: f64 = weights.iter().map(|&w| if w > 0.0 { w } else { 0.0 }).sum();
+
+    // a0: mean |expected energy residual| at uniform sampling (eq. 20).
+    let sel = selection_probability(1.0 / n as f64, cfg.k);
+    let a0 = devices
+        .iter()
+        .enumerate()
+        .map(|(i, d)| (sel * costs.energy_j[i] - d.energy_budget_j).abs())
+        .sum::<f64>()
+        / n as f64;
+
+    HyperEstimate {
+        t0,
+        f0,
+        a0,
+        lambda0: t0 / f0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::rng::Rng;
+    use crate::system::Fleet;
+
+    #[test]
+    fn estimates_are_positive_and_sane() {
+        let cfg = SystemConfig::default();
+        let mut rng = Rng::new(3);
+        let fleet = Fleet::generate(&cfg, (50, 400), &mut rng);
+        let est = estimate(&cfg, &fleet.devices, fleet.weights(), 32.0 * 140_000.0);
+        assert!(est.t0 > 0.0, "t0 {}", est.t0);
+        assert!((est.f0 - 1.0).abs() < 1e-12, "f0 {}", est.f0);
+        assert!(est.a0 > 0.0);
+        assert!((est.lambda0 - est.t0).abs() < 1e-9); // λ0 = T0 when F0 = 1
+        let v0 = est.v0(est.lambda0);
+        assert!(v0 > 0.0 && v0.is_finite());
+    }
+
+    #[test]
+    fn lambda0_tracks_round_time_scale() {
+        // Slower CPUs (larger c_n) -> larger T0 -> larger λ0.
+        let fast = SystemConfig::default();
+        let slow = SystemConfig {
+            cycles_per_sample: 3.0 * fast.cycles_per_sample,
+            ..fast.clone()
+        };
+        let mut rng = Rng::new(4);
+        let fleet_fast = Fleet::generate(&fast, (200, 200), &mut rng);
+        let mut rng = Rng::new(4);
+        let fleet_slow = Fleet::generate(&slow, (200, 200), &mut rng);
+        let m = 32.0 * 140_000.0;
+        let est_fast = estimate(&fast, &fleet_fast.devices, fleet_fast.weights(), m);
+        let est_slow = estimate(&slow, &fleet_slow.devices, fleet_slow.weights(), m);
+        assert!(est_slow.lambda0 > est_fast.lambda0);
+    }
+
+    #[test]
+    fn v0_decreases_with_lambda() {
+        let cfg = SystemConfig::default();
+        let mut rng = Rng::new(5);
+        let fleet = Fleet::generate(&cfg, (100, 300), &mut rng);
+        let est = estimate(&cfg, &fleet.devices, fleet.weights(), 3.2e6);
+        assert!(est.v0(1.0) > est.v0(100.0));
+    }
+}

@@ -1,0 +1,377 @@
+//! Algorithm 2: the LROA per-round solver (alternating minimization).
+//!
+//! Outer loop alternates the closed-form `f` block (Theorem 2), the
+//! root-found `p` block (Theorem 3) and the SUM `q` block (P2.2) until the
+//! joint iterate stabilizes within `ε₀`.  Initialization follows the
+//! paper: `f⁰ = (f_min+f_max)/2`, `p⁰ = (p_min+p_max)/2`, `q⁰ = 1/N`.
+
+use std::time::Instant;
+
+use super::{freq, power, sum};
+use crate::config::{ControlConfig, SystemConfig};
+use crate::system::{selection_probability, Device, RoundCosts};
+
+/// Per-round control decisions for the whole fleet.
+#[derive(Clone, Debug)]
+pub struct Controls {
+    /// CPU frequency `f_n^t` [Hz].
+    pub f_hz: Vec<f64>,
+    /// Transmit power `p_n^t` [W].
+    pub p_w: Vec<f64>,
+    /// Sampling probabilities `q_n^t` (sum to 1).
+    pub q: Vec<f64>,
+}
+
+impl Controls {
+    /// Midpoint/uniform initialization (Algorithm 2 line 1).
+    pub fn midpoint(devices: &[Device]) -> Controls {
+        let n = devices.len();
+        Controls {
+            f_hz: devices.iter().map(|d| 0.5 * (d.f_min_hz + d.f_max_hz)).collect(),
+            p_w: devices.iter().map(|d| 0.5 * (d.p_min_w + d.p_max_w)).collect(),
+            q: vec![1.0 / n as f64; n],
+        }
+    }
+}
+
+/// Diagnostics from one [`LroaSolver::solve_round`] call.
+#[derive(Clone, Debug, Default)]
+pub struct SolverStats {
+    pub outer_iters: usize,
+    pub inner_iters: usize,
+    /// Final P2 objective (drift-plus-penalty surrogate value).
+    pub objective: f64,
+    pub solve_time_s: f64,
+}
+
+/// The online controller: holds the static problem data and solves P2
+/// each round given the fresh channel draw and queue backlogs.
+pub struct LroaSolver {
+    pub sys: SystemConfig,
+    pub ctl: ControlConfig,
+    /// λ (already scaled: µ·λ₀ or the explicit override).
+    pub lambda: f64,
+    /// V (already scaled: ν·V₀ or the explicit override).
+    pub v: f64,
+    /// Model size in bits.
+    pub model_bits: f64,
+    // Reusable scratch (hot path: one solve per round).
+    scratch_a2: Vec<f64>,
+    scratch_a3: Vec<f64>,
+    scratch_e: Vec<f64>,
+}
+
+impl LroaSolver {
+    pub fn new(sys: SystemConfig, ctl: ControlConfig, lambda: f64, v: f64, model_bits: f64) -> Self {
+        Self {
+            sys,
+            ctl,
+            lambda,
+            v,
+            model_bits,
+            scratch_a2: Vec::new(),
+            scratch_a3: Vec::new(),
+            scratch_e: Vec::new(),
+        }
+    }
+
+    /// Algorithm 2: solve P2 for round `t`.
+    ///
+    /// * `devices` / `weights` — the fleet and its data weights `w_n`;
+    /// * `h` — this round's channel gains;
+    /// * `queues` — virtual queue backlogs `Q_n^t`.
+    pub fn solve_round(
+        &mut self,
+        devices: &[Device],
+        weights: &[f64],
+        h: &[f64],
+        queues: &[f64],
+    ) -> (Controls, SolverStats) {
+        let t0 = Instant::now();
+        let n = devices.len();
+        let k = self.sys.k;
+        let mut ctrl = Controls::midpoint(devices);
+        let mut stats = SolverStats::default();
+
+        // A3 never changes across the outer loop.
+        self.scratch_a3.clear();
+        self.scratch_a3
+            .extend(weights.iter().map(|w| self.v * self.lambda * w * w));
+
+        let mut prev_f = ctrl.f_hz.clone();
+        let mut prev_p = ctrl.p_w.clone();
+        let mut prev_q = ctrl.q.clone();
+
+        for _ in 0..self.ctl.max_outer_iters {
+            stats.outer_iters += 1;
+
+            // f and p blocks (Theorems 2-3) under fixed q.
+            freq::solve_freqs(devices, self.v, &ctrl.q, queues, k, &mut ctrl.f_hz);
+            power::solve_powers(
+                devices,
+                self.v,
+                &ctrl.q,
+                h,
+                queues,
+                k,
+                self.sys.noise_w,
+                &mut ctrl.p_w,
+            );
+
+            // Refresh T_n and E_n under the new (f, p).
+            let costs = RoundCosts::evaluate(
+                &self.sys,
+                devices,
+                self.model_bits,
+                h,
+                &ctrl.f_hz,
+                &ctrl.p_w,
+            );
+
+            // q block: SUM on P2.2 with A2 = V·T_n, e = Q_n·E_n.
+            self.scratch_a2.clear();
+            self.scratch_a2
+                .extend(costs.time_s.iter().map(|t| self.v * t));
+            self.scratch_e.clear();
+            self.scratch_e
+                .extend(queues.iter().zip(&costs.energy_j).map(|(qu, e)| qu * e));
+
+            let res = sum::solve(
+                &ctrl.q,
+                &self.scratch_a2,
+                &self.scratch_a3,
+                &self.scratch_e,
+                k,
+                self.ctl.q_min,
+                self.ctl.eps_inner,
+                self.ctl.max_inner_iters,
+            );
+            stats.inner_iters += res.iters;
+            ctrl.q = res.q;
+
+            // Joint convergence: relative change per block (the blocks
+            // live on wildly different scales: Hz, W, probabilities).
+            let delta = rel_change(&prev_f, &ctrl.f_hz)
+                + rel_change(&prev_p, &ctrl.p_w)
+                + rel_change(&prev_q, &ctrl.q);
+            prev_f.clone_from(&ctrl.f_hz);
+            prev_p.clone_from(&ctrl.p_w);
+            prev_q.clone_from(&ctrl.q);
+            if delta <= self.ctl.eps_outer {
+                break;
+            }
+        }
+
+        stats.objective = self.p2_objective(devices, weights, h, queues, &ctrl);
+        stats.solve_time_s = t0.elapsed().as_secs_f64();
+        let _ = n;
+        (ctrl, stats)
+    }
+
+    /// Uni-D baseline: uniform `q = 1/N`, dynamic `f`/`p`.  With `q`
+    /// fixed, the `f` and `p` blocks are exact in a single pass.
+    pub fn solve_uniform_dynamic(
+        &mut self,
+        devices: &[Device],
+        h: &[f64],
+        queues: &[f64],
+    ) -> (Controls, SolverStats) {
+        let t0 = Instant::now();
+        let k = self.sys.k;
+        let mut ctrl = Controls::midpoint(devices);
+        freq::solve_freqs(devices, self.v, &ctrl.q, queues, k, &mut ctrl.f_hz);
+        power::solve_powers(
+            devices,
+            self.v,
+            &ctrl.q,
+            h,
+            queues,
+            k,
+            self.sys.noise_w,
+            &mut ctrl.p_w,
+        );
+        let stats = SolverStats {
+            outer_iters: 1,
+            inner_iters: 0,
+            objective: 0.0,
+            solve_time_s: t0.elapsed().as_secs_f64(),
+        };
+        (ctrl, stats)
+    }
+
+    /// The P2 drift-plus-penalty value under given controls (diagnostics).
+    pub fn p2_objective(
+        &self,
+        devices: &[Device],
+        weights: &[f64],
+        h: &[f64],
+        queues: &[f64],
+        ctrl: &Controls,
+    ) -> f64 {
+        let costs =
+            RoundCosts::evaluate(&self.sys, devices, self.model_bits, h, &ctrl.f_hz, &ctrl.p_w);
+        let mut acc = 0.0;
+        for i in 0..devices.len() {
+            let sel = selection_probability(ctrl.q[i], self.sys.k);
+            acc += self.v
+                * (ctrl.q[i] * costs.time_s[i]
+                    + self.lambda * weights[i] * weights[i] / ctrl.q[i]);
+            acc += queues[i] * (sel * costs.energy_j[i] - devices[i].energy_budget_j);
+        }
+        acc
+    }
+}
+
+fn rel_change(prev: &[f64], cur: &[f64]) -> f64 {
+    let num: f64 = prev
+        .iter()
+        .zip(cur)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f64>()
+        .sqrt();
+    let den: f64 = prev.iter().map(|a| a * a).sum::<f64>().sqrt().max(1e-300);
+    num / den
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ControlConfig, SystemConfig};
+    use crate::rng::Rng;
+    use crate::system::Fleet;
+
+    fn setup(n: usize) -> (SystemConfig, Fleet, Vec<f64>, Vec<f64>) {
+        let sys = SystemConfig {
+            num_devices: n,
+            ..SystemConfig::default()
+        };
+        let mut rng = Rng::new(11);
+        let fleet = Fleet::generate(&sys, (50, 400), &mut rng);
+        let h: Vec<f64> = (0..n).map(|_| rng.range(0.01, 0.5)).collect();
+        let queues: Vec<f64> = (0..n).map(|_| rng.range(0.0, 20.0)).collect();
+        (sys, fleet, h, queues)
+    }
+
+    fn solver(sys: &SystemConfig) -> LroaSolver {
+        LroaSolver::new(
+            sys.clone(),
+            ControlConfig::default(),
+            10.0,  // lambda
+            1e4,   // V
+            32.0 * 140_000.0,
+        )
+    }
+
+    #[test]
+    fn controls_feasible() {
+        let (sys, fleet, h, queues) = setup(60);
+        let mut s = solver(&sys);
+        let (ctrl, stats) = s.solve_round(&fleet.devices, fleet.weights(), &h, &queues);
+        assert!(stats.outer_iters >= 1);
+        let sum_q: f64 = ctrl.q.iter().sum();
+        assert!((sum_q - 1.0).abs() < 1e-6, "sum q = {sum_q}");
+        for (i, d) in fleet.devices.iter().enumerate() {
+            assert!(ctrl.f_hz[i] >= d.f_min_hz && ctrl.f_hz[i] <= d.f_max_hz);
+            assert!(ctrl.p_w[i] >= d.p_min_w && ctrl.p_w[i] <= d.p_max_w);
+            assert!(ctrl.q[i] > 0.0 && ctrl.q[i] <= 1.0);
+        }
+    }
+
+    #[test]
+    fn converges_before_cap() {
+        let (sys, fleet, h, queues) = setup(120);
+        let mut s = solver(&sys);
+        let (_, stats) = s.solve_round(&fleet.devices, fleet.weights(), &h, &queues);
+        assert!(
+            stats.outer_iters < s.ctl.max_outer_iters,
+            "hit outer cap: {}",
+            stats.outer_iters
+        );
+    }
+
+    #[test]
+    fn beats_midpoint_and_uniform_controls() {
+        let (sys, fleet, h, queues) = setup(80);
+        let mut s = solver(&sys);
+        let (_ctrl, stats) = s.solve_round(&fleet.devices, fleet.weights(), &h, &queues);
+        let mid = Controls::midpoint(&fleet.devices);
+        let mid_obj = s.p2_objective(&fleet.devices, fleet.weights(), &h, &queues, &mid);
+        assert!(
+            stats.objective <= mid_obj + mid_obj.abs() * 1e-9,
+            "solver {} vs midpoint {}",
+            stats.objective,
+            mid_obj
+        );
+    }
+
+    #[test]
+    fn stragglers_get_lower_sampling_probability() {
+        let (sys, mut fleet, mut h, queues) = setup(40);
+        // Same data everywhere so only the channel differs.
+        for d in fleet.devices.iter_mut() {
+            d.data_size = 200;
+        }
+        let n = fleet.devices.len();
+        let sizes = vec![200; n];
+        let mut rng = Rng::new(5);
+        let fleet = Fleet::from_data_sizes(&sys, &sizes, &mut rng);
+        // Device 0: terrible channel. Device 1: great channel.
+        h[0] = 0.01;
+        h[1] = 0.5;
+        let mut s = solver(&sys);
+        let (ctrl, _) = s.solve_round(&fleet.devices, fleet.weights(), &h, &queues);
+        assert!(
+            ctrl.q[0] < ctrl.q[1],
+            "straggler q {} should be < good-channel q {}",
+            ctrl.q[0],
+            ctrl.q[1]
+        );
+    }
+
+    #[test]
+    fn empty_queues_run_flat_out() {
+        let (sys, fleet, h, _) = setup(20);
+        let queues = vec![0.0; 20];
+        let mut s = solver(&sys);
+        let (ctrl, _) = s.solve_round(&fleet.devices, fleet.weights(), &h, &queues);
+        for (i, d) in fleet.devices.iter().enumerate() {
+            assert_eq!(ctrl.f_hz[i], d.f_max_hz);
+            assert_eq!(ctrl.p_w[i], d.p_max_w);
+        }
+    }
+
+    #[test]
+    fn queue_pressure_reduces_energy() {
+        let (sys, fleet, h, _) = setup(30);
+        let mut s = solver(&sys);
+        let (c_free, _) = s.solve_round(&fleet.devices, fleet.weights(), &h, &vec![0.0; 30]);
+        let (c_tight, _) = s.solve_round(&fleet.devices, fleet.weights(), &h, &vec![1e4; 30]);
+        let e = |c: &Controls| -> f64 {
+            let costs = RoundCosts::evaluate(&s.sys, &fleet.devices, s.model_bits, &h, &c.f_hz, &c.p_w);
+            costs.energy_j.iter().sum()
+        };
+        assert!(e(&c_tight) < e(&c_free), "tight {} free {}", e(&c_tight), e(&c_free));
+    }
+
+    #[test]
+    fn uniform_dynamic_is_uniform() {
+        let (sys, fleet, h, queues) = setup(25);
+        let mut s = solver(&sys);
+        let (ctrl, _) = s.solve_uniform_dynamic(&fleet.devices, &h, &queues);
+        for &q in &ctrl.q {
+            assert!((q - 1.0 / 25.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let (sys, fleet, h, queues) = setup(50);
+        let mut s1 = solver(&sys);
+        let mut s2 = solver(&sys);
+        let (c1, _) = s1.solve_round(&fleet.devices, fleet.weights(), &h, &queues);
+        let (c2, _) = s2.solve_round(&fleet.devices, fleet.weights(), &h, &queues);
+        assert_eq!(c1.q, c2.q);
+        assert_eq!(c1.f_hz, c2.f_hz);
+        assert_eq!(c1.p_w, c2.p_w);
+    }
+}

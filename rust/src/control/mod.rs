@@ -1,0 +1,30 @@
+//! The paper's contribution: Lyapunov-based online control (LROA).
+//!
+//! * [`queues`] — virtual energy-consumption queues, eqs. (19)–(20);
+//! * [`freq`] — Theorem 2: closed-form optimal CPU frequency (P2.1.1);
+//! * [`power`] — Theorem 3: optimal transmit power by root-finding (P2.1.2);
+//! * [`sum`] — the SUM solver for sampling probabilities (P2.2);
+//! * [`lroa`] — Algorithm 2: the alternating outer loop tying it together;
+//! * [`hyper`] — the λ₀ / V₀ estimation rule of §VII-B.1;
+//! * [`static_alloc`] — the Uni-S baseline's static resource policy.
+
+pub mod freq;
+pub mod hyper;
+pub mod lroa;
+pub mod power;
+pub mod queues;
+pub mod static_alloc;
+pub mod sum;
+
+pub use lroa::{Controls, LroaSolver, SolverStats};
+pub use queues::VirtualQueues;
+
+/// Per-round control decisions for every device.
+pub fn objective_terms(q: &[f64], times: &[f64], lambda: f64, weights: &[f64]) -> f64 {
+    // Σ_n ( q_n T_n + λ w_n² / q_n )  — the P1 integrand.
+    q.iter()
+        .zip(times)
+        .zip(weights)
+        .map(|((qn, tn), wn)| qn * tn + lambda * wn * wn / qn)
+        .sum()
+}

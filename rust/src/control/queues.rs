@@ -1,0 +1,126 @@
+//! Virtual energy-consumption queues — eqs. (19)–(20).
+//!
+//! `Q_n^{t+1} = max(Q_n^t + a_n^t, 0)` with
+//! `a_n^t = (1 - (1-q_n^t)^K) E_n^t - Ē_n`.  Queue stability implies the
+//! time-average energy constraint (16); the drift-plus-penalty solver
+//! consumes the backlogs as energy prices.
+
+use crate::system::selection_probability;
+
+/// Per-device virtual queue state.
+#[derive(Clone, Debug)]
+pub struct VirtualQueues {
+    q: Vec<f64>,
+    budgets: Vec<f64>,
+}
+
+impl VirtualQueues {
+    /// `Q^0 = 0` (LROA initialization).
+    pub fn new(budgets: Vec<f64>) -> Self {
+        Self {
+            q: vec![0.0; budgets.len()],
+            budgets,
+        }
+    }
+
+    pub fn backlogs(&self) -> &[f64] {
+        &self.q
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// Eq. (20): the expected-energy residual for one device.
+    pub fn arrival(&self, n: usize, q_n: f64, k: usize, energy_j: f64) -> f64 {
+        selection_probability(q_n, k) * energy_j - self.budgets[n]
+    }
+
+    /// Eq. (19): advance all queues given this round's controls and costs.
+    ///
+    /// `energy_j[n]` is `E_n^t` under the round's `(f, p)` and channel —
+    /// the *expected* draw enters the queue (the paper's `a_n^t` uses the
+    /// selection probability, not the realized selection).
+    pub fn update(&mut self, q_probs: &[f64], k: usize, energy_j: &[f64]) {
+        debug_assert_eq!(q_probs.len(), self.q.len());
+        debug_assert_eq!(energy_j.len(), self.q.len());
+        for n in 0..self.q.len() {
+            let a = self.arrival(n, q_probs[n], k, energy_j[n]);
+            self.q[n] = (self.q[n] + a).max(0.0);
+        }
+    }
+
+    /// Quadratic Lyapunov function (21): `L = ½ Σ Q_n²`.
+    pub fn lyapunov(&self) -> f64 {
+        0.5 * self.q.iter().map(|x| x * x).sum::<f64>()
+    }
+
+    pub fn mean_backlog(&self) -> f64 {
+        if self.q.is_empty() {
+            0.0
+        } else {
+            self.q.iter().sum::<f64>() / self.q.len() as f64
+        }
+    }
+
+    pub fn max_backlog(&self) -> f64 {
+        self.q.iter().copied().fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_empty() {
+        let q = VirtualQueues::new(vec![5.0; 4]);
+        assert_eq!(q.backlogs(), &[0.0; 4]);
+        assert_eq!(q.lyapunov(), 0.0);
+    }
+
+    #[test]
+    fn arrival_matches_eq20() {
+        let q = VirtualQueues::new(vec![5.0, 15.0]);
+        // sel(0.5, 2) = 0.75; a = 0.75*10 - 5 = 2.5
+        assert!((q.arrival(0, 0.5, 2, 10.0) - 2.5).abs() < 1e-12);
+        // under budget: a = 0.75*10 - 15 = -7.5
+        assert!((q.arrival(1, 0.5, 2, 10.0) + 7.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn queue_never_negative() {
+        let mut q = VirtualQueues::new(vec![100.0; 3]);
+        q.update(&[0.1, 0.1, 0.1], 2, &[1.0, 1.0, 1.0]); // far under budget
+        assert_eq!(q.backlogs(), &[0.0; 3]);
+    }
+
+    #[test]
+    fn queue_grows_when_over_budget() {
+        let mut q = VirtualQueues::new(vec![1.0; 2]);
+        for _ in 0..5 {
+            q.update(&[0.9, 0.9], 2, &[10.0, 10.0]);
+        }
+        // a = (1-0.01)*10 - 1 = 8.9 per round
+        for &b in q.backlogs() {
+            assert!((b - 5.0 * 8.9).abs() < 1e-9, "backlog {b}");
+        }
+        assert!(q.lyapunov() > 0.0);
+        assert!((q.mean_backlog() - 44.5).abs() < 1e-9);
+        assert!((q.max_backlog() - 44.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stable_queue_tracks_budget() {
+        // If expected energy exactly equals budget, backlog stays at 0.
+        let mut q = VirtualQueues::new(vec![7.5; 1]);
+        for _ in 0..100 {
+            q.update(&[0.5], 2, &[10.0]); // sel=0.75, 0.75*10 = 7.5 = budget
+        }
+        assert!(q.backlogs()[0].abs() < 1e-9);
+    }
+}

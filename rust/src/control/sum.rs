@@ -1,0 +1,300 @@
+//! Successive upper-bound minimization for the sampling probabilities (P2.2).
+//!
+//! P2.2 minimizes, over the simplex `Σ q_n = 1`, `q_n ∈ (0, 1]`:
+//!
+//! `f(q) = Σ_n [ A₂_n q_n + A₃_n / q_n ]  −  Σ_n e_n (1 − q_n)^K`
+//!
+//! with `A₂_n = V T_n`, `A₃_n = V λ w_n²`, and energy price
+//! `e_n = Q_n E_n` (the queue-weighted energy of device `n`; the paper's
+//! P2.2 prints `E_n` without `Q_n`, but deriving P2.2 from P2 keeps the
+//! queue weight — see DESIGN.md §5.3).
+//!
+//! The first sum is convex, the second concave; SUM linearizes the
+//! concave part at the current iterate `qᵗ` and solves the resulting
+//! *separable* convex surrogate exactly: with slope
+//! `∇_n = K e_n (1 − q_n^τ)^{K−1} ≥ 0` the surrogate is
+//! `Σ_n [ c_n q_n + A₃_n / q_n ]`, `c_n = A₂_n + ∇_n`, whose simplex KKT
+//! solution is `q_n(μ) = clamp(√(A₃_n / (c_n + μ)), q_min, 1)` with the
+//! multiplier `μ` found by bisection on the strictly decreasing
+//! `Σ_n q_n(μ) = 1`.  This replaces the paper's CVX call with an exact
+//! O(N log 1/ε) solve.
+
+/// Outcome of one [`solve`] call.
+#[derive(Clone, Debug)]
+pub struct SumResult {
+    pub q: Vec<f64>,
+    /// SUM (outer) iterations executed.
+    pub iters: usize,
+    /// Final objective value `f(q)`.
+    pub objective: f64,
+}
+
+/// The exact P2.2 objective.
+pub fn objective(q: &[f64], a2: &[f64], a3: &[f64], e: &[f64], k: usize) -> f64 {
+    let mut acc = 0.0;
+    for n in 0..q.len() {
+        acc += a2[n] * q[n] + a3[n] / q[n] - e[n] * (1.0 - q[n]).powi(k as i32);
+    }
+    acc
+}
+
+/// Solve the linearized surrogate: minimize `Σ c_n q_n + A₃_n/q_n` on the
+/// truncated simplex by KKT + dual bisection.
+pub fn solve_surrogate(c: &[f64], a3: &[f64], q_min: f64, out: &mut Vec<f64>) {
+    let n = c.len();
+    debug_assert!(n > 0);
+    debug_assert!(q_min * n as f64 <= 1.0 + 1e-12, "q_min too large for simplex");
+
+    let q_of = |mu: f64, out: &mut Vec<f64>| {
+        out.clear();
+        out.extend(c.iter().zip(a3).map(|(&cn, &a3n)| {
+            let denom = cn + mu;
+            if a3n <= 0.0 || denom <= 0.0 {
+                // No pull toward larger q (a3=0) -> floor; non-positive
+                // denom -> ceiling (handled by bracket choice below).
+                if denom <= 0.0 {
+                    1.0
+                } else {
+                    q_min
+                }
+            } else {
+                (a3n / denom).sqrt().clamp(q_min, 1.0)
+            }
+        }));
+    };
+    let sum_q = |mu: f64, tmp: &mut Vec<f64>| -> f64 {
+        q_of(mu, tmp);
+        tmp.iter().sum()
+    };
+
+    let mut tmp = Vec::with_capacity(n);
+
+    // Bracket the multiplier. Lower end: just above -min(c) where the
+    // binding component saturates at 1 so Σ >= 1. Upper end: expand until
+    // Σ < 1 (always reachable since q -> q_min as mu -> inf).
+    let c_min = c.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mut lo = -c_min + 1e-18 * c_min.abs().max(1.0);
+    if sum_q(lo, &mut tmp) < 1.0 {
+        // Even at the lower bracket the mass is < 1 (can happen when many
+        // a3 are zero): distribute the remaining mass by waterfilling the
+        // largest-a3 components to 1. Fall back to proportional top-up.
+        q_of(lo, out);
+        let sum: f64 = out.iter().sum();
+        let deficit = 1.0 - sum;
+        if deficit > 0.0 {
+            let slack: f64 = out.iter().map(|&q| 1.0 - q).sum();
+            if slack > 0.0 {
+                for q in out.iter_mut() {
+                    *q += deficit * (1.0 - *q) / slack;
+                }
+            }
+        }
+        return;
+    }
+    let mut hi = c.iter().cloned().fold(f64::NEG_INFINITY, f64::max).abs() + 1.0;
+    while sum_q(hi, &mut tmp) > 1.0 {
+        hi = hi * 4.0 + 1.0;
+        if hi > 1e300 {
+            break;
+        }
+    }
+
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if mid <= lo || mid >= hi {
+            break;
+        }
+        if sum_q(mid, &mut tmp) > 1.0 {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    q_of(0.5 * (lo + hi), out);
+}
+
+/// Full SUM loop (Algorithm 2 inner loop, lines 6–11).
+pub fn solve(
+    q0: &[f64],
+    a2: &[f64],
+    a3: &[f64],
+    e: &[f64],
+    k: usize,
+    q_min: f64,
+    eps: f64,
+    max_iters: usize,
+) -> SumResult {
+    let n = q0.len();
+    let mut q = q0.to_vec();
+    let mut c = vec![0.0; n];
+    let mut next = Vec::with_capacity(n);
+    let mut iters = 0;
+
+    for _ in 0..max_iters {
+        iters += 1;
+        // Linearize the concave part at q: slope K e (1-q)^{K-1}.
+        for i in 0..n {
+            c[i] = a2[i] + k as f64 * e[i] * (1.0 - q[i]).powi(k as i32 - 1);
+        }
+        solve_surrogate(&c, a3, q_min, &mut next);
+        let delta: f64 = q
+            .iter()
+            .zip(&next)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        std::mem::swap(&mut q, &mut next);
+        if delta <= eps {
+            break;
+        }
+    }
+    let obj = objective(&q, a2, a3, e, k);
+    SumResult {
+        q,
+        iters,
+        objective: obj,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn uniform(n: usize) -> Vec<f64> {
+        vec![1.0 / n as f64; n]
+    }
+
+    #[test]
+    fn surrogate_satisfies_simplex() {
+        let c = vec![1.0, 2.0, 3.0, 4.0];
+        let a3 = vec![0.1, 0.2, 0.3, 0.4];
+        let mut q = Vec::new();
+        solve_surrogate(&c, &a3, 1e-6, &mut q);
+        let sum: f64 = q.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "sum {sum}");
+        assert!(q.iter().all(|&x| x >= 1e-6 && x <= 1.0));
+    }
+
+    #[test]
+    fn surrogate_kkt_residual_interior() {
+        // For interior coordinates, c_n - a3_n/q_n^2 + mu = 0 must hold for
+        // a shared mu -> the quantity (a3_n/q_n^2 - c_n) is equal across n.
+        let c = vec![5.0, 7.0, 9.0];
+        let a3 = vec![2.0, 3.0, 4.0];
+        let mut q = Vec::new();
+        solve_surrogate(&c, &a3, 1e-9, &mut q);
+        let mu: Vec<f64> = (0..3).map(|i| a3[i] / (q[i] * q[i]) - c[i]).collect();
+        for w in mu.windows(2) {
+            assert!(
+                (w[0] - w[1]).abs() < 1e-6 * (1.0 + w[0].abs()),
+                "KKT multipliers differ: {mu:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn surrogate_prefers_low_cost_high_weight() {
+        // Lower c (faster device) and higher a3 (more data) -> higher q.
+        let c = vec![1.0, 10.0];
+        let a3 = vec![0.5, 0.5];
+        let mut q = Vec::new();
+        solve_surrogate(&c, &a3, 1e-6, &mut q);
+        assert!(q[0] > q[1], "{q:?}");
+
+        let c = vec![5.0, 5.0];
+        let a3 = vec![0.9, 0.1];
+        solve_surrogate(&c, &a3, 1e-6, &mut q);
+        assert!(q[0] > q[1], "{q:?}");
+    }
+
+    #[test]
+    fn sum_objective_is_monotone_nonincreasing() {
+        let mut rng = Rng::new(42);
+        let n = 50;
+        let a2: Vec<f64> = (0..n).map(|_| rng.range(1.0, 100.0)).collect();
+        let a3: Vec<f64> = (0..n).map(|_| rng.range(0.001, 0.1)).collect();
+        let e: Vec<f64> = (0..n).map(|_| rng.range(0.0, 50.0)).collect();
+        let k = 2;
+
+        // Trace the objective across SUM iterations manually.
+        let mut q = uniform(n);
+        let mut prev = objective(&q, &a2, &a3, &e, k);
+        let mut c = vec![0.0; n];
+        let mut next = Vec::new();
+        for _ in 0..30 {
+            for i in 0..n {
+                c[i] = a2[i] + k as f64 * e[i] * (1.0 - q[i]).powi(k as i32 - 1);
+            }
+            solve_surrogate(&c, &a3, 1e-9, &mut next);
+            std::mem::swap(&mut q, &mut next);
+            let cur = objective(&q, &a2, &a3, &e, k);
+            assert!(
+                cur <= prev + prev.abs() * 1e-9,
+                "objective increased: {prev} -> {cur}"
+            );
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn sum_beats_uniform_start() {
+        let mut rng = Rng::new(7);
+        let n = 120;
+        let a2: Vec<f64> = (0..n).map(|_| rng.range(10.0, 500.0)).collect();
+        let a3: Vec<f64> = (0..n).map(|_| rng.range(1e-4, 1e-2)).collect();
+        let e: Vec<f64> = (0..n).map(|_| rng.range(0.0, 100.0)).collect();
+        let res = solve(&uniform(n), &a2, &a3, &e, 2, 1e-6, 1e-9, 100);
+        let uni_obj = objective(&uniform(n), &a2, &a3, &e, 2);
+        assert!(res.objective <= uni_obj, "{} vs uniform {}", res.objective, uni_obj);
+        let sum: f64 = res.q.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn sum_converges_within_cap() {
+        let mut rng = Rng::new(9);
+        let n = 120;
+        let a2: Vec<f64> = (0..n).map(|_| rng.range(10.0, 500.0)).collect();
+        let a3: Vec<f64> = (0..n).map(|_| rng.range(1e-4, 1e-2)).collect();
+        let e: Vec<f64> = (0..n).map(|_| rng.range(0.0, 100.0)).collect();
+        let res = solve(&uniform(n), &a2, &a3, &e, 2, 1e-6, 1e-8, 200);
+        assert!(res.iters < 200, "did not converge: {} iters", res.iters);
+    }
+
+    #[test]
+    fn zero_energy_prices_reduce_to_convex_exact() {
+        // With e = 0 the problem is convex; SUM must converge in ~1 step
+        // and match the direct surrogate solve.
+        let a2 = vec![3.0, 6.0, 9.0];
+        let a3 = vec![0.3, 0.2, 0.1];
+        let e = vec![0.0; 3];
+        let res = solve(&uniform(3), &a2, &a3, &e, 2, 1e-9, 1e-12, 50);
+        let mut direct = Vec::new();
+        solve_surrogate(&a2, &a3, 1e-9, &mut direct);
+        for (a, b) in res.q.iter().zip(&direct) {
+            assert!((a - b).abs() < 1e-9, "{:?} vs {:?}", res.q, direct);
+        }
+    }
+
+    #[test]
+    fn straggler_penalized() {
+        // Device 2 is 100x slower (huge A2): gets the smallest q.
+        let a2 = vec![10.0, 10.0, 1000.0];
+        let a3 = vec![0.1, 0.1, 0.1];
+        let e = vec![1.0, 1.0, 1.0];
+        let res = solve(&uniform(3), &a2, &a3, &e, 2, 1e-6, 1e-9, 100);
+        assert!(res.q[2] < res.q[0] && res.q[2] < res.q[1], "{:?}", res.q);
+    }
+
+    #[test]
+    fn all_a3_zero_still_returns_valid_distribution() {
+        let a2 = vec![1.0, 2.0];
+        let a3 = vec![0.0, 0.0];
+        let e = vec![0.0, 0.0];
+        let res = solve(&uniform(2), &a2, &a3, &e, 2, 1e-6, 1e-9, 10);
+        let sum: f64 = res.q.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6, "q = {:?}", res.q);
+        assert!(res.q.iter().all(|&x| x > 0.0 && x <= 1.0));
+    }
+}

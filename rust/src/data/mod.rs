@@ -1,0 +1,18 @@
+//! Synthetic federated datasets (the paper's CIFAR-10 / FEMNIST substitutes).
+//!
+//! Two non-IID regimes, matching the paper's two benchmarks (DESIGN.md §4):
+//!
+//! * **cifar-like** — *label skew*: per-client class distributions drawn
+//!   from Dirichlet(α=0.5) (Hsu et al., the partition the paper uses);
+//! * **femnist-like** — *feature shift*: every client is a "writer" with
+//!   its own style transform (rotation / scale / shift) applied to shared
+//!   class prototypes, mimicking FEMNIST's natural per-writer non-IID-ness.
+//!
+//! Samples are **materialized lazily and deterministically**: sample `s`
+//! of client `n` is a pure function of `(seed, n, s)`, so a 120-client
+//! fleet costs no resident memory beyond the prototypes, and any client
+//! can be re-visited bit-identically in any round order.
+
+mod task;
+
+pub use task::{SyntheticTask, TaskKind};

@@ -1,0 +1,388 @@
+//! Deterministic lazy synthetic task generator.
+
+use crate::rng::Rng;
+
+/// Which non-IID regime to generate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    /// Dirichlet label-skew (CIFAR-10 substitute).
+    LabelSkew,
+    /// Per-writer feature-shift (FEMNIST substitute).
+    WriterShift,
+}
+
+/// One writer's style transform (femnist-like regime).
+#[derive(Clone, Copy, Debug)]
+struct Style {
+    /// Number of 90° rotations of the H×W grid (0..4).
+    rot: u8,
+    scale: f32,
+    shift: f32,
+}
+
+/// A fully-specified synthetic federated task.
+pub struct SyntheticTask {
+    pub kind: TaskKind,
+    pub num_clients: usize,
+    pub num_classes: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    /// Per-client dataset sizes `D_n`.
+    sizes: Vec<usize>,
+    /// Class prototypes, `[num_classes * feats]`.
+    prototypes: Vec<f32>,
+    /// Per-client label distribution (LabelSkew) or uniform (WriterShift).
+    label_probs: Vec<Vec<f64>>,
+    /// Per-client style (WriterShift only).
+    styles: Vec<Style>,
+    /// Signal-to-noise scale: x = (snr·proto + ε) / sqrt(1+snr²).
+    snr: f32,
+    seed: u64,
+}
+
+impl SyntheticTask {
+    /// CIFAR-10 substitute: Dirichlet(alpha) label skew over clients.
+    #[allow(clippy::too_many_arguments)]
+    pub fn label_skew(
+        num_clients: usize,
+        num_classes: usize,
+        (h, w, c): (usize, usize, usize),
+        dirichlet_alpha: f64,
+        samples_range: (usize, usize),
+        snr: f64,
+        seed: u64,
+    ) -> SyntheticTask {
+        let mut rng = Rng::new(seed ^ 0xDA7A_5EED);
+        let feats = h * w * c;
+        let prototypes = rng.normal_vec_f32(num_classes * feats);
+        let label_probs = (0..num_clients)
+            .map(|_| rng.dirichlet(dirichlet_alpha, num_classes))
+            .collect();
+        let (lo, hi) = samples_range;
+        let sizes = (0..num_clients).map(|_| lo + rng.below(hi - lo + 1)).collect();
+        SyntheticTask {
+            kind: TaskKind::LabelSkew,
+            num_clients,
+            num_classes,
+            h,
+            w,
+            c,
+            sizes,
+            prototypes,
+            label_probs,
+            styles: Vec::new(),
+            snr: snr as f32,
+            seed,
+        }
+    }
+
+    /// FEMNIST substitute: per-writer style transforms, uniform labels.
+    #[allow(clippy::too_many_arguments)]
+    pub fn writer_shift(
+        num_clients: usize,
+        num_classes: usize,
+        (h, w, c): (usize, usize, usize),
+        samples_range: (usize, usize),
+        snr: f64,
+        seed: u64,
+    ) -> SyntheticTask {
+        assert_eq!(h, w, "rotation styles need square inputs");
+        let mut rng = Rng::new(seed ^ 0xF3E7_57A7);
+        let feats = h * w * c;
+        let prototypes = rng.normal_vec_f32(num_classes * feats);
+        let styles = (0..num_clients)
+            .map(|_| Style {
+                rot: rng.below(4) as u8,
+                scale: rng.range(0.8, 1.2) as f32,
+                shift: rng.range(-0.2, 0.2) as f32,
+            })
+            .collect();
+        let uniform = vec![1.0 / num_classes as f64; num_classes];
+        let (lo, hi) = samples_range;
+        let sizes = (0..num_clients).map(|_| lo + rng.below(hi - lo + 1)).collect();
+        SyntheticTask {
+            kind: TaskKind::WriterShift,
+            num_clients,
+            num_classes,
+            h,
+            w,
+            c,
+            sizes,
+            prototypes,
+            label_probs: vec![uniform; num_clients],
+            styles,
+            snr: snr as f32,
+            seed,
+        }
+    }
+
+    pub fn feats(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    /// Per-client dataset sizes `D_n` (drives the fleet's data weights).
+    pub fn sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    /// Deterministically materialize sample `idx` of `client` into `x_out`
+    /// (length `feats`); returns the label.
+    pub fn sample_into(&self, client: usize, idx: usize, x_out: &mut [f32]) -> i32 {
+        debug_assert!(client < self.num_clients);
+        debug_assert_eq!(x_out.len(), self.feats());
+        let key = (client as u64) << 32 | (idx as u64 & 0xFFFF_FFFF);
+        let mut rng = Rng::new(self.seed ^ key.wrapping_mul(0x2545_F491_4F6C_DD1D));
+        let label = rng.categorical(&self.label_probs[client]) as i32;
+        self.render(label as usize, &mut rng, self.styles.get(client).copied(), x_out);
+        label
+    }
+
+    /// A test sample from the *global* distribution: uniform labels and —
+    /// for WriterShift — a fresh, unseen writer style per sample.
+    pub fn test_sample_into(&self, idx: usize, x_out: &mut [f32]) -> i32 {
+        let mut rng = Rng::new(
+            self.seed ^ 0x7E57_DA7A ^ (idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        let label = rng.below(self.num_classes) as i32;
+        let style = match self.kind {
+            TaskKind::LabelSkew => None,
+            TaskKind::WriterShift => Some(Style {
+                rot: rng.below(4) as u8,
+                scale: rng.range(0.8, 1.2) as f32,
+                shift: rng.range(-0.2, 0.2) as f32,
+            }),
+        };
+        self.render(label as usize, &mut rng, style, x_out);
+        label
+    }
+
+    /// Fill a training batch for `client` from sample indices.
+    pub fn fill_batch(&self, client: usize, indices: &[usize], x_out: &mut [f32], y_out: &mut [i32]) {
+        let feats = self.feats();
+        debug_assert_eq!(x_out.len(), indices.len() * feats);
+        debug_assert_eq!(y_out.len(), indices.len());
+        for (slot, &idx) in indices.iter().enumerate() {
+            y_out[slot] = self.sample_into(client, idx, &mut x_out[slot * feats..(slot + 1) * feats]);
+        }
+    }
+
+    /// Materialize the global test set.
+    pub fn test_set(&self, n: usize) -> (Vec<f32>, Vec<i32>) {
+        let feats = self.feats();
+        let mut x = vec![0.0f32; n * feats];
+        let mut y = vec![0i32; n];
+        for i in 0..n {
+            y[i] = self.test_sample_into(i, &mut x[i * feats..(i + 1) * feats]);
+        }
+        (x, y)
+    }
+
+    fn render(&self, label: usize, rng: &mut Rng, style: Option<Style>, x_out: &mut [f32]) {
+        let feats = self.feats();
+        let proto = &self.prototypes[label * feats..(label + 1) * feats];
+        let norm = 1.0 / (1.0 + self.snr * self.snr).sqrt();
+        match style {
+            None => {
+                for (o, &p) in x_out.iter_mut().zip(proto) {
+                    *o = (self.snr * p + rng.normal() as f32) * norm;
+                }
+            }
+            Some(s) => {
+                // Rotate the prototype grid, then apply the affine style.
+                for i in 0..self.h {
+                    for j in 0..self.w {
+                        let (si, sj) = rotate_index(i, j, self.h, s.rot);
+                        for ch in 0..self.c {
+                            let src = (si * self.w + sj) * self.c + ch;
+                            let dst = (i * self.w + j) * self.c + ch;
+                            let v = self.snr * proto[src] * s.scale + s.shift
+                                + rng.normal() as f32;
+                            x_out[dst] = v * norm;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Source index of destination `(i, j)` under `rot` 90°-rotations of an
+/// `n×n` grid.
+fn rotate_index(i: usize, j: usize, n: usize, rot: u8) -> (usize, usize) {
+    match rot % 4 {
+        0 => (i, j),
+        1 => (j, n - 1 - i),
+        2 => (n - 1 - i, n - 1 - j),
+        _ => (n - 1 - j, i),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cifar() -> SyntheticTask {
+        SyntheticTask::label_skew(20, 10, (8, 8, 3), 0.5, (50, 100), 1.5, 42)
+    }
+
+    fn femnist() -> SyntheticTask {
+        SyntheticTask::writer_shift(20, 62, (28, 28, 1), (50, 100), 1.5, 42)
+    }
+
+    #[test]
+    fn samples_are_deterministic() {
+        let t = cifar();
+        let mut a = vec![0.0; t.feats()];
+        let mut b = vec![0.0; t.feats()];
+        let la = t.sample_into(3, 17, &mut a);
+        let lb = t.sample_into(3, 17, &mut b);
+        assert_eq!(la, lb);
+        assert_eq!(a, b);
+        // Different index -> different sample.
+        let lc = t.sample_into(3, 18, &mut b);
+        assert!(a != b || la != lc);
+    }
+
+    #[test]
+    fn sizes_in_range_and_labels_valid() {
+        let t = cifar();
+        for (&n, client) in t.sizes().iter().zip(0..) {
+            assert!((50..=100).contains(&n));
+            let mut x = vec![0.0; t.feats()];
+            for idx in 0..5 {
+                let y = t.sample_into(client, idx, &mut x);
+                assert!((0..10).contains(&y));
+                assert!(x.iter().all(|v| v.is_finite()));
+            }
+        }
+    }
+
+    #[test]
+    fn label_skew_is_non_iid() {
+        // Under Dirichlet(0.5) most clients concentrate: the max class
+        // frequency should exceed the IID 1/10 baseline on average.
+        let t = cifar();
+        let mut x = vec![0.0; t.feats()];
+        let mut avg_max = 0.0;
+        for client in 0..t.num_clients {
+            let mut counts = vec![0usize; 10];
+            for idx in 0..60 {
+                counts[t.sample_into(client, idx, &mut x) as usize] += 1;
+            }
+            avg_max += *counts.iter().max().unwrap() as f64 / 60.0;
+        }
+        avg_max /= t.num_clients as f64;
+        assert!(avg_max > 0.3, "avg max class frequency {avg_max} too IID");
+    }
+
+    #[test]
+    fn writer_shift_differs_between_writers_same_label() {
+        let t = femnist();
+        // Find a label both writers can produce, compare renderings.
+        let mut x0 = vec![0.0; t.feats()];
+        let mut x1 = vec![0.0; t.feats()];
+        // Render label deterministically via fixed style paths: use two
+        // clients with different styles.
+        let s0 = t.styles[0];
+        let s1 = t.styles[1];
+        if s0.rot == s1.rot && (s0.scale - s1.scale).abs() < 1e-3 {
+            return; // styles collided in this seed; nothing to compare
+        }
+        // Force the same label by scanning indices.
+        let mut found = None;
+        for idx in 0..200 {
+            let l0 = t.sample_into(0, idx, &mut x0);
+            for jdx in 0..200 {
+                let l1 = t.sample_into(1, jdx, &mut x1);
+                if l0 == l1 {
+                    found = Some((x0.clone(), x1.clone()));
+                    break;
+                }
+            }
+            if found.is_some() {
+                break;
+            }
+        }
+        let (a, b) = found.expect("same label not found");
+        let dist: f32 = a.iter().zip(&b).map(|(u, v)| (u - v) * (u - v)).sum();
+        assert!(dist > 1.0, "writers render identically: {dist}");
+    }
+
+    #[test]
+    fn test_set_is_roughly_class_balanced() {
+        let t = cifar();
+        let (_, y) = t.test_set(1000);
+        let mut counts = vec![0usize; 10];
+        for &l in &y {
+            counts[l as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((50..200).contains(&c), "class count {c}");
+        }
+    }
+
+    #[test]
+    fn snr_separates_classes() {
+        // With snr = 1.5 the nearest-prototype classifier should beat
+        // chance comfortably on the test set: the task is learnable.
+        let t = cifar();
+        let feats = t.feats();
+        let (x, y) = t.test_set(300);
+        let mut correct = 0;
+        let norm = (1.0f32 + t.snr * t.snr).sqrt();
+        for i in 0..300 {
+            let xi = &x[i * feats..(i + 1) * feats];
+            let mut best = (f32::INFINITY, 0usize);
+            for cls in 0..10 {
+                let p = &t.prototypes[cls * feats..(cls + 1) * feats];
+                let d: f32 = xi
+                    .iter()
+                    .zip(p)
+                    .map(|(a, b)| {
+                        let diff = a * norm - t.snr * b;
+                        diff * diff
+                    })
+                    .sum();
+                if d < best.0 {
+                    best = (d, cls);
+                }
+            }
+            if best.1 as i32 == y[i] {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / 300.0;
+        assert!(acc > 0.8, "nearest-prototype accuracy {acc} too low");
+    }
+
+    #[test]
+    fn rotate_index_is_a_bijection() {
+        let n = 5;
+        for rot in 0..4u8 {
+            let mut seen = std::collections::BTreeSet::new();
+            for i in 0..n {
+                for j in 0..n {
+                    seen.insert(rotate_index(i, j, n, rot));
+                }
+            }
+            assert_eq!(seen.len(), n * n);
+        }
+    }
+
+    #[test]
+    fn fill_batch_matches_individual_samples() {
+        let t = femnist();
+        let feats = t.feats();
+        let indices = [0usize, 5, 9];
+        let mut xb = vec![0.0; 3 * feats];
+        let mut yb = vec![0i32; 3];
+        t.fill_batch(2, &indices, &mut xb, &mut yb);
+        let mut x = vec![0.0; feats];
+        for (slot, &idx) in indices.iter().enumerate() {
+            let y = t.sample_into(2, idx, &mut x);
+            assert_eq!(y, yb[slot]);
+            assert_eq!(&xb[slot * feats..(slot + 1) * feats], &x[..]);
+        }
+    }
+}

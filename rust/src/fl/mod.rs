@@ -1,0 +1,15 @@
+//! The federated-learning loop: local training, evaluation, and the
+//! server round orchestration of Algorithm 1.
+//!
+//! * [`trainer`] — per-client local updates (E epochs of minibatch
+//!   momentum-SGD through the PJRT `train_step` artifact) and the global
+//!   test-set evaluator;
+//! * [`server`] — the synchronous FL server: channel observation, control
+//!   solve, K-with-replacement sampling, parallel local updates, eq. (4)
+//!   aggregation, virtual-queue advance, metric recording.
+
+mod server;
+mod trainer;
+
+pub use server::{Server, SimMode};
+pub use trainer::{Evaluator, LocalTrainer, LocalUpdate};

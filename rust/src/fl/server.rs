@@ -1,0 +1,483 @@
+//! The synchronous FL server — Algorithm 1 with pluggable policies.
+
+use std::path::Path;
+
+use super::trainer::{Evaluator, LocalTrainer};
+use crate::config::{Config, Policy};
+use crate::control::{self, hyper, static_alloc, LroaSolver, VirtualQueues};
+use crate::data::SyntheticTask;
+use crate::metrics::{Recorder, RoundRecord};
+use crate::rng::Rng;
+use crate::runtime::{Engine, Manifest};
+use crate::sampling::{self, DivFlState, Projector, Selection};
+use crate::system::{selection_probability, ChannelProcess, Fleet, RoundCosts};
+use crate::Result;
+
+/// Whether the server actually trains a model or only exercises the
+/// control plane (Fig. 4 and the solver benches need no learning).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimMode {
+    /// Full FL: local SGD via PJRT artifacts + aggregation + evaluation.
+    Full,
+    /// Control plane only: channels, controls, queues, latency/energy.
+    ControlPlaneOnly,
+}
+
+/// Fallback model sizes (bits) when running control-plane-only without
+/// artifacts: the flat-param counts of the two exported variants.
+fn default_model_bits(dataset: &str) -> f64 {
+    match dataset {
+        "femnist" => 32.0 * 111_902.0,
+        _ => 32.0 * 136_874.0,
+    }
+}
+
+/// The FL server: owns every subsystem and drives the round loop.
+pub struct Server {
+    pub cfg: Config,
+    mode: SimMode,
+    engine: Option<Engine>,
+    task: Option<SyntheticTask>,
+    evaluator: Option<Evaluator>,
+    fleet: Fleet,
+    channel: ChannelProcess,
+    queues: VirtualQueues,
+    solver: LroaSolver,
+    divfl: Option<DivFlState>,
+    projector: Projector,
+    trainer: LocalTrainer,
+    sample_rng: Rng,
+    /// Effective λ and V after the §VII-B.1 rule.
+    pub lambda: f64,
+    pub v: f64,
+    model_bits: f64,
+    theta: Vec<f32>,
+    pub recorder: Recorder,
+}
+
+impl Server {
+    /// Build a server from config. In [`SimMode::Full`] the AOT artifacts
+    /// are loaded from `cfg.artifacts_dir` and the synthetic task is
+    /// materialized; in control-plane-only mode neither is touched.
+    pub fn new(cfg: Config, mode: SimMode) -> Result<Server> {
+        cfg.validate()?;
+        let n = cfg.system.num_devices;
+        let seed = cfg.train.seed;
+
+        // Data + engine (Full mode only).
+        let (engine, task) = match mode {
+            SimMode::Full => {
+                let manifest = Manifest::load(Path::new(&cfg.artifacts_dir))?;
+                let engine = Engine::load(&manifest, &cfg.train.dataset)?;
+                let v = &engine.variant;
+                let geom = (v.input_hw.0, v.input_hw.1, v.input_c);
+                let task = match cfg.train.dataset.as_str() {
+                    "femnist" => SyntheticTask::writer_shift(
+                        n,
+                        v.num_classes,
+                        geom,
+                        cfg.train.samples_per_device,
+                        cfg.train.data_snr,
+                        seed,
+                    ),
+                    _ => SyntheticTask::label_skew(
+                        n,
+                        v.num_classes,
+                        geom,
+                        0.5, // the paper's Dirichlet concentration
+                        cfg.train.samples_per_device,
+                        cfg.train.data_snr,
+                        seed,
+                    ),
+                };
+                (Some(engine), Some(task))
+            }
+            SimMode::ControlPlaneOnly => (None, None),
+        };
+
+        // Dataset sizes drive the fleet's data weights.
+        let mut fleet_rng = Rng::new(seed ^ 0xF1EE_7000);
+        let fleet = match &task {
+            Some(t) => Fleet::from_data_sizes(&cfg.system, t.sizes(), &mut fleet_rng),
+            None => Fleet::generate(&cfg.system, cfg.train.samples_per_device, &mut fleet_rng),
+        };
+
+        let model_bits = if cfg.system.model_bits > 0.0 {
+            cfg.system.model_bits
+        } else if let Some(e) = &engine {
+            e.variant.model_bits as f64
+        } else {
+            default_model_bits(&cfg.train.dataset)
+        };
+
+        // §VII-B.1 hyper-parameter rule.
+        let est = hyper::estimate(&cfg.system, &fleet.devices, fleet.weights(), model_bits);
+        let lambda = if cfg.control.lambda_explicit > 0.0 {
+            cfg.control.lambda_explicit
+        } else {
+            cfg.control.mu * est.lambda0
+        };
+        let v = if cfg.control.v_explicit > 0.0 {
+            cfg.control.v_explicit
+        } else {
+            cfg.control.nu * est.v0(lambda)
+        };
+
+        let evaluator = match (&engine, &task) {
+            (Some(e), Some(t)) => Some(Evaluator::new(t, cfg.train.test_samples.min(8192).max(1)).into_checked(e)?),
+            _ => None,
+        };
+
+        let theta = match &engine {
+            Some(e) => e.init_params(seed as i32)?,
+            None => Vec::new(),
+        };
+
+        let budgets = fleet.devices.iter().map(|d| d.energy_budget_j).collect();
+        let channel = ChannelProcess::new(&cfg.system, seed ^ 0xC4A1);
+        let solver = LroaSolver::new(cfg.system.clone(), cfg.control.clone(), lambda, v, model_bits);
+        let divfl = match cfg.train.policy {
+            Policy::DivFl => Some(DivFlState::new(n, 32)),
+            _ => None,
+        };
+
+        let label = format!("{}-{}", cfg.train.policy.name(), cfg.train.dataset);
+        Ok(Server {
+            mode,
+            engine,
+            task,
+            evaluator,
+            fleet,
+            channel,
+            queues: VirtualQueues::new(budgets),
+            solver,
+            divfl,
+            projector: Projector::new(32, seed ^ 0xD1F1),
+            trainer: LocalTrainer::new(cfg.system.local_epochs),
+            sample_rng: Rng::new(seed ^ 0x5A3B_1E00),
+            lambda,
+            v,
+            model_bits,
+            theta,
+            recorder: Recorder::new(label),
+            cfg,
+        })
+    }
+
+    /// Current global model (empty in control-plane-only mode).
+    pub fn theta(&self) -> &[f32] {
+        &self.theta
+    }
+
+    pub fn fleet(&self) -> &Fleet {
+        &self.fleet
+    }
+
+    pub fn queues(&self) -> &VirtualQueues {
+        &self.queues
+    }
+
+    /// Learning rate at round `t` (paper: halve at 50% and 75%).
+    pub fn lr_at(&self, t: usize) -> f32 {
+        let frac = t as f64 / self.cfg.train.rounds as f64;
+        let mut lr = self.cfg.train.lr0;
+        if frac >= self.cfg.train.lr_decay_at.0 {
+            lr *= 0.5;
+        }
+        if frac >= self.cfg.train.lr_decay_at.1 {
+            lr *= 0.5;
+        }
+        lr as f32
+    }
+
+    /// Run the full training horizon.
+    pub fn run(&mut self) -> Result<()> {
+        for t in 0..self.cfg.train.rounds {
+            self.round(t)?;
+        }
+        Ok(())
+    }
+
+    /// Execute one communication round (Algorithm 1 body).
+    pub fn round(&mut self, t: usize) -> Result<()> {
+        let k = self.cfg.system.k;
+        let n = self.fleet.len();
+        let policy = self.cfg.train.policy;
+
+        // (1) Devices report channel states.
+        let h = self.channel.next_round();
+
+        // (2) Server solves for controls (Algorithm 2 / baselines).
+        let backlogs = self.queues.backlogs().to_vec();
+        let (controls, stats) = match policy {
+            Policy::Lroa => {
+                self.solver
+                    .solve_round(&self.fleet.devices, self.fleet.weights(), &h, &backlogs)
+            }
+            Policy::UniformDynamic => {
+                self.solver.solve_uniform_dynamic(&self.fleet.devices, &h, &backlogs)
+            }
+            Policy::UniformStatic | Policy::DivFl => (
+                static_alloc::solve_static(&self.cfg.system, &self.fleet.devices, self.model_bits, &h),
+                Default::default(),
+            ),
+        };
+
+        // (3) Sample the participant multiset K^t.
+        let selection: Selection = match policy {
+            Policy::Lroa => sampling::sample_by_probability(
+                &controls.q,
+                self.fleet.weights(),
+                k,
+                &mut self.sample_rng,
+            ),
+            Policy::UniformDynamic | Policy::UniformStatic => {
+                sampling::sample_uniform(n, self.fleet.weights(), k, &mut self.sample_rng)
+            }
+            Policy::DivFl => self
+                .divfl
+                .as_mut()
+                .expect("divfl state")
+                .select(self.fleet.weights(), k),
+        };
+        let unique = selection.unique_members();
+
+        // (4) Latency/energy bookkeeping (eqs. 6-15).
+        let costs = RoundCosts::evaluate(
+            &self.cfg.system,
+            &self.fleet.devices,
+            self.model_bits,
+            &h,
+            &controls.f_hz,
+            &controls.p_w,
+        );
+        let round_time = costs.makespan_s(&unique);
+
+        // (5) Local updates + eq. (4) aggregation (Full mode).
+        let mut train_loss = f32::NAN;
+        if self.mode == SimMode::Full {
+            let lr = self.lr_at(t);
+            let engine = self.engine.as_ref().expect("engine");
+            let task = self.task.as_ref().expect("task");
+            let mut deltas: Vec<Vec<f32>> = Vec::with_capacity(unique.len());
+            let mut losses = 0.0f64;
+            for &client in &unique {
+                let mut rng = self.sample_rng.fork((t as u64) << 20 | client as u64);
+                let upd = self
+                    .trainer
+                    .train(engine, task, client, &self.theta, lr, &mut rng)?;
+                losses += upd.mean_loss as f64;
+                if let Some(divfl) = self.divfl.as_mut() {
+                    divfl.observe(client, self.projector.project(&upd.delta));
+                }
+                deltas.push(upd.delta);
+            }
+            train_loss = (losses / unique.len() as f64) as f32;
+
+            // Slot -> unique-member delta mapping for eq. (4).
+            let slot_refs: Vec<&[f32]> = selection
+                .members
+                .iter()
+                .map(|m| {
+                    let pos = unique.iter().position(|u| u == m).expect("member in unique");
+                    deltas[pos].as_slice()
+                })
+                .collect();
+            let coefs: Vec<f32> = selection.coefs.iter().map(|&c| c as f32).collect();
+            self.theta = engine.aggregate(&self.theta, &slot_refs, &coefs)?;
+        }
+
+        // (6) Advance the virtual queues with this round's expected draws.
+        let q_eff: Vec<f64> = match policy {
+            Policy::Lroa => controls.q.clone(),
+            _ => vec![1.0 / n as f64; n],
+        };
+        self.queues.update(&q_eff, k, &costs.energy_j);
+
+        // (7) Record.
+        let mean_energy = (0..n)
+            .map(|i| selection_probability(q_eff[i], k) * costs.energy_j[i])
+            .sum::<f64>()
+            / n as f64;
+        let objective =
+            control::objective_terms(&q_eff, &costs.time_s, self.lambda, self.fleet.weights());
+        let prev_total = self.recorder.total_time_s();
+
+        let mut rec = RoundRecord {
+            round: t,
+            round_time_s: round_time,
+            total_time_s: prev_total + round_time,
+            objective,
+            mean_energy_j: mean_energy,
+            mean_queue: self.queues.mean_backlog(),
+            max_queue: self.queues.max_backlog(),
+            selected: unique.len(),
+            train_loss: train_loss as f64,
+            test_accuracy: f64::NAN,
+            test_loss: f64::NAN,
+            solver_time_s: stats.solve_time_s,
+        };
+
+        // (8) Periodic evaluation.
+        let is_eval_round = self.mode == SimMode::Full
+            && (t % self.cfg.train.eval_every == 0 || t + 1 == self.cfg.train.rounds);
+        if is_eval_round {
+            let engine = self.engine.as_ref().expect("engine");
+            let ev = self.evaluator.as_ref().expect("evaluator");
+            let (loss, acc) = ev.evaluate(engine, &self.theta)?;
+            rec.test_loss = loss;
+            rec.test_accuracy = acc;
+        }
+        self.recorder.push(rec);
+        Ok(())
+    }
+}
+
+// Small helper so Evaluator construction stays on one line above.
+trait IntoChecked {
+    fn into_checked(self, engine: &Engine) -> Result<Evaluator>;
+}
+
+impl IntoChecked for Evaluator {
+    fn into_checked(self, engine: &Engine) -> Result<Evaluator> {
+        anyhow::ensure!(
+            engine.variant.eval_batch > 0,
+            "engine has zero eval batch size"
+        );
+        Ok(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_cfg(policy: Policy, rounds: usize) -> Config {
+        let mut cfg = Config::for_dataset("femnist").unwrap();
+        cfg.system.num_devices = 16;
+        cfg.train.rounds = rounds;
+        cfg.train.policy = policy;
+        cfg.train.samples_per_device = (40, 80);
+        cfg.train.test_samples = 64;
+        cfg.train.eval_every = 5;
+        cfg
+    }
+
+    #[test]
+    fn control_plane_only_runs_all_policies() {
+        for policy in [
+            Policy::Lroa,
+            Policy::UniformDynamic,
+            Policy::UniformStatic,
+        ] {
+            let cfg = base_cfg(policy, 30);
+            let mut server = Server::new(cfg, SimMode::ControlPlaneOnly).unwrap();
+            server.run().unwrap();
+            assert_eq!(server.recorder.rounds.len(), 30);
+            let total = server.recorder.total_time_s();
+            assert!(total > 0.0 && total.is_finite(), "{policy}: total {total}");
+            for r in &server.recorder.rounds {
+                assert!(r.round_time_s > 0.0);
+                assert!(r.mean_energy_j > 0.0);
+                assert!((1..=2).contains(&r.selected));
+            }
+        }
+    }
+
+    #[test]
+    fn divfl_control_plane_selects_distinct() {
+        let cfg = base_cfg(Policy::DivFl, 20);
+        let mut server = Server::new(cfg, SimMode::ControlPlaneOnly).unwrap();
+        server.run().unwrap();
+        for r in &server.recorder.rounds {
+            assert_eq!(r.selected, 2, "DivFL selects K distinct clients");
+        }
+    }
+
+    #[test]
+    fn lr_schedule_halves() {
+        let cfg = base_cfg(Policy::Lroa, 100);
+        let server = Server::new(cfg, SimMode::ControlPlaneOnly).unwrap();
+        let lr0 = server.cfg.train.lr0 as f32;
+        assert_eq!(server.lr_at(0), lr0);
+        assert_eq!(server.lr_at(49), lr0);
+        assert_eq!(server.lr_at(50), lr0 * 0.5);
+        assert_eq!(server.lr_at(75), lr0 * 0.25);
+        assert_eq!(server.lr_at(99), lr0 * 0.25);
+    }
+
+    #[test]
+    fn lroa_keeps_time_average_energy_near_budget() {
+        // The Lyapunov controller must keep the time-average expected
+        // energy around Ē_n; run long enough for queues to bite.
+        let mut cfg = base_cfg(Policy::Lroa, 400);
+        cfg.control.nu = 1e3; // strong constraint enforcement
+        let mut server = Server::new(cfg, SimMode::ControlPlaneOnly).unwrap();
+        server.run().unwrap();
+        let avg_series = server.recorder.time_avg_energy();
+        let avg = *avg_series.last().unwrap();
+        let budget = server.cfg.system.energy_budget_j;
+        assert!(
+            avg < 3.0 * budget,
+            "time-average energy {avg} runs away from budget {budget}"
+        );
+    }
+
+    #[test]
+    fn lroa_beats_static_on_modeled_time() {
+        // The paper's headline: LROA completes the horizon faster than
+        // Uni-S under identical channel realizations.
+        let rounds = 150;
+        let run = |policy: Policy| -> f64 {
+            let cfg = base_cfg(policy, rounds);
+            let mut server = Server::new(cfg, SimMode::ControlPlaneOnly).unwrap();
+            server.run().unwrap();
+            server.recorder.total_time_s()
+        };
+        let t_lroa = run(Policy::Lroa);
+        let t_unis = run(Policy::UniformStatic);
+        assert!(
+            t_lroa < t_unis,
+            "LROA {t_lroa} should beat Uni-S {t_unis}"
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = base_cfg(Policy::Lroa, 25);
+        let mut a = Server::new(cfg.clone(), SimMode::ControlPlaneOnly).unwrap();
+        let mut b = Server::new(cfg, SimMode::ControlPlaneOnly).unwrap();
+        a.run().unwrap();
+        b.run().unwrap();
+        for (ra, rb) in a.recorder.rounds.iter().zip(&b.recorder.rounds) {
+            assert_eq!(ra.round_time_s, rb.round_time_s);
+            assert_eq!(ra.objective, rb.objective);
+        }
+    }
+
+    #[test]
+    fn full_mode_trains_when_artifacts_exist() {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping full-mode test: run `make artifacts`");
+            return;
+        }
+        let mut cfg = base_cfg(Policy::Lroa, 6);
+        cfg.artifacts_dir = dir.to_string_lossy().into_owned();
+        cfg.train.eval_every = 2;
+        let mut server = Server::new(cfg, SimMode::Full).unwrap();
+        server.run().unwrap();
+        assert_eq!(server.recorder.rounds.len(), 6);
+        // Training losses recorded and finite.
+        assert!(server
+            .recorder
+            .rounds
+            .iter()
+            .all(|r| r.train_loss.is_finite()));
+        // At least one eval produced an accuracy in [0, 1].
+        let acc = server.recorder.final_accuracy();
+        assert!((0.0..=1.0).contains(&acc), "acc {acc}");
+        // Global model actually moved.
+        assert!(server.theta().iter().any(|&x| x != 0.0));
+    }
+}

@@ -1,0 +1,156 @@
+//! Client-side local training and global evaluation.
+
+use crate::data::SyntheticTask;
+use crate::rng::Rng;
+use crate::runtime::Engine;
+use crate::Result;
+
+/// Result of one client's local round.
+#[derive(Clone, Debug)]
+pub struct LocalUpdate {
+    /// `θ_n^{t,E} − θ^t`, the model delta the client uploads.
+    pub delta: Vec<f32>,
+    /// Mean minibatch loss across the client's local steps.
+    pub mean_loss: f32,
+    /// Number of SGD steps executed.
+    pub steps: usize,
+}
+
+/// Runs `E` local epochs for one client through the AOT `train_step`.
+pub struct LocalTrainer {
+    /// Local epochs `E`.
+    pub local_epochs: usize,
+    // Reused batch buffers (hot path: two clients per round, many rounds).
+    x_buf: Vec<f32>,
+    y_buf: Vec<i32>,
+    idx_buf: Vec<usize>,
+}
+
+impl LocalTrainer {
+    pub fn new(local_epochs: usize) -> Self {
+        Self {
+            local_epochs,
+            x_buf: Vec::new(),
+            y_buf: Vec::new(),
+            idx_buf: Vec::new(),
+        }
+    }
+
+    /// One client's local round: initialize from the global model, run
+    /// `E` epochs of shuffled minibatch SGD, return the delta.
+    ///
+    /// Batching policy: full batches only (drop-last), except that clients
+    /// with fewer than one batch of data wrap around so every client takes
+    /// at least one step per epoch.
+    pub fn train(
+        &mut self,
+        engine: &Engine,
+        task: &SyntheticTask,
+        client: usize,
+        global: &[f32],
+        lr: f32,
+        rng: &mut Rng,
+    ) -> Result<LocalUpdate> {
+        let v = &engine.variant;
+        let batch = v.train_batch;
+        let feats = v.input_features();
+        let d_n = task.sizes()[client];
+
+        let mut theta = global.to_vec();
+        let mut momentum = vec![0.0f32; theta.len()];
+        let mut loss_acc = 0.0f64;
+        let mut steps = 0usize;
+
+        self.x_buf.resize(batch * feats, 0.0);
+        self.y_buf.resize(batch, 0);
+
+        for _epoch in 0..self.local_epochs {
+            // Shuffled epoch order over the client's local indices.
+            self.idx_buf.clear();
+            self.idx_buf.extend(0..d_n);
+            rng.shuffle(&mut self.idx_buf);
+            if d_n < batch {
+                // Wrap-around so one full batch exists.
+                for i in d_n..batch {
+                    let wrapped = self.idx_buf[i % d_n];
+                    self.idx_buf.push(wrapped);
+                }
+            }
+            let n_batches = self.idx_buf.len() / batch; // drop-last
+            for b in 0..n_batches {
+                let ids = &self.idx_buf[b * batch..(b + 1) * batch];
+                task.fill_batch(client, ids, &mut self.x_buf, &mut self.y_buf);
+                let out = engine.train_step(&theta, &momentum, &self.x_buf, &self.y_buf, lr)?;
+                theta = out.params;
+                momentum = out.momentum;
+                loss_acc += out.loss as f64;
+                steps += 1;
+            }
+        }
+
+        let delta: Vec<f32> = theta.iter().zip(global).map(|(a, b)| a - b).collect();
+        Ok(LocalUpdate {
+            delta,
+            mean_loss: if steps > 0 { (loss_acc / steps as f64) as f32 } else { f32::NAN },
+            steps,
+        })
+    }
+}
+
+/// Global test-set evaluator (masked batches through `eval_batch`).
+pub struct Evaluator {
+    x: Vec<f32>,
+    y: Vec<i32>,
+    n: usize,
+}
+
+impl Evaluator {
+    /// Materialize an `n`-sample test set from the task's global distribution.
+    pub fn new(task: &SyntheticTask, n: usize) -> Self {
+        let (x, y) = task.test_set(n);
+        Self { x, y, n }
+    }
+
+    /// `(mean_loss, accuracy)` of `theta` on the held-out set.
+    pub fn evaluate(&self, engine: &Engine, theta: &[f32]) -> Result<(f64, f64)> {
+        let v = &engine.variant;
+        let batch = v.eval_batch;
+        let feats = v.input_features();
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+
+        let mut xb = vec![0.0f32; batch * feats];
+        let mut yb = vec![0i32; batch];
+        let mut mask = vec![0.0f32; batch];
+
+        let mut i = 0;
+        while i < self.n {
+            let take = (self.n - i).min(batch);
+            xb[..take * feats].copy_from_slice(&self.x[i * feats..(i + take) * feats]);
+            yb[..take].copy_from_slice(&self.y[i..i + take]);
+            for (slot, m) in mask.iter_mut().enumerate() {
+                *m = if slot < take { 1.0 } else { 0.0 };
+            }
+            // Zero the padded tail to keep inputs finite.
+            for v in xb[take * feats..].iter_mut() {
+                *v = 0.0;
+            }
+            for y in yb[take..].iter_mut() {
+                *y = 0;
+            }
+            let (ls, cr) = engine.eval_batch(theta, &xb, &yb, &mask)?;
+            loss_sum += ls as f64;
+            correct += cr as f64;
+            i += take;
+        }
+        Ok((loss_sum / self.n as f64, correct / self.n as f64))
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+}

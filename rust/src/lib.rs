@@ -1,0 +1,51 @@
+//! # LROA — Lyapunov-based Resource-efficient Online Algorithm for Federated Edge Learning
+//!
+//! Production-grade reproduction of *"Online Client Scheduling and Resource
+//! Allocation for Efficient Federated Edge Learning"* (Gao et al., 2024).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer rust + JAX +
+//! Pallas stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): tiled matmul with
+//!   fused bias + activation, fused SGD-momentum update, weighted client-delta
+//!   aggregation. Authored in python, lowered at build time.
+//! * **L2** — JAX model (`python/compile/model.py`): CNN forward/backward and
+//!   the federated train/eval/aggregate steps, lowered once by
+//!   `python/compile/aot.py` to HLO text under `artifacts/`.
+//! * **L3** — this crate: the FL server (round orchestration, client
+//!   sampling, virtual energy queues, and the online control policy from the
+//!   paper), a mobile-edge system simulator (channels, device heterogeneity,
+//!   latency/energy models) and a PJRT runtime that loads and executes the
+//!   AOT artifacts. Python is never on the request path.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |--------|------|
+//! | [`rng`] | deterministic PRNG + distributions (offline substrate, no `rand`) |
+//! | [`json`] | minimal JSON parser/serializer for manifests + metrics |
+//! | [`config`] | experiment configuration (file + CLI overrides) |
+//! | [`system`] | device fleet, wireless channel model, latency/energy (eqs. 5–17) |
+//! | [`control`] | the paper's contribution: queues, Theorems 2–3, SUM, Algorithm 2 |
+//! | [`sampling`] | client samplers: LROA adaptive, uniform, DivFL |
+//! | [`data`] | synthetic non-IID federated datasets (Dirichlet / writer partitions) |
+//! | [`runtime`] | PJRT client, artifact manifest, typed executables |
+//! | [`fl`] | federated training loop: server, local trainer, evaluator |
+//! | [`metrics`] | run recorder, CSV emission, summaries |
+//! | [`bench`] | self-contained timing harness used by `cargo bench` |
+
+pub mod bench;
+pub mod config;
+pub mod harness;
+pub mod control;
+pub mod data;
+pub mod fl;
+pub mod json;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod sampling;
+pub mod system;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,147 @@
+//! `lroa` — the Layer-3 coordinator CLI.
+//!
+//! Subcommands:
+//!
+//! * `train`  — run one federated training (full stack through PJRT);
+//! * `sim`    — control-plane-only simulation (no artifacts needed);
+//! * `info`   — inspect artifacts, fleet, and the λ/V estimates;
+//! * `help`   — this text.
+//!
+//! Every config knob is overridable as `--section.key=value` (see
+//! `config.rs`), e.g.:
+//!
+//! ```text
+//! lroa train --train.dataset=femnist --train.rounds=200 --control.mu=10
+//! lroa sim   --train.policy=uni-s --system.k=4 --train.rounds=1000
+//! ```
+
+use std::path::Path;
+
+use lroa::config::Config;
+use lroa::fl::{Server, SimMode};
+use lroa::runtime::Manifest;
+
+const HELP: &str = "\
+lroa — Lyapunov-based online client scheduling for federated edge learning
+
+USAGE:
+    lroa <train|sim|info> [--config FILE] [--section.key=value ...]
+
+SUBCOMMANDS:
+    train   full federated training through the AOT artifacts
+    sim     control-plane-only simulation (latency/energy/queues)
+    info    print artifact manifest, fleet summary, λ/V estimates
+
+COMMON OVERRIDES:
+    --train.dataset=cifar|femnist   --train.rounds=N     --train.policy=lroa|uni-d|uni-s|divfl
+    --system.k=K                    --control.mu=F       --control.nu=F
+    --train.seed=N                  --run.out_dir=DIR    --run.artifacts_dir=DIR
+";
+
+fn build_config(args: &[String]) -> lroa::Result<Config> {
+    // Optional --config FILE first, then dotted overrides.
+    let mut cfg = None;
+    let mut it = args.iter().peekable();
+    while let Some(a) = it.next() {
+        if a == "--config" {
+            if let Some(path) = it.next() {
+                cfg = Some(Config::from_file(Path::new(path))?);
+            }
+        } else if let Some(path) = a.strip_prefix("--config=") {
+            cfg = Some(Config::from_file(Path::new(path))?);
+        }
+    }
+    let mut cfg = match cfg {
+        Some(c) => c,
+        None => {
+            // Respect --train.dataset before defaults resolve.
+            let ds = args
+                .iter()
+                .find_map(|a| a.strip_prefix("--train.dataset="))
+                .unwrap_or("cifar");
+            Config::for_dataset(ds)?
+        }
+    };
+    cfg.apply_cli(args)?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn run(mode: SimMode, args: &[String]) -> lroa::Result<()> {
+    let cfg = build_config(args)?;
+    println!("{}", cfg.dump());
+    let out_dir = std::path::PathBuf::from(&cfg.out_dir).join("cli");
+    let mut server = Server::new(cfg, mode)?;
+    println!("lambda = {:.4e}, V = {:.4e}", server.lambda, server.v);
+    server.run()?;
+    let rec = &server.recorder;
+    println!(
+        "done: {} rounds, modeled total {:.1}s, final accuracy {:.4}",
+        rec.rounds.len(),
+        rec.total_time_s(),
+        rec.final_accuracy()
+    );
+    std::fs::create_dir_all(&out_dir)?;
+    let csv = out_dir.join(format!("{}.csv", rec.label));
+    rec.write_csv(&csv)?;
+    println!("wrote {}", csv.display());
+    Ok(())
+}
+
+fn info(args: &[String]) -> lroa::Result<()> {
+    let cfg = build_config(args)?;
+    println!("{}", cfg.dump());
+    match Manifest::load(Path::new(&cfg.artifacts_dir)) {
+        Ok(man) => {
+            println!("\nartifacts ({}):", man.root.display());
+            for v in &man.variants {
+                println!(
+                    "  {:8} d={:7}  M={:.2} Mbit  in={}x{}x{} classes={} batch={}/{} k_max={}",
+                    v.name,
+                    v.dim,
+                    v.model_bits as f64 / 1e6,
+                    v.input_hw.0,
+                    v.input_hw.1,
+                    v.input_c,
+                    v.num_classes,
+                    v.train_batch,
+                    v.eval_batch,
+                    v.k_max
+                );
+            }
+        }
+        Err(e) => println!("\nartifacts: unavailable ({e})"),
+    }
+    let server = Server::new(cfg, SimMode::ControlPlaneOnly)?;
+    println!("\nfleet: {} devices", server.fleet().len());
+    println!("lambda = {:.4e}, V = {:.4e}", server.lambda, server.v);
+    Ok(())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match args.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            print!("{HELP}");
+            return;
+        }
+    };
+    let result = match cmd {
+        "train" => run(SimMode::Full, &rest),
+        "sim" => run(SimMode::ControlPlaneOnly, &rest),
+        "info" => info(&rest),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand {other:?}\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,266 @@
+//! Run metrics: per-round records, time series, CSV / JSON emission.
+//!
+//! Every figure harness consumes this module: the recorder captures the
+//! paper's reported quantities each round (modeled wall-clock, energy,
+//! objective value, queue backlogs, accuracy when evaluated) and emits
+//! them as CSV series shaped like the paper's plots.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::json::{arr_f64, obj, Json};
+use crate::Result;
+
+/// One communication round's record.
+#[derive(Clone, Debug, Default)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Modeled wall-clock of this round: `max_{n in K^t} T_n^t` (eq. 10).
+    pub round_time_s: f64,
+    /// Cumulative modeled time up to and including this round.
+    pub total_time_s: f64,
+    /// Per-round objective `Σ_n (q_n T_n + λ w_n²/q_n)` (P1 integrand).
+    pub objective: f64,
+    /// Mean over devices of realized energy draw `1{selected} · E_n^t`.
+    pub mean_energy_j: f64,
+    /// Mean virtual-queue backlog `mean_n Q_n^t`.
+    pub mean_queue: f64,
+    /// Max virtual-queue backlog.
+    pub max_queue: f64,
+    /// Devices selected this round (unique count).
+    pub selected: usize,
+    /// Mean training loss over the selected clients' local steps.
+    pub train_loss: f64,
+    /// Test accuracy (NaN when not evaluated this round).
+    pub test_accuracy: f64,
+    /// Test loss (NaN when not evaluated this round).
+    pub test_loss: f64,
+    /// Algorithm 2 solve time [s] (control-plane overhead).
+    pub solver_time_s: f64,
+}
+
+/// Recorder for a full run.
+#[derive(Clone, Debug, Default)]
+pub struct Recorder {
+    pub label: String,
+    pub rounds: Vec<RoundRecord>,
+}
+
+impl Recorder {
+    pub fn new(label: impl Into<String>) -> Self {
+        Self {
+            label: label.into(),
+            rounds: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, rec: RoundRecord) {
+        self.rounds.push(rec);
+    }
+
+    /// Total modeled training latency (the paper's headline metric).
+    pub fn total_time_s(&self) -> f64 {
+        self.rounds.last().map(|r| r.total_time_s).unwrap_or(0.0)
+    }
+
+    /// Final test accuracy (last evaluated round).
+    pub fn final_accuracy(&self) -> f64 {
+        self.rounds
+            .iter()
+            .rev()
+            .find(|r| !r.test_accuracy.is_nan())
+            .map(|r| r.test_accuracy)
+            .unwrap_or(f64::NAN)
+    }
+
+    /// Modeled time at which test accuracy first reached `target` (NaN if never).
+    pub fn time_to_accuracy_s(&self, target: f64) -> f64 {
+        self.rounds
+            .iter()
+            .find(|r| !r.test_accuracy.is_nan() && r.test_accuracy >= target)
+            .map(|r| r.total_time_s)
+            .unwrap_or(f64::NAN)
+    }
+
+    /// Running time-average of per-round mean energy (Fig. 4a/4c series).
+    pub fn time_avg_energy(&self) -> Vec<f64> {
+        running_average(self.rounds.iter().map(|r| r.mean_energy_j))
+    }
+
+    /// Running time-average of the objective (Fig. 4b/4d series).
+    pub fn time_avg_objective(&self) -> Vec<f64> {
+        running_average(self.rounds.iter().map(|r| r.objective))
+    }
+
+    /// Write the full per-round table as CSV.
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(
+            f,
+            "round,round_time_s,total_time_s,objective,mean_energy_j,mean_queue,max_queue,selected,train_loss,test_accuracy,test_loss,solver_time_s"
+        )?;
+        for r in &self.rounds {
+            writeln!(
+                f,
+                "{},{},{},{},{},{},{},{},{},{},{},{}",
+                r.round,
+                r.round_time_s,
+                r.total_time_s,
+                r.objective,
+                r.mean_energy_j,
+                r.mean_queue,
+                r.max_queue,
+                r.selected,
+                r.train_loss,
+                csv_f64(r.test_accuracy),
+                csv_f64(r.test_loss),
+                r.solver_time_s,
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Summary as JSON (for EXPERIMENTS.md extraction).
+    pub fn summary_json(&self) -> Json {
+        obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            ("rounds", Json::Num(self.rounds.len() as f64)),
+            ("total_time_s", Json::Num(self.total_time_s())),
+            ("final_accuracy", num_or_null(self.final_accuracy())),
+            (
+                "final_time_avg_energy",
+                num_or_null(self.time_avg_energy().last().copied().unwrap_or(f64::NAN)),
+            ),
+            (
+                "final_time_avg_objective",
+                num_or_null(self.time_avg_objective().last().copied().unwrap_or(f64::NAN)),
+            ),
+            (
+                "accuracy_series",
+                arr_f64(
+                    &self
+                        .rounds
+                        .iter()
+                        .filter(|r| !r.test_accuracy.is_nan())
+                        .map(|r| r.test_accuracy)
+                        .collect::<Vec<_>>(),
+                ),
+            ),
+        ])
+    }
+}
+
+fn num_or_null(x: f64) -> Json {
+    if x.is_nan() {
+        Json::Null
+    } else {
+        Json::Num(x)
+    }
+}
+
+fn csv_f64(x: f64) -> String {
+    if x.is_nan() {
+        String::new()
+    } else {
+        format!("{x}")
+    }
+}
+
+/// Running mean of a sequence: out[t] = mean(xs[0..=t]).
+pub fn running_average<I: IntoIterator<Item = f64>>(xs: I) -> Vec<f64> {
+    let mut out = Vec::new();
+    let mut sum = 0.0;
+    for (i, x) in xs.into_iter().enumerate() {
+        sum += x;
+        out.push(sum / (i + 1) as f64);
+    }
+    out
+}
+
+/// Aggregate several repeats of the same series (mean per index; series
+/// may have equal length only — asserted).
+pub fn mean_series(series: &[Vec<f64>]) -> Vec<f64> {
+    if series.is_empty() {
+        return Vec::new();
+    }
+    let len = series[0].len();
+    assert!(series.iter().all(|s| s.len() == len), "unequal series lengths");
+    (0..len)
+        .map(|i| series.iter().map(|s| s[i]).sum::<f64>() / series.len() as f64)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, time: f64, acc: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            round_time_s: time,
+            total_time_s: 0.0,
+            test_accuracy: acc,
+            ..RoundRecord::default()
+        }
+    }
+
+    #[test]
+    fn running_average_basic() {
+        assert_eq!(running_average([2.0, 4.0, 6.0]), vec![2.0, 3.0, 4.0]);
+        assert!(running_average(std::iter::empty()).is_empty());
+    }
+
+    #[test]
+    fn mean_series_basic() {
+        let out = mean_series(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(out, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn recorder_summaries() {
+        let mut r = Recorder::new("test");
+        let mut total = 0.0;
+        for i in 0..5 {
+            let mut rr = rec(i, 1.0, if i >= 3 { 0.5 + i as f64 / 10.0 } else { f64::NAN });
+            total += rr.round_time_s;
+            rr.total_time_s = total;
+            rr.mean_energy_j = 2.0;
+            rr.objective = 10.0;
+            r.push(rr);
+        }
+        assert_eq!(r.total_time_s(), 5.0);
+        assert!((r.final_accuracy() - 0.9).abs() < 1e-12);
+        assert_eq!(r.time_to_accuracy_s(0.8), 4.0);
+        assert!(r.time_to_accuracy_s(0.99).is_nan());
+        assert_eq!(r.time_avg_energy(), vec![2.0; 5]);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let dir = std::env::temp_dir().join("lroa_metrics_test");
+        let path = dir.join("run.csv");
+        let mut r = Recorder::new("csv");
+        r.push(rec(0, 1.5, f64::NAN));
+        r.push(rec(1, 2.5, 0.4));
+        r.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("round,"));
+        // NaN accuracy serializes as empty field.
+        assert!(lines[1].contains(",,"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn summary_json_is_valid() {
+        let mut r = Recorder::new("j");
+        r.push(rec(0, 1.0, 0.25));
+        let j = r.summary_json().to_string();
+        let parsed = crate::json::Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("label").unwrap().as_str(), Some("j"));
+    }
+}

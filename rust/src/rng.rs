@@ -1,0 +1,387 @@
+//! Deterministic PRNG + sampling substrate.
+//!
+//! The vendored offline registry has no `rand` crate, so the simulator's
+//! randomness is built here from scratch: a [`SplitMix64`]-seeded
+//! [`Xoshiro256pp`] generator plus the distributions the paper's
+//! experiment section needs — exponential channel gains, Gaussian data
+//! clusters, Gamma/Dirichlet partitions, and categorical /
+//! with-replacement client sampling.
+//!
+//! Everything is reproducible: a run is fully determined by its seed, and
+//! independent sub-streams (per device, per round) are derived with
+//! [`Rng::fork`] so policies can be compared on *identical* channel
+//! realizations, as the paper does ("we fix the random seed of random
+//! channel gain across different runnings").
+
+/// SplitMix64: seed expander (Vigna). Used to initialize xoshiro state and
+/// to derive fork keys.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ 1.0 (Blackman & Vigna): fast, high-quality, 2^256-1 period.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+}
+
+impl Xoshiro256pp {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+}
+
+/// The simulator-facing RNG: xoshiro core + distribution methods.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    core: Xoshiro256pp,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            core: Xoshiro256pp::new(seed),
+        }
+    }
+
+    /// Derive an independent sub-stream keyed by `key` (order-free: the
+    /// fork depends only on the parent's seed material, not on how many
+    /// draws happened — callers should fork from a dedicated root).
+    pub fn fork(&mut self, key: u64) -> Rng {
+        let base = self.next_u64();
+        let mut sm = SplitMix64::new(base ^ key.wrapping_mul(0xA24B_AED4_963E_E407));
+        Rng::new(sm.next_u64())
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.core.next_u64()
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n) (Lemire-style rejection-free for our n sizes).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // 128-bit multiply trick; bias < 2^-64 * n, negligible for n <= 2^32.
+        let m = (self.next_u64() as u128).wrapping_mul(n as u128);
+        (m >> 64) as usize
+    }
+
+    /// Standard normal via Box–Muller (polar-free, uses both uniforms).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.f64();
+            if u1 > 1e-300 {
+                let u2 = self.f64();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return r * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Exponential with mean `mean` (inverse CDF).
+    pub fn exponential(&mut self, mean: f64) -> f64 {
+        debug_assert!(mean > 0.0);
+        loop {
+            let u = self.f64();
+            if u < 1.0 {
+                return -mean * (1.0 - u).ln();
+            }
+        }
+    }
+
+    /// Gamma(shape, 1) via Marsaglia–Tsang (2000); boosts shape < 1.
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        debug_assert!(shape > 0.0);
+        if shape < 1.0 {
+            // Boost: X(a) = X(a+1) * U^{1/a}
+            let u = loop {
+                let u = self.f64();
+                if u > 0.0 {
+                    break u;
+                }
+            };
+            return self.gamma(shape + 1.0) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x.powi(4) {
+                return d * v3;
+            }
+            if u > 0.0 && u.ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln()) {
+                return d * v3;
+            }
+        }
+    }
+
+    /// Dirichlet(alpha * 1) over `n` categories (normalized Gammas).
+    pub fn dirichlet(&mut self, alpha: f64, n: usize) -> Vec<f64> {
+        let mut g: Vec<f64> = (0..n).map(|_| self.gamma(alpha).max(1e-300)).collect();
+        let sum: f64 = g.iter().sum();
+        for v in &mut g {
+            *v /= sum;
+        }
+        g
+    }
+
+    /// One draw from a categorical distribution given by `probs`
+    /// (need not be exactly normalized; linear scan).
+    pub fn categorical(&mut self, probs: &[f64]) -> usize {
+        let total: f64 = probs.iter().sum();
+        let mut u = self.f64() * total;
+        for (i, &p) in probs.iter().enumerate() {
+            u -= p;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        probs.len() - 1
+    }
+
+    /// Sample `k` indices **with replacement** from `probs` — the paper's
+    /// Algorithm 1 line 5 ("samples K times by {q_n}").
+    pub fn sample_with_replacement(&mut self, probs: &[f64], k: usize) -> Vec<usize> {
+        (0..k).map(|_| self.categorical(probs)).collect()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Random f32 vector of standard normals (data generation helper).
+    pub fn normal_vec_f32(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.normal() as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn moments(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        (mean, var)
+    }
+
+    #[test]
+    fn deterministic_across_clones() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn fork_streams_are_independent_of_parent_draws() {
+        // Forking twice with different keys gives different streams.
+        let mut root = Rng::new(7);
+        let mut f1 = root.fork(1);
+        let mut f2 = root.fork(2);
+        assert_ne!(f1.next_u64(), f2.next_u64());
+    }
+
+    #[test]
+    fn uniform_unit_interval() {
+        let mut rng = Rng::new(3);
+        for _ in 0..10_000 {
+            let u = rng.f64();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn below_is_in_range_and_roughly_uniform() {
+        let mut rng = Rng::new(4);
+        let mut counts = [0usize; 10];
+        for _ in 0..100_000 {
+            counts[rng.below(10)] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "bucket count {c}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::new(5);
+        let xs: Vec<f64> = (0..200_000).map(|_| rng.normal()).collect();
+        let (mean, var) = moments(&xs);
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn exponential_moments() {
+        let mut rng = Rng::new(6);
+        let mean_target = 0.1; // the paper's channel-gain mean
+        let xs: Vec<f64> = (0..200_000).map(|_| rng.exponential(mean_target)).collect();
+        let (mean, var) = moments(&xs);
+        assert!((mean - mean_target).abs() < 0.002, "mean {mean}");
+        // Var of Exp(mean m) is m^2.
+        assert!((var - mean_target * mean_target).abs() < 0.002, "var {var}");
+        assert!(xs.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn gamma_moments() {
+        let mut rng = Rng::new(7);
+        for &shape in &[0.5, 1.0, 2.5, 7.0] {
+            let xs: Vec<f64> = (0..100_000).map(|_| rng.gamma(shape)).collect();
+            let (mean, var) = moments(&xs);
+            assert!((mean - shape).abs() < 0.08 * shape.max(1.0), "shape {shape} mean {mean}");
+            assert!((var - shape).abs() < 0.2 * shape.max(1.0), "shape {shape} var {var}");
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one_and_is_positive() {
+        let mut rng = Rng::new(8);
+        for &alpha in &[0.1, 0.5, 1.0, 10.0] {
+            let p = rng.dirichlet(alpha, 120);
+            let sum: f64 = p.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9);
+            assert!(p.iter().all(|&x| x > 0.0));
+        }
+    }
+
+    #[test]
+    fn dirichlet_concentration_controls_skew() {
+        // Small alpha -> spikier vectors (larger max component), on average.
+        let mut rng = Rng::new(9);
+        let avg_max = |rng: &mut Rng, alpha: f64| -> f64 {
+            (0..200)
+                .map(|_| {
+                    rng.dirichlet(alpha, 10)
+                        .into_iter()
+                        .fold(0.0f64, f64::max)
+                })
+                .sum::<f64>()
+                / 200.0
+        };
+        let spiky = avg_max(&mut rng, 0.1);
+        let flat = avg_max(&mut rng, 10.0);
+        assert!(spiky > flat + 0.2, "spiky {spiky} flat {flat}");
+    }
+
+    #[test]
+    fn categorical_matches_probs() {
+        let mut rng = Rng::new(10);
+        let probs = [0.5, 0.25, 0.125, 0.125];
+        let mut counts = [0usize; 4];
+        for _ in 0..100_000 {
+            counts[rng.categorical(&probs)] += 1;
+        }
+        for (i, &p) in probs.iter().enumerate() {
+            let f = counts[i] as f64 / 100_000.0;
+            assert!((f - p).abs() < 0.01, "idx {i}: {f} vs {p}");
+        }
+    }
+
+    #[test]
+    fn with_replacement_selection_probability() {
+        // P(selected at least once in K draws) = 1 - (1-q)^K — the exact
+        // expression the paper's energy constraint (16) uses.
+        let mut rng = Rng::new(11);
+        let probs = [0.4, 0.3, 0.2, 0.1];
+        let k = 2;
+        let trials = 200_000;
+        let mut hit = [0usize; 4];
+        for _ in 0..trials {
+            let sel = rng.sample_with_replacement(&probs, k);
+            let mut seen = [false; 4];
+            for s in sel {
+                seen[s] = true;
+            }
+            for i in 0..4 {
+                if seen[i] {
+                    hit[i] += 1;
+                }
+            }
+        }
+        for i in 0..4 {
+            let emp = hit[i] as f64 / trials as f64;
+            let theory = 1.0 - (1.0 - probs[i]).powi(k as i32);
+            assert!((emp - theory).abs() < 0.005, "idx {i}: {emp} vs {theory}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut rng = Rng::new(12);
+        let mut xs: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

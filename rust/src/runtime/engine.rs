@@ -1,0 +1,311 @@
+//! Typed execution of the AOT artifacts on the PJRT CPU client.
+
+use std::path::Path;
+
+use anyhow::Context;
+
+use super::manifest::{Manifest, VariantInfo};
+use crate::Result;
+
+/// Output of one local SGD step.
+#[derive(Clone, Debug)]
+pub struct TrainOutput {
+    pub params: Vec<f32>,
+    pub momentum: Vec<f32>,
+    pub loss: f32,
+}
+
+/// Compiled executables for one model variant, plus the PJRT client.
+///
+/// Loading compiles each HLO module once; every later call is pure
+/// execution (no python, no recompilation).
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub variant: VariantInfo,
+    init_exe: xla::PjRtLoadedExecutable,
+    train_exe: xla::PjRtLoadedExecutable,
+    eval_exe: xla::PjRtLoadedExecutable,
+    agg_exe: xla::PjRtLoadedExecutable,
+}
+
+impl Engine {
+    /// Load + compile all artifacts of `variant` from the manifest root.
+    pub fn load(manifest: &Manifest, variant: &str) -> Result<Engine> {
+        let info = manifest.variant(variant)?.clone();
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let compile = |fn_name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = info.artifact_path(&manifest.root, fn_name);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| anyhow::anyhow!("non-utf8 path {path:?}"))?,
+            )
+            .with_context(|| format!("parsing {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .with_context(|| format!("compiling {fn_name} for {variant}"))
+        };
+        Ok(Engine {
+            init_exe: compile("init")?,
+            train_exe: compile("train_step")?,
+            eval_exe: compile("eval_batch")?,
+            agg_exe: compile("aggregate")?,
+            client,
+            variant: info,
+        })
+    }
+
+    /// Convenience: load straight from an artifacts directory.
+    pub fn from_dir(artifacts_dir: &Path, variant: &str) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        Engine::load(&manifest, variant)
+    }
+
+    pub fn dim(&self) -> usize {
+        self.variant.dim
+    }
+
+    /// `init(seed) -> theta` (flat He-initialized parameters).
+    pub fn init_params(&self, seed: i32) -> Result<Vec<f32>> {
+        let seed_lit = xla::Literal::scalar(seed);
+        let out = self.run1(&self.init_exe, &[seed_lit])?;
+        let theta = out.to_vec::<f32>()?;
+        anyhow::ensure!(theta.len() == self.variant.dim, "init returned wrong dim");
+        Ok(theta)
+    }
+
+    /// One momentum-SGD minibatch step.
+    ///
+    /// `x` is `[train_batch * H * W * C]` row-major, `y` is
+    /// `[train_batch]` labels.
+    pub fn train_step(
+        &self,
+        theta: &[f32],
+        momentum: &[f32],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> Result<TrainOutput> {
+        let v = &self.variant;
+        let b = v.train_batch;
+        debug_assert_eq!(theta.len(), v.dim);
+        debug_assert_eq!(momentum.len(), v.dim);
+        debug_assert_eq!(x.len(), b * v.input_features());
+        debug_assert_eq!(y.len(), b);
+        let args = [
+            xla::Literal::vec1(theta),
+            xla::Literal::vec1(momentum),
+            xla::Literal::vec1(x).reshape(&[
+                b as i64,
+                v.input_hw.0 as i64,
+                v.input_hw.1 as i64,
+                v.input_c as i64,
+            ])?,
+            xla::Literal::vec1(y),
+            xla::Literal::scalar(lr),
+        ];
+        let result = self.exec(&self.train_exe, &args)?;
+        let (p, m, l) = result.to_tuple3()?;
+        Ok(TrainOutput {
+            params: p.to_vec::<f32>()?,
+            momentum: m.to_vec::<f32>()?,
+            loss: l.get_first_element::<f32>()?,
+        })
+    }
+
+    /// Masked evaluation over one padded batch: `(loss_sum, correct)`.
+    pub fn eval_batch(&self, theta: &[f32], x: &[f32], y: &[i32], mask: &[f32]) -> Result<(f32, f32)> {
+        let v = &self.variant;
+        let b = v.eval_batch;
+        debug_assert_eq!(x.len(), b * v.input_features());
+        debug_assert_eq!(y.len(), b);
+        debug_assert_eq!(mask.len(), b);
+        let args = [
+            xla::Literal::vec1(theta),
+            xla::Literal::vec1(x).reshape(&[
+                b as i64,
+                v.input_hw.0 as i64,
+                v.input_hw.1 as i64,
+                v.input_c as i64,
+            ])?,
+            xla::Literal::vec1(y),
+            xla::Literal::vec1(mask),
+        ];
+        let result = self.exec(&self.eval_exe, &args)?;
+        let (loss_sum, correct) = result.to_tuple2()?;
+        Ok((
+            loss_sum.get_first_element::<f32>()?,
+            correct.get_first_element::<f32>()?,
+        ))
+    }
+
+    /// Eq. (4) aggregation via the Pallas kernel artifact.
+    ///
+    /// `deltas[k]` are client model deltas; unused slots (up to `k_max`)
+    /// are zero-padded with zero coefficients.
+    pub fn aggregate(&self, theta: &[f32], deltas: &[&[f32]], coefs: &[f32]) -> Result<Vec<f32>> {
+        let v = &self.variant;
+        let d = v.dim;
+        anyhow::ensure!(
+            deltas.len() == coefs.len() && deltas.len() <= v.k_max,
+            "aggregate: {} deltas / {} coefs vs k_max {}",
+            deltas.len(),
+            coefs.len(),
+            v.k_max
+        );
+        let mut stacked = vec![0.0f32; v.k_max * d];
+        for (k, delta) in deltas.iter().enumerate() {
+            debug_assert_eq!(delta.len(), d);
+            stacked[k * d..(k + 1) * d].copy_from_slice(delta);
+        }
+        let mut coefs_pad = vec![0.0f32; v.k_max];
+        coefs_pad[..coefs.len()].copy_from_slice(coefs);
+
+        let args = [
+            xla::Literal::vec1(theta),
+            xla::Literal::vec1(&stacked).reshape(&[v.k_max as i64, d as i64])?,
+            xla::Literal::vec1(&coefs_pad),
+        ];
+        let out = self.run1(&self.agg_exe, &args)?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    // -- internals --------------------------------------------------------
+
+    fn exec(&self, exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<xla::Literal> {
+        let buffers = exe.execute::<xla::Literal>(args)?;
+        let lit = buffers[0][0].to_literal_sync()?;
+        Ok(lit)
+    }
+
+    /// Execute and unwrap a 1-tuple result.
+    fn run1(&self, exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<xla::Literal> {
+        Ok(self.exec(exe, args)?.to_tuple1()?)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Integration tests against the real AOT artifacts; each test skips
+    //! (with a notice) when `make artifacts` has not run yet.
+
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            Some(dir)
+        } else {
+            eprintln!("skipping engine test: run `make artifacts` first");
+            None
+        }
+    }
+
+    fn engine(variant: &str) -> Option<Engine> {
+        artifacts_dir().map(|d| Engine::from_dir(&d, variant).expect("engine load"))
+    }
+
+    #[test]
+    fn init_is_deterministic_and_seed_sensitive() {
+        let Some(eng) = engine("femnist") else { return };
+        let a = eng.init_params(0).unwrap();
+        let b = eng.init_params(0).unwrap();
+        let c = eng.init_params(1).unwrap();
+        assert_eq!(a.len(), eng.dim());
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        // He init: roughly zero-mean, finite std.
+        let mean: f32 = a.iter().sum::<f32>() / a.len() as f32;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!(a.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn train_step_learns_fixed_batch() {
+        let Some(eng) = engine("femnist") else { return };
+        let v = eng.variant.clone();
+        let theta0 = eng.init_params(7).unwrap();
+        let mut theta = theta0.clone();
+        let mut mom = vec![0.0; eng.dim()];
+        // Deterministic synthetic batch.
+        let feats = v.input_features();
+        let x: Vec<f32> = (0..v.train_batch * feats)
+            .map(|i| ((i as f32 * 0.037).sin()) * 0.5)
+            .collect();
+        let y: Vec<i32> = (0..v.train_batch).map(|i| (i % v.num_classes) as i32).collect();
+        let mut first = f32::NAN;
+        let mut last = f32::NAN;
+        for step in 0..10 {
+            let out = eng.train_step(&theta, &mom, &x, &y, 0.05).unwrap();
+            theta = out.params;
+            mom = out.momentum;
+            if step == 0 {
+                first = out.loss;
+            }
+            last = out.loss;
+        }
+        assert!(first.is_finite() && last.is_finite());
+        assert!(
+            last < first * 0.9,
+            "loss should fall on a fixed batch: {first} -> {last}"
+        );
+        assert_ne!(theta, theta0);
+    }
+
+    #[test]
+    fn eval_counts_respect_mask() {
+        let Some(eng) = engine("femnist") else { return };
+        let v = eng.variant.clone();
+        let theta = eng.init_params(3).unwrap();
+        let feats = v.input_features();
+        let x: Vec<f32> = vec![0.1; v.eval_batch * feats];
+        let y: Vec<i32> = vec![0; v.eval_batch];
+        let ones = vec![1.0f32; v.eval_batch];
+        let zeros = vec![0.0f32; v.eval_batch];
+        let (loss_all, correct_all) = eng.eval_batch(&theta, &x, &y, &ones).unwrap();
+        let (loss_none, correct_none) = eng.eval_batch(&theta, &x, &y, &zeros).unwrap();
+        assert!(loss_all > 0.0);
+        assert!(correct_all >= 0.0 && correct_all <= v.eval_batch as f32);
+        assert_eq!(loss_none, 0.0);
+        assert_eq!(correct_none, 0.0);
+        // Half mask = strictly between.
+        let mut half = zeros.clone();
+        for m in half.iter_mut().take(v.eval_batch / 2) {
+            *m = 1.0;
+        }
+        let (loss_half, _) = eng.eval_batch(&theta, &x, &y, &half).unwrap();
+        assert!(loss_half > 0.0 && loss_half < loss_all);
+    }
+
+    #[test]
+    fn aggregate_matches_cpu_reference() {
+        let Some(eng) = engine("femnist") else { return };
+        let d = eng.dim();
+        let theta: Vec<f32> = (0..d).map(|i| (i as f32 * 1e-3).sin()).collect();
+        let d0: Vec<f32> = (0..d).map(|i| (i as f32 * 2e-3).cos() * 0.1).collect();
+        let d1: Vec<f32> = (0..d).map(|i| (i as f32 * 3e-3).sin() * -0.2).collect();
+        let coefs = [0.7f32, 1.4f32];
+        let out = eng.aggregate(&theta, &[&d0, &d1], &coefs).unwrap();
+        for i in (0..d).step_by(997) {
+            let expect = theta[i] + 0.7 * d0[i] + 1.4 * d1[i];
+            assert!(
+                (out[i] - expect).abs() < 1e-4,
+                "i={i}: {} vs {expect}",
+                out[i]
+            );
+        }
+    }
+
+    #[test]
+    fn cifar_variant_loads_too() {
+        let Some(eng) = engine("cifar") else { return };
+        assert!(eng.dim() > 100_000);
+        let theta = eng.init_params(0).unwrap();
+        assert_eq!(theta.len(), eng.dim());
+    }
+}

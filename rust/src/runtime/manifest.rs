@@ -1,0 +1,234 @@
+//! Artifact manifest: the model geometry the AOT pass exports.
+
+use std::path::{Path, PathBuf};
+
+use crate::json::Json;
+use crate::Result;
+
+/// One named parameter tensor (mirrors `model.LayerSpec`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub size: usize,
+}
+
+/// Geometry of one model variant.
+#[derive(Clone, Debug)]
+pub struct VariantInfo {
+    pub name: String,
+    /// Flat parameter count `d`.
+    pub dim: usize,
+    /// Model update size in bits (the paper's `M = 32 d`).
+    pub model_bits: usize,
+    pub input_hw: (usize, usize),
+    pub input_c: usize,
+    pub num_classes: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub k_max: usize,
+    pub layers: Vec<LayerInfo>,
+    /// Exported computation names.
+    pub artifacts: Vec<String>,
+}
+
+impl VariantInfo {
+    /// Per-example input feature count `H*W*C`.
+    pub fn input_features(&self) -> usize {
+        self.input_hw.0 * self.input_hw.1 * self.input_c
+    }
+
+    /// Path of one HLO artifact under `root`.
+    pub fn artifact_path(&self, root: &Path, fn_name: &str) -> PathBuf {
+        root.join(&self.name).join(format!("{fn_name}.hlo.txt"))
+    }
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub variants: Vec<VariantInfo>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Manifest> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot read {path:?} (run `make artifacts`): {e}"))?;
+        let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+        Self::from_json(artifacts_dir.to_path_buf(), &json)
+    }
+
+    pub fn from_json(root: PathBuf, json: &Json) -> Result<Manifest> {
+        let fmt = json.get("format").and_then(Json::as_str).unwrap_or("");
+        anyhow::ensure!(fmt == "hlo-text", "unsupported artifact format {fmt:?}");
+        let vars = json
+            .get("variants")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing `variants`"))?;
+        let mut variants = Vec::new();
+        for (name, v) in vars {
+            variants.push(parse_variant(name, v)?);
+        }
+        anyhow::ensure!(!variants.is_empty(), "manifest has no variants");
+        Ok(Manifest { root, variants })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantInfo> {
+        self.variants
+            .iter()
+            .find(|v| v.name == name)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "variant {name:?} not in manifest (have: {:?})",
+                    self.variants.iter().map(|v| &v.name).collect::<Vec<_>>()
+                )
+            })
+    }
+}
+
+fn field_usize(v: &Json, key: &str) -> Result<usize> {
+    v.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow::anyhow!("manifest variant missing `{key}`"))
+}
+
+fn parse_variant(name: &str, v: &Json) -> Result<VariantInfo> {
+    let hw = v
+        .get("input_hw")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("missing input_hw"))?;
+    anyhow::ensure!(hw.len() == 2, "input_hw must have 2 entries");
+    let layers = v
+        .get("layers")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("missing layers"))?
+        .iter()
+        .map(|l| -> Result<LayerInfo> {
+            Ok(LayerInfo {
+                name: l
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("layer missing name"))?
+                    .to_string(),
+                shape: l
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow::anyhow!("layer missing shape"))?
+                    .iter()
+                    .filter_map(Json::as_usize)
+                    .collect(),
+                size: field_usize(l, "size")?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let artifacts = v
+        .get("artifacts")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("missing artifacts"))?
+        .iter()
+        .filter_map(Json::as_str)
+        .map(str::to_string)
+        .collect::<Vec<_>>();
+
+    let info = VariantInfo {
+        name: name.to_string(),
+        dim: field_usize(v, "dim")?,
+        model_bits: field_usize(v, "model_bits")?,
+        input_hw: (
+            hw[0].as_usize().unwrap_or_default(),
+            hw[1].as_usize().unwrap_or_default(),
+        ),
+        input_c: field_usize(v, "input_c")?,
+        num_classes: field_usize(v, "num_classes")?,
+        train_batch: field_usize(v, "train_batch")?,
+        eval_batch: field_usize(v, "eval_batch")?,
+        k_max: field_usize(v, "k_max")?,
+        layers,
+        artifacts,
+    };
+    // Cross-check: layer sizes must sum to dim.
+    let sum: usize = info.layers.iter().map(|l| l.size).sum();
+    anyhow::ensure!(
+        sum == info.dim,
+        "layer sizes sum {sum} != dim {} for {name}",
+        info.dim
+    );
+    Ok(info)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> Json {
+        Json::parse(
+            r#"{
+              "format": "hlo-text",
+              "variants": {
+                "femnist": {
+                  "dim": 300, "model_bits": 9600,
+                  "input_hw": [28, 28], "input_c": 1, "num_classes": 62,
+                  "train_batch": 32, "eval_batch": 64, "k_max": 8,
+                  "layers": [
+                    {"name": "a", "shape": [10, 10], "size": 100},
+                    {"name": "b", "shape": [200], "size": 200}
+                  ],
+                  "artifacts": ["init", "train_step", "eval_batch", "aggregate"]
+                }
+              }
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::from_json(PathBuf::from("/tmp/a"), &sample_json()).unwrap();
+        let v = m.variant("femnist").unwrap();
+        assert_eq!(v.dim, 300);
+        assert_eq!(v.input_hw, (28, 28));
+        assert_eq!(v.input_features(), 784);
+        assert_eq!(v.layers.len(), 2);
+        assert_eq!(
+            v.artifact_path(&m.root, "init"),
+            PathBuf::from("/tmp/a/femnist/init.hlo.txt")
+        );
+        assert!(m.variant("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_dim_mismatch() {
+        let mut text = sample_json().to_string();
+        text = text.replace("\"dim\":300", "\"dim\":999");
+        let json = Json::parse(&text).unwrap();
+        assert!(Manifest::from_json(PathBuf::from("/x"), &json).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let json = Json::parse(r#"{"format": "proto", "variants": {}}"#).unwrap();
+        assert!(Manifest::from_json(PathBuf::from("/x"), &json).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        // Integration against the actual AOT output when it exists.
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            for v in &m.variants {
+                assert!(v.dim > 0);
+                assert_eq!(v.model_bits, 32 * v.dim);
+                for a in &v.artifacts {
+                    assert!(
+                        v.artifact_path(&m.root, a).exists(),
+                        "missing artifact {a} for {}",
+                        v.name
+                    );
+                }
+            }
+        }
+    }
+}

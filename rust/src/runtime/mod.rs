@@ -1,0 +1,15 @@
+//! PJRT runtime: load AOT artifacts once, execute them on the hot path.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (model geometry);
+//! * [`engine`] — wraps the `xla` crate: `PjRtClient::cpu()` →
+//!   `HloModuleProto::from_text_file` → `compile` → typed `execute`
+//!   helpers for the four exported computations.
+//!
+//! Python is never on this path: once `make artifacts` has produced the
+//! HLO text files, the rust binary is self-contained.
+
+mod engine;
+mod manifest;
+
+pub use engine::{Engine, TrainOutput};
+pub use manifest::{LayerInfo, Manifest, VariantInfo};

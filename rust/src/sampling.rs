@@ -1,0 +1,309 @@
+//! Client samplers: probability-driven K-with-replacement (Algorithm 1,
+//! line 5), uniform baselines, and the DivFL submodular baseline.
+//!
+//! A sampler turns per-round state into the selected multiset `K^t` plus
+//! the aggregation coefficients `w_n / (K q_n)` of eq. (4).  DivFL is the
+//! paper's third baseline: greedy facility-location maximization over
+//! (stale) client update embeddings, adapted — as in the paper — to select
+//! `K` distinct clients with uniform aggregation semantics.
+
+use crate::rng::Rng;
+
+/// One round's selection: the sampled multiset and eq. (4) coefficients.
+#[derive(Clone, Debug)]
+pub struct Selection {
+    /// Sampled device ids, **with multiplicity** (K entries).
+    pub members: Vec<usize>,
+    /// Aggregation coefficient per member slot: `w_n / (K q_n)`.
+    pub coefs: Vec<f64>,
+}
+
+impl Selection {
+    /// Unique device ids (each trains once even if drawn twice; its
+    /// delta is weighted by the slot multiplicity via repeated coefs).
+    pub fn unique_members(&self) -> Vec<usize> {
+        let mut u = self.members.clone();
+        u.sort_unstable();
+        u.dedup();
+        u
+    }
+}
+
+/// Sample `K` times with replacement from `q`, producing eq. (4) coefs.
+pub fn sample_by_probability(q: &[f64], weights: &[f64], k: usize, rng: &mut Rng) -> Selection {
+    let members = rng.sample_with_replacement(q, k);
+    let coefs = members
+        .iter()
+        .map(|&n| weights[n] / (k as f64 * q[n]))
+        .collect();
+    Selection { members, coefs }
+}
+
+/// Uniform sampling (`q = 1/N`), the FedAvg default.
+pub fn sample_uniform(n: usize, weights: &[f64], k: usize, rng: &mut Rng) -> Selection {
+    let q = vec![1.0 / n as f64; n];
+    sample_by_probability(&q, weights, k, rng)
+}
+
+/// DivFL: greedy facility-location selection over client embeddings.
+///
+/// The paper adapts DivFL [42] to this setting: the server keeps an
+/// embedding per client (here: the client's last observed model-update
+/// direction, compressed by random projection; clients never seen yet are
+/// cold-started round-robin).  Greedy maximization of
+/// `F(S) = Σ_i max_{j∈S} sim(i, j)` picks the `K` most representative
+/// clients.  Selected clients aggregate with FedAvg weights (the DivFL
+/// convention), i.e. coef = `w_n / Σ_{m∈S} w_m` per *unique* member.
+pub struct DivFlState {
+    /// Per-client embedding (zero until first participation).
+    pub embeddings: Vec<Vec<f32>>,
+    /// Whether the client has ever reported an update.
+    pub seen: Vec<bool>,
+    /// Round-robin cursor for cold-start probing.
+    cursor: usize,
+    dim: usize,
+}
+
+impl DivFlState {
+    pub fn new(n: usize, dim: usize) -> Self {
+        Self {
+            embeddings: vec![vec![0.0; dim]; n],
+            seen: vec![false; n],
+            cursor: 0,
+            dim,
+        }
+    }
+
+    /// Record a client's update embedding after it trains.
+    pub fn observe(&mut self, client: usize, embedding: Vec<f32>) {
+        debug_assert_eq!(embedding.len(), self.dim);
+        self.embeddings[client] = embedding;
+        self.seen[client] = true;
+    }
+
+    /// Greedy facility-location selection of `k` distinct clients.
+    pub fn select(&mut self, weights: &[f64], k: usize) -> Selection {
+        let n = self.embeddings.len();
+        let k = k.min(n);
+        let unseen: Vec<usize> = (0..n).filter(|&i| !self.seen[i]).collect();
+        let mut chosen: Vec<usize> = Vec::with_capacity(k);
+
+        // Cold start: probe unseen clients round-robin first so every
+        // client eventually contributes an embedding.
+        if !unseen.is_empty() {
+            for _ in 0..k.min(unseen.len()) {
+                let idx = unseen[self.cursor % unseen.len()];
+                self.cursor += 1;
+                if !chosen.contains(&idx) {
+                    chosen.push(idx);
+                }
+            }
+        }
+
+        // Greedy facility location on similarity = -||e_i - e_j||².
+        // gain(j | S) = Σ_i [ max(best_i, sim(i,j)) - best_i ].
+        if chosen.len() < k {
+            let mut best = vec![f64::NEG_INFINITY; n];
+            for &j in &chosen {
+                for i in 0..n {
+                    best[i] = best[i].max(self.sim(i, j));
+                }
+            }
+            while chosen.len() < k {
+                let mut best_j = usize::MAX;
+                let mut best_gain = f64::NEG_INFINITY;
+                for j in 0..n {
+                    if chosen.contains(&j) {
+                        continue;
+                    }
+                    let mut gain = 0.0;
+                    for i in 0..n {
+                        let s = self.sim(i, j);
+                        if s > best[i] {
+                            gain += s - best[i].max(-1e30);
+                        }
+                    }
+                    if gain > best_gain {
+                        best_gain = gain;
+                        best_j = j;
+                    }
+                }
+                let j = if best_j == usize::MAX { chosen.len() } else { best_j };
+                for i in 0..n {
+                    best[i] = best[i].max(self.sim(i, j));
+                }
+                chosen.push(j);
+            }
+        }
+
+        // FedAvg-style aggregation over the distinct selected set.
+        let wsum: f64 = chosen.iter().map(|&j| weights[j]).sum();
+        let coefs = chosen.iter().map(|&j| weights[j] / wsum.max(1e-300)).collect();
+        Selection {
+            members: chosen,
+            coefs,
+        }
+    }
+
+    fn sim(&self, i: usize, j: usize) -> f64 {
+        // Negative squared distance; i == j gives 0 (the max).
+        let (a, b) = (&self.embeddings[i], &self.embeddings[j]);
+        let mut d2 = 0.0f64;
+        for t in 0..self.dim {
+            let d = (a[t] - b[t]) as f64;
+            d2 += d * d;
+        }
+        -d2
+    }
+}
+
+/// Random-projection compressor for update embeddings (d -> dim), seeded
+/// so every client is projected identically.
+pub struct Projector {
+    dim: usize,
+    seed: u64,
+}
+
+impl Projector {
+    pub fn new(dim: usize, seed: u64) -> Self {
+        Self { dim, seed }
+    }
+
+    /// Project a flat model delta to the embedding space with a
+    /// pseudo-random ±1 matrix generated on the fly (no d×dim storage).
+    pub fn project(&self, delta: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.dim];
+        // Hash-based signs: cheap, deterministic, storage-free.
+        for (i, &x) in delta.iter().enumerate() {
+            if x == 0.0 {
+                continue;
+            }
+            let mut h = (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ self.seed;
+            h ^= h >> 33;
+            h = h.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+            let slot = (h % self.dim as u64) as usize;
+            let sign = if (h >> 63) == 0 { 1.0 } else { -1.0 };
+            out[slot] += sign * x;
+        }
+        let norm = (delta.len() as f32).sqrt();
+        for v in &mut out {
+            *v /= norm;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selection_has_k_members_and_correct_coefs() {
+        let mut rng = Rng::new(1);
+        let q = vec![0.25; 4];
+        let w = vec![0.1, 0.2, 0.3, 0.4];
+        let sel = sample_by_probability(&q, &w, 2, &mut rng);
+        assert_eq!(sel.members.len(), 2);
+        for (slot, &n) in sel.members.iter().enumerate() {
+            let expect = w[n] / (2.0 * q[n]);
+            assert!((sel.coefs[slot] - expect).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn aggregation_is_unbiased() {
+        // E[Σ_slots coef_slot · v_{n_slot}] = Σ_n w_n v_n  (Appendix A).
+        let mut rng = Rng::new(2);
+        let q = vec![0.5, 0.3, 0.2];
+        let w = vec![0.2, 0.3, 0.5];
+        let v = [1.0, 10.0, 100.0];
+        let k = 2;
+        let trials = 400_000;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let sel = sample_by_probability(&q, &w, k, &mut rng);
+            for (slot, &n) in sel.members.iter().enumerate() {
+                acc += sel.coefs[slot] * v[n];
+            }
+        }
+        let emp = acc / trials as f64;
+        let expect: f64 = w.iter().zip(&v).map(|(wn, vn)| wn * vn).sum();
+        assert!(
+            (emp - expect).abs() / expect < 0.01,
+            "empirical {emp} vs {expect}"
+        );
+    }
+
+    #[test]
+    fn uniform_sampler_is_uniform() {
+        let mut rng = Rng::new(3);
+        let w = vec![0.25; 4];
+        let mut counts = [0usize; 4];
+        for _ in 0..40_000 {
+            let sel = sample_uniform(4, &w, 1, &mut rng);
+            counts[sel.members[0]] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "count {c}");
+        }
+    }
+
+    #[test]
+    fn divfl_cold_start_probes_everyone() {
+        let mut st = DivFlState::new(6, 4);
+        let w = vec![1.0 / 6.0; 6];
+        let mut probed = std::collections::BTreeSet::new();
+        for _ in 0..3 {
+            let sel = st.select(&w, 2);
+            for &m in &sel.members {
+                probed.insert(m);
+                st.observe(m, vec![0.1; 4]);
+            }
+        }
+        assert_eq!(probed.len(), 6, "round-robin should cover all clients");
+    }
+
+    #[test]
+    fn divfl_picks_diverse_clients() {
+        // Two clusters of embeddings; k=2 must pick one from each.
+        let mut st = DivFlState::new(6, 2);
+        let w = vec![1.0 / 6.0; 6];
+        for i in 0..6 {
+            let e = if i < 3 { vec![1.0, 0.0] } else { vec![0.0, 1.0] };
+            st.observe(i, e);
+        }
+        let sel = st.select(&w, 2);
+        let a = sel.members[0] < 3;
+        let b = sel.members[1] < 3;
+        assert_ne!(a, b, "selected {:?} — should span both clusters", sel.members);
+        // FedAvg coefs over the distinct set sum to 1.
+        let s: f64 = sel.coefs.iter().sum();
+        assert!((s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn divfl_members_are_distinct() {
+        let mut st = DivFlState::new(10, 3);
+        let w = vec![0.1; 10];
+        for i in 0..10 {
+            st.observe(i, vec![i as f32, 0.0, 0.0]);
+        }
+        let sel = st.select(&w, 4);
+        let uniq = sel.unique_members();
+        assert_eq!(uniq.len(), 4);
+    }
+
+    #[test]
+    fn projector_is_deterministic_and_norm_bounded() {
+        let p = Projector::new(16, 42);
+        let delta: Vec<f32> = (0..1000).map(|i| (i as f32 * 0.01).sin()).collect();
+        let a = p.project(&delta);
+        let b = p.project(&delta);
+        assert_eq!(a, b);
+        // Similar inputs -> similar projections; different -> different.
+        let delta2: Vec<f32> = delta.iter().map(|x| -x).collect();
+        let c = p.project(&delta2);
+        let dot: f32 = a.iter().zip(&c).map(|(x, y)| x * y).sum();
+        assert!(dot < 0.0, "negated input should anti-correlate, dot={dot}");
+    }
+}

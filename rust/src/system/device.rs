@@ -1,0 +1,180 @@
+//! Edge-device parameters and fleet generation.
+
+use crate::config::SystemConfig;
+use crate::rng::Rng;
+
+/// Static (per-run) parameters of one edge device — the quantities the
+/// paper's server "collects ... from devices before the training starts".
+#[derive(Clone, Debug)]
+pub struct Device {
+    /// Device index `n`.
+    pub id: usize,
+    /// Local dataset size `D_n` [samples].
+    pub data_size: usize,
+    /// CPU cycles per sample `c_n`.
+    pub cycles_per_sample: f64,
+    /// Effective capacitance coefficient `alpha_n`.
+    pub alpha: f64,
+    /// CPU frequency bounds [Hz].
+    pub f_min_hz: f64,
+    pub f_max_hz: f64,
+    /// Transmit power bounds [W].
+    pub p_min_w: f64,
+    pub p_max_w: f64,
+    /// Per-round energy budget `Ē_n` [J].
+    pub energy_budget_j: f64,
+}
+
+impl Device {
+    /// Data weight `w_n = D_n / D` needs the fleet total; see [`Fleet::weights`].
+    pub fn cycles_per_round(&self, local_epochs: usize) -> f64 {
+        local_epochs as f64 * self.cycles_per_sample * self.data_size as f64
+    }
+}
+
+/// The set of `N` devices participating in the FL system.
+#[derive(Clone, Debug)]
+pub struct Fleet {
+    pub devices: Vec<Device>,
+    /// Cached data weights `w_n` (sum to 1).
+    weights: Vec<f64>,
+}
+
+impl Fleet {
+    /// Generate a fleet from the system config.
+    ///
+    /// * dataset sizes `D_n` ~ Uniform[lo, hi] (FEMNIST's ">= 50 samples"
+    ///   filter corresponds to `lo >= 50`),
+    /// * hardware parameters are the config values scaled per-device by
+    ///   Uniform[1-s, 1+s] with `s = hardware_spread` (0 reproduces the
+    ///   paper's homogeneous default).
+    pub fn generate(cfg: &SystemConfig, samples_range: (usize, usize), rng: &mut Rng) -> Fleet {
+        let n = cfg.num_devices;
+        let (lo, hi) = samples_range;
+        let s = cfg.hardware_spread.clamp(0.0, 0.9);
+        let devices: Vec<Device> = (0..n)
+            .map(|id| {
+                let jitter = |rng: &mut Rng| 1.0 + s * (2.0 * rng.f64() - 1.0);
+                let data_size = lo + rng.below(hi - lo + 1);
+                Device {
+                    id,
+                    data_size,
+                    cycles_per_sample: cfg.cycles_per_sample * jitter(rng),
+                    alpha: cfg.alpha * jitter(rng),
+                    f_min_hz: cfg.f_min_hz,
+                    f_max_hz: cfg.f_max_hz * jitter(rng).max(cfg.f_min_hz / cfg.f_max_hz + 0.05),
+                    p_min_w: cfg.p_min_w,
+                    p_max_w: cfg.p_max_w * jitter(rng),
+                    energy_budget_j: cfg.energy_budget_j * jitter(rng),
+                }
+            })
+            .collect();
+        let total: f64 = devices.iter().map(|d| d.data_size as f64).sum();
+        let weights = devices.iter().map(|d| d.data_size as f64 / total).collect();
+        Fleet { devices, weights }
+    }
+
+    /// Build directly from known dataset sizes (used when the data
+    /// partition, not the config range, determines `D_n`).
+    pub fn from_data_sizes(cfg: &SystemConfig, sizes: &[usize], rng: &mut Rng) -> Fleet {
+        assert_eq!(sizes.len(), cfg.num_devices);
+        let mut fleet = Fleet::generate(cfg, (1, 1), rng);
+        for (dev, &sz) in fleet.devices.iter_mut().zip(sizes) {
+            dev.data_size = sz;
+        }
+        let total: f64 = sizes.iter().map(|&s| s as f64).sum();
+        fleet.weights = sizes.iter().map(|&s| s as f64 / total).collect();
+        fleet
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Data weights `w_n = D_n / D`, summing to 1 (eq. context of (2)).
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    #[test]
+    fn weights_sum_to_one() {
+        let cfg = SystemConfig::default();
+        let mut rng = Rng::new(1);
+        let fleet = Fleet::generate(&cfg, (50, 400), &mut rng);
+        assert_eq!(fleet.len(), 120);
+        let sum: f64 = fleet.weights().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+        assert!(fleet.weights().iter().all(|&w| w > 0.0));
+    }
+
+    #[test]
+    fn homogeneous_when_spread_zero() {
+        let cfg = SystemConfig::default();
+        let mut rng = Rng::new(2);
+        let fleet = Fleet::generate(&cfg, (100, 100), &mut rng);
+        for d in &fleet.devices {
+            assert_eq!(d.cycles_per_sample, cfg.cycles_per_sample);
+            assert_eq!(d.alpha, cfg.alpha);
+            assert_eq!(d.energy_budget_j, cfg.energy_budget_j);
+            assert_eq!(d.data_size, 100);
+        }
+    }
+
+    #[test]
+    fn heterogeneous_when_spread_positive() {
+        let cfg = SystemConfig {
+            hardware_spread: 0.3,
+            ..SystemConfig::default()
+        };
+        let mut rng = Rng::new(3);
+        let fleet = Fleet::generate(&cfg, (50, 400), &mut rng);
+        let c0 = fleet.devices[0].cycles_per_sample;
+        assert!(fleet.devices.iter().any(|d| d.cycles_per_sample != c0));
+        // All scaled values stay within the jitter band.
+        for d in &fleet.devices {
+            assert!(d.cycles_per_sample >= cfg.cycles_per_sample * 0.7 - 1.0);
+            assert!(d.cycles_per_sample <= cfg.cycles_per_sample * 1.3 + 1.0);
+            assert!(d.f_max_hz > d.f_min_hz);
+            assert!(d.p_max_w > d.p_min_w);
+        }
+    }
+
+    #[test]
+    fn from_data_sizes_overrides_weights() {
+        let cfg = SystemConfig {
+            num_devices: 4,
+            ..SystemConfig::default()
+        };
+        let mut rng = Rng::new(4);
+        let fleet = Fleet::from_data_sizes(&cfg, &[100, 200, 300, 400], &mut rng);
+        assert_eq!(fleet.weights(), &[0.1, 0.2, 0.3, 0.4]);
+        assert_eq!(fleet.devices[2].data_size, 300);
+    }
+
+    #[test]
+    fn cycles_per_round_matches_formula() {
+        let d = Device {
+            id: 0,
+            data_size: 200,
+            cycles_per_sample: 3.0e9,
+            alpha: 2e-28,
+            f_min_hz: 1e9,
+            f_max_hz: 2e9,
+            p_min_w: 0.001,
+            p_max_w: 0.1,
+            energy_budget_j: 15.0,
+        };
+        // E * c_n * D_n  (eq. 8 numerator)
+        assert_eq!(d.cycles_per_round(2), 2.0 * 3.0e9 * 200.0);
+    }
+}

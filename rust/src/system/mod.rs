@@ -1,0 +1,18 @@
+//! Mobile-edge system substrate: devices, channels, latency & energy models.
+//!
+//! Implements §III of the paper — eqs. (5)–(17) — as pure functions over
+//! per-device parameters, control decisions `(f, p, q)` and the round's
+//! channel realization, plus the stochastic processes that drive them
+//! (exponential channel gains, heterogeneous fleet generation).
+
+mod channel;
+mod device;
+mod model;
+
+pub use channel::ChannelProcess;
+pub use device::{Device, Fleet};
+pub use model::{
+    comm_energy_j, comp_energy_j, comp_time_s, download_time_s, expected_round_time_s,
+    round_time_s, selection_probability, total_energy_j, uplink_rate_bps, upload_time_s,
+    RoundCosts,
+};
