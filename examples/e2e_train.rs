@@ -5,7 +5,8 @@
 //! rounds through the Pallas/JAX AOT artifacts under LROA control, and
 //! the loss/accuracy curves plus the modeled-latency ledger are logged.
 //! A Uni-S run on identical channel realizations is included as the
-//! headline latency comparison.
+//! headline latency comparison; both runs are one `exp` sweep and execute
+//! concurrently.
 //!
 //! ```text
 //! cargo run --release --example e2e_train              # 300 rounds
@@ -13,25 +14,38 @@
 //! ```
 
 use lroa::config::Policy;
+use lroa::exp::SweepSpec;
 use lroa::fl::SimMode;
 use lroa::harness::{self, Args};
 
 fn main() -> lroa::Result<()> {
     let args = Args::parse();
     let dataset = args.dataset.clone().unwrap_or_else(|| "femnist".into());
-    let mut cfg = args.config(&dataset)?;
-    cfg.train.rounds = args.rounds.unwrap_or(300);
-    cfg.train.samples_per_device = (50, 150);
-    cfg.train.eval_every = 10;
 
-    println!("=== end-to-end driver: {} rounds, N={} ===", cfg.train.rounds, cfg.system.num_devices);
-    println!("{}", cfg.dump());
+    let spec = SweepSpec {
+        datasets: vec![dataset.clone()],
+        policies: vec![Policy::Lroa, Policy::UniformStatic],
+        rounds: Some(args.rounds.unwrap_or(300)),
+        mode: SimMode::Full,
+        ..SweepSpec::default()
+    };
+    let scenarios = spec.expand_with(|ds| {
+        let mut cfg = args.config(ds)?;
+        cfg.train.samples_per_device = (50, 150);
+        cfg.train.eval_every = 10;
+        Ok(cfg)
+    })?;
+    println!(
+        "=== end-to-end driver: {} rounds, N={} ===",
+        scenarios[0].cfg.train.rounds, scenarios[0].cfg.system.num_devices
+    );
+    println!("{}", scenarios[0].cfg.dump());
 
-    let lroa = harness::run_policy(cfg.clone(), Policy::Lroa, SimMode::Full, "LROA-e2e")?;
-    let unis = harness::run_policy(cfg, Policy::UniformStatic, SimMode::Full, "Uni-S-e2e")?;
+    let recs = harness::recorders(args.run(scenarios)?);
+    let (lroa, unis) = (&recs[0], &recs[1]);
 
     let dir = args.out_dir("e2e");
-    harness::save_all(&dir, &[lroa.clone(), unis.clone()])?;
+    harness::save_all(&dir, &recs)?;
 
     println!("\nloss curve (LROA):");
     println!("round,train_loss,test_loss,test_accuracy,total_time_s");
@@ -42,7 +56,7 @@ fn main() -> lroa::Result<()> {
         );
     }
 
-    harness::print_latency_table(&[lroa.clone(), unis.clone()]);
+    harness::print_latency_table(&recs);
     let saving = (1.0 - lroa.total_time_s() / unis.total_time_s()) * 100.0;
     println!("LROA saves {saving:.1}% modeled training latency vs Uni-S (paper: ~49.9% on FEMNIST)");
     println!("CSV under {}", dir.display());

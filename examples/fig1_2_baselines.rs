@@ -6,6 +6,9 @@
 //! Paper numbers: LROA saves 20.8% / 50.1% total latency vs Uni-D / Uni-S
 //! on CIFAR-10 and 15.3% / 49.9% on FEMNIST.
 //!
+//! The four policies are one `exp` sweep cell per scheme and run
+//! concurrently (`--threads` controls the pool).
+//!
 //! ```text
 //! cargo run --release --example fig1_2_baselines                # both datasets, quick scale
 //! cargo run --release --example fig1_2_baselines -- --dataset cifar --rounds 300
@@ -13,6 +16,7 @@
 //! ```
 
 use lroa::config::Policy;
+use lroa::exp::SweepSpec;
 use lroa::fl::SimMode;
 use lroa::harness::{self, Args};
 
@@ -21,18 +25,15 @@ fn main() -> lroa::Result<()> {
     for dataset in args.datasets() {
         let fig = if dataset == "cifar" { "fig1" } else { "fig2" };
         println!("=== {fig}: {dataset} ===");
-        let cfg = args.config(&dataset)?;
 
-        let mut recs = Vec::new();
-        for (policy, label) in [
-            (Policy::Lroa, "LROA"),
-            (Policy::UniformDynamic, "Uni-D"),
-            (Policy::UniformStatic, "Uni-S"),
-            (Policy::DivFl, "DivFL"),
-        ] {
-            let label = format!("{label}-{dataset}");
-            recs.push(harness::run_policy(cfg.clone(), policy, SimMode::Full, &label)?);
-        }
+        let spec = SweepSpec {
+            datasets: vec![dataset.clone()],
+            policies: Policy::ALL.to_vec(),
+            mode: SimMode::Full,
+            ..SweepSpec::default()
+        };
+        let scenarios = spec.expand_with(|ds| args.config(ds))?;
+        let recs = harness::recorders(args.run(scenarios)?);
 
         harness::save_all(&args.out_dir(fig), &recs)?;
         harness::print_series(&recs);

@@ -3,39 +3,42 @@
 //! The paper varies µ (λ = µ·λ₀) over {1, 10, 50, 100} for CIFAR-10 and
 //! {0.3, 0.5, 5, 10} for FEMNIST at fixed ν = 1e5, showing that larger λ
 //! buys accuracy at the cost of total time, while λ → 0 destabilizes
-//! training (resource-only control).
+//! training (resource-only control).  The µ axis is one `exp` sweep.
 //!
 //! ```text
 //! cargo run --release --example fig3_lambda -- --dataset femnist
 //! ```
 
 use lroa::config::Policy;
+use lroa::exp::SweepSpec;
 use lroa::fl::SimMode;
 use lroa::harness::{self, Args};
 
 fn main() -> lroa::Result<()> {
     let args = Args::parse();
     for dataset in args.datasets() {
-        let mus: &[f64] = if dataset == "cifar" {
-            &[1.0, 10.0, 50.0, 100.0]
+        let mus: Vec<f64> = if dataset == "cifar" {
+            vec![1.0, 10.0, 50.0, 100.0]
         } else {
-            &[0.3, 0.5, 5.0, 10.0]
+            vec![0.3, 0.5, 5.0, 10.0]
         };
         println!("=== fig3 ({dataset}): mu sweep {mus:?} ===");
 
-        let mut recs = Vec::new();
-        for &mu in mus {
-            let mut cfg = args.config(&dataset)?;
-            cfg.control.mu = mu;
-            cfg.control.nu = 1e5;
-            let label = format!("LROA-{dataset}-mu{mu}");
-            recs.push(harness::run_policy(cfg, Policy::Lroa, SimMode::Full, &label)?);
-        }
+        let spec = SweepSpec {
+            datasets: vec![dataset.clone()],
+            policies: vec![Policy::Lroa],
+            mus: mus.clone(),
+            nus: vec![1e5],
+            mode: SimMode::Full,
+            ..SweepSpec::default()
+        };
+        let scenarios = spec.expand_with(|ds| args.config(ds))?;
+        let recs = harness::recorders(args.run(scenarios)?);
 
         harness::save_all(&args.out_dir("fig3"), &recs)?;
         harness::print_series(&recs);
         println!("{:<26} {:>14} {:>12}", "mu", "total time [s]", "final acc");
-        for (rec, &mu) in recs.iter().zip(mus) {
+        for (rec, &mu) in recs.iter().zip(&mus) {
             println!("{:<26} {:>14.1} {:>12.4}", mu, rec.total_time_s(), rec.final_accuracy());
         }
         println!();

@@ -4,54 +4,68 @@
 //! Pure control-plane experiment (no learning needed): larger V favors
 //! the objective at the cost of slower convergence of the time-average
 //! energy toward the budget Ē — the classic Lyapunov O(1/V)/O(V) split.
-//! Runs on the full 120-device fleet over the paper horizons and averages
-//! `--repeats` seeds (paper: 30).
+//! Runs on the full 120-device fleet over the paper horizons.  The
+//! ν × seed grid is one `exp` sweep; `--repeats` seeds (paper: 30) run
+//! concurrently and average per ν.
 //!
 //! ```text
 //! cargo run --release --example fig4_v_tradeoff -- --repeats 30
 //! ```
 
 use lroa::config::Policy;
-use lroa::fl::{Server, SimMode};
+use lroa::exp::SweepSpec;
 use lroa::harness::Args;
-use lroa::metrics::{mean_series, Recorder};
-
-fn run_once(args: &Args, dataset: &str, nu: f64, seed: u64) -> lroa::Result<Recorder> {
-    let mut cfg = args.config(dataset)?;
-    cfg.control.nu = nu;
-    cfg.train.policy = Policy::Lroa;
-    cfg.train.seed = seed;
-    // Control-plane-only: use the paper horizons even in quick mode, and
-    // the paper's data density (CIFAR's 50k/120 ≈ 417 samples/device) so
-    // the energy constraint (16) actually binds — that is the regime
-    // where V matters.
-    cfg.train.rounds = args.rounds.unwrap_or(if dataset == "cifar" { 2000 } else { 1000 });
-    cfg.train.samples_per_device = (300, 500);
-    cfg.system.energy_budget_j = if dataset == "cifar" { 15.0 } else { 5.0 };
-    let mut server = Server::new(cfg, SimMode::ControlPlaneOnly)?;
-    server.run()?;
-    Ok(std::mem::take(&mut server.recorder))
-}
+use lroa::metrics::mean_series;
 
 fn main() -> lroa::Result<()> {
     let args = Args::parse();
     let nus = [1e3, 1e4, 1e5, 1e6];
     for dataset in args.datasets() {
         println!("=== fig4 ({dataset}): nu sweep, {} repeat(s) ===", args.repeats);
-        // Same budget run_once uses (paper defaults, not quick-scaled).
+        // Paper budgets (not quick-scaled): the regime where (16) binds.
         let budget = if dataset == "cifar" { 15.0 } else { 5.0 };
 
+        let spec = SweepSpec {
+            datasets: vec![dataset.clone()],
+            policies: vec![Policy::Lroa],
+            nus: nus.to_vec(),
+            seeds: (1..=args.repeats as u64).collect(),
+            ..SweepSpec::default()
+        };
+        let scenarios = spec.expand_with(|ds| {
+            let mut cfg = args.config(ds)?;
+            // Control-plane-only: use the paper horizons even in quick
+            // mode, and the paper's data density (CIFAR's 50k/120 ≈ 417
+            // samples/device) so the energy constraint (16) actually
+            // binds — that is the regime where V matters.
+            cfg.train.rounds = args
+                .rounds
+                .unwrap_or(if ds == "cifar" { 2000 } else { 1000 });
+            cfg.train.samples_per_device = (300, 500);
+            cfg.system.energy_budget_j = budget;
+            Ok(cfg)
+        })?;
+        let results = args.run(scenarios)?;
+
+        // Seed-average the two series per ν.
         let mut rows: Vec<(f64, Vec<f64>, Vec<f64>)> = Vec::new();
         for &nu in &nus {
-            let mut energy_series = Vec::new();
-            let mut objective_series = Vec::new();
-            for rep in 0..args.repeats {
-                let rec = run_once(&args, &dataset, nu, 1 + rep as u64)?;
-                energy_series.push(rec.time_avg_energy());
-                objective_series.push(rec.time_avg_objective());
-            }
-            rows.push((nu, mean_series(&energy_series), mean_series(&objective_series)));
-            let (e, o) = (rows.last().unwrap().1.last().unwrap(), rows.last().unwrap().2.last().unwrap());
+            let energy: Vec<Vec<f64>> = results
+                .iter()
+                .filter(|r| r.scenario.cfg.control.nu == nu)
+                .map(|r| r.recorder.time_avg_energy())
+                .collect();
+            let objective: Vec<Vec<f64>> = results
+                .iter()
+                .filter(|r| r.scenario.cfg.control.nu == nu)
+                .map(|r| r.recorder.time_avg_objective())
+                .collect();
+            assert_eq!(energy.len(), args.repeats, "missing repeats for nu={nu}");
+            rows.push((nu, mean_series(&energy), mean_series(&objective)));
+            let (e, o) = (
+                rows.last().unwrap().1.last().unwrap(),
+                rows.last().unwrap().2.last().unwrap(),
+            );
             eprintln!("[fig4] {dataset} nu={nu:.0e}: time-avg energy {e:.3} J (budget {budget} J), objective {o:.3}");
         }
 

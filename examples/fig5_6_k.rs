@@ -3,7 +3,8 @@
 //! For each K, LROA and Uni-D run full training; the paper grid-searches
 //! µ ∈ {0.1, 1, 10} × ν ∈ {1e4, 1e5, 1e6} per K and reports the best
 //! time/accuracy trade-off.  Quick mode uses the default (µ=1, ν=1e5);
-//! `--grid` enables the full 3×3 search per K as in the paper.
+//! `--grid` enables the full 3×3 search per K as in the paper.  The whole
+//! K × policy (× µ × ν) grid is one `exp` sweep run in parallel.
 //!
 //! ```text
 //! cargo run --release --example fig5_6_k -- --dataset cifar
@@ -11,54 +12,57 @@
 //! ```
 
 use lroa::config::Policy;
+use lroa::exp::{ScenarioResult, SweepSpec};
 use lroa::fl::SimMode;
 use lroa::harness::{self, Args};
 use lroa::metrics::Recorder;
 
+/// §VII-B.3 model selection: prefer clearly-higher accuracy, break near-
+/// ties (within one point) by total modeled time.
+fn better(candidate: &Recorder, best: &Recorder) -> bool {
+    let (ba, ca) = (best.final_accuracy(), candidate.final_accuracy());
+    ca > ba + 0.01 || ((ca - ba).abs() <= 0.01 && candidate.total_time_s() < best.total_time_s())
+}
+
 fn main() -> lroa::Result<()> {
     let args = Args::parse();
-    let grid_search = std::env::args().any(|a| a == "--grid");
+    let grid_search = args.flag("--grid");
     let ks = [2usize, 4, 6];
 
     for dataset in args.datasets() {
         println!("=== fig5/6 ({dataset}): K sweep {ks:?}, grid={grid_search} ===");
+
+        let spec = SweepSpec {
+            datasets: vec![dataset.clone()],
+            policies: vec![Policy::Lroa, Policy::UniformDynamic],
+            ks: ks.to_vec(),
+            mus: if grid_search { vec![0.1, 1.0, 10.0] } else { vec![1.0] },
+            nus: if grid_search { vec![1e4, 1e5, 1e6] } else { vec![1e5] },
+            mode: SimMode::Full,
+            ..SweepSpec::default()
+        };
+        let results = args.run(spec.expand_with(|ds| args.config(ds))?)?;
+
+        // Pick the best grid point per (policy, K), as in §VII-B.3.
         let mut all: Vec<Recorder> = Vec::new();
-
         for &k in &ks {
-            for (policy, pname) in [(Policy::Lroa, "LROA"), (Policy::UniformDynamic, "Uni-D")] {
-                let grid: Vec<(f64, f64)> = if grid_search {
-                    [0.1, 1.0, 10.0]
-                        .iter()
-                        .flat_map(|&mu| [1e4, 1e5, 1e6].iter().map(move |&nu| (mu, nu)))
-                        .collect()
-                } else {
-                    vec![(1.0, 1e5)]
-                };
-
-                // Pick the best (accuracy-filtered, min total time) as in §VII-B.3.
-                let mut best: Option<Recorder> = None;
-                for (mu, nu) in grid {
-                    let mut cfg = args.config(&dataset)?;
-                    cfg.system.k = k;
-                    cfg.control.mu = mu;
-                    cfg.control.nu = nu;
-                    let label = format!("{pname}-{dataset}-K{k}-mu{mu}-nu{nu:.0e}");
-                    let rec = harness::run_policy(cfg, policy, SimMode::Full, &label)?;
-                    let better = match &best {
-                        None => true,
-                        Some(b) => {
-                            // Accuracy within 1 point of the best seen -> prefer faster.
-                            let (ba, ra) = (b.final_accuracy(), rec.final_accuracy());
-                            ra > ba + 0.01
-                                || ((ra - ba).abs() <= 0.01 && rec.total_time_s() < b.total_time_s())
-                        }
-                    };
-                    if better {
-                        best = Some(rec);
-                    }
-                }
-                let mut rec = best.expect("at least one grid point");
-                rec.label = format!("{pname}-{dataset}-K{k}");
+            for policy in [Policy::Lroa, Policy::UniformDynamic] {
+                let cell: Vec<&ScenarioResult> = results
+                    .iter()
+                    .filter(|r| {
+                        r.scenario.cfg.system.k == k && r.scenario.cfg.train.policy == policy
+                    })
+                    .collect();
+                let best = cell
+                    .iter()
+                    .copied()
+                    .fold(None::<&ScenarioResult>, |best, r| match best {
+                        Some(b) if !better(&r.recorder, &b.recorder) => Some(b),
+                        _ => Some(r),
+                    })
+                    .expect("at least one grid point per (policy, K)");
+                let mut rec = best.recorder.clone();
+                rec.label = format!("{}-{dataset}-K{k}", policy.name());
                 all.push(rec);
             }
         }

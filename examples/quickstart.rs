@@ -1,43 +1,51 @@
-//! Quickstart: a small end-to-end LROA run.
+//! Quickstart: a small end-to-end LROA run through the `exp` engine.
 //!
 //! 16 devices, femnist-like task, 30 rounds of full federated training
-//! through the AOT artifacts, with per-eval progress printed.  Run:
+//! through the AOT artifacts, with the evaluation checkpoints printed.
+//! Run:
 //!
 //! ```text
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
-use lroa::config::{Config, Policy};
-use lroa::fl::{Server, SimMode};
+use lroa::config::Policy;
+use lroa::exp::SweepSpec;
+use lroa::fl::SimMode;
+use lroa::harness::Args;
 
 fn main() -> lroa::Result<()> {
-    let mut cfg = Config::for_dataset("femnist")?;
-    cfg.system.num_devices = 16;
-    cfg.train.rounds = 30;
-    cfg.train.samples_per_device = (40, 100);
-    cfg.train.test_samples = 256;
-    cfg.train.eval_every = 5;
-    cfg.train.policy = Policy::Lroa;
-    cfg.apply_cli(&std::env::args().collect::<Vec<_>>())?;
-    cfg.validate()?;
+    let args = Args::parse();
+    let spec = SweepSpec {
+        datasets: vec!["femnist".into()],
+        policies: vec![Policy::Lroa],
+        mode: SimMode::Full,
+        ..SweepSpec::default()
+    };
+    let scenarios = spec.expand_with(|ds| {
+        // Paper defaults, not the harness's quick-mode scaling: the
+        // quickstart demonstrates LROA under the real 5 J budget.
+        let mut cfg = lroa::config::Config::for_dataset(ds)?;
+        cfg.system.num_devices = 16;
+        cfg.train.rounds = args.rounds.unwrap_or(30);
+        cfg.train.samples_per_device = (40, 100);
+        cfg.train.test_samples = 256;
+        cfg.train.eval_every = 5;
+        cfg.apply_cli(&std::env::args().collect::<Vec<_>>())?;
+        Ok(cfg)
+    })?;
+    println!("{}", scenarios[0].cfg.dump());
 
-    println!("{}", cfg.dump());
-    let mut server = Server::new(cfg, SimMode::Full)?;
-    println!("λ = {:.3e}, V = {:.3e}\n", server.lambda, server.v);
+    let results = args.run(scenarios)?;
+    let rec = &results[0].recorder;
+
     println!("{:>6} {:>12} {:>10} {:>10} {:>10}", "round", "time [s]", "trainloss", "acc", "queue");
-
-    for t in 0..server.cfg.train.rounds {
-        server.round(t)?;
-        let rec = server.recorder.rounds.last().unwrap();
-        if !rec.test_accuracy.is_nan() {
-            println!(
-                "{:>6} {:>12.1} {:>10.4} {:>10.4} {:>10.2}",
-                t, rec.total_time_s, rec.train_loss, rec.test_accuracy, rec.mean_queue
-            );
-        }
+    for r in rec.rounds.iter().filter(|r| !r.test_accuracy.is_nan()) {
+        println!(
+            "{:>6} {:>12.1} {:>10.4} {:>10.4} {:>10.2}",
+            r.round, r.total_time_s, r.train_loss, r.test_accuracy, r.mean_queue
+        );
     }
 
-    let rec = &server.recorder;
     println!(
         "\nfinished: modeled latency {:.1}s, final accuracy {:.4}",
         rec.total_time_s(),

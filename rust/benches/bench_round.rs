@@ -1,11 +1,26 @@
 //! Bench: one full simulated round (control + sampling + queues + metrics)
 //! for every policy, control-plane-only — the coordinator's request path
-//! with the PJRT compute excluded.  Plus one full-stack round (with PJRT
-//! local training) when artifacts are present.
+//! with the PJRT compute excluded.  Plus the local-training fan-out at
+//! pool widths 1 / 2 / auto (synthetic per-client workload, so the
+//! speedup is tracked without artifacts), and one full-stack round (with
+//! PJRT local training, sequential vs parallel) when artifacts exist.
 
 use lroa::bench::bencher_from_args;
 use lroa::config::{Config, Policy};
 use lroa::fl::{Server, SimMode};
+use lroa::par;
+use lroa::rng::Rng;
+
+/// Synthetic stand-in for one client's local-training compute: enough
+/// RNG-driven arithmetic (~a few hundred µs) that thread scheduling
+/// overhead is visible relative to real work.
+fn synthetic_client_work(client: usize, rng: &mut Rng) -> u64 {
+    let mut acc = client as u64;
+    for _ in 0..40_000 {
+        acc = acc.wrapping_add((rng.normal().to_bits()).rotate_left(7));
+    }
+    acc
+}
 
 fn main() {
     let mut b = bencher_from_args();
@@ -27,21 +42,44 @@ fn main() {
         });
     }
 
-    // Full-stack round including PJRT local training, if artifacts exist.
-    if std::path::Path::new("artifacts/manifest.json").exists() {
-        let mut cfg = Config::for_dataset("femnist").unwrap();
-        cfg.system.num_devices = 24;
-        cfg.train.policy = Policy::Lroa;
-        cfg.train.samples_per_device = (40, 80);
-        cfg.train.test_samples = 64;
-        cfg.train.rounds = 1_000_000;
-        cfg.train.eval_every = 1_000_000_007; // exclude evaluation from the loop cost
-        let mut server = Server::new(cfg, SimMode::Full).unwrap();
-        let mut t = 1usize; // t=0 would evaluate (t % eval_every == 0)
-        b.bench("round/full-stack/LROA+pjrt", || {
-            server.round(t).unwrap();
-            t += 1;
+    // Local-training fan-out: sequential vs parallel over 8 synthetic
+    // clients.  The ratio of these rows is the round-path speedup the
+    // scoped-thread fan-out buys (results are bitwise identical by
+    // construction; see par::fan_out).
+    let clients = 8usize;
+    let make_jobs = || -> Vec<(usize, Rng)> {
+        let mut root = Rng::new(99);
+        (0..clients).map(|c| (c, root.fork(c as u64))).collect()
+    };
+    let widths = [1usize, 2, par::auto_threads().min(clients)];
+    for &threads in &widths {
+        b.bench(&format!("round/fanout-{clients}clients/threads={threads}"), || {
+            par::fan_out(make_jobs(), threads, || (), |_, (c, mut rng)| {
+                Ok(synthetic_client_work(c, &mut rng))
+            })
+            .unwrap()
         });
+    }
+
+    // Full-stack round including PJRT local training, if artifacts exist:
+    // sequential (train_threads=1) vs auto-width parallel.
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        for (tag, threads) in [("seq", 1usize), ("par", 0usize)] {
+            let mut cfg = Config::for_dataset("femnist").unwrap();
+            cfg.system.num_devices = 24;
+            cfg.train.policy = Policy::Lroa;
+            cfg.train.samples_per_device = (40, 80);
+            cfg.train.test_samples = 64;
+            cfg.train.rounds = 1_000_000;
+            cfg.train.eval_every = 1_000_000_007; // exclude evaluation from the loop cost
+            cfg.train.train_threads = threads;
+            let mut server = Server::new(cfg, SimMode::Full).unwrap();
+            let mut t = 1usize; // t=0 would evaluate (t % eval_every == 0)
+            b.bench(&format!("round/full-stack/LROA+pjrt/{tag}"), || {
+                server.round(t).unwrap();
+                t += 1;
+            });
+        }
     } else {
         eprintln!("artifacts missing: skipping full-stack round bench");
     }

@@ -25,6 +25,14 @@ pub enum Policy {
 }
 
 impl Policy {
+    /// Every scheme, registry order (LROA first — the comparison anchor).
+    pub const ALL: [Policy; 4] = [
+        Policy::Lroa,
+        Policy::UniformDynamic,
+        Policy::UniformStatic,
+        Policy::DivFl,
+    ];
+
     pub fn parse(s: &str) -> Result<Policy> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "lroa" => Policy::Lroa,
@@ -190,6 +198,10 @@ pub struct TrainConfig {
     pub policy: Policy,
     /// Class-separation / noise ratio of the synthetic task (higher = easier).
     pub data_snr: f64,
+    /// Worker threads for parallel local client training:
+    /// 0 = one per core, 1 = sequential.  Any value yields bitwise-
+    /// identical results (per-client RNGs are forked up front).
+    pub train_threads: usize,
 }
 
 impl Default for TrainConfig {
@@ -205,6 +217,7 @@ impl Default for TrainConfig {
             seed: 1,
             policy: Policy::Lroa,
             data_snr: 1.5,
+            train_threads: 0,
         }
     }
 }
@@ -328,6 +341,7 @@ impl Config {
             "train.seed" => self.train.seed = val.parse()?,
             "train.policy" => self.train.policy = Policy::parse(val)?,
             "train.data_snr" => self.train.data_snr = f()?,
+            "train.train_threads" => self.train.train_threads = u()?,
             "run.artifacts_dir" => self.artifacts_dir = val.into(),
             "run.out_dir" => self.out_dir = val.into(),
             other => anyhow::bail!("unknown config key {other:?}"),
@@ -368,7 +382,7 @@ impl Config {
         format!(
             "[system] N={} K={} E={} B={:.3e} N0={} h_mean={} clip=({},{}) p=({},{}) f=({:.2e},{:.2e}) alpha={:.2e} c_n={:.2e} Ebar={} M_bits={} spread={}\n\
              [control] mu={} nu={} lambda*={} V*={} eps=({},{}) iters=({},{}) q_min={}\n\
-             [train] dataset={} rounds={} lr0={} decay=({},{}) samples=({},{}) test={} eval_every={} seed={} policy={} snr={}",
+             [train] dataset={} rounds={} lr0={} decay=({},{}) samples=({},{}) test={} eval_every={} seed={} policy={} snr={} threads={}",
             s.num_devices, s.k, s.local_epochs, s.bandwidth_hz, s.noise_w, s.channel_mean,
             s.channel_clip.0, s.channel_clip.1, s.p_min_w, s.p_max_w, s.f_min_hz, s.f_max_hz,
             s.alpha, s.cycles_per_sample, s.energy_budget_j, s.model_bits, s.hardware_spread,
@@ -376,7 +390,7 @@ impl Config {
             c.max_outer_iters, c.max_inner_iters, c.q_min,
             t.dataset, t.rounds, t.lr0, t.lr_decay_at.0, t.lr_decay_at.1,
             t.samples_per_device.0, t.samples_per_device.1, t.test_samples, t.eval_every,
-            t.seed, t.policy, t.data_snr,
+            t.seed, t.policy, t.data_snr, t.train_threads,
         )
     }
 }

@@ -6,17 +6,21 @@
 //! * [`sum`] — the SUM solver for sampling probabilities (P2.2);
 //! * [`lroa`] — Algorithm 2: the alternating outer loop tying it together;
 //! * [`hyper`] — the λ₀ / V₀ estimation rule of §VII-B.1;
-//! * [`static_alloc`] — the Uni-S baseline's static resource policy.
+//! * [`static_alloc`] — the Uni-S baseline's static resource policy;
+//! * [`policy`] — the [`RoundPolicy`] trait, the four scheme impls, and
+//!   the name → constructor registry the server dispatches through.
 
 pub mod freq;
 pub mod hyper;
 pub mod lroa;
+pub mod policy;
 pub mod power;
 pub mod queues;
 pub mod static_alloc;
 pub mod sum;
 
 pub use lroa::{Controls, LroaSolver, SolverStats};
+pub use policy::{PolicyInit, RoundContext, RoundPlan, RoundPolicy};
 pub use queues::VirtualQueues;
 
 /// Per-round control decisions for every device.

@@ -1,0 +1,453 @@
+//! Pluggable round policies: one trait, four schemes, one registry.
+//!
+//! A [`RoundPolicy`] owns everything scheme-specific about one
+//! communication round — how resources `(f, p)` are allocated, how the
+//! sampling distribution `q` is chosen, and how the participant multiset
+//! `K^t` is drawn.  The FL server is policy-agnostic: it hands the policy
+//! a [`RoundContext`] (fleet, channel draw, queue backlogs) and receives a
+//! [`RoundPlan`] back.  Adding a new scheduling scheme is one impl plus
+//! one [`REGISTRY`] line; no server code changes.
+//!
+//! The four registered schemes mirror the paper's §VII-A comparison:
+//!
+//! | name   | resources `(f, p)`        | sampling `q` / selection      |
+//! |--------|---------------------------|-------------------------------|
+//! | LROA   | Algorithm 2 (dynamic)     | Algorithm 2 probabilities     |
+//! | Uni-D  | Algorithm 2 at `q = 1/N`  | uniform with replacement      |
+//! | Uni-S  | static energy balance     | uniform with replacement      |
+//! | DivFL  | static energy balance     | greedy facility location      |
+
+use crate::config::{ControlConfig, Policy, SystemConfig};
+use crate::control::{static_alloc, Controls, LroaSolver, SolverStats};
+use crate::rng::Rng;
+use crate::sampling::{self, DivFlState, Projector, Selection};
+use crate::system::Device;
+use crate::Result;
+
+/// DivFL update-embedding dimensionality (random projection target).
+const DIVFL_EMBED_DIM: usize = 32;
+
+/// Everything a policy may read when planning round `t`.
+pub struct RoundContext<'a> {
+    /// Round index.
+    pub t: usize,
+    /// Sampling frequency `K`.
+    pub k: usize,
+    /// The device fleet (static per-run parameters).
+    pub devices: &'a [Device],
+    /// Data weights `w_n` (sum to 1).
+    pub weights: &'a [f64],
+    /// This round's channel gains `h_n^t`.
+    pub h: &'a [f64],
+    /// Virtual-queue backlogs `Q_n^t`.
+    pub backlogs: &'a [f64],
+}
+
+/// A policy's decisions for one round.
+pub struct RoundPlan {
+    /// Resource controls `(f, p)` and the sampling distribution `q`.
+    pub controls: Controls,
+    /// Solver diagnostics (zeroed for closed-form baselines).
+    pub stats: SolverStats,
+    /// The sampled participant multiset plus eq. (4) coefficients.
+    pub selection: Selection,
+    /// The effective per-device selection distribution the virtual queues
+    /// and the recorded objective use (uniform for the baselines).
+    pub q_eff: Vec<f64>,
+}
+
+/// One scheduling scheme's behaviour across rounds.
+///
+/// The sampling RNG is passed in by the server (not stored here) so that
+/// every policy consumes the *same* random stream the pre-trait server
+/// did — policy comparisons on shared seeds stay exactly reproducible.
+pub trait RoundPolicy: Send {
+    /// Registry name (also the run-label prefix).
+    fn name(&self) -> &'static str;
+
+    /// Plan round `ctx.t`: solve for controls and draw the participants.
+    fn plan(&mut self, ctx: &RoundContext<'_>, rng: &mut Rng) -> RoundPlan;
+
+    /// Feed back one participant's model delta after local training.
+    /// Only stateful selectors (DivFL) care; the default ignores it.
+    fn observe_update(&mut self, _client: usize, _delta: &[f32]) {}
+}
+
+fn uniform_q(n: usize) -> Vec<f64> {
+    vec![1.0 / n as f64; n]
+}
+
+// ---------------------------------------------------------------------------
+// LROA — the paper's method.
+// ---------------------------------------------------------------------------
+
+/// Algorithm 2 resources + probability-driven sampling.
+pub struct LroaPolicy {
+    solver: LroaSolver,
+}
+
+impl LroaPolicy {
+    pub fn new(init: &PolicyInit<'_>) -> Self {
+        Self {
+            solver: init.solver(),
+        }
+    }
+}
+
+impl RoundPolicy for LroaPolicy {
+    fn name(&self) -> &'static str {
+        "LROA"
+    }
+
+    fn plan(&mut self, ctx: &RoundContext<'_>, rng: &mut Rng) -> RoundPlan {
+        let (controls, stats) =
+            self.solver
+                .solve_round(ctx.devices, ctx.weights, ctx.h, ctx.backlogs);
+        let selection =
+            sampling::sample_by_probability(&controls.q, ctx.weights, ctx.k, rng);
+        let q_eff = controls.q.clone();
+        RoundPlan {
+            controls,
+            stats,
+            selection,
+            q_eff,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Uni-D — uniform sampling, dynamic resources.
+// ---------------------------------------------------------------------------
+
+/// Uniform sampling with LROA's dynamic `f`/`p` blocks at `q = 1/N`.
+pub struct UniformDynamicPolicy {
+    solver: LroaSolver,
+}
+
+impl UniformDynamicPolicy {
+    pub fn new(init: &PolicyInit<'_>) -> Self {
+        Self {
+            solver: init.solver(),
+        }
+    }
+}
+
+impl RoundPolicy for UniformDynamicPolicy {
+    fn name(&self) -> &'static str {
+        "Uni-D"
+    }
+
+    fn plan(&mut self, ctx: &RoundContext<'_>, rng: &mut Rng) -> RoundPlan {
+        let (controls, stats) = self
+            .solver
+            .solve_uniform_dynamic(ctx.devices, ctx.h, ctx.backlogs);
+        let n = ctx.devices.len();
+        let selection = sampling::sample_uniform(n, ctx.weights, ctx.k, rng);
+        RoundPlan {
+            controls,
+            stats,
+            selection,
+            q_eff: uniform_q(n),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Uni-S — uniform sampling, static resources.
+// ---------------------------------------------------------------------------
+
+/// Uniform sampling with the static mid-power / energy-balance allocation.
+pub struct UniformStaticPolicy {
+    sys: SystemConfig,
+    model_bits: f64,
+}
+
+impl UniformStaticPolicy {
+    pub fn new(init: &PolicyInit<'_>) -> Self {
+        Self {
+            sys: init.sys.clone(),
+            model_bits: init.model_bits,
+        }
+    }
+}
+
+impl RoundPolicy for UniformStaticPolicy {
+    fn name(&self) -> &'static str {
+        "Uni-S"
+    }
+
+    fn plan(&mut self, ctx: &RoundContext<'_>, rng: &mut Rng) -> RoundPlan {
+        let controls =
+            static_alloc::solve_static(&self.sys, ctx.devices, self.model_bits, ctx.h);
+        let n = ctx.devices.len();
+        let selection = sampling::sample_uniform(n, ctx.weights, ctx.k, rng);
+        RoundPlan {
+            controls,
+            stats: SolverStats::default(),
+            selection,
+            q_eff: uniform_q(n),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DivFL — diverse submodular selection, static resources.
+// ---------------------------------------------------------------------------
+
+/// Greedy facility-location selection over stale update embeddings.
+pub struct DivFlPolicy {
+    sys: SystemConfig,
+    model_bits: f64,
+    state: DivFlState,
+    projector: Projector,
+}
+
+impl DivFlPolicy {
+    pub fn new(init: &PolicyInit<'_>) -> Self {
+        Self {
+            sys: init.sys.clone(),
+            model_bits: init.model_bits,
+            state: DivFlState::new(init.sys.num_devices, DIVFL_EMBED_DIM),
+            projector: Projector::new(DIVFL_EMBED_DIM, init.seed ^ 0xD1F1),
+        }
+    }
+}
+
+impl RoundPolicy for DivFlPolicy {
+    fn name(&self) -> &'static str {
+        "DivFL"
+    }
+
+    fn plan(&mut self, ctx: &RoundContext<'_>, _rng: &mut Rng) -> RoundPlan {
+        let controls =
+            static_alloc::solve_static(&self.sys, ctx.devices, self.model_bits, ctx.h);
+        let selection = self.state.select(ctx.weights, ctx.k);
+        RoundPlan {
+            controls,
+            stats: SolverStats::default(),
+            selection,
+            q_eff: uniform_q(ctx.devices.len()),
+        }
+    }
+
+    fn observe_update(&mut self, client: usize, delta: &[f32]) {
+        self.state.observe(client, self.projector.project(delta));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry.
+// ---------------------------------------------------------------------------
+
+/// Everything a policy constructor may need.
+pub struct PolicyInit<'a> {
+    pub sys: &'a SystemConfig,
+    pub ctl: &'a ControlConfig,
+    /// λ, already scaled (µ·λ₀ or explicit override).
+    pub lambda: f64,
+    /// V, already scaled (ν·V₀ or explicit override).
+    pub v: f64,
+    /// Model update size in bits.
+    pub model_bits: f64,
+    /// Master seed (policies derive sub-seeds from it).
+    pub seed: u64,
+}
+
+impl PolicyInit<'_> {
+    /// A fresh Algorithm 2 solver over this run's problem data.
+    fn solver(&self) -> LroaSolver {
+        LroaSolver::new(
+            self.sys.clone(),
+            self.ctl.clone(),
+            self.lambda,
+            self.v,
+            self.model_bits,
+        )
+    }
+}
+
+type PolicyCtor = fn(&PolicyInit<'_>) -> Box<dyn RoundPolicy>;
+
+/// One registry row: scheme id, canonical name, constructor.
+pub struct PolicySpec {
+    pub id: Policy,
+    pub name: &'static str,
+    pub build: PolicyCtor,
+}
+
+fn build_lroa(init: &PolicyInit<'_>) -> Box<dyn RoundPolicy> {
+    Box::new(LroaPolicy::new(init))
+}
+
+fn build_uniform_dynamic(init: &PolicyInit<'_>) -> Box<dyn RoundPolicy> {
+    Box::new(UniformDynamicPolicy::new(init))
+}
+
+fn build_uniform_static(init: &PolicyInit<'_>) -> Box<dyn RoundPolicy> {
+    Box::new(UniformStaticPolicy::new(init))
+}
+
+fn build_divfl(init: &PolicyInit<'_>) -> Box<dyn RoundPolicy> {
+    Box::new(DivFlPolicy::new(init))
+}
+
+/// The name → constructor registry all dispatch goes through.
+pub const REGISTRY: &[PolicySpec] = &[
+    PolicySpec {
+        id: Policy::Lroa,
+        name: "LROA",
+        build: build_lroa,
+    },
+    PolicySpec {
+        id: Policy::UniformDynamic,
+        name: "Uni-D",
+        build: build_uniform_dynamic,
+    },
+    PolicySpec {
+        id: Policy::UniformStatic,
+        name: "Uni-S",
+        build: build_uniform_static,
+    },
+    PolicySpec {
+        id: Policy::DivFl,
+        name: "DivFL",
+        build: build_divfl,
+    },
+];
+
+/// Build the registered policy for a config [`Policy`] id.
+pub fn build(policy: Policy, init: &PolicyInit<'_>) -> Box<dyn RoundPolicy> {
+    let spec = REGISTRY
+        .iter()
+        .find(|s| s.id == policy)
+        .expect("every Policy variant is registered");
+    (spec.build)(init)
+}
+
+/// Build a policy by name or alias.  The alias table lives in one place
+/// — [`Policy::parse`] — so CLI, config files, and the registry can
+/// never drift apart.
+pub fn from_name(name: &str, init: &PolicyInit<'_>) -> Result<Box<dyn RoundPolicy>> {
+    Ok(build(Policy::parse(name)?, init))
+}
+
+/// Canonical names of every registered policy, registry order.
+pub fn names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|s| s.name).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::system::Fleet;
+
+    fn setup() -> (SystemConfig, ControlConfig, Fleet, Vec<f64>, Vec<f64>) {
+        let sys = SystemConfig {
+            num_devices: 12,
+            ..SystemConfig::default()
+        };
+        let ctl = ControlConfig::default();
+        let mut rng = Rng::new(9);
+        let fleet = Fleet::generate(&sys, (50, 200), &mut rng);
+        let h: Vec<f64> = (0..12).map(|_| rng.range(0.01, 0.5)).collect();
+        let backlogs = vec![1.0; 12];
+        (sys, ctl, fleet, h, backlogs)
+    }
+
+    #[test]
+    fn registry_covers_every_policy_variant() {
+        for policy in Policy::ALL {
+            assert!(
+                REGISTRY.iter().any(|s| s.id == policy),
+                "{policy} missing from registry"
+            );
+        }
+        assert_eq!(names(), vec!["LROA", "Uni-D", "Uni-S", "DivFL"]);
+    }
+
+    #[test]
+    fn from_name_accepts_aliases_and_rejects_unknown() {
+        let (sys, ctl, ..) = setup();
+        let init = PolicyInit {
+            sys: &sys,
+            ctl: &ctl,
+            lambda: 1.0,
+            v: 1e4,
+            model_bits: 3.2e6,
+            seed: 1,
+        };
+        for alias in ["lroa", "LROA", "uni-d", "Uni-S", "divfl", "uniform-dynamic"] {
+            assert!(from_name(alias, &init).is_ok(), "{alias}");
+        }
+        assert!(from_name("nope", &init).is_err());
+    }
+
+    #[test]
+    fn every_policy_produces_a_feasible_plan() {
+        let (sys, ctl, fleet, h, backlogs) = setup();
+        let init = PolicyInit {
+            sys: &sys,
+            ctl: &ctl,
+            lambda: 1.0,
+            v: 1e4,
+            model_bits: 3.2e6,
+            seed: 7,
+        };
+        for spec in REGISTRY {
+            let mut policy = (spec.build)(&init);
+            let mut rng = Rng::new(42);
+            let ctx = RoundContext {
+                t: 0,
+                k: sys.k,
+                devices: &fleet.devices,
+                weights: fleet.weights(),
+                h: &h,
+                backlogs: &backlogs,
+            };
+            let plan = policy.plan(&ctx, &mut rng);
+            assert_eq!(policy.name(), spec.name);
+            assert_eq!(plan.q_eff.len(), 12, "{}", spec.name);
+            assert_eq!(plan.selection.members.len(), sys.k, "{}", spec.name);
+            let sum_q: f64 = plan.q_eff.iter().sum();
+            assert!((sum_q - 1.0).abs() < 1e-6, "{}: sum q {sum_q}", spec.name);
+            for (i, d) in fleet.devices.iter().enumerate() {
+                assert!(plan.controls.f_hz[i] >= d.f_min_hz - 1e-9);
+                assert!(plan.controls.f_hz[i] <= d.f_max_hz + 1e-9);
+                assert!(plan.controls.p_w[i] >= d.p_min_w - 1e-12);
+                assert!(plan.controls.p_w[i] <= d.p_max_w + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn baseline_policies_share_the_sampling_stream() {
+        // Uni-D and Uni-S consume the RNG identically: same draws in,
+        // same members out (the paper's shared-channel comparison needs
+        // schemes to be swappable without perturbing the random stream).
+        let (sys, ctl, fleet, h, backlogs) = setup();
+        let init = PolicyInit {
+            sys: &sys,
+            ctl: &ctl,
+            lambda: 1.0,
+            v: 1e4,
+            model_bits: 3.2e6,
+            seed: 7,
+        };
+        let ctx = RoundContext {
+            t: 0,
+            k: sys.k,
+            devices: &fleet.devices,
+            weights: fleet.weights(),
+            h: &h,
+            backlogs: &backlogs,
+        };
+        let mut unid = build(Policy::UniformDynamic, &init);
+        let mut unis = build(Policy::UniformStatic, &init);
+        let mut rng_a = Rng::new(5);
+        let mut rng_b = Rng::new(5);
+        let plan_a = unid.plan(&ctx, &mut rng_a);
+        let plan_b = unis.plan(&ctx, &mut rng_b);
+        assert_eq!(plan_a.selection.members, plan_b.selection.members);
+    }
+}

@@ -1,0 +1,22 @@
+//! Declarative multi-scenario experiment engine.
+//!
+//! The paper's evaluation is a grid: policy × K × µ/ν × seed × dataset,
+//! every cell run on shared channel realizations.  This subsystem makes
+//! that grid a value instead of a hand-rolled loop:
+//!
+//! * [`spec`] — [`SweepSpec`], the declarative grid, and its expansion
+//!   into concrete [`Scenario`]s (config + label + group key);
+//! * [`runner`] — the thread-pooled scenario runner (deterministic
+//!   per-scenario results, slot-ordered output) and the mean±std
+//!   aggregation of seed repeats.
+//!
+//! The `lroa sweep` CLI subcommand, the figure examples, and the harness
+//! all sit on top of this module.
+
+pub mod runner;
+pub mod spec;
+
+pub use runner::{
+    run_scenarios, summarize_groups, GroupSummary, ScenarioResult, Stat,
+};
+pub use spec::{Scenario, SweepSpec};

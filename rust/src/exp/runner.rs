@@ -1,0 +1,202 @@
+//! Thread-pooled scenario execution and seed aggregation.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use super::spec::Scenario;
+use crate::fl::Server;
+use crate::metrics::Recorder;
+use crate::par;
+use crate::Result;
+
+/// One completed scenario: the run's full metrics plus its metadata.
+pub struct ScenarioResult {
+    pub scenario: Scenario,
+    pub recorder: Recorder,
+    /// Host wall-clock of this scenario [s].
+    pub wall_s: f64,
+}
+
+/// Run every scenario, fanned over `threads` workers (0 = one per core).
+///
+/// Each scenario is an isolated, fully-seeded simulation, so results are
+/// deterministic and come back **in scenario order** regardless of the
+/// pool width.  The first failing scenario's error is propagated.
+///
+/// When the pool itself is parallel, scenarios whose
+/// `train.train_threads` is still auto (0) are pinned to sequential
+/// local training — otherwise every Full-mode cell would spawn its own
+/// per-core training pool on top of the scenario pool, oversubscribing
+/// the machine.  An explicit non-zero `train_threads` is honored.
+/// Training results are bitwise-identical either way (see [`par`]).
+pub fn run_scenarios(mut scenarios: Vec<Scenario>, threads: usize) -> Result<Vec<ScenarioResult>> {
+    let width = par::effective_threads(threads, scenarios.len());
+    if width > 1 {
+        for sc in &mut scenarios {
+            if sc.cfg.train.train_threads == 0 {
+                sc.cfg.train.train_threads = 1;
+            }
+        }
+    }
+    par::fan_out(scenarios, width, || (), |_, sc| run_one(sc))
+}
+
+fn run_one(scenario: Scenario) -> Result<ScenarioResult> {
+    let t0 = Instant::now();
+    let mut server = Server::new(scenario.cfg.clone(), scenario.mode)?;
+    server.run()?;
+    let mut recorder = std::mem::take(&mut server.recorder);
+    recorder.label = scenario.label.clone();
+    let wall_s = t0.elapsed().as_secs_f64();
+    eprintln!(
+        "[exp] {}: {} rounds, modeled {:.1}s, final acc {:.4}, wall {:.1}s",
+        scenario.label,
+        recorder.rounds.len(),
+        recorder.total_time_s(),
+        recorder.final_accuracy(),
+        wall_s
+    );
+    Ok(ScenarioResult {
+        scenario,
+        recorder,
+        wall_s,
+    })
+}
+
+/// Mean ± population std over the finite entries of a sample.
+#[derive(Clone, Copy, Debug)]
+pub struct Stat {
+    pub mean: f64,
+    pub std: f64,
+}
+
+impl Stat {
+    pub fn from_values(values: &[f64]) -> Stat {
+        let xs: Vec<f64> = values.iter().copied().filter(|x| x.is_finite()).collect();
+        if xs.is_empty() {
+            return Stat {
+                mean: f64::NAN,
+                std: f64::NAN,
+            };
+        }
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        Stat {
+            mean,
+            std: var.sqrt(),
+        }
+    }
+}
+
+impl std::fmt::Display for Stat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.std > 0.0 {
+            write!(f, "{:.3} ± {:.3}", self.mean, self.std)
+        } else {
+            write!(f, "{:.3}", self.mean)
+        }
+    }
+}
+
+/// Seed-aggregated summary of one sweep cell.
+pub struct GroupSummary {
+    pub group: String,
+    /// Number of seed repeats aggregated.
+    pub runs: usize,
+    pub total_time_s: Stat,
+    pub final_accuracy: Stat,
+    pub time_avg_energy: Stat,
+    pub time_avg_objective: Stat,
+}
+
+/// Collapse seed repeats: one mean±std row per scenario group, in first-
+/// appearance order.
+pub fn summarize_groups(results: &[ScenarioResult]) -> Vec<GroupSummary> {
+    let mut order: Vec<&str> = Vec::new();
+    let mut buckets: BTreeMap<&str, Vec<&ScenarioResult>> = BTreeMap::new();
+    for r in results {
+        let key = r.scenario.group.as_str();
+        if !buckets.contains_key(key) {
+            order.push(key);
+        }
+        buckets.entry(key).or_default().push(r);
+    }
+    order
+        .into_iter()
+        .map(|group| {
+            let rs = &buckets[group];
+            let pick = |f: &dyn Fn(&Recorder) -> f64| -> Vec<f64> {
+                rs.iter().map(|r| f(&r.recorder)).collect()
+            };
+            GroupSummary {
+                group: group.to_string(),
+                runs: rs.len(),
+                total_time_s: Stat::from_values(&pick(&|r| r.total_time_s())),
+                final_accuracy: Stat::from_values(&pick(&|r| r.final_accuracy())),
+                time_avg_energy: Stat::from_values(&pick(&|r| {
+                    r.time_avg_energy().last().copied().unwrap_or(f64::NAN)
+                })),
+                time_avg_objective: Stat::from_values(&pick(&|r| {
+                    r.time_avg_objective().last().copied().unwrap_or(f64::NAN)
+                })),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Policy;
+    use crate::exp::SweepSpec;
+
+    fn small_spec() -> SweepSpec {
+        SweepSpec {
+            datasets: vec!["cifar".into()],
+            policies: vec![Policy::Lroa, Policy::UniformStatic],
+            seeds: vec![1, 2],
+            rounds: Some(15),
+            overrides: vec!["--system.num_devices=12".into()],
+            ..SweepSpec::default()
+        }
+    }
+
+    #[test]
+    fn parallel_results_match_sequential_and_stay_ordered() {
+        let seq = run_scenarios(small_spec().expand().unwrap(), 1).unwrap();
+        let par = run_scenarios(small_spec().expand().unwrap(), 4).unwrap();
+        assert_eq!(seq.len(), 4);
+        assert_eq!(par.len(), 4);
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.scenario.label, b.scenario.label);
+            assert_eq!(a.recorder.label, b.recorder.label);
+            assert_eq!(a.recorder.total_time_s(), b.recorder.total_time_s());
+            assert_eq!(a.recorder.rounds.len(), 15);
+        }
+    }
+
+    #[test]
+    fn groups_aggregate_seed_repeats() {
+        let results = run_scenarios(small_spec().expand().unwrap(), 2).unwrap();
+        let groups = summarize_groups(&results);
+        assert_eq!(groups.len(), 2, "two policies, two groups");
+        for g in &groups {
+            assert_eq!(g.runs, 2, "{}: two seed repeats", g.group);
+            assert!(g.total_time_s.mean > 0.0);
+            assert!(g.total_time_s.std >= 0.0);
+            // Control-plane runs have no accuracy: NaN-filtered to NaN.
+            assert!(g.final_accuracy.mean.is_nan());
+        }
+        assert_eq!(groups[0].group, "LROA-cifar");
+        assert_eq!(groups[1].group, "Uni-S-cifar");
+    }
+
+    #[test]
+    fn stat_filters_non_finite() {
+        let s = Stat::from_values(&[1.0, 3.0, f64::NAN]);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert!((s.std - 1.0).abs() < 1e-12);
+        assert!(Stat::from_values(&[f64::NAN]).mean.is_nan());
+    }
+}

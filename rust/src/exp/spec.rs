@@ -1,0 +1,341 @@
+//! Sweep specification and grid expansion.
+
+use crate::config::{Config, Policy};
+use crate::fl::SimMode;
+use crate::Result;
+
+/// One fully-resolved experiment cell: a config plus naming metadata.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// Unique run label (CSV file stem, recorder label).
+    pub label: String,
+    /// Seed-invariant grouping key: scenarios sharing a `group` are seed
+    /// repeats of the same cell and aggregate to one mean±std row.
+    pub group: String,
+    /// The complete experiment configuration.
+    pub cfg: Config,
+    /// Full training or control-plane-only.
+    pub mode: SimMode,
+}
+
+/// A declarative sweep: the cartesian product of every non-empty axis.
+///
+/// An empty axis means "keep the base config's value" (one grid point,
+/// no label segment); an axis with a single entry pins that value without
+/// adding a label segment either, so labels only carry the dimensions
+/// that actually vary — plus policy and dataset, which always do.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    pub datasets: Vec<String>,
+    pub policies: Vec<Policy>,
+    /// Sampling frequency `K` values.
+    pub ks: Vec<usize>,
+    /// λ scale factors µ.
+    pub mus: Vec<f64>,
+    /// V scale factors ν.
+    pub nus: Vec<f64>,
+    /// Seed repeats (the paper averages 30).
+    pub seeds: Vec<u64>,
+    /// Horizon override applied to every cell.
+    pub rounds: Option<usize>,
+    pub mode: SimMode,
+    /// Runner pool width (0 = one per core).
+    pub threads: usize,
+    /// Output directory for CSV/JSON emission.
+    pub out_dir: String,
+    /// Extra `--section.key=value` overrides applied to every cell.
+    pub overrides: Vec<String>,
+}
+
+impl Default for SweepSpec {
+    fn default() -> Self {
+        Self {
+            datasets: vec!["cifar".into()],
+            policies: Vec::new(),
+            ks: Vec::new(),
+            mus: Vec::new(),
+            nus: Vec::new(),
+            seeds: Vec::new(),
+            rounds: None,
+            mode: SimMode::ControlPlaneOnly,
+            threads: 0,
+            out_dir: "runs/sweep".into(),
+            overrides: Vec::new(),
+        }
+    }
+}
+
+/// An axis iterates its values, or `None` once when empty (= keep base).
+fn axis<T: Copy>(values: &[T]) -> Vec<Option<T>> {
+    if values.is_empty() {
+        vec![None]
+    } else {
+        values.iter().map(|&v| Some(v)).collect()
+    }
+}
+
+impl SweepSpec {
+    /// Expand against the paper-default base configs
+    /// ([`Config::for_dataset`]) plus this spec's overrides.
+    pub fn expand(&self) -> Result<Vec<Scenario>> {
+        self.expand_with(Config::for_dataset)
+    }
+
+    /// Expand the grid, building each cell's base config with `base`
+    /// (called once per cell with the dataset name).  Axis values, the
+    /// rounds override, and `self.overrides` are applied on top, and the
+    /// result is validated.
+    pub fn expand_with<F>(&self, mut base: F) -> Result<Vec<Scenario>>
+    where
+        F: FnMut(&str) -> Result<Config>,
+    {
+        let mut out = Vec::new();
+        for dataset in &self.datasets {
+            for &p in &axis(&self.policies) {
+                for &k in &axis(&self.ks) {
+                    for &mu in &axis(&self.mus) {
+                        for &nu in &axis(&self.nus) {
+                            for &seed in &axis(&self.seeds) {
+                                let mut cfg = base(dataset)?;
+                                if let Some(p) = p {
+                                    cfg.train.policy = p;
+                                }
+                                if let Some(k) = k {
+                                    cfg.system.k = k;
+                                }
+                                if let Some(mu) = mu {
+                                    cfg.control.mu = mu;
+                                }
+                                if let Some(nu) = nu {
+                                    cfg.control.nu = nu;
+                                }
+                                if let Some(seed) = seed {
+                                    cfg.train.seed = seed;
+                                }
+                                if let Some(rounds) = self.rounds {
+                                    cfg.train.rounds = rounds;
+                                }
+                                cfg.apply_cli(&self.overrides)?;
+                                cfg.validate()?;
+                                let group = self.group_label(&cfg, dataset);
+                                let label = match seed {
+                                    Some(s) if self.seeds.len() > 1 => format!("{group}-s{s}"),
+                                    _ => group.clone(),
+                                };
+                                out.push(Scenario {
+                                    label,
+                                    group,
+                                    cfg,
+                                    mode: self.mode,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Seed-invariant cell name: policy and dataset always, varying axes
+    /// only when they actually vary.
+    fn group_label(&self, cfg: &Config, dataset: &str) -> String {
+        let mut s = format!("{}-{}", cfg.train.policy.name(), dataset);
+        if self.ks.len() > 1 {
+            s.push_str(&format!("-K{}", cfg.system.k));
+        }
+        if self.mus.len() > 1 {
+            s.push_str(&format!("-mu{}", cfg.control.mu));
+        }
+        if self.nus.len() > 1 {
+            s.push_str(&format!("-nu{:e}", cfg.control.nu));
+        }
+        s
+    }
+
+    /// Parse the `lroa sweep` command line.
+    ///
+    /// Recognized (all `--key=value`): `--datasets`, `--policies`,
+    /// `--ks`, `--mus`, `--nus`, `--seeds` (comma list or `a..b`
+    /// inclusive), `--rounds`, `--threads`, `--mode=sim|train`, `--out`.
+    /// Dotted `--section.key=value` config overrides pass through to
+    /// every cell; anything else is an error.
+    pub fn from_cli(args: &[String]) -> Result<SweepSpec> {
+        let mut spec = SweepSpec::default();
+        for arg in args {
+            let Some(rest) = arg.strip_prefix("--") else {
+                anyhow::bail!("sweep: unexpected argument {arg:?}");
+            };
+            let Some((key, val)) = rest.split_once('=') else {
+                anyhow::bail!("sweep: expected --key=value, got {arg:?}");
+            };
+            match key {
+                "datasets" => spec.datasets = val.split(',').map(str::to_string).collect(),
+                "policies" => {
+                    spec.policies = if val == "all" {
+                        Policy::ALL.to_vec()
+                    } else {
+                        val.split(',')
+                            .map(Policy::parse)
+                            .collect::<Result<Vec<_>>>()?
+                    }
+                }
+                "ks" => spec.ks = parse_list(val, "ks")?,
+                "mus" => spec.mus = parse_list(val, "mus")?,
+                "nus" => spec.nus = parse_list(val, "nus")?,
+                "seeds" => spec.seeds = parse_seeds(val)?,
+                "rounds" => spec.rounds = Some(parse_one(val, "rounds")?),
+                "threads" => spec.threads = parse_one(val, "threads")?,
+                "out" => spec.out_dir = val.to_string(),
+                "mode" => {
+                    spec.mode = match val {
+                        "sim" => SimMode::ControlPlaneOnly,
+                        "train" => SimMode::Full,
+                        other => anyhow::bail!("sweep: --mode must be sim|train, got {other:?}"),
+                    }
+                }
+                _ if key.contains('.') => spec.overrides.push(arg.clone()),
+                other => anyhow::bail!("sweep: unknown flag --{other}"),
+            }
+        }
+        Ok(spec)
+    }
+}
+
+fn parse_one<T: std::str::FromStr>(val: &str, what: &str) -> Result<T> {
+    val.parse::<T>()
+        .map_err(|_| anyhow::anyhow!("sweep: bad {what} value {val:?}"))
+}
+
+fn parse_list<T: std::str::FromStr>(val: &str, what: &str) -> Result<Vec<T>> {
+    val.split(',').map(|v| parse_one(v.trim(), what)).collect()
+}
+
+/// `"1,2,5"` or `"1..30"` (inclusive).
+fn parse_seeds(val: &str) -> Result<Vec<u64>> {
+    if let Some((lo, hi)) = val.split_once("..") {
+        let lo: u64 = parse_one(lo, "seed range start")?;
+        let hi: u64 = parse_one(hi, "seed range end")?;
+        anyhow::ensure!(lo <= hi, "sweep: empty seed range {val:?}");
+        return Ok((lo..=hi).collect());
+    }
+    parse_list(val, "seeds")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_axes_expand_to_one_cell_per_dataset() {
+        let spec = SweepSpec {
+            datasets: vec!["cifar".into(), "femnist".into()],
+            ..SweepSpec::default()
+        };
+        let cells = spec.expand().unwrap();
+        assert_eq!(cells.len(), 2);
+        // Base config values survive untouched.
+        assert_eq!(cells[0].cfg.system.k, 2);
+        assert_eq!(cells[0].label, "LROA-cifar");
+        assert_eq!(cells[1].label, "LROA-femnist");
+    }
+
+    #[test]
+    fn grid_is_the_full_cartesian_product() {
+        let spec = SweepSpec {
+            datasets: vec!["cifar".into()],
+            policies: vec![Policy::Lroa, Policy::UniformDynamic],
+            ks: vec![2, 4, 6],
+            mus: vec![0.1, 1.0],
+            seeds: vec![1, 2, 3],
+            rounds: Some(10),
+            ..SweepSpec::default()
+        };
+        let cells = spec.expand().unwrap();
+        assert_eq!(cells.len(), 2 * 3 * 2 * 3);
+        assert!(cells.iter().all(|c| c.cfg.train.rounds == 10));
+        // Seed repeats share a group but not a label.
+        let first_group = &cells[0].group;
+        let repeats: Vec<_> = cells.iter().filter(|c| &c.group == first_group).collect();
+        assert_eq!(repeats.len(), 3);
+        assert_eq!(repeats[0].label, format!("{first_group}-s1"));
+        assert_ne!(repeats[0].label, repeats[1].label);
+    }
+
+    #[test]
+    fn labels_carry_only_varying_axes() {
+        let spec = SweepSpec {
+            datasets: vec!["femnist".into()],
+            policies: vec![Policy::Lroa],
+            nus: vec![1e3, 1e5],
+            mus: vec![1.0], // pinned, single value: no label segment
+            ..SweepSpec::default()
+        };
+        let cells = spec.expand().unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].label, "LROA-femnist-nu1e3");
+        assert_eq!(cells[1].label, "LROA-femnist-nu1e5");
+        assert!(cells.iter().all(|c| c.cfg.control.mu == 1.0));
+    }
+
+    #[test]
+    fn overrides_apply_to_every_cell() {
+        let spec = SweepSpec {
+            datasets: vec!["cifar".into()],
+            seeds: vec![1, 2],
+            overrides: vec!["--system.num_devices=24".into()],
+            ..SweepSpec::default()
+        };
+        let cells = spec.expand().unwrap();
+        assert_eq!(cells.len(), 2);
+        assert!(cells.iter().all(|c| c.cfg.system.num_devices == 24));
+    }
+
+    #[test]
+    fn cli_round_trip() {
+        let args: Vec<String> = [
+            "--policies=lroa,uni-s",
+            "--ks=2,4",
+            "--nus=1e4,1e5",
+            "--seeds=1..3",
+            "--rounds=50",
+            "--threads=4",
+            "--datasets=femnist",
+            "--mode=sim",
+            "--out=runs/mysweep",
+            "--system.num_devices=32",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let spec = SweepSpec::from_cli(&args).unwrap();
+        assert_eq!(spec.policies, vec![Policy::Lroa, Policy::UniformStatic]);
+        assert_eq!(spec.ks, vec![2, 4]);
+        assert_eq!(spec.nus, vec![1e4, 1e5]);
+        assert_eq!(spec.seeds, vec![1, 2, 3]);
+        assert_eq!(spec.rounds, Some(50));
+        assert_eq!(spec.threads, 4);
+        assert_eq!(spec.out_dir, "runs/mysweep");
+        assert_eq!(spec.overrides, vec!["--system.num_devices=32".to_string()]);
+        let cells = spec.expand().unwrap();
+        assert_eq!(cells.len(), 2 * 2 * 2 * 3);
+        assert!(cells.iter().all(|c| c.cfg.system.num_devices == 32));
+    }
+
+    #[test]
+    fn cli_rejects_unknown_flags_and_bad_values() {
+        let bad = |s: &str| SweepSpec::from_cli(&[s.to_string()]);
+        assert!(bad("--bogus=1").is_err());
+        assert!(bad("positional").is_err());
+        assert!(bad("--ks=two").is_err());
+        assert!(bad("--mode=nope").is_err());
+        assert!(bad("--policies=nope").is_err());
+        assert!(bad("--seeds=9..3").is_err());
+    }
+
+    #[test]
+    fn policies_all_shorthand() {
+        let spec = SweepSpec::from_cli(&["--policies=all".to_string()]).unwrap();
+        assert_eq!(spec.policies, Policy::ALL.to_vec());
+    }
+}

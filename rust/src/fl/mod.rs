@@ -4,9 +4,12 @@
 //! * [`trainer`] — per-client local updates (E epochs of minibatch
 //!   momentum-SGD through the PJRT `train_step` artifact) and the global
 //!   test-set evaluator;
-//! * [`server`] — the synchronous FL server: channel observation, control
-//!   solve, K-with-replacement sampling, parallel local updates, eq. (4)
-//!   aggregation, virtual-queue advance, metric recording.
+//! * [`server`] — the synchronous FL server as an eight-stage round
+//!   pipeline (channel report → control solve → sample → cost model →
+//!   local train → aggregate → queue advance → record/evaluate).  All
+//!   scheme-specific behaviour is delegated to a
+//!   [`crate::control::RoundPolicy`]; local training fans out over
+//!   [`crate::par`] worker threads with bitwise-deterministic results.
 
 mod server;
 mod trainer;

@@ -1,15 +1,34 @@
-//! The synchronous FL server — Algorithm 1 with pluggable policies.
+//! The synchronous FL server — Algorithm 1 as a staged round pipeline.
+//!
+//! Every round flows through the same eight stages; nothing scheme-
+//! specific lives here anymore (that moved behind [`RoundPolicy`]):
+//!
+//! 1. **channel report** — devices report `h_n^t`;
+//! 2. **control solve**  — the policy allocates `(f, p, q)`;
+//! 3. **sample**         — the policy draws the participant multiset `K^t`;
+//! 4. **cost model**     — eqs. (6)–(15) per device, makespan over `K^t`;
+//! 5. **local train**    — participants train in parallel (Full mode),
+//!    deltas aggregate via eq. (4);
+//! 6. **queue advance**  — virtual energy queues, eqs. (19)–(20);
+//! 7. **record**         — the round's metrics ledger entry;
+//! 8. **evaluate**       — periodic global test-set evaluation.
+//!
+//! Stage 5 fans client updates over scoped worker threads.  The per-client
+//! RNG is forked deterministically (keyed by `(t, client)`, in sorted
+//! client order, before any worker starts), so the aggregate is **bitwise
+//! identical** for any `train.train_threads` value, including sequential.
 
 use std::path::Path;
 
 use super::trainer::{Evaluator, LocalTrainer};
-use crate::config::{Config, Policy};
-use crate::control::{self, hyper, static_alloc, LroaSolver, VirtualQueues};
+use crate::config::Config;
+use crate::control::{self, policy, PolicyInit, RoundContext, RoundPlan, RoundPolicy};
+use crate::control::{hyper, VirtualQueues};
 use crate::data::SyntheticTask;
 use crate::metrics::{Recorder, RoundRecord};
+use crate::par;
 use crate::rng::Rng;
 use crate::runtime::{Engine, Manifest};
-use crate::sampling::{self, DivFlState, Projector, Selection};
 use crate::system::{selection_probability, ChannelProcess, Fleet, RoundCosts};
 use crate::Result;
 
@@ -32,7 +51,7 @@ fn default_model_bits(dataset: &str) -> f64 {
     }
 }
 
-/// The FL server: owns every subsystem and drives the round loop.
+/// The FL server: owns every subsystem and drives the round pipeline.
 pub struct Server {
     pub cfg: Config,
     mode: SimMode,
@@ -42,10 +61,7 @@ pub struct Server {
     fleet: Fleet,
     channel: ChannelProcess,
     queues: VirtualQueues,
-    solver: LroaSolver,
-    divfl: Option<DivFlState>,
-    projector: Projector,
-    trainer: LocalTrainer,
+    policy: Box<dyn RoundPolicy>,
     sample_rng: Rng,
     /// Effective λ and V after the §VII-B.1 rule.
     pub lambda: f64,
@@ -133,15 +149,21 @@ impl Server {
             None => Vec::new(),
         };
 
+        // The scheme under test, built through the registry.
+        let init = PolicyInit {
+            sys: &cfg.system,
+            ctl: &cfg.control,
+            lambda,
+            v,
+            model_bits,
+            seed,
+        };
+        let round_policy = policy::build(cfg.train.policy, &init);
+
         let budgets = fleet.devices.iter().map(|d| d.energy_budget_j).collect();
         let channel = ChannelProcess::new(&cfg.system, seed ^ 0xC4A1);
-        let solver = LroaSolver::new(cfg.system.clone(), cfg.control.clone(), lambda, v, model_bits);
-        let divfl = match cfg.train.policy {
-            Policy::DivFl => Some(DivFlState::new(n, 32)),
-            _ => None,
-        };
 
-        let label = format!("{}-{}", cfg.train.policy.name(), cfg.train.dataset);
+        let label = format!("{}-{}", round_policy.name(), cfg.train.dataset);
         Ok(Server {
             mode,
             engine,
@@ -150,10 +172,7 @@ impl Server {
             fleet,
             channel,
             queues: VirtualQueues::new(budgets),
-            solver,
-            divfl,
-            projector: Projector::new(32, seed ^ 0xD1F1),
-            trainer: LocalTrainer::new(cfg.system.local_epochs),
+            policy: round_policy,
             sample_rng: Rng::new(seed ^ 0x5A3B_1E00),
             lambda,
             v,
@@ -177,6 +196,11 @@ impl Server {
         &self.queues
     }
 
+    /// Registry name of the scheme this server runs.
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
     /// Learning rate at round `t` (paper: halve at 50% and 75%).
     pub fn lr_at(&self, t: usize) -> f32 {
         let frac = t as f64 / self.cfg.train.rounds as f64;
@@ -198,109 +222,129 @@ impl Server {
         Ok(())
     }
 
-    /// Execute one communication round (Algorithm 1 body).
+    /// Execute one communication round: the eight-stage pipeline.
     pub fn round(&mut self, t: usize) -> Result<()> {
-        let k = self.cfg.system.k;
-        let n = self.fleet.len();
-        let policy = self.cfg.train.policy;
-
         // (1) Devices report channel states.
         let h = self.channel.next_round();
 
-        // (2) Server solves for controls (Algorithm 2 / baselines).
-        let backlogs = self.queues.backlogs().to_vec();
-        let (controls, stats) = match policy {
-            Policy::Lroa => {
-                self.solver
-                    .solve_round(&self.fleet.devices, self.fleet.weights(), &h, &backlogs)
-            }
-            Policy::UniformDynamic => {
-                self.solver.solve_uniform_dynamic(&self.fleet.devices, &h, &backlogs)
-            }
-            Policy::UniformStatic | Policy::DivFl => (
-                static_alloc::solve_static(&self.cfg.system, &self.fleet.devices, self.model_bits, &h),
-                Default::default(),
-            ),
-        };
-
-        // (3) Sample the participant multiset K^t.
-        let selection: Selection = match policy {
-            Policy::Lroa => sampling::sample_by_probability(
-                &controls.q,
-                self.fleet.weights(),
-                k,
-                &mut self.sample_rng,
-            ),
-            Policy::UniformDynamic | Policy::UniformStatic => {
-                sampling::sample_uniform(n, self.fleet.weights(), k, &mut self.sample_rng)
-            }
-            Policy::DivFl => self
-                .divfl
-                .as_mut()
-                .expect("divfl state")
-                .select(self.fleet.weights(), k),
-        };
-        let unique = selection.unique_members();
+        // (2)+(3) The policy solves for controls and samples K^t.
+        let plan = self.plan_round(t, &h);
+        let unique = plan.selection.unique_members();
 
         // (4) Latency/energy bookkeeping (eqs. 6-15).
-        let costs = RoundCosts::evaluate(
-            &self.cfg.system,
-            &self.fleet.devices,
-            self.model_bits,
-            &h,
-            &controls.f_hz,
-            &controls.p_w,
-        );
+        let costs = self.cost_round(&h, &plan);
         let round_time = costs.makespan_s(&unique);
 
         // (5) Local updates + eq. (4) aggregation (Full mode).
-        let mut train_loss = f32::NAN;
-        if self.mode == SimMode::Full {
-            let lr = self.lr_at(t);
-            let engine = self.engine.as_ref().expect("engine");
-            let task = self.task.as_ref().expect("task");
-            let mut deltas: Vec<Vec<f32>> = Vec::with_capacity(unique.len());
-            let mut losses = 0.0f64;
-            for &client in &unique {
-                let mut rng = self.sample_rng.fork((t as u64) << 20 | client as u64);
-                let upd = self
-                    .trainer
-                    .train(engine, task, client, &self.theta, lr, &mut rng)?;
-                losses += upd.mean_loss as f64;
-                if let Some(divfl) = self.divfl.as_mut() {
-                    divfl.observe(client, self.projector.project(&upd.delta));
-                }
-                deltas.push(upd.delta);
-            }
-            train_loss = (losses / unique.len() as f64) as f32;
-
-            // Slot -> unique-member delta mapping for eq. (4).
-            let slot_refs: Vec<&[f32]> = selection
-                .members
-                .iter()
-                .map(|m| {
-                    let pos = unique.iter().position(|u| u == m).expect("member in unique");
-                    deltas[pos].as_slice()
-                })
-                .collect();
-            let coefs: Vec<f32> = selection.coefs.iter().map(|&c| c as f32).collect();
-            self.theta = engine.aggregate(&self.theta, &slot_refs, &coefs)?;
-        }
+        let train_loss = self.train_round(t, &plan, &unique)?;
 
         // (6) Advance the virtual queues with this round's expected draws.
-        let q_eff: Vec<f64> = match policy {
-            Policy::Lroa => controls.q.clone(),
-            _ => vec![1.0 / n as f64; n],
-        };
-        self.queues.update(&q_eff, k, &costs.energy_j);
+        self.queues
+            .update(&plan.q_eff, self.cfg.system.k, &costs.energy_j);
 
-        // (7) Record.
+        // (7)+(8) Record the ledger entry; evaluate when due.
+        self.record_round(t, &plan, &costs, unique.len(), round_time, train_loss)
+    }
+
+    /// Stages 2–3: hand the round's observations to the policy.
+    fn plan_round(&mut self, t: usize, h: &[f64]) -> RoundPlan {
+        let ctx = RoundContext {
+            t,
+            k: self.cfg.system.k,
+            devices: &self.fleet.devices,
+            weights: self.fleet.weights(),
+            h,
+            backlogs: self.queues.backlogs(),
+        };
+        self.policy.plan(&ctx, &mut self.sample_rng)
+    }
+
+    /// Stage 4: evaluate the cost model under the planned controls.
+    fn cost_round(&self, h: &[f64], plan: &RoundPlan) -> RoundCosts {
+        RoundCosts::evaluate(
+            &self.cfg.system,
+            &self.fleet.devices,
+            self.model_bits,
+            h,
+            &plan.controls.f_hz,
+            &plan.controls.p_w,
+        )
+    }
+
+    /// Stage 5: parallel local training + aggregation.  Returns the mean
+    /// training loss (NaN in control-plane-only mode).
+    fn train_round(&mut self, t: usize, plan: &RoundPlan, unique: &[usize]) -> Result<f64> {
+        if self.mode != SimMode::Full {
+            return Ok(f64::NAN);
+        }
+        let lr = self.lr_at(t);
+        let epochs = self.cfg.system.local_epochs;
+
+        // Fork every participant's RNG up front, in sorted client order —
+        // exactly the stream the sequential loop consumed, so any thread
+        // count reproduces it bitwise.
+        let jobs: Vec<(usize, Rng)> = unique
+            .iter()
+            .map(|&client| {
+                let rng = self.sample_rng.fork((t as u64) << 20 | client as u64);
+                (client, rng)
+            })
+            .collect();
+
+        let engine = self.engine.as_ref().expect("engine");
+        let task = self.task.as_ref().expect("task");
+        let theta = &self.theta;
+        let threads = par::effective_threads(self.cfg.train.train_threads, jobs.len());
+        let updates = par::fan_out(
+            jobs,
+            threads,
+            || LocalTrainer::new(epochs),
+            |trainer, (client, mut rng)| trainer.train(engine, task, client, theta, lr, &mut rng),
+        )?;
+
+        // Feed deltas back to stateful selectors, in client order.
+        let mut losses = 0.0f64;
+        for (pos, &client) in unique.iter().enumerate() {
+            losses += updates[pos].mean_loss as f64;
+            self.policy.observe_update(client, &updates[pos].delta);
+        }
+
+        // Slot -> unique-member delta mapping for eq. (4).
+        let slot_refs: Vec<&[f32]> = plan
+            .selection
+            .members
+            .iter()
+            .map(|m| {
+                let pos = unique.iter().position(|u| u == m).expect("member in unique");
+                updates[pos].delta.as_slice()
+            })
+            .collect();
+        let coefs: Vec<f32> = plan.selection.coefs.iter().map(|&c| c as f32).collect();
+        let new_theta = engine.aggregate(&self.theta, &slot_refs, &coefs)?;
+        self.theta = new_theta;
+
+        // Round through f32 exactly as the pre-refactor server did, so
+        // Full-mode ledgers stay bit-identical across the refactor.
+        Ok((losses / unique.len() as f64) as f32 as f64)
+    }
+
+    /// Stages 7–8: push the round record; evaluate when the schedule says so.
+    fn record_round(
+        &mut self,
+        t: usize,
+        plan: &RoundPlan,
+        costs: &RoundCosts,
+        selected: usize,
+        round_time: f64,
+        train_loss: f64,
+    ) -> Result<()> {
+        let n = self.fleet.len();
         let mean_energy = (0..n)
-            .map(|i| selection_probability(q_eff[i], k) * costs.energy_j[i])
+            .map(|i| selection_probability(plan.q_eff[i], self.cfg.system.k) * costs.energy_j[i])
             .sum::<f64>()
             / n as f64;
         let objective =
-            control::objective_terms(&q_eff, &costs.time_s, self.lambda, self.fleet.weights());
+            control::objective_terms(&plan.q_eff, &costs.time_s, self.lambda, self.fleet.weights());
         let prev_total = self.recorder.total_time_s();
 
         let mut rec = RoundRecord {
@@ -311,14 +355,13 @@ impl Server {
             mean_energy_j: mean_energy,
             mean_queue: self.queues.mean_backlog(),
             max_queue: self.queues.max_backlog(),
-            selected: unique.len(),
-            train_loss: train_loss as f64,
+            selected,
+            train_loss,
             test_accuracy: f64::NAN,
             test_loss: f64::NAN,
-            solver_time_s: stats.solve_time_s,
+            solver_time_s: plan.stats.solve_time_s,
         };
 
-        // (8) Periodic evaluation.
         let is_eval_round = self.mode == SimMode::Full
             && (t % self.cfg.train.eval_every == 0 || t + 1 == self.cfg.train.rounds);
         if is_eval_round {
@@ -351,6 +394,7 @@ impl IntoChecked for Evaluator {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::Policy;
 
     fn base_cfg(policy: Policy, rounds: usize) -> Config {
         let mut cfg = Config::for_dataset("femnist").unwrap();
@@ -381,6 +425,16 @@ mod tests {
                 assert!(r.mean_energy_j > 0.0);
                 assert!((1..=2).contains(&r.selected));
             }
+        }
+    }
+
+    #[test]
+    fn server_label_uses_registry_name() {
+        for policy in Policy::ALL {
+            let cfg = base_cfg(policy, 1);
+            let server = Server::new(cfg, SimMode::ControlPlaneOnly).unwrap();
+            assert_eq!(server.policy_name(), policy.name());
+            assert!(server.recorder.label.starts_with(policy.name()));
         }
     }
 
@@ -479,5 +533,29 @@ mod tests {
         assert!((0.0..=1.0).contains(&acc), "acc {acc}");
         // Global model actually moved.
         assert!(server.theta().iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn parallel_training_matches_sequential_bitwise() {
+        // The fan-out contract end to end: same seed, different thread
+        // counts, identical model trajectory (needs artifacts).
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping parallel-determinism test: run `make artifacts`");
+            return;
+        }
+        let run = |threads: usize| -> (Vec<f32>, Vec<f64>) {
+            let mut cfg = base_cfg(Policy::Lroa, 5);
+            cfg.artifacts_dir = dir.to_string_lossy().into_owned();
+            cfg.train.train_threads = threads;
+            let mut server = Server::new(cfg, SimMode::Full).unwrap();
+            server.run().unwrap();
+            let losses = server.recorder.rounds.iter().map(|r| r.train_loss).collect();
+            (server.theta().to_vec(), losses)
+        };
+        let (theta_seq, loss_seq) = run(1);
+        let (theta_par, loss_par) = run(4);
+        assert_eq!(theta_seq, theta_par, "theta diverged under parallel training");
+        assert_eq!(loss_seq, loss_par);
     }
 }

@@ -1,16 +1,20 @@
 //! Shared experiment harness for the figure-regeneration examples.
 //!
 //! Each `examples/fig*.rs` binary reproduces one figure of the paper's
-//! evaluation section; this module holds the common machinery: CLI
-//! parsing (`--quick`, `--rounds`, `--dataset`, any `--section.key=value`
-//! config override), per-policy runs on **identical channel realizations**
-//! (the paper fixes the channel seed across schemes), CSV emission under
+//! evaluation section.  This module holds the common machinery on top of
+//! the [`crate::exp`] engine: CLI parsing (`--quick`, `--rounds`,
+//! `--dataset`, `--repeats`, `--threads`, any `--section.key=value`
+//! config override), quick-mode config scaling, CSV emission under
 //! `runs/<figure>/`, and the comparison tables the paper reports.
+//! Per-policy runs share identical channel realizations (the paper fixes
+//! the channel seed across schemes); the sweep grid itself is expanded
+//! and executed by `exp`.
 
 use std::path::{Path, PathBuf};
 
 use crate::config::{Config, Policy};
-use crate::fl::{Server, SimMode};
+use crate::exp::{self, Scenario, ScenarioResult};
+use crate::fl::SimMode;
 use crate::json::{obj, Json};
 use crate::metrics::Recorder;
 use crate::Result;
@@ -27,40 +31,74 @@ pub struct Args {
     pub dataset: Option<String>,
     /// Seed repeats (the paper averages 30; quick default 1).
     pub repeats: usize,
-    /// Raw args forwarded into `Config::apply_cli`.
+    /// Scenario-runner pool width (0 = one per core).
+    pub threads: usize,
+    /// Args not consumed above, forwarded into `Config::apply_cli`
+    /// (and inspectable via [`Args::flag`]).
     raw: Vec<String>,
 }
 
 impl Args {
     pub fn parse() -> Args {
-        let raw: Vec<String> = std::env::args().skip(1).collect();
+        Args::from_vec(std::env::args().skip(1).collect())
+    }
+
+    /// Parse an argument vector.  Harness flags accept both `--flag=value`
+    /// and the two-token `--flag value` form; in the latter the value
+    /// token is consumed, so it never leaks into the raw args forwarded
+    /// to [`Config::apply_cli`].
+    pub fn from_vec(argv: Vec<String>) -> Args {
         let mut a = Args {
-            quick: !raw.iter().any(|s| s == "--full"),
+            quick: true,
             rounds: None,
             dataset: None,
             repeats: 1,
-            raw: raw.clone(),
+            threads: 0,
+            raw: Vec::new(),
         };
-        let mut it = raw.iter().peekable();
+        let mut it = argv.into_iter().peekable();
         while let Some(arg) = it.next() {
-            let mut take = |key: &str| -> Option<String> {
-                if let Some(v) = arg.strip_prefix(&format!("{key}=")) {
-                    return Some(v.to_string());
-                }
-                if arg == key {
-                    return it.peek().map(|s| s.to_string());
-                }
-                None
+            if arg == "--full" {
+                a.quick = false;
+                continue;
+            }
+            let (key, inline) = match arg.split_once('=') {
+                Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                None => (arg.clone(), None),
             };
-            if let Some(v) = take("--rounds") {
-                a.rounds = v.parse().ok();
-            } else if let Some(v) = take("--dataset") {
-                a.dataset = Some(v);
-            } else if let Some(v) = take("--repeats") {
-                a.repeats = v.parse().unwrap_or(1);
+            if !matches!(
+                key.as_str(),
+                "--rounds" | "--dataset" | "--repeats" | "--threads"
+            ) {
+                a.raw.push(arg);
+                continue;
+            }
+            // Two-token form: only a non-flag token can be the value —
+            // `--rounds --grid` must not swallow `--grid`.
+            let value = match inline {
+                Some(v) => Some(v),
+                None => match it.peek() {
+                    Some(next) if !next.starts_with("--") => it.next(),
+                    _ => None,
+                },
+            };
+            let Some(value) = value else {
+                continue; // flag without a value: ignore it
+            };
+            match key.as_str() {
+                "--rounds" => a.rounds = value.parse().ok(),
+                "--dataset" => a.dataset = Some(value),
+                "--repeats" => a.repeats = value.parse().unwrap_or(1),
+                "--threads" => a.threads = value.parse().unwrap_or(0),
+                _ => unreachable!("key list above"),
             }
         }
         a
+    }
+
+    /// Whether a bare `--name` flag was passed (e.g. `--grid`).
+    pub fn flag(&self, name: &str) -> bool {
+        self.raw.iter().any(|s| s == name)
     }
 
     /// The datasets this invocation covers.
@@ -100,24 +138,31 @@ impl Args {
     pub fn out_dir(&self, figure: &str) -> PathBuf {
         PathBuf::from("runs").join(figure)
     }
+
+    /// Run a sweep's scenarios through the exp engine at this invocation's
+    /// pool width.
+    pub fn run(&self, scenarios: Vec<Scenario>) -> Result<Vec<ScenarioResult>> {
+        exp::run_scenarios(scenarios, self.threads)
+    }
 }
 
-/// Run one policy to completion and return its recorder.
+/// Run one policy to completion and return its recorder (a one-cell
+/// sweep through the exp engine).
 pub fn run_policy(mut cfg: Config, policy: Policy, mode: SimMode, label: &str) -> Result<Recorder> {
     cfg.train.policy = policy;
-    let mut server = Server::new(cfg, mode)?;
-    let t0 = std::time::Instant::now();
-    server.run()?;
-    let mut rec = std::mem::take(&mut server.recorder);
-    rec.label = label.to_string();
-    eprintln!(
-        "[run] {label}: {} rounds, modeled {:.1}s, final acc {:.4}, wall {:.1}s",
-        rec.rounds.len(),
-        rec.total_time_s(),
-        rec.final_accuracy(),
-        t0.elapsed().as_secs_f64()
-    );
-    Ok(rec)
+    let scenario = Scenario {
+        label: label.to_string(),
+        group: label.to_string(),
+        cfg,
+        mode,
+    };
+    let mut results = exp::run_scenarios(vec![scenario], 1)?;
+    Ok(results.remove(0).recorder)
+}
+
+/// Strip scenario results down to their recorders (scenario order kept).
+pub fn recorders(results: Vec<ScenarioResult>) -> Vec<Recorder> {
+    results.into_iter().map(|r| r.recorder).collect()
 }
 
 /// Write each recorder's CSV plus a JSON summary bundle.
@@ -177,41 +222,72 @@ pub fn print_series(recs: &[Recorder]) {
 mod tests {
     use super::*;
 
+    fn argv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
     #[test]
     fn sanitize_labels() {
         assert_eq!(sanitize("LROA-cifar (k=2)"), "LROA-cifar__k_2_");
     }
 
     #[test]
+    fn two_token_flags_consume_their_value() {
+        // Regression: `--rounds 100` used to peek at "100" without
+        // consuming it, leaking the bare token into the raw args.
+        let a = Args::from_vec(argv(&["--rounds", "100", "--dataset", "femnist"]));
+        assert_eq!(a.rounds, Some(100));
+        assert_eq!(a.dataset.as_deref(), Some("femnist"));
+        assert!(a.raw.is_empty(), "raw leaked: {:?}", a.raw);
+    }
+
+    #[test]
+    fn two_token_flag_never_swallows_a_following_flag() {
+        // `--rounds --grid`: no value for --rounds, and --grid must
+        // survive into raw instead of being eaten as the "value".
+        let a = Args::from_vec(argv(&["--rounds", "--grid", "--dataset", "cifar"]));
+        assert_eq!(a.rounds, None);
+        assert!(a.flag("--grid"));
+        assert_eq!(a.dataset.as_deref(), Some("cifar"));
+    }
+
+    #[test]
+    fn inline_flags_and_overrides_coexist() {
+        let a = Args::from_vec(argv(&[
+            "--rounds=7",
+            "--threads=3",
+            "--control.mu=10",
+            "--grid",
+            "--full",
+        ]));
+        assert_eq!(a.rounds, Some(7));
+        assert_eq!(a.threads, 3);
+        assert!(!a.quick);
+        assert!(a.flag("--grid"));
+        assert_eq!(a.raw, argv(&["--control.mu=10", "--grid"]));
+        // The surviving raw override reaches the config.
+        let cfg = a.config("cifar").unwrap();
+        assert_eq!(cfg.control.mu, 10.0);
+        assert_eq!(cfg.train.rounds, 7);
+    }
+
+    #[test]
     fn quick_config_scales_down() {
-        let args = Args {
-            quick: true,
-            rounds: None,
-            dataset: None,
-            repeats: 1,
-            raw: vec![],
-        };
+        let args = Args::from_vec(vec![]);
+        assert!(args.quick);
         let cfg = args.config("cifar").unwrap();
         assert_eq!(cfg.train.rounds, 150);
         assert!(cfg.train.test_samples <= 1024);
-        let full = Args {
-            quick: false,
-            ..args
-        };
+        let full = Args::from_vec(argv(&["--full"]));
         assert_eq!(full.config("cifar").unwrap().train.rounds, 2000);
         assert_eq!(full.config("femnist").unwrap().train.rounds, 1000);
     }
 
     #[test]
     fn rounds_override_wins() {
-        let args = Args {
-            quick: true,
-            rounds: Some(7),
-            dataset: Some("femnist".into()),
-            repeats: 1,
-            raw: vec![],
-        };
+        let args = Args::from_vec(argv(&["--rounds=7", "--dataset=femnist"]));
         assert_eq!(args.config("femnist").unwrap().train.rounds, 7);
         assert_eq!(args.datasets(), vec!["femnist".to_string()]);
+        assert_eq!(args.repeats, 1);
     }
 }

@@ -27,10 +27,14 @@
 //! | [`config`] | experiment configuration (file + CLI overrides) |
 //! | [`system`] | device fleet, wireless channel model, latency/energy (eqs. 5–17) |
 //! | [`control`] | the paper's contribution: queues, Theorems 2–3, SUM, Algorithm 2 |
+//! | [`control::policy`] | the [`control::RoundPolicy`] trait, scheme impls, name → ctor registry |
 //! | [`sampling`] | client samplers: LROA adaptive, uniform, DivFL |
 //! | [`data`] | synthetic non-IID federated datasets (Dirichlet / writer partitions) |
 //! | [`runtime`] | PJRT client, artifact manifest, typed executables |
-//! | [`fl`] | federated training loop: server, local trainer, evaluator |
+//! | [`fl`] | federated training loop: staged server pipeline, local trainer, evaluator |
+//! | [`par`] | deterministic scoped-thread fan-out (client training, scenario pool) |
+//! | [`exp`] | declarative scenario sweeps: grid expansion, parallel runner, seed stats |
+//! | [`harness`] | figure-example CLI + reporting glue on top of `exp` |
 //! | [`metrics`] | run recorder, CSV emission, summaries |
 //! | [`bench`] | self-contained timing harness used by `cargo bench` |
 
@@ -39,9 +43,11 @@ pub mod config;
 pub mod harness;
 pub mod control;
 pub mod data;
+pub mod exp;
 pub mod fl;
 pub mod json;
 pub mod metrics;
+pub mod par;
 pub mod rng;
 pub mod runtime;
 pub mod sampling;

@@ -4,6 +4,7 @@
 //!
 //! * `train`  — run one federated training (full stack through PJRT);
 //! * `sim`    — control-plane-only simulation (no artifacts needed);
+//! * `sweep`  — run a policy × K × µ/ν × seed × dataset grid in parallel;
 //! * `info`   — inspect artifacts, fleet, and the λ/V estimates;
 //! * `help`   — this text.
 //!
@@ -13,12 +14,16 @@
 //! ```text
 //! lroa train --train.dataset=femnist --train.rounds=200 --control.mu=10
 //! lroa sim   --train.policy=uni-s --system.k=4 --train.rounds=1000
+//! lroa sweep --policies=all --ks=2,4,6 --seeds=1..5 --rounds=200
 //! ```
 
 use std::path::Path;
 
 use lroa::config::Config;
+use lroa::exp::{self, SweepSpec};
 use lroa::fl::{Server, SimMode};
+use lroa::json::{obj, Json};
+use lroa::metrics::num_or_null;
 use lroa::runtime::Manifest;
 
 const HELP: &str = "\
@@ -26,11 +31,19 @@ lroa — Lyapunov-based online client scheduling for federated edge learning
 
 USAGE:
     lroa <train|sim|info> [--config FILE] [--section.key=value ...]
+    lroa sweep [--key=value ...] [--section.key=value ...]
 
 SUBCOMMANDS:
     train   full federated training through the AOT artifacts
     sim     control-plane-only simulation (latency/energy/queues)
+    sweep   parallel scenario grid; seed repeats aggregate to mean±std
     info    print artifact manifest, fleet summary, λ/V estimates
+
+SWEEP FLAGS (all --key=value):
+    --policies=lroa,uni-d,uni-s,divfl|all   --datasets=cifar,femnist
+    --ks=2,4,6      --mus=0.1,1,10          --nus=1e4,1e5,1e6
+    --seeds=1..30   --rounds=N              --threads=T (0 = cores)
+    --mode=sim|train                        --out=DIR
 
 COMMON OVERRIDES:
     --train.dataset=cifar|femnist   --train.rounds=N     --train.policy=lroa|uni-d|uni-s|divfl
@@ -88,6 +101,71 @@ fn run(mode: SimMode, args: &[String]) -> lroa::Result<()> {
     Ok(())
 }
 
+fn sweep(args: &[String]) -> lroa::Result<()> {
+    let spec = SweepSpec::from_cli(args)?;
+    let scenarios = spec.expand()?;
+    anyhow::ensure!(!scenarios.is_empty(), "sweep expanded to zero scenarios");
+    println!(
+        "sweep: {} scenarios ({} groups), pool width {}",
+        scenarios.len(),
+        scenarios
+            .iter()
+            .map(|s| s.group.as_str())
+            .collect::<std::collections::BTreeSet<_>>()
+            .len(),
+        if spec.threads == 0 { "auto".to_string() } else { spec.threads.to_string() },
+    );
+    let results = exp::run_scenarios(scenarios, spec.threads)?;
+
+    // Per-scenario CSVs + the aggregate summary bundle.
+    let dir = std::path::PathBuf::from(&spec.out_dir);
+    std::fs::create_dir_all(&dir)?;
+    let mut run_summaries = Vec::new();
+    for r in &results {
+        r.recorder.write_csv(&dir.join(format!("{}.csv", r.recorder.label)))?;
+        run_summaries.push(r.recorder.summary_json());
+    }
+    let groups = exp::summarize_groups(&results);
+    let group_json: Vec<Json> = groups
+        .iter()
+        .map(|g| {
+            obj(vec![
+                ("group", Json::Str(g.group.clone())),
+                ("runs", Json::Num(g.runs as f64)),
+                ("total_time_s_mean", num_or_null(g.total_time_s.mean)),
+                ("total_time_s_std", num_or_null(g.total_time_s.std)),
+                ("final_accuracy_mean", num_or_null(g.final_accuracy.mean)),
+            ])
+        })
+        .collect();
+    std::fs::write(
+        dir.join("summary.json"),
+        obj(vec![
+            ("groups", Json::Arr(group_json)),
+            ("runs", Json::Arr(run_summaries)),
+        ])
+        .to_string(),
+    )?;
+
+    // The mean±std table the paper's seed-averaged figures report.
+    println!(
+        "\n{:<28} {:>5} {:>24} {:>20} {:>24}",
+        "group", "runs", "total time [s]", "final acc", "time-avg energy [J]"
+    );
+    for g in &groups {
+        println!(
+            "{:<28} {:>5} {:>24} {:>20} {:>24}",
+            g.group,
+            g.runs,
+            g.total_time_s.to_string(),
+            g.final_accuracy.to_string(),
+            g.time_avg_energy.to_string(),
+        );
+    }
+    println!("\nCSV + summary.json under {}", dir.display());
+    Ok(())
+}
+
 fn info(args: &[String]) -> lroa::Result<()> {
     let cfg = build_config(args)?;
     println!("{}", cfg.dump());
@@ -130,6 +208,7 @@ fn main() {
     let result = match cmd {
         "train" => run(SimMode::Full, &rest),
         "sim" => run(SimMode::ControlPlaneOnly, &rest),
+        "sweep" => sweep(&rest),
         "info" => info(&rest),
         "help" | "--help" | "-h" => {
             print!("{HELP}");

@@ -153,11 +153,13 @@ impl Recorder {
     }
 }
 
-fn num_or_null(x: f64) -> Json {
-    if x.is_nan() {
-        Json::Null
-    } else {
+/// Non-finite metric values (unevaluated accuracy, runaway objectives)
+/// must serialize as JSON `null`, never as bare `NaN`/`inf` tokens.
+pub fn num_or_null(x: f64) -> Json {
+    if x.is_finite() {
         Json::Num(x)
+    } else {
+        Json::Null
     }
 }
 

@@ -1,0 +1,180 @@
+//! Deterministic scoped-thread fan-out.
+//!
+//! Both hot fan-out points of the coordinator go through this module: the
+//! FL server spreads per-client local training over worker threads, and
+//! the [`crate::exp`] engine spreads whole scenarios.  Determinism is the
+//! contract: every job carries its own pre-forked state (e.g. an RNG), the
+//! result of job `i` always lands in slot `i`, and the output is therefore
+//! **bitwise identical** for any thread count — `threads = 1` is plain
+//! sequential execution with zero synchronization.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::Result;
+
+/// Number of workers the machine supports (fallback 1).
+pub fn auto_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Resolve a requested thread count: `0` means auto, and the pool is never
+/// wider than the job list.
+pub fn effective_threads(requested: usize, jobs: usize) -> usize {
+    let t = if requested == 0 {
+        auto_threads()
+    } else {
+        requested
+    };
+    t.clamp(1, jobs.max(1))
+}
+
+/// Run every job through `f`, fanned over `threads` scoped workers.
+///
+/// * `init` builds one per-worker scratch state `S` (reused across that
+///   worker's jobs — e.g. a [`crate::fl::LocalTrainer`]'s batch buffers);
+/// * `f(state, job)` consumes one job and produces its result;
+/// * results come back in job order regardless of scheduling.
+///
+/// On a job error the pool stops claiming further jobs (in-flight jobs
+/// finish) and the first error in job order is propagated, mirroring the
+/// sequential path's stop-at-first-failure behaviour.
+pub fn fan_out<J, S, T, I, F>(jobs: Vec<J>, threads: usize, init: I, f: F) -> Result<Vec<T>>
+where
+    J: Send,
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, J) -> Result<T> + Sync,
+{
+    let n = jobs.len();
+    let threads = effective_threads(threads, n);
+    if threads <= 1 {
+        let mut state = init();
+        return jobs.into_iter().map(|j| f(&mut state, j)).collect();
+    }
+
+    let jobs: Vec<Mutex<Option<J>>> = jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
+    let slots: Vec<Mutex<Option<Result<T>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    let failed = AtomicBool::new(false);
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| {
+                let mut state = init();
+                while !failed.load(Ordering::Relaxed) {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let job = jobs[i]
+                        .lock()
+                        .unwrap()
+                        .take()
+                        .expect("each job index is claimed exactly once");
+                    let res = f(&mut state, job);
+                    if res.is_err() {
+                        failed.store(true, Ordering::Relaxed);
+                    }
+                    *slots[i].lock().unwrap() = Some(res);
+                }
+            });
+        }
+    });
+
+    // Claims are issued in index order, so visited slots form a prefix:
+    // the first error (if any) appears before any unvisited slot.
+    let mut out = Vec::with_capacity(n);
+    for s in slots {
+        match s.into_inner().expect("no fan-out worker panicked") {
+            Some(Ok(v)) => out.push(v),
+            Some(Err(e)) => return Err(e),
+            None => anyhow::bail!("fan-out aborted after an earlier job failed"),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn jobs(n: usize) -> Vec<(usize, Rng)> {
+        (0..n).map(|i| (i, Rng::new(1000 + i as u64))).collect()
+    }
+
+    fn work(_state: &mut (), (id, mut rng): (usize, Rng)) -> Result<u64> {
+        // Enough draws that interleaving mistakes would surface.
+        let mut acc = id as u64;
+        for _ in 0..257 {
+            acc = acc.wrapping_add(rng.next_u64());
+        }
+        Ok(acc)
+    }
+
+    #[test]
+    fn parallel_matches_sequential_bitwise() {
+        let base = fan_out(jobs(13), 1, || (), work).unwrap();
+        for threads in [2, 3, 4, 8] {
+            let par = fan_out(jobs(13), threads, || (), work).unwrap();
+            assert_eq!(par, base, "threads = {threads}");
+        }
+    }
+
+    #[test]
+    fn results_are_in_job_order() {
+        let out = fan_out(
+            (0..32).collect::<Vec<usize>>(),
+            4,
+            || (),
+            |_, j| Ok(j * 10),
+        )
+        .unwrap();
+        assert_eq!(out, (0..32).map(|j| j * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn per_worker_state_is_reused() {
+        // Each worker counts its own jobs; the grand total must be n.
+        let counts: Vec<usize> = fan_out(
+            (0..20).collect::<Vec<usize>>(),
+            3,
+            || 0usize,
+            |seen, _| {
+                *seen += 1;
+                Ok(*seen)
+            },
+        )
+        .unwrap();
+        assert_eq!(counts.len(), 20);
+        assert!(counts.iter().all(|&c| c >= 1));
+    }
+
+    #[test]
+    fn errors_propagate() {
+        let res = fan_out(
+            (0..8).collect::<Vec<usize>>(),
+            2,
+            || (),
+            |_, j| {
+                if j == 5 {
+                    anyhow::bail!("job {j} failed")
+                } else {
+                    Ok(j)
+                }
+            },
+        );
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn effective_threads_clamps() {
+        assert_eq!(effective_threads(4, 2), 2);
+        assert_eq!(effective_threads(1, 100), 1);
+        assert_eq!(effective_threads(0, 0), 1);
+        assert!(effective_threads(0, 64) >= 1);
+    }
+}

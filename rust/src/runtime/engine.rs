@@ -5,6 +5,11 @@ use std::path::Path;
 use anyhow::Context;
 
 use super::manifest::{Manifest, VariantInfo};
+// Without the `pjrt` feature the engine compiles against the in-tree
+// API-compatible stub; with it, `xla::` resolves to the real bindings
+// crate via the extern prelude.
+#[cfg(not(feature = "pjrt"))]
+use super::xla_stub as xla;
 use crate::Result;
 
 /// Output of one local SGD step.
@@ -187,6 +192,16 @@ impl Engine {
         self.client.platform_name()
     }
 }
+
+// Local training fans one engine out across scoped worker threads (the
+// executables are only ever *read* after load, and PJRT CPU execution is
+// internally synchronized per the PJRT API contract).  The stub build
+// derives these automatically; the real bindings hold opaque handles, so
+// the claim is asserted here once for the whole crate.
+#[cfg(feature = "pjrt")]
+unsafe impl Send for Engine {}
+#[cfg(feature = "pjrt")]
+unsafe impl Sync for Engine {}
 
 #[cfg(test)]
 mod tests {

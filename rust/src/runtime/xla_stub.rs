@@ -1,0 +1,152 @@
+//! Offline stand-in for the `xla` PJRT bindings crate.
+//!
+//! The vendored registry carries no PJRT bindings, so default builds
+//! compile [`super::engine`] against this API-compatible stub instead
+//! (`engine.rs` aliases it to `xla` when the `pjrt` feature is off).
+//! Creating the client fails immediately with a clear message, which
+//! surfaces through `Server::new(_, SimMode::Full)`; control-plane-only
+//! simulation never touches this module.  Enabling the `pjrt` feature
+//! (plus adding the real `xla` dependency) swaps the stub out without
+//! touching the engine code.
+
+use std::fmt;
+
+/// Stub error type (mirrors the binding crate's error surface enough for
+/// `anyhow` context chaining).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable<T>() -> Result<T, Error> {
+    Err(Error(
+        "PJRT runtime not linked: this build uses the offline stub. \
+         Rebuild with `--features pjrt` and the `xla` bindings crate \
+         available, then run `make artifacts`."
+            .to_string(),
+    ))
+}
+
+/// Element types the engine moves across the boundary.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+
+/// Host-side literal (stub: carries nothing).
+pub struct Literal;
+
+impl Literal {
+    pub fn scalar<T: NativeType>(_value: T) -> Literal {
+        Literal
+    }
+
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(self, _dims: &[i64]) -> Result<Literal, Error> {
+        Ok(self)
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        unavailable()
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T, Error> {
+        unavailable()
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal, Error> {
+        unavailable()
+    }
+
+    pub fn to_tuple2(self) -> Result<(Literal, Literal), Error> {
+        unavailable()
+    }
+
+    pub fn to_tuple3(self) -> Result<(Literal, Literal, Literal), Error> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        unavailable()
+    }
+}
+
+/// Computation handle (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-side buffer (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable()
+    }
+}
+
+/// Compiled executable (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable()
+    }
+}
+
+/// PJRT client (stub: construction always fails, so every Full-mode path
+/// reports the missing runtime before touching anything else).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_missing_runtime() {
+        let err = match PjRtClient::cpu() {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("stub client must not construct"),
+        };
+        assert!(err.contains("PJRT runtime not linked"), "{err}");
+    }
+
+    #[test]
+    fn literal_constructors_are_inert() {
+        let lit = Literal::vec1(&[1.0f32, 2.0]).reshape(&[2, 1]).unwrap();
+        assert!(lit.to_vec::<f32>().is_err());
+        assert!(Literal::scalar(3i32).get_first_element::<i32>().is_err());
+    }
+}

@@ -1,9 +1,10 @@
 //! Cross-module integration tests: config → server → metrics, Lyapunov
 //! behaviour over long horizons, policy comparisons on shared channels,
-//! and failure injection.  All control-plane-only (no artifacts needed),
-//! so they run in CI without `make artifacts`.
+//! the sweep engine, and failure injection.  All control-plane-only (no
+//! artifacts needed), so they run in CI without `make artifacts`.
 
 use lroa::config::{Config, Policy};
+use lroa::exp::{self, SweepSpec};
 use lroa::fl::{Server, SimMode};
 use lroa::metrics::mean_series;
 
@@ -173,6 +174,38 @@ fn bad_config_is_rejected_before_running() {
     let mut c = cfg(Policy::Lroa, 10, 1e5);
     c.system.channel_clip = (0.5, 0.01); // inverted
     assert!(Server::new(c, SimMode::ControlPlaneOnly).is_err());
+}
+
+#[test]
+fn sweep_engine_matches_direct_server_runs() {
+    // A policy × seed sweep through the exp engine must reproduce what a
+    // hand-rolled loop over Server::run produces, cell for cell.
+    let spec = SweepSpec {
+        datasets: vec!["cifar".into()],
+        policies: vec![Policy::Lroa, Policy::UniformStatic],
+        seeds: vec![1, 2],
+        rounds: Some(12),
+        overrides: vec!["--system.num_devices=10".into()],
+        ..SweepSpec::default()
+    };
+    let results = exp::run_scenarios(spec.expand().unwrap(), 3).unwrap();
+    assert_eq!(results.len(), 4);
+
+    for r in &results {
+        let mut server =
+            Server::new(r.scenario.cfg.clone(), SimMode::ControlPlaneOnly).unwrap();
+        server.run().unwrap();
+        assert_eq!(server.recorder.rounds.len(), r.recorder.rounds.len());
+        for (a, b) in server.recorder.rounds.iter().zip(&r.recorder.rounds) {
+            assert_eq!(a.round_time_s, b.round_time_s, "{}", r.scenario.label);
+            assert_eq!(a.objective, b.objective, "{}", r.scenario.label);
+        }
+    }
+
+    // Seed repeats collapse to one summary row per policy.
+    let groups = exp::summarize_groups(&results);
+    assert_eq!(groups.len(), 2);
+    assert!(groups.iter().all(|g| g.runs == 2));
 }
 
 #[test]
