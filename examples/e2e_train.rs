@@ -20,6 +20,7 @@ use lroa::harness::{self, Args};
 
 fn main() -> lroa::Result<()> {
     let args = Args::parse();
+    args.reject_envs("e2e_train")?;
     let dataset = args.dataset.clone().unwrap_or_else(|| "femnist".into());
 
     let spec = SweepSpec {

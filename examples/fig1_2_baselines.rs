@@ -1,17 +1,19 @@
-//! Figures 1 & 2: LROA vs Uni-D / Uni-S / DivFL on both datasets.
+//! Figures 1 & 2: LROA vs the registered baselines on both datasets.
 //!
 //! Reproduces the paper's headline evaluation — testing accuracy vs.
-//! modeled runtime (a) and vs. communication round (b) for all four
-//! policies, with all policies seeing identical channel realizations.
-//! Paper numbers: LROA saves 20.8% / 50.1% total latency vs Uni-D / Uni-S
-//! on CIFAR-10 and 15.3% / 49.9% on FEMNIST.
+//! modeled runtime (a) and vs. communication round (b) for every
+//! registered policy, with all policies seeing identical channel
+//! realizations.  Paper numbers: LROA saves 20.8% / 50.1% total latency
+//! vs Uni-D / Uni-S on CIFAR-10 and 15.3% / 49.9% on FEMNIST.
 //!
-//! The four policies are one `exp` sweep cell per scheme and run
-//! concurrently (`--threads` controls the pool).
+//! Each policy is one `exp` sweep cell and runs concurrently
+//! (`--threads` controls the pool).  Pass `--envs=static,ge,avail,drift`
+//! (or `all`) to stress the same comparison under dynamic environments.
 //!
 //! ```text
 //! cargo run --release --example fig1_2_baselines                # both datasets, quick scale
 //! cargo run --release --example fig1_2_baselines -- --dataset cifar --rounds 300
+//! cargo run --release --example fig1_2_baselines -- --envs=all  # policy × environment grid
 //! cargo run --release --example fig1_2_baselines -- --full      # paper scale
 //! ```
 
@@ -22,6 +24,7 @@ use lroa::harness::{self, Args};
 
 fn main() -> lroa::Result<()> {
     let args = Args::parse();
+    let envs = args.validated_envs()?;
     for dataset in args.datasets() {
         let fig = if dataset == "cifar" { "fig1" } else { "fig2" };
         println!("=== {fig}: {dataset} ===");
@@ -29,15 +32,34 @@ fn main() -> lroa::Result<()> {
         let spec = SweepSpec {
             datasets: vec![dataset.clone()],
             policies: Policy::ALL.to_vec(),
+            envs: envs.clone(),
             mode: SimMode::Full,
             ..SweepSpec::default()
         };
         let scenarios = spec.expand_with(|ds| args.config(ds))?;
-        let recs = harness::recorders(args.run(scenarios)?);
+        let results = args.run(scenarios)?;
+        let recs: Vec<_> = results.iter().map(|r| r.recorder.clone()).collect();
 
         harness::save_all(&args.out_dir(fig), &recs)?;
         harness::print_series(&recs);
-        harness::print_latency_table(&recs);
+
+        // One latency table per environment: the "vs LROA" savings column
+        // only makes sense against the same environment's LROA row.  The
+        // rows are matched on each cell's actual env kind (scenario
+        // metadata), not on label strings or expansion order.
+        if envs.len() <= 1 {
+            harness::print_latency_table(&recs);
+        } else {
+            for env in &envs {
+                println!("--- environment: {env} ---");
+                let env_recs: Vec<_> = results
+                    .iter()
+                    .filter(|r| r.scenario.cfg.env.kind == *env)
+                    .map(|r| r.recorder.clone())
+                    .collect();
+                harness::print_latency_table(&env_recs);
+            }
+        }
     }
     Ok(())
 }

@@ -16,6 +16,7 @@ use lroa::harness::{self, Args};
 
 fn main() -> lroa::Result<()> {
     let args = Args::parse();
+    args.reject_envs("fig3_lambda")?;
     for dataset in args.datasets() {
         let mus: Vec<f64> = if dataset == "cifar" {
             vec![1.0, 10.0, 50.0, 100.0]

@@ -19,6 +19,7 @@ use lroa::metrics::mean_series;
 
 fn main() -> lroa::Result<()> {
     let args = Args::parse();
+    args.reject_envs("fig4_v_tradeoff")?;
     let nus = [1e3, 1e4, 1e5, 1e6];
     for dataset in args.datasets() {
         println!("=== fig4 ({dataset}): nu sweep, {} repeat(s) ===", args.repeats);

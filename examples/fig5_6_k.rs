@@ -26,6 +26,7 @@ fn better(candidate: &Recorder, best: &Recorder) -> bool {
 
 fn main() -> lroa::Result<()> {
     let args = Args::parse();
+    args.reject_envs("fig5_6_k")?;
     let grid_search = args.flag("--grid");
     let ks = [2usize, 4, 6];
 

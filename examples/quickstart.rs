@@ -15,6 +15,7 @@ use lroa::harness::Args;
 
 fn main() -> lroa::Result<()> {
     let args = Args::parse();
+    args.reject_envs("quickstart")?;
     let spec = SweepSpec {
         datasets: vec!["femnist".into()],
         policies: vec![Policy::Lroa],

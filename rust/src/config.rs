@@ -11,7 +11,8 @@ use std::path::Path;
 
 use crate::Result;
 
-/// Which policy drives sampling + resource allocation (paper §VII-A).
+/// Which policy drives sampling + resource allocation (paper §VII-A plus
+/// the related-work baselines the ROADMAP names).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Policy {
     /// LROA: adaptive sampling + dynamic `f`/`p` (the paper's method).
@@ -22,15 +23,23 @@ pub enum Policy {
     UniformStatic,
     /// DivFL: submodular diverse selection, static resources (as adapted in the paper).
     DivFl,
+    /// Greedy-channel: the K best-`h_n^t` reachable devices, static resources
+    /// (the fast-convergence scheduling baseline of Shi et al.).
+    GreedyChannel,
+    /// Round-robin: cycle through the fleet K devices at a time, static
+    /// resources (the fairness anchor).
+    RoundRobin,
 }
 
 impl Policy {
     /// Every scheme, registry order (LROA first — the comparison anchor).
-    pub const ALL: [Policy; 4] = [
+    pub const ALL: [Policy; 6] = [
         Policy::Lroa,
         Policy::UniformDynamic,
         Policy::UniformStatic,
         Policy::DivFl,
+        Policy::GreedyChannel,
+        Policy::RoundRobin,
     ];
 
     pub fn parse(s: &str) -> Result<Policy> {
@@ -39,7 +48,11 @@ impl Policy {
             "uni-d" | "unid" | "uniform-dynamic" => Policy::UniformDynamic,
             "uni-s" | "unis" | "uniform-static" => Policy::UniformStatic,
             "divfl" => Policy::DivFl,
-            other => anyhow::bail!("unknown policy {other:?} (lroa|uni-d|uni-s|divfl)"),
+            "greedy" | "greedy-channel" => Policy::GreedyChannel,
+            "rr" | "round-robin" | "roundrobin" => Policy::RoundRobin,
+            other => anyhow::bail!(
+                "unknown policy {other:?} (lroa|uni-d|uni-s|divfl|greedy|rr)"
+            ),
         })
     }
 
@@ -49,6 +62,8 @@ impl Policy {
             Policy::UniformDynamic => "Uni-D",
             Policy::UniformStatic => "Uni-S",
             Policy::DivFl => "DivFL",
+            Policy::GreedyChannel => "Greedy",
+            Policy::RoundRobin => "RR",
         }
     }
 }
@@ -56,6 +71,102 @@ impl Policy {
 impl fmt::Display for Policy {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         f.write_str(self.name())
+    }
+}
+
+/// Which dynamic-environment model realizes the per-round system
+/// randomness (see [`crate::env`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EnvKind {
+    /// The paper's IID exponential channel, always-on fleet (default).
+    Static,
+    /// Two-state Gilbert–Elliott Markov fading per device.
+    GilbertElliott,
+    /// Markov device dropout/arrival: the candidate set `N^t` varies.
+    Availability,
+    /// Slow random-walk drift on per-device compute/energy parameters.
+    Drift,
+}
+
+impl EnvKind {
+    /// Every environment, registry order (static first — the paper's setting).
+    pub const ALL: [EnvKind; 4] = [
+        EnvKind::Static,
+        EnvKind::GilbertElliott,
+        EnvKind::Availability,
+        EnvKind::Drift,
+    ];
+
+    pub fn parse(s: &str) -> Result<EnvKind> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "static" => EnvKind::Static,
+            "ge" | "gilbert-elliott" | "gilbertelliott" => EnvKind::GilbertElliott,
+            "avail" | "availability" => EnvKind::Availability,
+            "drift" => EnvKind::Drift,
+            other => anyhow::bail!("unknown env {other:?} (static|ge|avail|drift)"),
+        })
+    }
+
+    /// Parse a comma list of environment names; `all` expands to every
+    /// registered environment.  The one list rule shared by `lroa sweep
+    /// --envs` and the figure-harness `--envs` flag.
+    pub fn parse_list(val: &str) -> Result<Vec<EnvKind>> {
+        if val == "all" {
+            return Ok(EnvKind::ALL.to_vec());
+        }
+        val.split(',').map(EnvKind::parse).collect()
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EnvKind::Static => "static",
+            EnvKind::GilbertElliott => "ge",
+            EnvKind::Availability => "avail",
+            EnvKind::Drift => "drift",
+        }
+    }
+}
+
+impl fmt::Display for EnvKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Dynamic-environment parameters (`[env]` section).  Only the knobs of
+/// the selected [`EnvKind`] matter; the rest are inert.
+#[derive(Clone, Debug)]
+pub struct EnvConfig {
+    /// Which environment realizes the round randomness.
+    pub kind: EnvKind,
+    /// Gilbert–Elliott: P(good → bad) per round.
+    pub ge_p_bad: f64,
+    /// Gilbert–Elliott: P(bad → good) per round.
+    pub ge_p_good: f64,
+    /// Gilbert–Elliott: bad-state mean gain as a fraction of `channel_mean`.
+    pub ge_bad_scale: f64,
+    /// Availability: P(online → offline) per round.
+    pub avail_p_drop: f64,
+    /// Availability: P(offline → online) per round.
+    pub avail_p_join: f64,
+    /// Drift: per-round log-space random-walk step size.
+    pub drift_sigma: f64,
+    /// Drift: multiplier clamp band around the base parameters.
+    pub drift_clip: (f64, f64),
+}
+
+impl Default for EnvConfig {
+    fn default() -> Self {
+        Self {
+            kind: EnvKind::Static,
+            ge_p_bad: 0.15,
+            ge_p_good: 0.45,
+            ge_bad_scale: 0.1,
+            avail_p_drop: 0.05,
+            avail_p_join: 0.25,
+            drift_sigma: 0.02,
+            drift_clip: (0.5, 2.0),
+        }
     }
 }
 
@@ -228,6 +339,7 @@ pub struct Config {
     pub system: SystemConfig,
     pub control: ControlConfig,
     pub train: TrainConfig,
+    pub env: EnvConfig,
     /// Where AOT artifacts live.
     pub artifacts_dir: String,
     /// Where run outputs (CSV/JSON) go.
@@ -342,6 +454,15 @@ impl Config {
             "train.policy" => self.train.policy = Policy::parse(val)?,
             "train.data_snr" => self.train.data_snr = f()?,
             "train.train_threads" => self.train.train_threads = u()?,
+            "env.kind" => self.env.kind = EnvKind::parse(val)?,
+            "env.ge_p_bad" => self.env.ge_p_bad = f()?,
+            "env.ge_p_good" => self.env.ge_p_good = f()?,
+            "env.ge_bad_scale" => self.env.ge_bad_scale = f()?,
+            "env.avail_p_drop" => self.env.avail_p_drop = f()?,
+            "env.avail_p_join" => self.env.avail_p_join = f()?,
+            "env.drift_sigma" => self.env.drift_sigma = f()?,
+            "env.drift_lo" => self.env.drift_clip.0 = f()?,
+            "env.drift_hi" => self.env.drift_clip.1 = f()?,
             "run.artifacts_dir" => self.artifacts_dir = val.into(),
             "run.out_dir" => self.out_dir = val.into(),
             other => anyhow::bail!("unknown config key {other:?}"),
@@ -371,7 +492,79 @@ impl Config {
             t.samples_per_device.0 > 0 && t.samples_per_device.0 <= t.samples_per_device.1,
             "bad samples_per_device"
         );
+        let e = &self.env;
+        for (name, p) in [
+            ("env.ge_p_bad", e.ge_p_bad),
+            ("env.ge_p_good", e.ge_p_good),
+            ("env.avail_p_drop", e.avail_p_drop),
+            ("env.avail_p_join", e.avail_p_join),
+        ] {
+            anyhow::ensure!((0.0..=1.0).contains(&p), "{name} must be in [0, 1]");
+        }
+        anyhow::ensure!(
+            e.ge_bad_scale > 0.0 && e.ge_bad_scale <= 1.0,
+            "env.ge_bad_scale must be in (0, 1]"
+        );
+        // The bad-state mean must clear the clip floor, or the clipped-
+        // exponential rejection sampler stalls (acceptance ~ e^{-lo/mean}).
+        // Only enforced when the GE environment is actually selected —
+        // the other environments never touch this knob.
+        anyhow::ensure!(
+            e.kind != EnvKind::GilbertElliott
+                || e.ge_bad_scale * s.channel_mean >= s.channel_clip.0 - 1e-12,
+            "env.ge_bad_scale * channel_mean ({}) is below the channel clip floor ({}); \
+             rejection sampling the bad-state gain would stall",
+            e.ge_bad_scale * s.channel_mean,
+            s.channel_clip.0
+        );
+        anyhow::ensure!(e.drift_sigma >= 0.0, "env.drift_sigma must be >= 0");
+        anyhow::ensure!(
+            e.drift_clip.0 > 0.0 && e.drift_clip.0 <= 1.0 && e.drift_clip.1 >= 1.0,
+            "env.drift clamp band must straddle 1"
+        );
         Ok(())
+    }
+
+    /// FNV-1a 64 over the full-precision `Debug` repr (f64 `Debug`
+    /// round-trips, unlike the display-rounded [`Config::dump`]): a
+    /// provenance hash for sweep manifests and `--resume` sidecars where
+    /// any behavior-relevant knob change — however small — must change
+    /// the hash.  Pure locations (`out_dir`, `artifacts_dir`) are
+    /// cleared first; `artifacts_dir` matters only to Full-mode runs and
+    /// is folded in by `Scenario::fingerprint` there.
+    pub fn hash_hex(&self) -> String {
+        let mut c = self.clone();
+        c.out_dir = String::new();
+        c.artifacts_dir = String::new();
+        // Thread width is bitwise behavior-irrelevant (per-client RNGs
+        // are forked up front; see `par`), so it must not invalidate a
+        // resume done on a machine with a different pool width.
+        c.train.train_threads = 0;
+        // Env knobs of unselected kinds are inert (each environment
+        // reads only its own knobs — keep this in sync with `crate::env`
+        // if that ever changes): reset them to defaults so they can't
+        // spuriously invalidate a `--resume`.
+        let d = EnvConfig::default();
+        if c.env.kind != EnvKind::GilbertElliott {
+            c.env.ge_p_bad = d.ge_p_bad;
+            c.env.ge_p_good = d.ge_p_good;
+            c.env.ge_bad_scale = d.ge_bad_scale;
+        }
+        if c.env.kind != EnvKind::Availability {
+            c.env.avail_p_drop = d.avail_p_drop;
+            c.env.avail_p_join = d.avail_p_join;
+        }
+        if c.env.kind != EnvKind::Drift {
+            c.env.drift_sigma = d.drift_sigma;
+            c.env.drift_clip = d.drift_clip;
+        }
+        let repr = format!("{c:?}");
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in repr.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        format!("{h:016x}")
     }
 
     /// Human/machine-readable dump of every effective knob.
@@ -379,18 +572,24 @@ impl Config {
         let s = &self.system;
         let c = &self.control;
         let t = &self.train;
+        let e = &self.env;
         format!(
-            "[system] N={} K={} E={} B={:.3e} N0={} h_mean={} clip=({},{}) p=({},{}) f=({:.2e},{:.2e}) alpha={:.2e} c_n={:.2e} Ebar={} M_bits={} spread={}\n\
+            "[system] N={} K={} E={} B={:.3e} N0={} h_mean={} clip=({},{}) p=({},{}) f=({:.2e},{:.2e}) alpha={:.2e} c_n={:.2e} Ebar={} M_bits={} dl_bps={} spread={}\n\
              [control] mu={} nu={} lambda*={} V*={} eps=({},{}) iters=({},{}) q_min={}\n\
-             [train] dataset={} rounds={} lr0={} decay=({},{}) samples=({},{}) test={} eval_every={} seed={} policy={} snr={} threads={}",
+             [train] dataset={} rounds={} lr0={} decay=({},{}) samples=({},{}) test={} eval_every={} seed={} policy={} snr={} threads={}\n\
+             [env] kind={} ge=({},{},{}) avail=({},{}) drift=({},{},{})\n\
+             [run] artifacts_dir={}",
             s.num_devices, s.k, s.local_epochs, s.bandwidth_hz, s.noise_w, s.channel_mean,
             s.channel_clip.0, s.channel_clip.1, s.p_min_w, s.p_max_w, s.f_min_hz, s.f_max_hz,
-            s.alpha, s.cycles_per_sample, s.energy_budget_j, s.model_bits, s.hardware_spread,
+            s.alpha, s.cycles_per_sample, s.energy_budget_j, s.model_bits, s.downlink_bps,
+            s.hardware_spread,
             c.mu, c.nu, c.lambda_explicit, c.v_explicit, c.eps_outer, c.eps_inner,
             c.max_outer_iters, c.max_inner_iters, c.q_min,
             t.dataset, t.rounds, t.lr0, t.lr_decay_at.0, t.lr_decay_at.1,
             t.samples_per_device.0, t.samples_per_device.1, t.test_samples, t.eval_every,
             t.seed, t.policy, t.data_snr, t.train_threads,
+            e.kind, e.ge_p_bad, e.ge_p_good, e.ge_bad_scale, e.avail_p_drop, e.avail_p_join,
+            e.drift_sigma, e.drift_clip.0, e.drift_clip.1, self.artifacts_dir,
         )
     }
 }
@@ -500,6 +699,83 @@ mod tests {
         assert_eq!(Policy::parse("Uni-D").unwrap(), Policy::UniformDynamic);
         assert_eq!(Policy::parse("uni-s").unwrap(), Policy::UniformStatic);
         assert_eq!(Policy::parse("divfl").unwrap(), Policy::DivFl);
+        assert_eq!(Policy::parse("greedy-channel").unwrap(), Policy::GreedyChannel);
+        assert_eq!(Policy::parse("round-robin").unwrap(), Policy::RoundRobin);
+        assert_eq!(Policy::parse("rr").unwrap(), Policy::RoundRobin);
         assert!(Policy::parse("nope").is_err());
+    }
+
+    #[test]
+    fn env_kind_parse_and_default() {
+        assert_eq!(EnvKind::parse("static").unwrap(), EnvKind::Static);
+        assert_eq!(EnvKind::parse("ge").unwrap(), EnvKind::GilbertElliott);
+        assert_eq!(EnvKind::parse("gilbert-elliott").unwrap(), EnvKind::GilbertElliott);
+        assert_eq!(EnvKind::parse("avail").unwrap(), EnvKind::Availability);
+        assert_eq!(EnvKind::parse("drift").unwrap(), EnvKind::Drift);
+        assert!(EnvKind::parse("nope").is_err());
+        // The paper's setting is the default everywhere.
+        assert_eq!(Config::for_dataset("cifar").unwrap().env.kind, EnvKind::Static);
+        assert_eq!(EnvConfig::default().kind, EnvKind::Static);
+    }
+
+    #[test]
+    fn env_overrides_and_validation() {
+        let mut cfg = Config::for_dataset("cifar").unwrap();
+        cfg.apply_cli(&["--env.kind=ge", "--env.ge_p_bad=0.3", "--env.drift_lo=0.8"])
+            .unwrap();
+        assert_eq!(cfg.env.kind, EnvKind::GilbertElliott);
+        assert_eq!(cfg.env.ge_p_bad, 0.3);
+        assert_eq!(cfg.env.drift_clip.0, 0.8);
+        assert!(cfg.validate().is_ok());
+
+        cfg.env.avail_p_drop = 1.5;
+        assert!(cfg.validate().is_err());
+        cfg.env.avail_p_drop = 0.05;
+        cfg.env.drift_clip = (0.5, 0.9); // band must straddle 1
+        assert!(cfg.validate().is_err());
+        cfg.env.drift_clip = (0.5, 2.0);
+        assert!(cfg.validate().is_ok());
+        // A bad-state mean below the clip floor would stall the sampler.
+        cfg.env.ge_bad_scale = 1e-3;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn env_parse_list() {
+        assert_eq!(
+            EnvKind::parse_list("static,ge").unwrap(),
+            vec![EnvKind::Static, EnvKind::GilbertElliott]
+        );
+        assert_eq!(EnvKind::parse_list("all").unwrap(), EnvKind::ALL.to_vec());
+        assert!(EnvKind::parse_list("static,nope").is_err());
+    }
+
+    #[test]
+    fn config_hash_tracks_every_knob() {
+        let a = Config::for_dataset("cifar").unwrap();
+        let mut b = a.clone();
+        assert_eq!(a.hash_hex(), b.hash_hex());
+        b.env.kind = EnvKind::Drift;
+        assert_ne!(a.hash_hex(), b.hash_hex());
+        let mut c = a.clone();
+        c.train.seed = 99;
+        assert_ne!(a.hash_hex(), c.hash_hex());
+        // Sub-display-precision changes still change the hash (the hash
+        // is over the round-trip Debug repr, not the rounded dump).
+        let mut d = a.clone();
+        d.system.alpha *= 1.0 + 1e-12;
+        assert_ne!(a.hash_hex(), d.hash_hex());
+        // Pure locations, thread width, and inert env knobs do not.
+        let mut e = a.clone();
+        e.out_dir = "elsewhere".into();
+        e.artifacts_dir = "elsewhere".into();
+        e.train.train_threads = 8; // bitwise-irrelevant by the par contract
+        e.env.ge_p_good = 0.9; // inert: kind is static
+        assert_eq!(a.hash_hex(), e.hash_hex());
+        let mut f = a.clone();
+        f.env.kind = EnvKind::GilbertElliott;
+        let mut g = f.clone();
+        g.env.ge_p_good = 0.9; // live once GE is selected
+        assert_ne!(f.hash_hex(), g.hash_hex());
     }
 }

@@ -25,10 +25,14 @@ pub use queues::VirtualQueues;
 
 /// Per-round control decisions for every device.
 pub fn objective_terms(q: &[f64], times: &[f64], lambda: f64, weights: &[f64]) -> f64 {
-    // Σ_n ( q_n T_n + λ w_n² / q_n )  — the P1 integrand.
+    // Σ_n ( q_n T_n + λ w_n² / q_n )  — the P1 integrand.  Devices with
+    // q_n = 0 are outside this round's candidate set (unreachable under a
+    // dynamic environment) and contribute nothing; every in-problem q_n
+    // carries the solver's q_min floor, so the division is safe.
     q.iter()
         .zip(times)
         .zip(weights)
+        .filter(|((qn, _), _)| **qn > 0.0)
         .map(|((qn, tn), wn)| qn * tn + lambda * wn * wn / qn)
         .sum()
 }

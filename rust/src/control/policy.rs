@@ -8,7 +8,8 @@
 //! [`RoundPlan`] back.  Adding a new scheduling scheme is one impl plus
 //! one [`REGISTRY`] line; no server code changes.
 //!
-//! The four registered schemes mirror the paper's §VII-A comparison:
+//! The registered schemes mirror the paper's §VII-A comparison plus the
+//! two cheap scheduling baselines the related work suggests:
 //!
 //! | name   | resources `(f, p)`        | sampling `q` / selection      |
 //! |--------|---------------------------|-------------------------------|
@@ -16,6 +17,16 @@
 //! | Uni-D  | Algorithm 2 at `q = 1/N`  | uniform with replacement      |
 //! | Uni-S  | static energy balance     | uniform with replacement      |
 //! | DivFL  | static energy balance     | greedy facility location      |
+//! | Greedy | static energy balance     | K best-channel devices        |
+//! | RR     | static energy balance     | round-robin over global ids   |
+//!
+//! Under a dynamic environment ([`crate::env`]) the server hands the
+//! policy only the *reachable* sub-problem: every slice in
+//! [`RoundContext`] is indexed by candidate **position**, and
+//! [`RoundContext::ids`] maps positions back to global device ids (the
+//! identity when the whole fleet is reachable).  Stateful selectors that
+//! key on global identity (DivFL's embeddings, RR's cursor) must go
+//! through `ids`.
 
 use crate::config::{ControlConfig, Policy, SystemConfig};
 use crate::control::{static_alloc, Controls, LroaSolver, SolverStats};
@@ -33,13 +44,16 @@ pub struct RoundContext<'a> {
     pub t: usize,
     /// Sampling frequency `K`.
     pub k: usize,
-    /// The device fleet (static per-run parameters).
+    /// The candidate devices (this round's reachable set `N^t`).
     pub devices: &'a [Device],
-    /// Data weights `w_n` (sum to 1).
+    /// Data weights `w_n` over the candidates (sum to 1).
     pub weights: &'a [f64],
-    /// This round's channel gains `h_n^t`.
+    /// Global device id per candidate position (identity when every
+    /// device is reachable; see [`crate::env`]).
+    pub ids: &'a [usize],
+    /// This round's channel gains `h_n^t` (candidate positions).
     pub h: &'a [f64],
-    /// Virtual-queue backlogs `Q_n^t`.
+    /// Virtual-queue backlogs `Q_n^t` (candidate positions).
     pub backlogs: &'a [f64],
 }
 
@@ -51,8 +65,12 @@ pub struct RoundPlan {
     pub stats: SolverStats,
     /// The sampled participant multiset plus eq. (4) coefficients.
     pub selection: Selection,
-    /// The effective per-device selection distribution the virtual queues
-    /// and the recorded objective use (uniform for the baselines).
+    /// Per-device participation marginals the virtual queues and the
+    /// energy ledger use: the sampling distribution for the stochastic
+    /// schemes (sums to 1), uniform `1/N` for DivFL and RR (their
+    /// long-run average), and a 0/1 indicator for Greedy's
+    /// deterministic top-K.  The recorded P1 objective instead uses
+    /// `controls.q`, the sampling distribution proper.
     pub q_eff: Vec<f64>,
 }
 
@@ -221,7 +239,7 @@ impl RoundPolicy for DivFlPolicy {
     fn plan(&mut self, ctx: &RoundContext<'_>, _rng: &mut Rng) -> RoundPlan {
         let controls =
             static_alloc::solve_static(&self.sys, ctx.devices, self.model_bits, ctx.h);
-        let selection = self.state.select(ctx.weights, ctx.k);
+        let selection = self.state.select_among(ctx.ids, ctx.weights, ctx.k);
         RoundPlan {
             controls,
             stats: SolverStats::default(),
@@ -232,6 +250,118 @@ impl RoundPolicy for DivFlPolicy {
 
     fn observe_update(&mut self, client: usize, delta: &[f32]) {
         self.state.observe(client, self.projector.project(delta));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Greedy-channel — best instantaneous channels, static resources.
+// ---------------------------------------------------------------------------
+
+/// Pick the `K` reachable devices with the best channel gains `h_n^t`
+/// (the fast-convergence scheduling heuristic of Shi et al.), with the
+/// static energy-balance resource allocation and FedAvg aggregation.
+pub struct GreedyChannelPolicy {
+    sys: SystemConfig,
+    model_bits: f64,
+}
+
+impl GreedyChannelPolicy {
+    pub fn new(init: &PolicyInit<'_>) -> Self {
+        Self {
+            sys: init.sys.clone(),
+            model_bits: init.model_bits,
+        }
+    }
+}
+
+impl RoundPolicy for GreedyChannelPolicy {
+    fn name(&self) -> &'static str {
+        "Greedy"
+    }
+
+    fn plan(&mut self, ctx: &RoundContext<'_>, _rng: &mut Rng) -> RoundPlan {
+        let controls =
+            static_alloc::solve_static(&self.sys, ctx.devices, self.model_bits, ctx.h);
+        let n = ctx.devices.len();
+        let k = ctx.k.min(n);
+        let mut order: Vec<usize> = (0..n).collect();
+        // Best h first; ties broken by position for determinism.
+        order.sort_by(|&a, &b| {
+            ctx.h[b]
+                .partial_cmp(&ctx.h[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        order.truncate(k);
+        let selection = sampling::fedavg_selection(order, ctx.weights);
+        // Greedy's selection is deterministic and concentrated, so its
+        // participation marginals are a 0/1 indicator — not uniform —
+        // and the energy ledger / virtual queues charge exactly the
+        // devices it actually uses.
+        let mut q_eff = vec![0.0; n];
+        for &m in &selection.members {
+            q_eff[m] = 1.0;
+        }
+        RoundPlan {
+            controls,
+            stats: SolverStats::default(),
+            selection,
+            q_eff,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Round-robin — fairness anchor, static resources.
+// ---------------------------------------------------------------------------
+
+/// Cycle through the fleet `K` devices at a time, in global-id order.
+///
+/// The cursor lives in *global* id space, so under a dynamic candidate
+/// set the policy picks the next `K` reachable devices at or after the
+/// cursor (cyclically) and advances past the last one — unreachable
+/// devices are simply skipped, not starved.
+pub struct RoundRobinPolicy {
+    sys: SystemConfig,
+    model_bits: f64,
+    n_total: usize,
+    cursor: usize,
+}
+
+impl RoundRobinPolicy {
+    pub fn new(init: &PolicyInit<'_>) -> Self {
+        Self {
+            sys: init.sys.clone(),
+            model_bits: init.model_bits,
+            n_total: init.sys.num_devices,
+            cursor: 0,
+        }
+    }
+}
+
+impl RoundPolicy for RoundRobinPolicy {
+    fn name(&self) -> &'static str {
+        "RR"
+    }
+
+    fn plan(&mut self, ctx: &RoundContext<'_>, _rng: &mut Rng) -> RoundPlan {
+        let controls =
+            static_alloc::solve_static(&self.sys, ctx.devices, self.model_bits, ctx.h);
+        let n = ctx.devices.len();
+        let k = ctx.k.min(n);
+        // Cyclic distance of each candidate's global id from the cursor.
+        let mut order: Vec<usize> = (0..n).collect();
+        let (cursor, n_total) = (self.cursor, self.n_total);
+        order.sort_by_key(|&pos| (ctx.ids[pos] + n_total - cursor) % n_total);
+        order.truncate(k);
+        self.cursor = (ctx.ids[order[k - 1]] + 1) % n_total;
+        let selection = sampling::fedavg_selection(order, ctx.weights);
+        RoundPlan {
+            controls,
+            stats: SolverStats::default(),
+            selection,
+            q_eff: uniform_q(n),
+        }
     }
 }
 
@@ -291,6 +421,14 @@ fn build_divfl(init: &PolicyInit<'_>) -> Box<dyn RoundPolicy> {
     Box::new(DivFlPolicy::new(init))
 }
 
+fn build_greedy_channel(init: &PolicyInit<'_>) -> Box<dyn RoundPolicy> {
+    Box::new(GreedyChannelPolicy::new(init))
+}
+
+fn build_round_robin(init: &PolicyInit<'_>) -> Box<dyn RoundPolicy> {
+    Box::new(RoundRobinPolicy::new(init))
+}
+
 /// The name → constructor registry all dispatch goes through.
 pub const REGISTRY: &[PolicySpec] = &[
     PolicySpec {
@@ -312,6 +450,16 @@ pub const REGISTRY: &[PolicySpec] = &[
         id: Policy::DivFl,
         name: "DivFL",
         build: build_divfl,
+    },
+    PolicySpec {
+        id: Policy::GreedyChannel,
+        name: "Greedy",
+        build: build_greedy_channel,
+    },
+    PolicySpec {
+        id: Policy::RoundRobin,
+        name: "RR",
+        build: build_round_robin,
     },
 ];
 
@@ -363,7 +511,7 @@ mod tests {
                 "{policy} missing from registry"
             );
         }
-        assert_eq!(names(), vec!["LROA", "Uni-D", "Uni-S", "DivFL"]);
+        assert_eq!(names(), vec!["LROA", "Uni-D", "Uni-S", "DivFL", "Greedy", "RR"]);
     }
 
     #[test]
@@ -377,7 +525,16 @@ mod tests {
             model_bits: 3.2e6,
             seed: 1,
         };
-        for alias in ["lroa", "LROA", "uni-d", "Uni-S", "divfl", "uniform-dynamic"] {
+        for alias in [
+            "lroa",
+            "LROA",
+            "uni-d",
+            "Uni-S",
+            "divfl",
+            "uniform-dynamic",
+            "greedy-channel",
+            "round-robin",
+        ] {
             assert!(from_name(alias, &init).is_ok(), "{alias}");
         }
         assert!(from_name("nope", &init).is_err());
@@ -394,6 +551,7 @@ mod tests {
             model_bits: 3.2e6,
             seed: 7,
         };
+        let ids: Vec<usize> = (0..12).collect();
         for spec in REGISTRY {
             let mut policy = (spec.build)(&init);
             let mut rng = Rng::new(42);
@@ -402,6 +560,7 @@ mod tests {
                 k: sys.k,
                 devices: &fleet.devices,
                 weights: fleet.weights(),
+                ids: &ids,
                 h: &h,
                 backlogs: &backlogs,
             };
@@ -410,7 +569,13 @@ mod tests {
             assert_eq!(plan.q_eff.len(), 12, "{}", spec.name);
             assert_eq!(plan.selection.members.len(), sys.k, "{}", spec.name);
             let sum_q: f64 = plan.q_eff.iter().sum();
-            assert!((sum_q - 1.0).abs() < 1e-6, "{}: sum q {sum_q}", spec.name);
+            if spec.id == Policy::GreedyChannel {
+                // 0/1 participation indicator over the K selected devices.
+                assert_eq!(sum_q, sys.k as f64, "{}: sum q {sum_q}", spec.name);
+                assert!(plan.q_eff.iter().all(|&q| q == 0.0 || q == 1.0));
+            } else {
+                assert!((sum_q - 1.0).abs() < 1e-6, "{}: sum q {sum_q}", spec.name);
+            }
             for (i, d) in fleet.devices.iter().enumerate() {
                 assert!(plan.controls.f_hz[i] >= d.f_min_hz - 1e-9);
                 assert!(plan.controls.f_hz[i] <= d.f_max_hz + 1e-9);
@@ -434,11 +599,13 @@ mod tests {
             model_bits: 3.2e6,
             seed: 7,
         };
+        let ids: Vec<usize> = (0..12).collect();
         let ctx = RoundContext {
             t: 0,
             k: sys.k,
             devices: &fleet.devices,
             weights: fleet.weights(),
+            ids: &ids,
             h: &h,
             backlogs: &backlogs,
         };
@@ -449,5 +616,105 @@ mod tests {
         let plan_a = unid.plan(&ctx, &mut rng_a);
         let plan_b = unis.plan(&ctx, &mut rng_b);
         assert_eq!(plan_a.selection.members, plan_b.selection.members);
+    }
+
+    #[test]
+    fn greedy_channel_picks_the_best_gains() {
+        let (sys, ctl, fleet, mut h, backlogs) = setup();
+        h[4] = 0.49;
+        h[9] = 0.48; // the two best channels by construction
+        for (i, v) in h.iter_mut().enumerate() {
+            if i != 4 && i != 9 {
+                *v = v.min(0.4);
+            }
+        }
+        let init = PolicyInit {
+            sys: &sys,
+            ctl: &ctl,
+            lambda: 1.0,
+            v: 1e4,
+            model_bits: 3.2e6,
+            seed: 7,
+        };
+        let ids: Vec<usize> = (0..12).collect();
+        let ctx = RoundContext {
+            t: 0,
+            k: 2,
+            devices: &fleet.devices,
+            weights: fleet.weights(),
+            ids: &ids,
+            h: &h,
+            backlogs: &backlogs,
+        };
+        let mut policy = build(Policy::GreedyChannel, &init);
+        let plan = policy.plan(&ctx, &mut Rng::new(1));
+        assert_eq!(plan.selection.members, vec![4, 9]);
+        let s: f64 = plan.selection.coefs.iter().sum();
+        assert!((s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn round_robin_cycles_through_every_device() {
+        let (sys, ctl, fleet, h, backlogs) = setup();
+        let init = PolicyInit {
+            sys: &sys,
+            ctl: &ctl,
+            lambda: 1.0,
+            v: 1e4,
+            model_bits: 3.2e6,
+            seed: 7,
+        };
+        let ids: Vec<usize> = (0..12).collect();
+        let mut policy = build(Policy::RoundRobin, &init);
+        let mut seen = std::collections::BTreeSet::new();
+        let mut rng = Rng::new(1);
+        for t in 0..6 {
+            let ctx = RoundContext {
+                t,
+                k: 2,
+                devices: &fleet.devices,
+                weights: fleet.weights(),
+                ids: &ids,
+                h: &h,
+                backlogs: &backlogs,
+            };
+            let plan = policy.plan(&ctx, &mut rng);
+            assert_eq!(plan.selection.members.len(), 2);
+            seen.extend(plan.selection.members.iter().copied());
+        }
+        assert_eq!(seen.len(), 12, "6 rounds × K=2 must cover all 12 devices");
+    }
+
+    #[test]
+    fn round_robin_skips_unreachable_devices() {
+        let (sys, ctl, fleet, h, _backlogs) = setup();
+        let init = PolicyInit {
+            sys: &sys,
+            ctl: &ctl,
+            lambda: 1.0,
+            v: 1e4,
+            model_bits: 3.2e6,
+            seed: 7,
+        };
+        // Candidate set {1, 5, 7} out of 12: positions 0..3.
+        let ids = vec![1usize, 5, 7];
+        let sub_devices: Vec<_> = ids.iter().map(|&i| fleet.devices[i].clone()).collect();
+        let w = vec![1.0 / 3.0; 3];
+        let sub_h: Vec<f64> = ids.iter().map(|&i| h[i]).collect();
+        let sub_b = vec![1.0; 3];
+        let ctx = RoundContext {
+            t: 0,
+            k: 2,
+            devices: &sub_devices,
+            weights: &w,
+            ids: &ids,
+            h: &sub_h,
+            backlogs: &sub_b,
+        };
+        let mut policy = build(Policy::RoundRobin, &init);
+        let plan = policy.plan(&ctx, &mut Rng::new(1));
+        // Cursor starts at 0: the nearest reachable ids are 1 and 5,
+        // i.e. positions 0 and 1.
+        assert_eq!(plan.selection.members, vec![0, 1]);
     }
 }

@@ -11,9 +11,16 @@ use super::lroa::Controls;
 use crate::config::SystemConfig;
 use crate::system::{selection_probability, upload_time_s, Device};
 
-/// Solve the Uni-S energy-balance frequency for one device.
-pub fn static_freq(cfg: &SystemConfig, dev: &Device, model_bits: f64, h: f64, p_w: f64) -> f64 {
-    let sel = selection_probability(1.0 / cfg.num_devices as f64, cfg.k);
+/// Solve the Uni-S energy-balance frequency for one device, given the
+/// per-round selection probability the balance targets.
+fn static_freq_with_sel(
+    cfg: &SystemConfig,
+    dev: &Device,
+    model_bits: f64,
+    h: f64,
+    p_w: f64,
+    sel: f64,
+) -> f64 {
     let comm_j = p_w * upload_time_s(cfg, model_bits, h, p_w);
     let ecd = dev.cycles_per_round(cfg.local_epochs);
     // E α c D f² / 2 = Ē/sel − comm  ⇒  f = sqrt(2 (Ē/sel − comm) / (α E c D))
@@ -24,14 +31,28 @@ pub fn static_freq(cfg: &SystemConfig, dev: &Device, model_bits: f64, h: f64, p_
     (2.0 * residual / (dev.alpha * ecd)).sqrt().clamp(dev.f_min_hz, dev.f_max_hz)
 }
 
-/// Uni-S controls for the whole fleet (uniform sampling).
+/// Solve the Uni-S energy-balance frequency for one device under the
+/// full-fleet uniform sampling probability `1/N`.
+pub fn static_freq(cfg: &SystemConfig, dev: &Device, model_bits: f64, h: f64, p_w: f64) -> f64 {
+    let sel = selection_probability(1.0 / cfg.num_devices as f64, cfg.k);
+    static_freq_with_sel(cfg, dev, model_bits, h, p_w, sel)
+}
+
+/// Uni-S controls over a candidate set (uniform sampling).
+///
+/// The energy balance targets the *same* selection probability as the
+/// returned `q = 1/n` over `devices` — which is the whole fleet in the
+/// paper's setting, and the reachable set `N^t` under a dynamic
+/// availability environment (so the balance stays consistent with the
+/// actual per-round sampling odds).
 pub fn solve_static(cfg: &SystemConfig, devices: &[Device], model_bits: f64, h: &[f64]) -> Controls {
     let n = devices.len();
+    let sel = selection_probability(1.0 / n as f64, cfg.k);
     let p_w: Vec<f64> = devices.iter().map(|d| 0.5 * (d.p_min_w + d.p_max_w)).collect();
     let f_hz: Vec<f64> = devices
         .iter()
         .enumerate()
-        .map(|(i, d)| static_freq(cfg, d, model_bits, h[i], p_w[i]))
+        .map(|(i, d)| static_freq_with_sel(cfg, d, model_bits, h[i], p_w[i], sel))
         .collect();
     Controls {
         f_hz,

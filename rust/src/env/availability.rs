@@ -1,0 +1,154 @@
+//! Markov device availability: the candidate set `N^t` varies per round.
+
+use super::{EnvInit, Environment, RoundEnv};
+use crate::rng::Rng;
+use crate::system::{ChannelProcess, Device};
+
+/// Device dropout/arrival as an independent per-device on/off Markov
+/// chain on top of the static channel.
+///
+/// * Channel gains come from the *same* [`ChannelProcess`] construction
+///   (and seed) as the static environment, so the gain realization is
+///   identical to `static` round for round — availability masking is the
+///   only difference, which isolates its effect in comparisons.
+/// * Every device starts online; each round an online device drops with
+///   probability `avail_p_drop` and an offline device returns with
+///   probability `avail_p_join`.
+/// * The server must always be able to sample `K` participants, so if
+///   the chain leaves fewer than `K` devices online, offline devices are
+///   forced back on in ascending id order until `K` are reachable (a
+///   deterministic repair that keeps trajectories reproducible).
+pub struct AvailabilityEnv {
+    channel: ChannelProcess,
+    streams: Vec<Rng>,
+    online: Vec<bool>,
+    p_drop: f64,
+    p_join: f64,
+    min_online: usize,
+}
+
+impl AvailabilityEnv {
+    pub fn new(init: &EnvInit<'_>) -> Self {
+        let n = init.sys.num_devices;
+        let mut root = Rng::new(init.seed ^ 0xA7A1_1AB1_E0FF_11E5);
+        Self {
+            channel: ChannelProcess::new(init.sys, init.seed),
+            streams: (0..n).map(|i| root.fork(i as u64)).collect(),
+            online: vec![true; n],
+            p_drop: init.env.avail_p_drop,
+            p_join: init.env.avail_p_join,
+            min_online: init.sys.k.max(1),
+        }
+    }
+}
+
+impl Environment for AvailabilityEnv {
+    fn name(&self) -> &'static str {
+        "avail"
+    }
+
+    fn next_round(&mut self, _base: &[Device]) -> RoundEnv {
+        // Gains are drawn for every device (also offline ones) so the
+        // channel stream never depends on the availability trajectory.
+        let gains = self.channel.next_round();
+        let (p_drop, p_join) = (self.p_drop, self.p_join);
+        for (rng, on) in self.streams.iter_mut().zip(self.online.iter_mut()) {
+            *on = super::step_two_state(rng, *on, p_drop, p_join);
+        }
+        // Repair: guarantee at least K reachable devices.
+        let mut count = self.online.iter().filter(|&&b| b).count();
+        for on in self.online.iter_mut() {
+            if count >= self.min_online {
+                break;
+            }
+            if !*on {
+                *on = true;
+                count += 1;
+            }
+        }
+        let available = (0..self.online.len()).filter(|&i| self.online[i]).collect();
+        RoundEnv {
+            gains,
+            available: Some(available),
+            devices: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EnvConfig, SystemConfig};
+
+    fn sys(n: usize, k: usize) -> SystemConfig {
+        SystemConfig {
+            num_devices: n,
+            k,
+            ..SystemConfig::default()
+        }
+    }
+
+    #[test]
+    fn gains_match_the_static_channel_stream() {
+        let sys = sys(15, 2);
+        let env_cfg = EnvConfig::default();
+        let mut env = AvailabilityEnv::new(&EnvInit {
+            sys: &sys,
+            env: &env_cfg,
+            seed: 31,
+        });
+        let mut reference = ChannelProcess::new(&sys, 31);
+        let base: Vec<Device> = Vec::new();
+        for _ in 0..30 {
+            assert_eq!(env.next_round(&base).gains, reference.next_round());
+        }
+    }
+
+    #[test]
+    fn fleet_fluctuates_but_never_starves() {
+        let sys = sys(12, 3);
+        let env_cfg = EnvConfig {
+            avail_p_drop: 0.4,
+            avail_p_join: 0.3,
+            ..EnvConfig::default()
+        };
+        let mut env = AvailabilityEnv::new(&EnvInit {
+            sys: &sys,
+            env: &env_cfg,
+            seed: 8,
+        });
+        let base: Vec<Device> = Vec::new();
+        let mut saw_partial = false;
+        for _ in 0..200 {
+            let re = env.next_round(&base);
+            let av = re.available.expect("avail env always reports N^t");
+            assert!(av.len() >= 3, "fewer than K reachable");
+            assert!(av.len() <= 12);
+            saw_partial |= av.len() < 12;
+        }
+        assert!(saw_partial, "availability never dropped anyone");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let sys = sys(10, 2);
+        let env_cfg = EnvConfig {
+            avail_p_drop: 0.3,
+            ..EnvConfig::default()
+        };
+        let mk = |seed| {
+            AvailabilityEnv::new(&EnvInit {
+                sys: &sys,
+                env: &env_cfg,
+                seed,
+            })
+        };
+        let (mut a, mut b) = (mk(4), mk(4));
+        let base: Vec<Device> = Vec::new();
+        for _ in 0..100 {
+            let (ra, rb) = (a.next_round(&base), b.next_round(&base));
+            assert_eq!(ra.available, rb.available);
+            assert_eq!(ra.gains, rb.gains);
+        }
+    }
+}

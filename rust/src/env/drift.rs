@@ -1,0 +1,164 @@
+//! Slow random-walk drift on per-device compute/energy parameters.
+
+use super::{EnvInit, Environment, RoundEnv};
+use crate::rng::Rng;
+use crate::system::{ChannelProcess, Device};
+
+/// Compute-speed and energy-coefficient drift.
+///
+/// Each device carries two multiplicative random walks, both in log
+/// space so they stay positive and mean-reverting clamps are symmetric:
+///
+/// * `m_f` scales the maximum CPU frequency `f_max` (thermal throttling,
+///   background load);
+/// * `m_a` scales the effective capacitance `alpha_n` (supply-voltage /
+///   efficiency drift).
+///
+/// Per round: `m ← clamp(m · exp(σ·z), lo, hi)` with `z ~ N(0,1)`,
+/// `σ = drift_sigma`, `(lo, hi) = drift_clip`.  Channel gains come from
+/// the same [`ChannelProcess`] construction as the static environment.
+/// The drifted parameters are what the cost model (and the round's
+/// latency/energy) see; the control policy still planned against
+/// whatever the environment reports, so an online controller is graded
+/// on how it tracks the drift.
+pub struct DriftEnv {
+    channel: ChannelProcess,
+    streams: Vec<Rng>,
+    m_f: Vec<f64>,
+    m_a: Vec<f64>,
+    sigma: f64,
+    clip: (f64, f64),
+}
+
+impl DriftEnv {
+    pub fn new(init: &EnvInit<'_>) -> Self {
+        let n = init.sys.num_devices;
+        let mut root = Rng::new(init.seed ^ 0xD81F_7000_5EED_0001);
+        Self {
+            channel: ChannelProcess::new(init.sys, init.seed),
+            streams: (0..n).map(|i| root.fork(i as u64)).collect(),
+            m_f: vec![1.0; n],
+            m_a: vec![1.0; n],
+            sigma: init.env.drift_sigma,
+            clip: init.env.drift_clip,
+        }
+    }
+
+    /// Current frequency multipliers; test/inspection hook.
+    pub fn freq_multipliers(&self) -> &[f64] {
+        &self.m_f
+    }
+}
+
+impl Environment for DriftEnv {
+    fn name(&self) -> &'static str {
+        "drift"
+    }
+
+    fn next_round(&mut self, base: &[Device]) -> RoundEnv {
+        let gains = self.channel.next_round();
+        let (lo, hi) = self.clip;
+        for i in 0..self.streams.len() {
+            let zf = self.streams[i].normal();
+            let za = self.streams[i].normal();
+            self.m_f[i] = (self.m_f[i] * (self.sigma * zf).exp()).clamp(lo, hi);
+            self.m_a[i] = (self.m_a[i] * (self.sigma * za).exp()).clamp(lo, hi);
+        }
+        let devices = base
+            .iter()
+            .enumerate()
+            .map(|(i, d)| {
+                let mut d = d.clone();
+                d.f_max_hz = (d.f_max_hz * self.m_f[i]).max(d.f_min_hz);
+                d.alpha *= self.m_a[i];
+                d
+            })
+            .collect();
+        RoundEnv {
+            gains,
+            available: None,
+            devices: Some(devices),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EnvConfig, SystemConfig};
+    use crate::system::Fleet;
+
+    fn setup(sigma: f64) -> (SystemConfig, EnvConfig, Fleet) {
+        let sys = SystemConfig {
+            num_devices: 8,
+            ..SystemConfig::default()
+        };
+        let env_cfg = EnvConfig {
+            drift_sigma: sigma,
+            ..EnvConfig::default()
+        };
+        let mut rng = Rng::new(2);
+        let fleet = Fleet::generate(&sys, (50, 100), &mut rng);
+        (sys, env_cfg, fleet)
+    }
+
+    #[test]
+    fn parameters_move_but_stay_clamped() {
+        let (sys, env_cfg, fleet) = setup(0.1);
+        let mut env = DriftEnv::new(&EnvInit {
+            sys: &sys,
+            env: &env_cfg,
+            seed: 17,
+        });
+        let mut moved = false;
+        for _ in 0..150 {
+            let re = env.next_round(&fleet.devices);
+            let devs = re.devices.expect("drift returns devices");
+            for (d, b) in devs.iter().zip(&fleet.devices) {
+                assert!(d.f_max_hz >= d.f_min_hz);
+                assert!(d.f_max_hz <= b.f_max_hz * env_cfg.drift_clip.1 * (1.0 + 1e-12));
+                assert!(d.alpha >= b.alpha * env_cfg.drift_clip.0 * (1.0 - 1e-12));
+                assert!(d.alpha <= b.alpha * env_cfg.drift_clip.1 * (1.0 + 1e-12));
+                moved |= d.f_max_hz != b.f_max_hz;
+            }
+            // Static fields never drift.
+            for (d, b) in devs.iter().zip(&fleet.devices) {
+                assert_eq!(d.data_size, b.data_size);
+                assert_eq!(d.energy_budget_j, b.energy_budget_j);
+            }
+        }
+        assert!(moved, "drift never moved any parameter");
+    }
+
+    #[test]
+    fn zero_sigma_is_the_identity_walk() {
+        let (sys, env_cfg, fleet) = setup(0.0);
+        let mut env = DriftEnv::new(&EnvInit {
+            sys: &sys,
+            env: &env_cfg,
+            seed: 17,
+        });
+        for _ in 0..20 {
+            let re = env.next_round(&fleet.devices);
+            for (d, b) in re.devices.unwrap().iter().zip(&fleet.devices) {
+                assert_eq!(d.f_max_hz, b.f_max_hz);
+                assert_eq!(d.alpha, b.alpha);
+            }
+        }
+        assert!(env.freq_multipliers().iter().all(|&m| m == 1.0));
+    }
+
+    #[test]
+    fn gains_match_the_static_channel_stream() {
+        let (sys, env_cfg, fleet) = setup(0.05);
+        let mut env = DriftEnv::new(&EnvInit {
+            sys: &sys,
+            env: &env_cfg,
+            seed: 23,
+        });
+        let mut reference = ChannelProcess::new(&sys, 23);
+        for _ in 0..20 {
+            assert_eq!(env.next_round(&fleet.devices).gains, reference.next_round());
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! Gilbert–Elliott two-state Markov fading.
+
+use super::{EnvInit, Environment, RoundEnv};
+use crate::rng::Rng;
+use crate::system::{draw_clipped_exponential, Device};
+
+/// Per-device two-state (good/bad) Markov channel.
+///
+/// Each device carries an independent chain: in the *good* state gains
+/// are exponential with the paper's `channel_mean`; in the *bad* state
+/// the mean drops to `channel_mean * ge_bad_scale` (deep fade).  Both
+/// draws pass through the same clipped-exponential kernel as the static
+/// channel, so samples stay inside the paper's outlier band.
+///
+/// Transitions: P(good → bad) = `ge_p_bad`, P(bad → good) = `ge_p_good`;
+/// the initial state is drawn from the stationary distribution, so the
+/// process has no burn-in transient.  One RNG stream per device (forked
+/// from the root exactly like [`crate::system::ChannelProcess`]) carries
+/// both the transition and the gain draws, so device `n`'s trajectory is
+/// independent of the fleet size.
+pub struct GilbertElliottEnv {
+    streams: Vec<Rng>,
+    good: Vec<bool>,
+    p_bad: f64,
+    p_good: f64,
+    good_mean: f64,
+    bad_mean: f64,
+    clip: (f64, f64),
+}
+
+impl GilbertElliottEnv {
+    pub fn new(init: &EnvInit<'_>) -> Self {
+        let n = init.sys.num_devices;
+        let p_bad = init.env.ge_p_bad;
+        let p_good = init.env.ge_p_good;
+        // Stationary P(good); the all-absorbing corner (both probs 0)
+        // degenerates to "always good".
+        let pi_good = if p_bad + p_good > 0.0 {
+            p_good / (p_bad + p_good)
+        } else {
+            1.0
+        };
+        let mut root = Rng::new(init.seed ^ 0x6E11_BE7A_57A7_E5F0);
+        let mut streams: Vec<Rng> = (0..n).map(|i| root.fork(i as u64)).collect();
+        let good = streams.iter_mut().map(|rng| rng.f64() < pi_good).collect();
+        Self {
+            streams,
+            good,
+            p_bad,
+            p_good,
+            good_mean: init.sys.channel_mean,
+            bad_mean: init.sys.channel_mean * init.env.ge_bad_scale,
+            clip: init.sys.channel_clip,
+        }
+    }
+
+    /// Current per-device state (true = good); test/inspection hook.
+    pub fn states(&self) -> &[bool] {
+        &self.good
+    }
+}
+
+impl Environment for GilbertElliottEnv {
+    fn name(&self) -> &'static str {
+        "ge"
+    }
+
+    fn next_round(&mut self, _base: &[Device]) -> RoundEnv {
+        let (p_bad, p_good) = (self.p_bad, self.p_good);
+        let (good_mean, bad_mean, clip) = (self.good_mean, self.bad_mean, self.clip);
+        let gains = self
+            .streams
+            .iter_mut()
+            .zip(self.good.iter_mut())
+            .map(|(rng, good)| {
+                *good = super::step_two_state(rng, *good, p_bad, p_good);
+                let mean = if *good { good_mean } else { bad_mean };
+                draw_clipped_exponential(rng, mean, clip)
+            })
+            .collect();
+        RoundEnv {
+            gains,
+            available: None,
+            devices: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EnvConfig, SystemConfig};
+
+    fn build(seed: u64, env_cfg: &EnvConfig) -> GilbertElliottEnv {
+        let sys = SystemConfig {
+            num_devices: 20,
+            ..SystemConfig::default()
+        };
+        GilbertElliottEnv::new(&EnvInit {
+            sys: &sys,
+            env: env_cfg,
+            seed,
+        })
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let cfg = EnvConfig::default();
+        let (mut a, mut b, mut c) = (build(5, &cfg), build(5, &cfg), build(6, &cfg));
+        let base: Vec<Device> = Vec::new();
+        let mut diverged = false;
+        for _ in 0..50 {
+            let (ra, rb, rc) = (a.next_round(&base), b.next_round(&base), c.next_round(&base));
+            assert_eq!(ra.gains, rb.gains);
+            diverged |= ra.gains != rc.gains;
+        }
+        assert!(diverged, "different seeds should give different fading");
+    }
+
+    #[test]
+    fn bad_state_drags_the_long_run_mean_down() {
+        // With fading the time-average gain must sit clearly below the
+        // good-state mean (some rounds are deep fades).
+        let cfg = EnvConfig {
+            ge_p_bad: 0.4,
+            ge_p_good: 0.4,
+            ..EnvConfig::default()
+        };
+        let mut env = build(9, &cfg);
+        let base: Vec<Device> = Vec::new();
+        let mut sum = 0.0;
+        let mut count = 0usize;
+        for _ in 0..400 {
+            for h in env.next_round(&base).gains {
+                sum += h;
+                count += 1;
+            }
+        }
+        let mean = sum / count as f64;
+        // Static clipped mean is ~0.095; half the time in a deep fade
+        // pulls it well under that.
+        assert!(mean < 0.08, "fading mean {mean} too close to static");
+    }
+
+    #[test]
+    fn state_chain_actually_transitions() {
+        let cfg = EnvConfig::default();
+        let mut env = build(11, &cfg);
+        let base: Vec<Device> = Vec::new();
+        let start = env.states().to_vec();
+        let mut moved = false;
+        for _ in 0..60 {
+            env.next_round(&base);
+            moved |= env.states() != &start[..];
+        }
+        assert!(moved, "no transition in 60 rounds");
+    }
+}

@@ -1,0 +1,251 @@
+//! Dynamic edge environments: the per-round realization of system
+//! randomness as a pluggable, first-class sweep axis.
+//!
+//! The paper evaluates LROA only under an IID exponential channel and an
+//! always-on fleet, but its claim — Lyapunov-based online control works
+//! *without knowledge of future dynamics* — is best stressed under
+//! non-stationary conditions.  An [`Environment`] owns everything the
+//! physical world decides each round:
+//!
+//! * the channel gains `h_n^t`,
+//! * the reachable candidate set `N^t` (device availability), and
+//! * any slow drift of per-device compute/energy parameters.
+//!
+//! The FL server draws one [`RoundEnv`] per round and hands policies only
+//! the available sub-problem; policies never see (and cannot schedule)
+//! unreachable devices.  Adding an environment is one impl plus one
+//! [`REGISTRY`] line, mirroring [`crate::control::policy`].
+//!
+//! The four registered environments:
+//!
+//! | name     | channel                      | availability     | parameters |
+//! |----------|------------------------------|------------------|------------|
+//! | `static` | IID exponential (the paper)  | always-on        | fixed      |
+//! | `ge`     | Gilbert–Elliott Markov fading| always-on        | fixed      |
+//! | `avail`  | IID exponential              | Markov on/off    | fixed      |
+//! | `drift`  | IID exponential              | always-on        | random walk|
+//!
+//! `static` is bitwise-identical to the pre-env [`ChannelProcess`] path
+//! (`tests/policy_parity.rs` proves it), so the paper's figures are
+//! untouched by this layer.  `avail` and `drift` reuse the *same* channel
+//! construction as `static`, so their gains coincide with the static
+//! realization round for round — the masking/drift is the only delta,
+//! which makes robustness comparisons clean.
+//!
+//! [`ChannelProcess`]: crate::system::ChannelProcess
+
+mod availability;
+mod drift;
+mod gilbert_elliott;
+mod static_env;
+
+pub use availability::AvailabilityEnv;
+pub use drift::DriftEnv;
+pub use gilbert_elliott::GilbertElliottEnv;
+pub use static_env::StaticEnv;
+
+use crate::config::{EnvConfig, EnvKind, SystemConfig};
+use crate::rng::Rng;
+use crate::system::Device;
+use crate::Result;
+
+/// One step of a two-state Markov chain, consuming one uniform draw:
+/// from state `A` leave with probability `p_leave`; from state `¬A`
+/// return with probability `p_enter`.  Returns the new "in `A`" flag.
+/// Shared by the fading (good/bad) and availability (on/off) chains so
+/// the transition convention can never diverge between environments.
+pub(crate) fn step_two_state(rng: &mut Rng, in_a: bool, p_leave: f64, p_enter: f64) -> bool {
+    let u = rng.f64();
+    if in_a {
+        u >= p_leave
+    } else {
+        u < p_enter
+    }
+}
+
+/// One round's environment realization.
+pub struct RoundEnv {
+    /// Channel gains `h_n^t`, one per device (drawn for *every* device —
+    /// also unreachable ones — so gain streams never depend on the
+    /// availability trajectory).
+    pub gains: Vec<f64>,
+    /// Sorted global ids of the devices reachable this round (`N^t`);
+    /// `None` means "the whole fleet" — always-on environments return it
+    /// so the per-round fast path never allocates an identity map.
+    pub available: Option<Vec<usize>>,
+    /// Drifted per-device parameters, when the environment moves them;
+    /// `None` means "use the base fleet unchanged".
+    pub devices: Option<Vec<Device>>,
+}
+
+/// One dynamic-environment model's behaviour across rounds.
+///
+/// Environments are stateful (Markov chains, random walks) and own their
+/// RNG streams; a fixed seed fully determines the whole trajectory, and
+/// per-device streams are forked so device `n`'s realization never
+/// depends on the fleet size or on other devices' draws.
+pub trait Environment: Send {
+    /// Registry name.
+    fn name(&self) -> &'static str;
+
+    /// Realize the next round: gains, candidate set, parameter drift.
+    /// `base` is the fleet's static parameter set (drift applies on top).
+    fn next_round(&mut self, base: &[Device]) -> RoundEnv;
+}
+
+/// Everything an environment constructor may need.
+pub struct EnvInit<'a> {
+    pub sys: &'a SystemConfig,
+    pub env: &'a EnvConfig,
+    /// Channel-stream seed (the server passes its channel seed here, so
+    /// `static` reproduces the pre-env gain streams bitwise).
+    pub seed: u64,
+}
+
+type EnvCtor = fn(&EnvInit<'_>) -> Box<dyn Environment>;
+
+/// One registry row: environment id, canonical name, constructor.
+pub struct EnvSpec {
+    pub id: EnvKind,
+    pub name: &'static str,
+    pub build: EnvCtor,
+}
+
+fn build_static(init: &EnvInit<'_>) -> Box<dyn Environment> {
+    Box::new(StaticEnv::new(init))
+}
+
+fn build_gilbert_elliott(init: &EnvInit<'_>) -> Box<dyn Environment> {
+    Box::new(GilbertElliottEnv::new(init))
+}
+
+fn build_availability(init: &EnvInit<'_>) -> Box<dyn Environment> {
+    Box::new(AvailabilityEnv::new(init))
+}
+
+fn build_drift(init: &EnvInit<'_>) -> Box<dyn Environment> {
+    Box::new(DriftEnv::new(init))
+}
+
+/// The name → constructor registry all dispatch goes through.
+pub const REGISTRY: &[EnvSpec] = &[
+    EnvSpec {
+        id: EnvKind::Static,
+        name: "static",
+        build: build_static,
+    },
+    EnvSpec {
+        id: EnvKind::GilbertElliott,
+        name: "ge",
+        build: build_gilbert_elliott,
+    },
+    EnvSpec {
+        id: EnvKind::Availability,
+        name: "avail",
+        build: build_availability,
+    },
+    EnvSpec {
+        id: EnvKind::Drift,
+        name: "drift",
+        build: build_drift,
+    },
+];
+
+/// Build the registered environment for a config [`EnvKind`] id.
+pub fn build(kind: EnvKind, init: &EnvInit<'_>) -> Box<dyn Environment> {
+    let spec = REGISTRY
+        .iter()
+        .find(|s| s.id == kind)
+        .expect("every EnvKind variant is registered");
+    (spec.build)(init)
+}
+
+/// Build an environment by name or alias (alias table: [`EnvKind::parse`]).
+pub fn from_name(name: &str, init: &EnvInit<'_>) -> Result<Box<dyn Environment>> {
+    Ok(build(EnvKind::parse(name)?, init))
+}
+
+/// Canonical names of every registered environment, registry order.
+pub fn names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|s| s.name).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (SystemConfig, EnvConfig) {
+        let sys = SystemConfig {
+            num_devices: 10,
+            ..SystemConfig::default()
+        };
+        (sys, EnvConfig::default())
+    }
+
+    #[test]
+    fn registry_covers_every_env_variant() {
+        for kind in EnvKind::ALL {
+            assert!(
+                REGISTRY.iter().any(|s| s.id == kind),
+                "{kind} missing from registry"
+            );
+        }
+        assert_eq!(names(), vec!["static", "ge", "avail", "drift"]);
+    }
+
+    #[test]
+    fn from_name_accepts_aliases_and_rejects_unknown() {
+        let (sys, env) = setup();
+        let init = EnvInit {
+            sys: &sys,
+            env: &env,
+            seed: 1,
+        };
+        for alias in ["static", "ge", "gilbert-elliott", "avail", "availability", "drift"] {
+            assert!(from_name(alias, &init).is_ok(), "{alias}");
+        }
+        assert!(from_name("nope", &init).is_err());
+    }
+
+    #[test]
+    fn every_env_yields_well_formed_rounds() {
+        let (sys, env) = setup();
+        let init = EnvInit {
+            sys: &sys,
+            env: &env,
+            seed: 7,
+        };
+        let mut rng = crate::rng::Rng::new(3);
+        let fleet = crate::system::Fleet::generate(&sys, (50, 100), &mut rng);
+        for spec in REGISTRY {
+            let mut e = (spec.build)(&init);
+            assert_eq!(e.name(), spec.name);
+            for _ in 0..50 {
+                let re = e.next_round(&fleet.devices);
+                assert_eq!(re.gains.len(), 10, "{}", spec.name);
+                let (lo, hi) = sys.channel_clip;
+                assert!(
+                    re.gains.iter().all(|&h| h >= lo && h <= hi),
+                    "{}: gain outside band",
+                    spec.name
+                );
+                if let Some(av) = &re.available {
+                    assert!(!av.is_empty(), "{}", spec.name);
+                    assert!(
+                        av.windows(2).all(|w| w[0] < w[1]),
+                        "{}: availability not sorted-unique",
+                        spec.name
+                    );
+                    assert!(
+                        av.iter().all(|&i| i < 10),
+                        "{}: id out of range",
+                        spec.name
+                    );
+                }
+                if let Some(devs) = &re.devices {
+                    assert_eq!(devs.len(), 10, "{}", spec.name);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,62 @@
+//! The paper's environment: IID exponential fading, always-on fleet.
+
+use super::{EnvInit, Environment, RoundEnv};
+use crate::system::{ChannelProcess, Device};
+
+/// IID exponential channel (mean `channel_mean`, clipped), every device
+/// reachable every round, no parameter drift.
+///
+/// This wraps [`ChannelProcess`] with the exact seed the pre-env server
+/// used, so trajectories are **bitwise identical** to the pre-env code
+/// path — the golden parity tests in `tests/policy_parity.rs` pin this.
+pub struct StaticEnv {
+    channel: ChannelProcess,
+}
+
+impl StaticEnv {
+    pub fn new(init: &EnvInit<'_>) -> Self {
+        Self {
+            channel: ChannelProcess::new(init.sys, init.seed),
+        }
+    }
+}
+
+impl Environment for StaticEnv {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn next_round(&mut self, _base: &[Device]) -> RoundEnv {
+        RoundEnv {
+            gains: self.channel.next_round(),
+            available: None,
+            devices: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EnvConfig, SystemConfig};
+
+    #[test]
+    fn matches_channel_process_bitwise() {
+        let sys = SystemConfig::default();
+        let env_cfg = EnvConfig::default();
+        let init = EnvInit {
+            sys: &sys,
+            env: &env_cfg,
+            seed: 42,
+        };
+        let mut env = StaticEnv::new(&init);
+        let mut reference = ChannelProcess::new(&sys, 42);
+        let base: Vec<Device> = Vec::new();
+        for _ in 0..25 {
+            let re = env.next_round(&base);
+            assert_eq!(re.gains, reference.next_round());
+            assert!(re.available.is_none(), "static = whole fleet reachable");
+            assert!(re.devices.is_none());
+        }
+    }
+}

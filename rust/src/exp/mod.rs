@@ -1,17 +1,21 @@
 //! Declarative multi-scenario experiment engine.
 //!
-//! The paper's evaluation is a grid: policy × K × µ/ν × seed × dataset,
-//! every cell run on shared channel realizations.  This subsystem makes
-//! that grid a value instead of a hand-rolled loop:
+//! The paper's evaluation is a grid: policy × environment × K × µ/ν ×
+//! seed × dataset, every cell run on shared channel realizations.  This
+//! subsystem makes that grid a value instead of a hand-rolled loop:
 //!
-//! * [`spec`] — [`SweepSpec`], the declarative grid, and its expansion
-//!   into concrete [`Scenario`]s (config + label + group key);
+//! * [`spec`] — [`SweepSpec`], the declarative grid, its expansion into
+//!   concrete [`Scenario`]s (config + label + group key), and the
+//!   machine-readable grid manifest ([`manifest_json`]) the figure
+//!   pipeline consumes;
 //! * [`runner`] — the thread-pooled scenario runner (deterministic
 //!   per-scenario results, slot-ordered output) and the mean±std
 //!   aggregation of seed repeats.
 //!
-//! The `lroa sweep` CLI subcommand, the figure examples, and the harness
-//! all sit on top of this module.
+//! Sweeps are resumable: `lroa sweep --resume` skips cells whose CSV
+//! already exists under `--out`, so a killed grid continues where it
+//! stopped.  The `lroa sweep` CLI subcommand, the figure examples, and
+//! the harness all sit on top of this module.
 
 pub mod runner;
 pub mod spec;
@@ -19,4 +23,4 @@ pub mod spec;
 pub use runner::{
     run_scenarios, summarize_groups, GroupSummary, ScenarioResult, Stat,
 };
-pub use spec::{Scenario, SweepSpec};
+pub use spec::{manifest_json, Scenario, SweepSpec};

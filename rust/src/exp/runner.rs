@@ -47,6 +47,22 @@ fn run_one(scenario: Scenario) -> Result<ScenarioResult> {
     server.run()?;
     let mut recorder = std::mem::take(&mut server.recorder);
     recorder.label = scenario.label.clone();
+    // Stream the cell's CSV out the moment it finishes: a sweep killed
+    // mid-grid keeps every completed cell, and --resume skips them.
+    // Write-then-rename so a kill mid-write never leaves a truncated
+    // CSV that --resume would mistake for a finished cell; the `.hash`
+    // sidecar (written last) records the config the cell actually ran
+    // under, so resume re-runs cells whose config has since changed.
+    if let Some(dir) = &scenario.csv_dir {
+        std::fs::create_dir_all(dir)?;
+        let tmp = dir.join(format!("{}.csv.tmp", recorder.label));
+        recorder.write_csv(&tmp)?;
+        std::fs::rename(&tmp, dir.join(format!("{}.csv", recorder.label)))?;
+        std::fs::write(
+            dir.join(format!("{}.hash", recorder.label)),
+            scenario.fingerprint(),
+        )?;
+    }
     let wall_s = t0.elapsed().as_secs_f64();
     eprintln!(
         "[exp] {}: {} rounds, modeled {:.1}s, final acc {:.4}, wall {:.1}s",

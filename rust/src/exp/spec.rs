@@ -1,7 +1,9 @@
-//! Sweep specification and grid expansion.
+//! Sweep specification, grid expansion, and the machine-readable
+//! sweep manifest.
 
-use crate::config::{Config, Policy};
+use crate::config::{Config, EnvKind, Policy};
 use crate::fl::SimMode;
+use crate::json::{obj, Json};
 use crate::Result;
 
 /// One fully-resolved experiment cell: a config plus naming metadata.
@@ -16,6 +18,26 @@ pub struct Scenario {
     pub cfg: Config,
     /// Full training or control-plane-only.
     pub mode: SimMode,
+    /// When set, the runner writes `<csv_dir>/<label>.csv` as soon as
+    /// this cell completes (not at the end-of-grid barrier), so a killed
+    /// sweep is resumable cell by cell (`lroa sweep --resume`).
+    pub csv_dir: Option<std::path::PathBuf>,
+}
+
+impl Scenario {
+    /// Everything that determines this cell's CSV, in one comparable
+    /// string: sim mode + the full-precision config hash — plus the
+    /// artifacts path for Full mode, where the loaded artifacts shape
+    /// the results (a sim-mode resume survives a pure path change).
+    /// The runner records it in the `.hash` sidecar at cell completion;
+    /// `--resume` re-runs any cell whose recorded fingerprint no longer
+    /// matches.
+    pub fn fingerprint(&self) -> String {
+        match self.mode {
+            SimMode::Full => format!("train:{}:{}", self.cfg.artifacts_dir, self.cfg.hash_hex()),
+            SimMode::ControlPlaneOnly => format!("sim:{}", self.cfg.hash_hex()),
+        }
+    }
 }
 
 /// A declarative sweep: the cartesian product of every non-empty axis.
@@ -28,6 +50,8 @@ pub struct Scenario {
 pub struct SweepSpec {
     pub datasets: Vec<String>,
     pub policies: Vec<Policy>,
+    /// Dynamic environments ([`crate::env`]).
+    pub envs: Vec<EnvKind>,
     /// Sampling frequency `K` values.
     pub ks: Vec<usize>,
     /// λ scale factors µ.
@@ -43,6 +67,11 @@ pub struct SweepSpec {
     pub threads: usize,
     /// Output directory for CSV/JSON emission.
     pub out_dir: String,
+    /// Skip cells whose CSV already exists under `out_dir`.  Consumed by
+    /// the `lroa sweep` CLI front-end (which owns the skip partition,
+    /// the duplicate-label guard, and per-cell `csv_dir` assignment);
+    /// `expand()`/`run_scenarios` do not act on it themselves.
+    pub resume: bool,
     /// Extra `--section.key=value` overrides applied to every cell.
     pub overrides: Vec<String>,
 }
@@ -52,6 +81,7 @@ impl Default for SweepSpec {
         Self {
             datasets: vec!["cifar".into()],
             policies: Vec::new(),
+            envs: Vec::new(),
             ks: Vec::new(),
             mus: Vec::new(),
             nus: Vec::new(),
@@ -60,6 +90,7 @@ impl Default for SweepSpec {
             mode: SimMode::ControlPlaneOnly,
             threads: 0,
             out_dir: "runs/sweep".into(),
+            resume: false,
             overrides: Vec::new(),
         }
     }
@@ -92,42 +123,56 @@ impl SweepSpec {
         let mut out = Vec::new();
         for dataset in &self.datasets {
             for &p in &axis(&self.policies) {
-                for &k in &axis(&self.ks) {
-                    for &mu in &axis(&self.mus) {
-                        for &nu in &axis(&self.nus) {
-                            for &seed in &axis(&self.seeds) {
-                                let mut cfg = base(dataset)?;
-                                if let Some(p) = p {
-                                    cfg.train.policy = p;
+                for &e in &axis(&self.envs) {
+                    for &k in &axis(&self.ks) {
+                        for &mu in &axis(&self.mus) {
+                            for &nu in &axis(&self.nus) {
+                                for &seed in &axis(&self.seeds) {
+                                    let mut cfg = base(dataset)?;
+                                    if let Some(p) = p {
+                                        cfg.train.policy = p;
+                                    }
+                                    if let Some(e) = e {
+                                        cfg.env.kind = e;
+                                    }
+                                    if let Some(k) = k {
+                                        cfg.system.k = k;
+                                    }
+                                    if let Some(mu) = mu {
+                                        cfg.control.mu = mu;
+                                    }
+                                    if let Some(nu) = nu {
+                                        cfg.control.nu = nu;
+                                    }
+                                    if let Some(seed) = seed {
+                                        cfg.train.seed = seed;
+                                    }
+                                    if let Some(rounds) = self.rounds {
+                                        cfg.train.rounds = rounds;
+                                    }
+                                    cfg.apply_cli(&self.overrides)?;
+                                    cfg.validate()?;
+                                    let group = self.group_label(&cfg, dataset);
+                                    // Label with the *effective* seed (post-
+                                    // override): a --train.seed override that
+                                    // clobbers the seed axis then yields
+                                    // duplicate labels, which the sweep's
+                                    // duplicate-label guard rejects instead
+                                    // of silently running N identical cells.
+                                    let label = match seed {
+                                        Some(_) if self.seeds.len() > 1 => {
+                                            format!("{group}-s{}", cfg.train.seed)
+                                        }
+                                        _ => group.clone(),
+                                    };
+                                    out.push(Scenario {
+                                        label,
+                                        group,
+                                        cfg,
+                                        mode: self.mode,
+                                        csv_dir: None,
+                                    });
                                 }
-                                if let Some(k) = k {
-                                    cfg.system.k = k;
-                                }
-                                if let Some(mu) = mu {
-                                    cfg.control.mu = mu;
-                                }
-                                if let Some(nu) = nu {
-                                    cfg.control.nu = nu;
-                                }
-                                if let Some(seed) = seed {
-                                    cfg.train.seed = seed;
-                                }
-                                if let Some(rounds) = self.rounds {
-                                    cfg.train.rounds = rounds;
-                                }
-                                cfg.apply_cli(&self.overrides)?;
-                                cfg.validate()?;
-                                let group = self.group_label(&cfg, dataset);
-                                let label = match seed {
-                                    Some(s) if self.seeds.len() > 1 => format!("{group}-s{s}"),
-                                    _ => group.clone(),
-                                };
-                                out.push(Scenario {
-                                    label,
-                                    group,
-                                    cfg,
-                                    mode: self.mode,
-                                });
                             }
                         }
                     }
@@ -141,6 +186,9 @@ impl SweepSpec {
     /// only when they actually vary.
     fn group_label(&self, cfg: &Config, dataset: &str) -> String {
         let mut s = format!("{}-{}", cfg.train.policy.name(), dataset);
+        if self.envs.len() > 1 {
+            s.push_str(&format!("-{}", cfg.env.kind));
+        }
         if self.ks.len() > 1 {
             s.push_str(&format!("-K{}", cfg.system.k));
         }
@@ -156,8 +204,10 @@ impl SweepSpec {
     /// Parse the `lroa sweep` command line.
     ///
     /// Recognized (all `--key=value`): `--datasets`, `--policies`,
-    /// `--ks`, `--mus`, `--nus`, `--seeds` (comma list or `a..b`
-    /// inclusive), `--rounds`, `--threads`, `--mode=sim|train`, `--out`.
+    /// `--envs` (comma list of environment names or `all`), `--ks`,
+    /// `--mus`, `--nus`, `--seeds` (comma list or `a..b` inclusive),
+    /// `--rounds`, `--threads`, `--mode=sim|train`, `--out`, plus the
+    /// bare flag `--resume` (skip cells whose CSV already exists).
     /// Dotted `--section.key=value` config overrides pass through to
     /// every cell; anything else is an error.
     pub fn from_cli(args: &[String]) -> Result<SweepSpec> {
@@ -166,6 +216,10 @@ impl SweepSpec {
             let Some(rest) = arg.strip_prefix("--") else {
                 anyhow::bail!("sweep: unexpected argument {arg:?}");
             };
+            if rest == "resume" {
+                spec.resume = true;
+                continue;
+            }
             let Some((key, val)) = rest.split_once('=') else {
                 anyhow::bail!("sweep: expected --key=value, got {arg:?}");
             };
@@ -180,6 +234,7 @@ impl SweepSpec {
                             .collect::<Result<Vec<_>>>()?
                     }
                 }
+                "envs" => spec.envs = EnvKind::parse_list(val)?,
                 "ks" => spec.ks = parse_list(val, "ks")?,
                 "mus" => spec.mus = parse_list(val, "mus")?,
                 "nus" => spec.nus = parse_list(val, "nus")?,
@@ -200,6 +255,40 @@ impl SweepSpec {
         }
         Ok(spec)
     }
+}
+
+/// Machine-readable description of every cell in an expanded grid — the
+/// contract between `lroa sweep` and the figure pipeline.  Written to
+/// `<out>/manifest.json` right after expansion (before any cell runs),
+/// so a crashed or `--resume`d sweep still documents its full grid.
+pub fn manifest_json(scenarios: &[Scenario]) -> Json {
+    let cells: Vec<Json> = scenarios
+        .iter()
+        .map(|s| {
+            obj(vec![
+                ("group", Json::Str(s.group.clone())),
+                ("label", Json::Str(s.label.clone())),
+                ("seed", Json::Num(s.cfg.train.seed as f64)),
+                ("policy", Json::Str(s.cfg.train.policy.name().to_string())),
+                ("env", Json::Str(s.cfg.env.kind.name().to_string())),
+                ("dataset", Json::Str(s.cfg.train.dataset.clone())),
+                (
+                    "mode",
+                    Json::Str(
+                        match s.mode {
+                            SimMode::Full => "train",
+                            SimMode::ControlPlaneOnly => "sim",
+                        }
+                        .to_string(),
+                    ),
+                ),
+                ("rounds", Json::Num(s.cfg.train.rounds as f64)),
+                ("config_hash", Json::Str(s.cfg.hash_hex())),
+                ("csv", Json::Str(format!("{}.csv", s.label))),
+            ])
+        })
+        .collect();
+    obj(vec![("cells", Json::Arr(cells))])
 }
 
 fn parse_one<T: std::str::FromStr>(val: &str, what: &str) -> Result<T> {
@@ -295,6 +384,7 @@ mod tests {
     fn cli_round_trip() {
         let args: Vec<String> = [
             "--policies=lroa,uni-s",
+            "--envs=static,ge",
             "--ks=2,4",
             "--nus=1e4,1e5",
             "--seeds=1..3",
@@ -303,6 +393,7 @@ mod tests {
             "--datasets=femnist",
             "--mode=sim",
             "--out=runs/mysweep",
+            "--resume",
             "--system.num_devices=32",
         ]
         .iter()
@@ -310,15 +401,17 @@ mod tests {
         .collect();
         let spec = SweepSpec::from_cli(&args).unwrap();
         assert_eq!(spec.policies, vec![Policy::Lroa, Policy::UniformStatic]);
+        assert_eq!(spec.envs, vec![EnvKind::Static, EnvKind::GilbertElliott]);
         assert_eq!(spec.ks, vec![2, 4]);
         assert_eq!(spec.nus, vec![1e4, 1e5]);
         assert_eq!(spec.seeds, vec![1, 2, 3]);
         assert_eq!(spec.rounds, Some(50));
         assert_eq!(spec.threads, 4);
         assert_eq!(spec.out_dir, "runs/mysweep");
+        assert!(spec.resume);
         assert_eq!(spec.overrides, vec!["--system.num_devices=32".to_string()]);
         let cells = spec.expand().unwrap();
-        assert_eq!(cells.len(), 2 * 2 * 2 * 3);
+        assert_eq!(cells.len(), 2 * 2 * 2 * 2 * 3);
         assert!(cells.iter().all(|c| c.cfg.system.num_devices == 32));
     }
 
@@ -330,6 +423,7 @@ mod tests {
         assert!(bad("--ks=two").is_err());
         assert!(bad("--mode=nope").is_err());
         assert!(bad("--policies=nope").is_err());
+        assert!(bad("--envs=nope").is_err());
         assert!(bad("--seeds=9..3").is_err());
     }
 
@@ -337,5 +431,79 @@ mod tests {
     fn policies_all_shorthand() {
         let spec = SweepSpec::from_cli(&["--policies=all".to_string()]).unwrap();
         assert_eq!(spec.policies, Policy::ALL.to_vec());
+        let spec = SweepSpec::from_cli(&["--envs=all".to_string()]).unwrap();
+        assert_eq!(spec.envs, EnvKind::ALL.to_vec());
+    }
+
+    #[test]
+    fn env_axis_expands_and_labels() {
+        let spec = SweepSpec {
+            datasets: vec!["cifar".into()],
+            policies: vec![Policy::Lroa, Policy::UniformStatic],
+            envs: EnvKind::ALL.to_vec(),
+            seeds: vec![1],
+            rounds: Some(5),
+            ..SweepSpec::default()
+        };
+        let cells = spec.expand().unwrap();
+        assert_eq!(cells.len(), 2 * 4);
+        assert_eq!(cells[0].label, "LROA-cifar-static");
+        assert_eq!(cells[1].label, "LROA-cifar-ge");
+        assert_eq!(cells[2].label, "LROA-cifar-avail");
+        assert_eq!(cells[3].label, "LROA-cifar-drift");
+        assert_eq!(cells[3].cfg.env.kind, EnvKind::Drift);
+        // A single pinned env adds no label segment.
+        let pinned = SweepSpec {
+            datasets: vec!["cifar".into()],
+            envs: vec![EnvKind::GilbertElliott],
+            ..SweepSpec::default()
+        };
+        let cells = pinned.expand().unwrap();
+        assert_eq!(cells[0].label, "LROA-cifar");
+        assert_eq!(cells[0].cfg.env.kind, EnvKind::GilbertElliott);
+    }
+
+    #[test]
+    fn manifest_covers_every_cell() {
+        let spec = SweepSpec {
+            datasets: vec!["cifar".into()],
+            policies: vec![Policy::Lroa, Policy::UniformStatic],
+            envs: vec![EnvKind::Static, EnvKind::Availability],
+            seeds: vec![1, 2],
+            rounds: Some(7),
+            ..SweepSpec::default()
+        };
+        let cells = spec.expand().unwrap();
+        let manifest = manifest_json(&cells);
+        let arr = manifest.get("cells").and_then(|c| c.as_arr()).unwrap();
+        assert_eq!(arr.len(), cells.len());
+        for (cell, sc) in arr.iter().zip(&cells) {
+            assert_eq!(cell.get("label").unwrap().as_str().unwrap(), sc.label);
+            assert_eq!(cell.get("group").unwrap().as_str().unwrap(), sc.group);
+            assert_eq!(
+                cell.get("env").unwrap().as_str().unwrap(),
+                sc.cfg.env.kind.name()
+            );
+            assert_eq!(
+                cell.get("policy").unwrap().as_str().unwrap(),
+                sc.cfg.train.policy.name()
+            );
+            assert_eq!(cell.get("mode").unwrap().as_str().unwrap(), "sim");
+            assert_eq!(cell.get("rounds").unwrap().as_usize().unwrap(), 7);
+            assert_eq!(
+                cell.get("csv").unwrap().as_str().unwrap(),
+                format!("{}.csv", sc.label)
+            );
+            assert_eq!(
+                cell.get("config_hash").unwrap().as_str().unwrap().len(),
+                16
+            );
+        }
+        // The manifest round-trips through the in-tree JSON parser.
+        let parsed = crate::json::Json::parse(&manifest.to_string()).unwrap();
+        assert_eq!(
+            parsed.get("cells").and_then(|c| c.as_arr()).unwrap().len(),
+            cells.len()
+        );
     }
 }

@@ -5,11 +5,13 @@
 //!   momentum-SGD through the PJRT `train_step` artifact) and the global
 //!   test-set evaluator;
 //! * [`server`] — the synchronous FL server as an eight-stage round
-//!   pipeline (channel report → control solve → sample → cost model →
+//!   pipeline (environment draw → control solve → sample → cost model →
 //!   local train → aggregate → queue advance → record/evaluate).  All
 //!   scheme-specific behaviour is delegated to a
-//!   [`crate::control::RoundPolicy`]; local training fans out over
-//!   [`crate::par`] worker threads with bitwise-deterministic results.
+//!   [`crate::control::RoundPolicy`], all world-specific randomness to a
+//!   [`crate::env::Environment`] (channels, availability, drift); local
+//!   training fans out over [`crate::par`] worker threads with
+//!   bitwise-deterministic results.
 
 mod server;
 mod trainer;

@@ -1,10 +1,13 @@
 //! The synchronous FL server — Algorithm 1 as a staged round pipeline.
 //!
 //! Every round flows through the same eight stages; nothing scheme-
-//! specific lives here anymore (that moved behind [`RoundPolicy`]):
+//! specific lives here anymore (that moved behind [`RoundPolicy`]), and
+//! nothing world-specific either (that lives behind
+//! [`crate::env::Environment`]):
 //!
-//! 1. **channel report** — devices report `h_n^t`;
-//! 2. **control solve**  — the policy allocates `(f, p, q)`;
+//! 1. **environment draw** — the environment realizes `h_n^t`, the
+//!    reachable candidate set `N^t`, and any parameter drift;
+//! 2. **control solve**  — the policy allocates `(f, p, q)` over `N^t`;
 //! 3. **sample**         — the policy draws the participant multiset `K^t`;
 //! 4. **cost model**     — eqs. (6)–(15) per device, makespan over `K^t`;
 //! 5. **local train**    — participants train in parallel (Full mode),
@@ -12,6 +15,15 @@
 //! 6. **queue advance**  — virtual energy queues, eqs. (19)–(20);
 //! 7. **record**         — the round's metrics ledger entry;
 //! 8. **evaluate**       — periodic global test-set evaluation.
+//!
+//! When the whole fleet is reachable (the static default) stage 2 sees
+//! the full problem through a fast path that is bitwise-identical to the
+//! pre-env pipeline.  Under partial availability the policy is handed a
+//! *compacted* sub-problem (devices, weights, gains, backlogs sliced to
+//! `N^t`, with [`RoundContext::ids`] mapping positions back to global
+//! ids) and the resulting plan is scattered back to fleet indexing with
+//! `q = 0` for unreachable devices — which zeroes their selection
+//! probability, expected energy, and objective contribution.
 //!
 //! Stage 5 fans client updates over scoped worker threads.  The per-client
 //! RNG is forked deterministically (keyed by `(t, client)`, in sorted
@@ -22,14 +34,16 @@ use std::path::Path;
 
 use super::trainer::{Evaluator, LocalTrainer};
 use crate::config::Config;
-use crate::control::{self, policy, PolicyInit, RoundContext, RoundPlan, RoundPolicy};
+use crate::control::{self, policy, Controls, PolicyInit, RoundContext, RoundPlan, RoundPolicy};
 use crate::control::{hyper, VirtualQueues};
 use crate::data::SyntheticTask;
+use crate::env::{self, Environment, RoundEnv};
 use crate::metrics::{Recorder, RoundRecord};
 use crate::par;
 use crate::rng::Rng;
 use crate::runtime::{Engine, Manifest};
-use crate::system::{selection_probability, ChannelProcess, Fleet, RoundCosts};
+use crate::sampling::Selection;
+use crate::system::{selection_probability, Device, Fleet, RoundCosts};
 use crate::Result;
 
 /// Whether the server actually trains a model or only exercises the
@@ -59,7 +73,10 @@ pub struct Server {
     task: Option<SyntheticTask>,
     evaluator: Option<Evaluator>,
     fleet: Fleet,
-    channel: ChannelProcess,
+    env: Box<dyn Environment>,
+    /// Identity position → id map for full-availability rounds (cached:
+    /// the fast path must not allocate per round).
+    identity: Vec<usize>,
     queues: VirtualQueues,
     policy: Box<dyn RoundPolicy>,
     sample_rng: Rng,
@@ -161,7 +178,17 @@ impl Server {
         let round_policy = policy::build(cfg.train.policy, &init);
 
         let budgets = fleet.devices.iter().map(|d| d.energy_budget_j).collect();
-        let channel = ChannelProcess::new(&cfg.system, seed ^ 0xC4A1);
+        // The environment owns the round randomness; it receives the seed
+        // the pre-env server gave ChannelProcess, so `env = static`
+        // reproduces the paper's gain streams bitwise.
+        let environment = env::build(
+            cfg.env.kind,
+            &env::EnvInit {
+                sys: &cfg.system,
+                env: &cfg.env,
+                seed: seed ^ 0xC4A1,
+            },
+        );
 
         let label = format!("{}-{}", round_policy.name(), cfg.train.dataset);
         Ok(Server {
@@ -170,7 +197,8 @@ impl Server {
             task,
             evaluator,
             fleet,
-            channel,
+            env: environment,
+            identity: (0..n).collect(),
             queues: VirtualQueues::new(budgets),
             policy: round_policy,
             sample_rng: Rng::new(seed ^ 0x5A3B_1E00),
@@ -224,51 +252,79 @@ impl Server {
 
     /// Execute one communication round: the eight-stage pipeline.
     pub fn round(&mut self, t: usize) -> Result<()> {
-        // (1) Devices report channel states.
-        let h = self.channel.next_round();
+        // (1) The environment realizes this round's randomness: channel
+        // gains, the reachable candidate set N^t, and parameter drift.
+        let RoundEnv {
+            gains: h,
+            available,
+            devices: drifted,
+        } = self.env.next_round(&self.fleet.devices);
+        let n = self.fleet.len();
+        let devices: &[Device] = drifted.as_deref().unwrap_or(&self.fleet.devices);
 
-        // (2)+(3) The policy solves for controls and samples K^t.
-        let plan = self.plan_round(t, &h);
+        // (2)+(3) The policy solves for controls and samples K^t over the
+        // reachable sub-problem (the full fleet on the fast path).
+        let k = self.cfg.system.k;
+        let plan = match available.as_deref() {
+            Some(avail) if avail.len() < n => {
+                let sub_devices: Vec<Device> =
+                    avail.iter().map(|&i| devices[i].clone()).collect();
+                let w = self.fleet.weights();
+                let wsum: f64 = avail.iter().map(|&i| w[i]).sum();
+                let sub_weights: Vec<f64> = avail.iter().map(|&i| w[i] / wsum).collect();
+                let sub_h: Vec<f64> = avail.iter().map(|&i| h[i]).collect();
+                let backlogs = self.queues.backlogs();
+                let sub_backlogs: Vec<f64> = avail.iter().map(|&i| backlogs[i]).collect();
+                let ctx = RoundContext {
+                    t,
+                    k,
+                    devices: &sub_devices,
+                    weights: &sub_weights,
+                    ids: avail,
+                    h: &sub_h,
+                    backlogs: &sub_backlogs,
+                };
+                let sub_plan = self.policy.plan(&ctx, &mut self.sample_rng);
+                scatter_plan(sub_plan, avail, &self.fleet.devices)
+            }
+            _ => {
+                // Full fleet reachable (None, or an explicit full set).
+                let ctx = RoundContext {
+                    t,
+                    k,
+                    devices,
+                    weights: self.fleet.weights(),
+                    ids: &self.identity,
+                    h: &h,
+                    backlogs: self.queues.backlogs(),
+                };
+                self.policy.plan(&ctx, &mut self.sample_rng)
+            }
+        };
         let unique = plan.selection.unique_members();
 
-        // (4) Latency/energy bookkeeping (eqs. 6-15).
-        let costs = self.cost_round(&h, &plan);
+        // (4) Latency/energy bookkeeping (eqs. 6-15), under the possibly
+        // drifted device parameters.
+        let costs = RoundCosts::evaluate(
+            &self.cfg.system,
+            devices,
+            self.model_bits,
+            &h,
+            &plan.controls.f_hz,
+            &plan.controls.p_w,
+        );
         let round_time = costs.makespan_s(&unique);
 
         // (5) Local updates + eq. (4) aggregation (Full mode).
         let train_loss = self.train_round(t, &plan, &unique)?;
 
-        // (6) Advance the virtual queues with this round's expected draws.
+        // (6) Advance the virtual queues with this round's expected draws
+        // (unreachable devices have q_eff = 0: no expected energy drawn).
         self.queues
             .update(&plan.q_eff, self.cfg.system.k, &costs.energy_j);
 
         // (7)+(8) Record the ledger entry; evaluate when due.
         self.record_round(t, &plan, &costs, unique.len(), round_time, train_loss)
-    }
-
-    /// Stages 2–3: hand the round's observations to the policy.
-    fn plan_round(&mut self, t: usize, h: &[f64]) -> RoundPlan {
-        let ctx = RoundContext {
-            t,
-            k: self.cfg.system.k,
-            devices: &self.fleet.devices,
-            weights: self.fleet.weights(),
-            h,
-            backlogs: self.queues.backlogs(),
-        };
-        self.policy.plan(&ctx, &mut self.sample_rng)
-    }
-
-    /// Stage 4: evaluate the cost model under the planned controls.
-    fn cost_round(&self, h: &[f64], plan: &RoundPlan) -> RoundCosts {
-        RoundCosts::evaluate(
-            &self.cfg.system,
-            &self.fleet.devices,
-            self.model_bits,
-            h,
-            &plan.controls.f_hz,
-            &plan.controls.p_w,
-        )
     }
 
     /// Stage 5: parallel local training + aggregation.  Returns the mean
@@ -343,8 +399,22 @@ impl Server {
             .map(|i| selection_probability(plan.q_eff[i], self.cfg.system.k) * costs.energy_j[i])
             .sum::<f64>()
             / n as f64;
-        let objective =
-            control::objective_terms(&plan.q_eff, &costs.time_s, self.lambda, self.fleet.weights());
+        // The P1 integrand is evaluated on the *sampling distribution*
+        // `controls.q` (uniform for the deterministic selectors), not on
+        // the participation marginals `q_eff` the queues/energy ledger
+        // use — Greedy's 0/1 marginals would silently drop the λw²/q
+        // variance penalty for unselected devices.  Identical to q_eff
+        // for every probability-sampling scheme.  Convention: global
+        // data weights w_n even in partially-available rounds (the
+        // policy optimized renormalized ones); that keeps the column on
+        // one absolute scale, and devices outside N^t (q = 0) contribute
+        // nothing either way.
+        let objective = control::objective_terms(
+            &plan.controls.q,
+            &costs.time_s,
+            self.lambda,
+            self.fleet.weights(),
+        );
         let prev_total = self.recorder.total_time_s();
 
         let mut rec = RoundRecord {
@@ -373,6 +443,35 @@ impl Server {
         }
         self.recorder.push(rec);
         Ok(())
+    }
+}
+
+/// Scatter a compact (candidate-set-only) plan back to full-fleet
+/// indexing: member positions become global ids, `q`/`q_eff` are zero
+/// off-problem, and unreachable devices get floor controls — inert,
+/// since a zero selection probability draws no expected energy, adds no
+/// objective term, and never enters the makespan.
+fn scatter_plan(plan: RoundPlan, avail: &[usize], base: &[Device]) -> RoundPlan {
+    let n = base.len();
+    let mut f_hz: Vec<f64> = base.iter().map(|d| d.f_min_hz).collect();
+    let mut p_w: Vec<f64> = base.iter().map(|d| d.p_min_w).collect();
+    let mut q = vec![0.0; n];
+    let mut q_eff = vec![0.0; n];
+    for (pos, &g) in avail.iter().enumerate() {
+        f_hz[g] = plan.controls.f_hz[pos];
+        p_w[g] = plan.controls.p_w[pos];
+        q[g] = plan.controls.q[pos];
+        q_eff[g] = plan.q_eff[pos];
+    }
+    let members = plan.selection.members.iter().map(|&m| avail[m]).collect();
+    RoundPlan {
+        controls: Controls { f_hz, p_w, q },
+        stats: plan.stats,
+        selection: Selection {
+            members,
+            coefs: plan.selection.coefs,
+        },
+        q_eff,
     }
 }
 
@@ -413,6 +512,8 @@ mod tests {
             Policy::Lroa,
             Policy::UniformDynamic,
             Policy::UniformStatic,
+            Policy::GreedyChannel,
+            Policy::RoundRobin,
         ] {
             let cfg = base_cfg(policy, 30);
             let mut server = Server::new(cfg, SimMode::ControlPlaneOnly).unwrap();
@@ -426,6 +527,77 @@ mod tests {
                 assert!((1..=2).contains(&r.selected));
             }
         }
+    }
+
+    #[test]
+    fn every_environment_runs_every_policy() {
+        use crate::config::EnvKind;
+        for kind in EnvKind::ALL {
+            for policy in [Policy::Lroa, Policy::UniformStatic, Policy::RoundRobin] {
+                let mut cfg = base_cfg(policy, 25);
+                cfg.env.kind = kind;
+                cfg.env.avail_p_drop = 0.3; // make dropout actually bite
+                let mut server = Server::new(cfg, SimMode::ControlPlaneOnly).unwrap();
+                server.run().unwrap();
+                assert_eq!(server.recorder.rounds.len(), 25, "{kind}/{policy}");
+                for r in &server.recorder.rounds {
+                    assert!(
+                        r.round_time_s > 0.0 && r.round_time_s.is_finite(),
+                        "{kind}/{policy}: round_time {}",
+                        r.round_time_s
+                    );
+                    assert!(r.objective.is_finite(), "{kind}/{policy}");
+                    assert!(r.mean_energy_j >= 0.0 && r.mean_energy_j.is_finite());
+                    assert!((1..=2).contains(&r.selected), "{kind}/{policy}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn static_env_is_bitwise_identical_to_default() {
+        // Explicitly selecting env=static must change nothing at all.
+        use crate::config::EnvKind;
+        let cfg_a = base_cfg(Policy::Lroa, 20);
+        let mut cfg_b = base_cfg(Policy::Lroa, 20);
+        cfg_b.env.kind = EnvKind::Static;
+        let mut a = Server::new(cfg_a, SimMode::ControlPlaneOnly).unwrap();
+        let mut b = Server::new(cfg_b, SimMode::ControlPlaneOnly).unwrap();
+        a.run().unwrap();
+        b.run().unwrap();
+        for (ra, rb) in a.recorder.rounds.iter().zip(&b.recorder.rounds) {
+            assert_eq!(ra.round_time_s, rb.round_time_s);
+            assert_eq!(ra.objective, rb.objective);
+            assert_eq!(ra.mean_energy_j, rb.mean_energy_j);
+        }
+    }
+
+    #[test]
+    fn availability_masks_but_does_not_perturb_channels() {
+        // The avail environment reuses the static channel construction,
+        // so objective-irrelevant quantities driven purely by gains and
+        // static controls line up whenever the full fleet happens to be
+        // reachable.  Weak-form check: dropout changes the trajectory,
+        // but the run stays healthy and deterministic.
+        use crate::config::EnvKind;
+        let run = |kind: EnvKind| {
+            let mut cfg = base_cfg(Policy::UniformStatic, 40);
+            cfg.env.kind = kind;
+            cfg.env.avail_p_drop = 0.4;
+            cfg.env.avail_p_join = 0.3;
+            let mut s = Server::new(cfg, SimMode::ControlPlaneOnly).unwrap();
+            s.run().unwrap();
+            s.recorder
+                .rounds
+                .iter()
+                .map(|r| r.round_time_s)
+                .collect::<Vec<_>>()
+        };
+        let stat = run(EnvKind::Static);
+        let avail_a = run(EnvKind::Availability);
+        let avail_b = run(EnvKind::Availability);
+        assert_eq!(avail_a, avail_b, "availability run not deterministic");
+        assert_ne!(stat, avail_a, "dropout never changed the trajectory");
     }
 
     #[test]

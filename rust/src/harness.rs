@@ -3,16 +3,17 @@
 //! Each `examples/fig*.rs` binary reproduces one figure of the paper's
 //! evaluation section.  This module holds the common machinery on top of
 //! the [`crate::exp`] engine: CLI parsing (`--quick`, `--rounds`,
-//! `--dataset`, `--repeats`, `--threads`, any `--section.key=value`
-//! config override), quick-mode config scaling, CSV emission under
-//! `runs/<figure>/`, and the comparison tables the paper reports.
+//! `--dataset`, `--repeats`, `--threads`, `--envs`, any
+//! `--section.key=value` config override — including `--env.kind=...`
+//! and the other `[env]` knobs), quick-mode config scaling, CSV emission
+//! under `runs/<figure>/`, and the comparison tables the paper reports.
 //! Per-policy runs share identical channel realizations (the paper fixes
 //! the channel seed across schemes); the sweep grid itself is expanded
 //! and executed by `exp`.
 
 use std::path::{Path, PathBuf};
 
-use crate::config::{Config, Policy};
+use crate::config::{Config, EnvKind, Policy};
 use crate::exp::{self, Scenario, ScenarioResult};
 use crate::fl::SimMode;
 use crate::json::{obj, Json};
@@ -33,6 +34,15 @@ pub struct Args {
     pub repeats: usize,
     /// Scenario-runner pool width (0 = one per core).
     pub threads: usize,
+    /// Environment axis (`--envs=static,ge,avail,drift|all`); empty =
+    /// keep the base config's environment.  Examples that support the
+    /// axis (fig1_2_baselines) read it through [`Args::validated_envs`]
+    /// and feed it into [`crate::exp::SweepSpec::envs`]; the rest call
+    /// [`Args::reject_envs`] so the flag is never silently ignored.
+    pub envs: Vec<EnvKind>,
+    /// Parse error from `--envs`, surfaced by [`Args::validated_envs`] /
+    /// [`Args::reject_envs`] — a typo must never silently shrink a grid.
+    envs_err: Option<String>,
     /// Args not consumed above, forwarded into `Config::apply_cli`
     /// (and inspectable via [`Args::flag`]).
     raw: Vec<String>,
@@ -54,6 +64,8 @@ impl Args {
             dataset: None,
             repeats: 1,
             threads: 0,
+            envs: Vec::new(),
+            envs_err: None,
             raw: Vec::new(),
         };
         let mut it = argv.into_iter().peekable();
@@ -68,7 +80,7 @@ impl Args {
             };
             if !matches!(
                 key.as_str(),
-                "--rounds" | "--dataset" | "--repeats" | "--threads"
+                "--rounds" | "--dataset" | "--repeats" | "--threads" | "--envs"
             ) {
                 a.raw.push(arg);
                 continue;
@@ -83,6 +95,10 @@ impl Args {
                 },
             };
             let Some(value) = value else {
+                if key == "--envs" {
+                    // An empty --envs must not silently shrink the grid.
+                    a.envs_err = Some("missing value for --envs".into());
+                }
                 continue; // flag without a value: ignore it
             };
             match key.as_str() {
@@ -90,6 +106,10 @@ impl Args {
                 "--dataset" => a.dataset = Some(value),
                 "--repeats" => a.repeats = value.parse().unwrap_or(1),
                 "--threads" => a.threads = value.parse().unwrap_or(0),
+                "--envs" => match EnvKind::parse_list(&value) {
+                    Ok(envs) => a.envs = envs,
+                    Err(e) => a.envs_err = Some(e.to_string()),
+                },
                 _ => unreachable!("key list above"),
             }
         }
@@ -99,6 +119,29 @@ impl Args {
     /// Whether a bare `--name` flag was passed (e.g. `--grid`).
     pub fn flag(&self, name: &str) -> bool {
         self.raw.iter().any(|s| s == name)
+    }
+
+    /// The `--envs` axis, validated: a typo is a hard error, never a
+    /// silently smaller grid.
+    pub fn validated_envs(&self) -> Result<Vec<EnvKind>> {
+        if let Some(e) = &self.envs_err {
+            anyhow::bail!("bad --envs value: {e}");
+        }
+        Ok(self.envs.clone())
+    }
+
+    /// Examples whose reporting assumes a fixed grid shape call this to
+    /// reject the `--envs` axis up front instead of silently ignoring
+    /// it.  A *single* environment still works everywhere through the
+    /// `--env.kind=...` dotted override.
+    pub fn reject_envs(&self, example: &str) -> Result<()> {
+        anyhow::ensure!(
+            self.envs.is_empty() && self.envs_err.is_none(),
+            "{example} does not take the --envs axis; use fig1_2_baselines or \
+             `lroa sweep --envs=...` for environment grids, or a single \
+             --env.kind=... override here"
+        );
+        Ok(())
     }
 
     /// The datasets this invocation covers.
@@ -155,6 +198,7 @@ pub fn run_policy(mut cfg: Config, policy: Policy, mode: SimMode, label: &str) -
         group: label.to_string(),
         cfg,
         mode,
+        csv_dir: None,
     };
     let mut results = exp::run_scenarios(vec![scenario], 1)?;
     Ok(results.remove(0).recorder)
@@ -281,6 +325,24 @@ mod tests {
         let full = Args::from_vec(argv(&["--full"]));
         assert_eq!(full.config("cifar").unwrap().train.rounds, 2000);
         assert_eq!(full.config("femnist").unwrap().train.rounds, 1000);
+    }
+
+    #[test]
+    fn envs_flag_parses_lists_and_all() {
+        let a = Args::from_vec(argv(&["--envs=static,ge"]));
+        assert_eq!(a.envs, vec![EnvKind::Static, EnvKind::GilbertElliott]);
+        assert_eq!(a.validated_envs().unwrap().len(), 2);
+        let a = Args::from_vec(argv(&["--envs", "all"]));
+        assert_eq!(a.envs, EnvKind::ALL.to_vec());
+        assert!(Args::from_vec(vec![]).envs.is_empty());
+    }
+
+    #[test]
+    fn envs_typo_is_a_hard_error_not_a_smaller_grid() {
+        let a = Args::from_vec(argv(&["--envs=static,gee"]));
+        assert!(a.envs.is_empty(), "typo must not half-populate the axis");
+        assert!(a.validated_envs().is_err());
+        assert!(a.reject_envs("fig3").is_err());
     }
 
     #[test]

@@ -26,6 +26,7 @@
 //! | [`json`] | minimal JSON parser/serializer for manifests + metrics |
 //! | [`config`] | experiment configuration (file + CLI overrides) |
 //! | [`system`] | device fleet, wireless channel model, latency/energy (eqs. 5–17) |
+//! | [`env`] | dynamic edge environments: Markov fading, availability, compute drift (name → ctor registry) |
 //! | [`control`] | the paper's contribution: queues, Theorems 2–3, SUM, Algorithm 2 |
 //! | [`control::policy`] | the [`control::RoundPolicy`] trait, scheme impls, name → ctor registry |
 //! | [`sampling`] | client samplers: LROA adaptive, uniform, DivFL |
@@ -43,6 +44,7 @@ pub mod config;
 pub mod harness;
 pub mod control;
 pub mod data;
+pub mod env;
 pub mod exp;
 pub mod fl;
 pub mod json;

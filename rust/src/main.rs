@@ -36,19 +36,30 @@ USAGE:
 SUBCOMMANDS:
     train   full federated training through the AOT artifacts
     sim     control-plane-only simulation (latency/energy/queues)
-    sweep   parallel scenario grid; seed repeats aggregate to mean±std
+    sweep   parallel scenario grid; seed repeats aggregate to mean±std,
+            manifest.json documents every cell for the figure pipeline
     info    print artifact manifest, fleet summary, λ/V estimates
 
-SWEEP FLAGS (all --key=value):
-    --policies=lroa,uni-d,uni-s,divfl|all   --datasets=cifar,femnist
+SWEEP FLAGS (all --key=value unless noted):
+    --policies=lroa,uni-d,uni-s,divfl,greedy,rr|all   --datasets=cifar,femnist
+    --envs=static,ge,avail,drift|all        (dynamic environments, see below)
     --ks=2,4,6      --mus=0.1,1,10          --nus=1e4,1e5,1e6
     --seeds=1..30   --rounds=N              --threads=T (0 = cores)
     --mode=sim|train                        --out=DIR
+    --resume        (bare flag: skip cells whose CSV already exists in --out)
+
+ENVIRONMENTS (the --envs axis / --env.kind override):
+    static  the paper's IID exponential channel, always-on fleet (default)
+    ge      Gilbert-Elliott two-state Markov fading per device
+    avail   Markov device dropout/arrival (candidate set varies per round)
+    drift   random-walk drift on per-device compute/energy parameters
 
 COMMON OVERRIDES:
-    --train.dataset=cifar|femnist   --train.rounds=N     --train.policy=lroa|uni-d|uni-s|divfl
+    --train.dataset=cifar|femnist   --train.rounds=N     --train.policy=lroa|...|rr
     --system.k=K                    --control.mu=F       --control.nu=F
-    --train.seed=N                  --run.out_dir=DIR    --run.artifacts_dir=DIR
+    --train.seed=N                  --env.kind=static|ge|avail|drift
+    --env.ge_p_bad=F --env.avail_p_drop=F --env.drift_sigma=F   (see config.rs)
+    --run.out_dir=DIR               --run.artifacts_dir=DIR
 ";
 
 fn build_config(args: &[String]) -> lroa::Result<Config> {
@@ -115,19 +126,85 @@ fn sweep(args: &[String]) -> lroa::Result<()> {
             .len(),
         if spec.threads == 0 { "auto".to_string() } else { spec.threads.to_string() },
     );
-    let results = exp::run_scenarios(scenarios, spec.threads)?;
 
-    // Per-scenario CSVs + the aggregate summary bundle.
+    // Streaming CSVs + resume key on the cell label: duplicates would
+    // race on the same file, so reject them up front.
+    {
+        let mut seen = std::collections::BTreeSet::new();
+        for s in &scenarios {
+            anyhow::ensure!(
+                seen.insert(s.label.as_str()),
+                "sweep: duplicate cell label {:?} (repeated axis value, or an \
+                 override clobbering a swept axis?)",
+                s.label
+            );
+        }
+    }
+
     let dir = std::path::PathBuf::from(&spec.out_dir);
     std::fs::create_dir_all(&dir)?;
-    let mut run_summaries = Vec::new();
-    for r in &results {
-        r.recorder.write_csv(&dir.join(format!("{}.csv", r.recorder.label)))?;
-        run_summaries.push(r.recorder.summary_json());
+    let manifest_path = dir.join("manifest.json");
+
+    // The grid manifest covers *every* cell and is written before any
+    // cell runs, so crashed or resumed sweeps still document their grid.
+    std::fs::write(&manifest_path, exp::manifest_json(&scenarios).to_string())?;
+    println!("wrote {}", manifest_path.display());
+
+    // Resume: a cell is done only if its CSV exists under --out AND its
+    // `.hash` sidecar — written by the runner at cell *completion* —
+    // matches this cell's fingerprint (sim mode + config hash), so stale
+    // CSVs from an older config (different --rounds, --mode, knobs ...)
+    // are re-run, never silently kept.  The groups touched by skipped
+    // cells are tracked so the summary never reports a partial seed set
+    // under a full group label.
+    let mut skipped = 0usize;
+    let mut partial_groups = std::collections::BTreeSet::new();
+    let mut scenarios = if spec.resume {
+        let (done, todo): (Vec<_>, Vec<_>) = scenarios.into_iter().partition(|s| {
+            dir.join(format!("{}.csv", s.label)).exists()
+                && std::fs::read_to_string(dir.join(format!("{}.hash", s.label)))
+                    .map(|h| h.trim() == s.fingerprint())
+                    .unwrap_or(false)
+        });
+        skipped = done.len();
+        partial_groups.extend(done.iter().map(|s| s.group.clone()));
+        println!(
+            "resume: skipping {} cells with existing CSVs, running {}",
+            done.len(),
+            todo.len()
+        );
+        if todo.is_empty() {
+            println!("resume: nothing left to run");
+            if !dir.join("summary.json").exists() {
+                println!(
+                    "warning: summary.json is missing (it is written by an \
+                     invocation that runs at least one cell); re-run without \
+                     --resume to regenerate the aggregate"
+                );
+            }
+            return Ok(());
+        }
+        todo
+    } else {
+        scenarios
+    };
+    // Each cell's CSV streams out as it completes, so a killed grid is
+    // resumable from exactly where it stopped.
+    for s in &mut scenarios {
+        s.csv_dir = Some(dir.clone());
     }
+
+    let results = exp::run_scenarios(scenarios, spec.threads)?;
+
+    // Aggregate summary bundle (per-cell CSVs were written by the runner).
+    let run_summaries: Vec<Json> = results.iter().map(|r| r.recorder.summary_json()).collect();
     let groups = exp::summarize_groups(&results);
     let group_json: Vec<Json> = groups
         .iter()
+        // A group with resumed (not re-aggregated) cells would report
+        // statistics over a subset of its seeds: omit it from the
+        // machine-readable summary rather than mislabel it.
+        .filter(|g| !partial_groups.contains(&g.group))
         .map(|g| {
             obj(vec![
                 ("group", Json::Str(g.group.clone())),
@@ -143,9 +220,31 @@ fn sweep(args: &[String]) -> lroa::Result<()> {
         obj(vec![
             ("groups", Json::Arr(group_json)),
             ("runs", Json::Arr(run_summaries)),
+            // Cells skipped by --resume are NOT aggregated here; their
+            // CSVs (and the full grid) are listed in manifest.json.
+            ("skipped_cells", Json::Num(skipped as f64)),
+            (
+                "partial_groups",
+                Json::Arr(
+                    partial_groups
+                        .iter()
+                        .map(|g| Json::Str(g.clone()))
+                        .collect(),
+                ),
+            ),
         ])
         .to_string(),
     )?;
+    if skipped > 0 {
+        println!(
+            "note: summary.json aggregates only the {} cells run in this \
+             invocation ({} resumed cells excluded; groups with resumed \
+             cells are listed under partial_groups); per-cell CSVs + \
+             manifest.json cover the full grid",
+            results.len(),
+            skipped
+        );
+    }
 
     // The mean±std table the paper's seed-averaged figures report.
     println!(
@@ -153,9 +252,17 @@ fn sweep(args: &[String]) -> lroa::Result<()> {
         "group", "runs", "total time [s]", "final acc", "time-avg energy [J]"
     );
     for g in &groups {
+        // A group with resumed cells aggregates only this invocation's
+        // seeds — flag it so the number is never mistaken for the full
+        // seed average.
+        let name = if partial_groups.contains(&g.group) {
+            format!("{} (partial)", g.group)
+        } else {
+            g.group.clone()
+        };
         println!(
             "{:<28} {:>5} {:>24} {:>20} {:>24}",
-            g.group,
+            name,
             g.runs,
             g.total_time_s.to_string(),
             g.final_accuracy.to_string(),

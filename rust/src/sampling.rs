@@ -45,6 +45,18 @@ pub fn sample_uniform(n: usize, weights: &[f64], k: usize, rng: &mut Rng) -> Sel
     sample_by_probability(&q, weights, k, rng)
 }
 
+/// FedAvg-style aggregation over a *distinct* member set: slot
+/// coefficient `w_n / Σ_{m∈S} w_m` (the DivFL convention, shared by the
+/// deterministic greedy-channel and round-robin baselines).
+pub fn fedavg_selection(members: Vec<usize>, weights: &[f64]) -> Selection {
+    let wsum: f64 = members.iter().map(|&m| weights[m]).sum();
+    let coefs = members
+        .iter()
+        .map(|&m| weights[m] / wsum.max(1e-300))
+        .collect();
+    Selection { members, coefs }
+}
+
 /// DivFL: greedy facility-location selection over client embeddings.
 ///
 /// The paper adapts DivFL [42] to this setting: the server keeps an
@@ -81,11 +93,25 @@ impl DivFlState {
         self.seen[client] = true;
     }
 
-    /// Greedy facility-location selection of `k` distinct clients.
+    /// Greedy facility-location selection of `k` distinct clients over
+    /// the whole fleet.
     pub fn select(&mut self, weights: &[f64], k: usize) -> Selection {
-        let n = self.embeddings.len();
+        let ids: Vec<usize> = (0..self.embeddings.len()).collect();
+        self.select_among(&ids, weights, k)
+    }
+
+    /// Greedy facility-location selection restricted to a candidate set.
+    ///
+    /// `ids[pos]` is the *global* client id at position `pos` (the
+    /// environment's reachable set `N^t`); `weights[pos]` is that
+    /// client's data weight.  Returned members are **positions** into
+    /// `ids`, matching the rest of the policy interface.  With the
+    /// identity mapping this is exactly the original full-fleet selector
+    /// (same comparisons, same floating-point operations).
+    pub fn select_among(&mut self, ids: &[usize], weights: &[f64], k: usize) -> Selection {
+        let n = ids.len();
         let k = k.min(n);
-        let unseen: Vec<usize> = (0..n).filter(|&i| !self.seen[i]).collect();
+        let unseen: Vec<usize> = (0..n).filter(|&pos| !self.seen[ids[pos]]).collect();
         let mut chosen: Vec<usize> = Vec::with_capacity(k);
 
         // Cold start: probe unseen clients round-robin first so every
@@ -106,7 +132,7 @@ impl DivFlState {
             let mut best = vec![f64::NEG_INFINITY; n];
             for &j in &chosen {
                 for i in 0..n {
-                    best[i] = best[i].max(self.sim(i, j));
+                    best[i] = best[i].max(self.sim(ids[i], ids[j]));
                 }
             }
             while chosen.len() < k {
@@ -118,7 +144,7 @@ impl DivFlState {
                     }
                     let mut gain = 0.0;
                     for i in 0..n {
-                        let s = self.sim(i, j);
+                        let s = self.sim(ids[i], ids[j]);
                         if s > best[i] {
                             gain += s - best[i].max(-1e30);
                         }
@@ -130,19 +156,13 @@ impl DivFlState {
                 }
                 let j = if best_j == usize::MAX { chosen.len() } else { best_j };
                 for i in 0..n {
-                    best[i] = best[i].max(self.sim(i, j));
+                    best[i] = best[i].max(self.sim(ids[i], ids[j]));
                 }
                 chosen.push(j);
             }
         }
 
-        // FedAvg-style aggregation over the distinct selected set.
-        let wsum: f64 = chosen.iter().map(|&j| weights[j]).sum();
-        let coefs = chosen.iter().map(|&j| weights[j] / wsum.max(1e-300)).collect();
-        Selection {
-            members: chosen,
-            coefs,
-        }
+        fedavg_selection(chosen, weights)
     }
 
     fn sim(&self, i: usize, j: usize) -> f64 {
@@ -291,6 +311,49 @@ mod tests {
         let sel = st.select(&w, 4);
         let uniq = sel.unique_members();
         assert_eq!(uniq.len(), 4);
+    }
+
+    #[test]
+    fn fedavg_selection_normalizes_over_members() {
+        let w = vec![0.1, 0.2, 0.3, 0.4];
+        let sel = fedavg_selection(vec![1, 3], &w);
+        assert_eq!(sel.members, vec![1, 3]);
+        assert!((sel.coefs[0] - 0.2 / 0.6).abs() < 1e-12);
+        assert!((sel.coefs[1] - 0.4 / 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn select_among_identity_matches_select() {
+        let build = || {
+            let mut st = DivFlState::new(8, 2);
+            for i in 0..8 {
+                st.observe(i, vec![i as f32, (8 - i) as f32]);
+            }
+            st
+        };
+        let w = vec![0.125; 8];
+        let ids: Vec<usize> = (0..8).collect();
+        let a = build().select(&w, 3);
+        let b = build().select_among(&ids, &w, 3);
+        assert_eq!(a.members, b.members);
+        assert_eq!(a.coefs, b.coefs);
+    }
+
+    #[test]
+    fn select_among_subset_returns_positions() {
+        let mut st = DivFlState::new(10, 2);
+        for i in 0..10 {
+            st.observe(i, vec![i as f32, 0.0]);
+        }
+        // Candidate set {2, 5, 9}: members must be positions 0..3.
+        let ids = vec![2, 5, 9];
+        let w = vec![0.5, 0.3, 0.2];
+        let sel = st.select_among(&ids, &w, 2);
+        assert_eq!(sel.members.len(), 2);
+        assert!(sel.members.iter().all(|&m| m < 3));
+        assert_eq!(sel.unique_members().len(), 2);
+        let s: f64 = sel.coefs.iter().sum();
+        assert!((s - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -5,9 +5,30 @@
 //! mean value of 0.1", with outliers "greater than 0.5 or smaller than
 //! 0.01" filtered out, and the random seed fixed across runs so competing
 //! policies see identical channel realizations.
+//!
+//! This module is the channel *kernel*: [`ChannelProcess`] generates the
+//! IID streams, and [`draw_clipped_exponential`] is the single-draw
+//! primitive the dynamic environments in [`crate::env`] (Gilbert–Elliott
+//! fading, availability masking, parameter drift) also draw through — so
+//! every environment's gains share the same distributional shape.
 
 use crate::config::SystemConfig;
 use crate::rng::Rng;
+
+/// One clipped-exponential gain draw.
+///
+/// Outlier handling is rejection (re-draw), which keeps samples inside
+/// the paper's band while preserving the exponential shape within it.
+#[inline]
+pub fn draw_clipped_exponential(rng: &mut Rng, mean: f64, clip: (f64, f64)) -> f64 {
+    let (lo, hi) = clip;
+    loop {
+        let h = rng.exponential(mean);
+        if h >= lo && h <= hi {
+            return h;
+        }
+    }
+}
 
 /// Per-device IID exponential channel-gain streams with outlier rejection.
 #[derive(Clone, Debug)]
@@ -31,20 +52,12 @@ impl ChannelProcess {
     }
 
     /// Draw the round-`t` gain for every device.
-    ///
-    /// Outlier handling is rejection (re-draw), which keeps samples inside
-    /// the paper's band while preserving the exponential shape within it.
     pub fn next_round(&mut self) -> Vec<f64> {
-        let (lo, hi) = self.clip;
+        let clip = self.clip;
         let mean = self.mean;
         self.streams
             .iter_mut()
-            .map(|rng| loop {
-                let h = rng.exponential(mean);
-                if h >= lo && h <= hi {
-                    break h;
-                }
-            })
+            .map(|rng| draw_clipped_exponential(rng, mean, clip))
             .collect()
     }
 

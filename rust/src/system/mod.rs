@@ -9,7 +9,7 @@ mod channel;
 mod device;
 mod model;
 
-pub use channel::ChannelProcess;
+pub use channel::{draw_clipped_exponential, ChannelProcess};
 pub use device::{Device, Fleet};
 pub use model::{
     comm_energy_j, comp_energy_j, comp_time_s, download_time_s, expected_round_time_s,

@@ -192,6 +192,26 @@ fn divfl_matches_pre_refactor_trajectory() {
 }
 
 #[test]
+fn explicit_static_env_matches_pre_env_reference() {
+    // The reference trajectory drives ChannelProcess directly (the
+    // pre-env code path); the server now routes every round through the
+    // `env` subsystem.  Selecting env=static explicitly must still match
+    // bitwise — the environment layer is a zero-cost pass-through in the
+    // paper's default configuration.
+    use lroa::config::EnvKind;
+    let mut cfg = cfg_for(Policy::Lroa, "cifar", 20, 13);
+    cfg.env.kind = EnvKind::Static;
+    let reference = reference_trajectory(&cfg);
+    let mut server = Server::new(cfg, SimMode::ControlPlaneOnly).unwrap();
+    server.run().unwrap();
+    for (t, (got, want)) in server.recorder.rounds.iter().zip(&reference).enumerate() {
+        assert_eq!(got.round_time_s, want.round_time_s, "round {t}");
+        assert_eq!(got.objective, want.objective, "round {t}");
+        assert_eq!(got.mean_energy_j, want.mean_energy_j, "round {t}");
+    }
+}
+
+#[test]
 fn policies_still_share_channel_realizations_across_schemes() {
     // The refactor must preserve the paper's comparison methodology: the
     // channel stream depends only on the seed, never on the policy.
