@@ -51,10 +51,10 @@ fn main() -> lroa::Result<()> {
             harness::print_latency_table(&recs);
         } else {
             for env in &envs {
-                println!("--- environment: {env} ---");
+                println!("--- environment: {} ---", env.kind);
                 let env_recs: Vec<_> = results
                     .iter()
-                    .filter(|r| r.scenario.cfg.env.kind == *env)
+                    .filter(|r| r.scenario.cfg.env.kind == env.kind)
                     .map(|r| r.recorder.clone())
                     .collect();
                 harness::print_latency_table(&env_recs);

@@ -29,17 +29,26 @@ pub enum Policy {
     /// Round-robin: cycle through the fleet K devices at a time, static
     /// resources (the fairness anchor).
     RoundRobin,
+    /// Power-of-two-choices: per slot, sample two devices uniformly and
+    /// keep the better channel — the classic load-balancing sampler.
+    PowerOfTwoChoices,
+    /// Oracle: clairvoyant latency lower bound (best reachable device at
+    /// `f_max`/`p_max`, foresight tie-breaking via `Environment::peek`) —
+    /// the regret anchor of `lroa regret`.
+    Oracle,
 }
 
 impl Policy {
     /// Every scheme, registry order (LROA first — the comparison anchor).
-    pub const ALL: [Policy; 6] = [
+    pub const ALL: [Policy; 8] = [
         Policy::Lroa,
         Policy::UniformDynamic,
         Policy::UniformStatic,
         Policy::DivFl,
         Policy::GreedyChannel,
         Policy::RoundRobin,
+        Policy::PowerOfTwoChoices,
+        Policy::Oracle,
     ];
 
     pub fn parse(s: &str) -> Result<Policy> {
@@ -50,8 +59,10 @@ impl Policy {
             "divfl" => Policy::DivFl,
             "greedy" | "greedy-channel" => Policy::GreedyChannel,
             "rr" | "round-robin" | "roundrobin" => Policy::RoundRobin,
+            "p2c" | "power-of-two" | "power-of-two-choices" => Policy::PowerOfTwoChoices,
+            "oracle" => Policy::Oracle,
             other => anyhow::bail!(
-                "unknown policy {other:?} (lroa|uni-d|uni-s|divfl|greedy|rr)"
+                "unknown policy {other:?} (lroa|uni-d|uni-s|divfl|greedy|rr|p2c|oracle)"
             ),
         })
     }
@@ -64,6 +75,8 @@ impl Policy {
             Policy::DivFl => "DivFL",
             Policy::GreedyChannel => "Greedy",
             Policy::RoundRobin => "RR",
+            Policy::PowerOfTwoChoices => "P2C",
+            Policy::Oracle => "Oracle",
         }
     }
 }
@@ -86,15 +99,32 @@ pub enum EnvKind {
     Availability,
     /// Slow random-walk drift on per-device compute/energy parameters.
     Drift,
+    /// Replay of a recorded channel/availability log (`env.trace_path`).
+    Trace,
+    /// Adversarial worst-case channel: degrades the gains a greedy
+    /// scheduler would chase, informed by the previous round's selection.
+    Adversarial,
 }
 
 impl EnvKind {
     /// Every environment, registry order (static first — the paper's setting).
-    pub const ALL: [EnvKind; 4] = [
+    pub const ALL: [EnvKind; 6] = [
         EnvKind::Static,
         EnvKind::GilbertElliott,
         EnvKind::Availability,
         EnvKind::Drift,
+        EnvKind::Trace,
+        EnvKind::Adversarial,
+    ];
+
+    /// The environments that need no external input (`all` in env lists
+    /// expands to these; `trace` must be named explicitly with its log).
+    pub const SYNTHETIC: [EnvKind; 5] = [
+        EnvKind::Static,
+        EnvKind::GilbertElliott,
+        EnvKind::Availability,
+        EnvKind::Drift,
+        EnvKind::Adversarial,
     ];
 
     pub fn parse(s: &str) -> Result<EnvKind> {
@@ -103,16 +133,20 @@ impl EnvKind {
             "ge" | "gilbert-elliott" | "gilbertelliott" => EnvKind::GilbertElliott,
             "avail" | "availability" => EnvKind::Availability,
             "drift" => EnvKind::Drift,
-            other => anyhow::bail!("unknown env {other:?} (static|ge|avail|drift)"),
+            "trace" => EnvKind::Trace,
+            "adv" | "adversarial" => EnvKind::Adversarial,
+            other => anyhow::bail!("unknown env {other:?} (static|ge|avail|drift|trace|adv)"),
         })
     }
 
     /// Parse a comma list of environment names; `all` expands to every
-    /// registered environment.  The one list rule shared by `lroa sweep
-    /// --envs` and the figure-harness `--envs` flag.
+    /// *synthetic* environment (trace needs a log, so it is never implied).
+    /// The one list rule shared by `lroa sweep --envs` and the
+    /// figure-harness `--envs` flag; the sweep axis itself is the richer
+    /// [`crate::exp::EnvSel`], which also accepts `trace:<path>`.
     pub fn parse_list(val: &str) -> Result<Vec<EnvKind>> {
         if val == "all" {
-            return Ok(EnvKind::ALL.to_vec());
+            return Ok(EnvKind::SYNTHETIC.to_vec());
         }
         val.split(',').map(EnvKind::parse).collect()
     }
@@ -123,6 +157,8 @@ impl EnvKind {
             EnvKind::GilbertElliott => "ge",
             EnvKind::Availability => "avail",
             EnvKind::Drift => "drift",
+            EnvKind::Trace => "trace",
+            EnvKind::Adversarial => "adv",
         }
     }
 }
@@ -153,6 +189,15 @@ pub struct EnvConfig {
     pub drift_sigma: f64,
     /// Drift: multiplier clamp band around the base parameters.
     pub drift_clip: (f64, f64),
+    /// Trace: path of the recorded channel/availability CSV
+    /// (`round,device,gain[,available]`; see `tests/fixtures/README.md`).
+    pub trace_path: String,
+    /// Adversarial: multiplier applied to a targeted device's gain
+    /// (clamped to the clip floor).
+    pub adv_degrade: f64,
+    /// Adversarial: number of devices degraded per round; 0 = `2K`
+    /// (the previous selection plus greedy's predicted next picks).
+    pub adv_targets: usize,
 }
 
 impl Default for EnvConfig {
@@ -166,6 +211,9 @@ impl Default for EnvConfig {
             avail_p_join: 0.25,
             drift_sigma: 0.02,
             drift_clip: (0.5, 2.0),
+            trace_path: String::new(),
+            adv_degrade: 0.2,
+            adv_targets: 0,
         }
     }
 }
@@ -463,6 +511,9 @@ impl Config {
             "env.drift_sigma" => self.env.drift_sigma = f()?,
             "env.drift_lo" => self.env.drift_clip.0 = f()?,
             "env.drift_hi" => self.env.drift_clip.1 = f()?,
+            "env.trace_path" => self.env.trace_path = val.into(),
+            "env.adv_degrade" => self.env.adv_degrade = f()?,
+            "env.adv_targets" => self.env.adv_targets = u()?,
             "run.artifacts_dir" => self.artifacts_dir = val.into(),
             "run.out_dir" => self.out_dir = val.into(),
             other => anyhow::bail!("unknown config key {other:?}"),
@@ -522,6 +573,14 @@ impl Config {
             e.drift_clip.0 > 0.0 && e.drift_clip.0 <= 1.0 && e.drift_clip.1 >= 1.0,
             "env.drift clamp band must straddle 1"
         );
+        anyhow::ensure!(
+            e.kind != EnvKind::Trace || !e.trace_path.is_empty(),
+            "env.kind=trace requires env.trace_path (the recorded channel CSV)"
+        );
+        anyhow::ensure!(
+            e.adv_degrade > 0.0 && e.adv_degrade <= 1.0,
+            "env.adv_degrade must be in (0, 1]"
+        );
         Ok(())
     }
 
@@ -558,6 +617,13 @@ impl Config {
             c.env.drift_sigma = d.drift_sigma;
             c.env.drift_clip = d.drift_clip;
         }
+        if c.env.kind != EnvKind::Trace {
+            c.env.trace_path = d.trace_path.clone();
+        }
+        if c.env.kind != EnvKind::Adversarial {
+            c.env.adv_degrade = d.adv_degrade;
+            c.env.adv_targets = d.adv_targets;
+        }
         let repr = format!("{c:?}");
         let mut h: u64 = 0xcbf2_9ce4_8422_2325;
         for b in repr.bytes() {
@@ -577,7 +643,7 @@ impl Config {
             "[system] N={} K={} E={} B={:.3e} N0={} h_mean={} clip=({},{}) p=({},{}) f=({:.2e},{:.2e}) alpha={:.2e} c_n={:.2e} Ebar={} M_bits={} dl_bps={} spread={}\n\
              [control] mu={} nu={} lambda*={} V*={} eps=({},{}) iters=({},{}) q_min={}\n\
              [train] dataset={} rounds={} lr0={} decay=({},{}) samples=({},{}) test={} eval_every={} seed={} policy={} snr={} threads={}\n\
-             [env] kind={} ge=({},{},{}) avail=({},{}) drift=({},{},{})\n\
+             [env] kind={} ge=({},{},{}) avail=({},{}) drift=({},{},{}) trace={:?} adv=({},{})\n\
              [run] artifacts_dir={}",
             s.num_devices, s.k, s.local_epochs, s.bandwidth_hz, s.noise_w, s.channel_mean,
             s.channel_clip.0, s.channel_clip.1, s.p_min_w, s.p_max_w, s.f_min_hz, s.f_max_hz,
@@ -589,7 +655,8 @@ impl Config {
             t.samples_per_device.0, t.samples_per_device.1, t.test_samples, t.eval_every,
             t.seed, t.policy, t.data_snr, t.train_threads,
             e.kind, e.ge_p_bad, e.ge_p_good, e.ge_bad_scale, e.avail_p_drop, e.avail_p_join,
-            e.drift_sigma, e.drift_clip.0, e.drift_clip.1, self.artifacts_dir,
+            e.drift_sigma, e.drift_clip.0, e.drift_clip.1, e.trace_path, e.adv_degrade,
+            e.adv_targets, self.artifacts_dir,
         )
     }
 }
@@ -702,6 +769,12 @@ mod tests {
         assert_eq!(Policy::parse("greedy-channel").unwrap(), Policy::GreedyChannel);
         assert_eq!(Policy::parse("round-robin").unwrap(), Policy::RoundRobin);
         assert_eq!(Policy::parse("rr").unwrap(), Policy::RoundRobin);
+        assert_eq!(Policy::parse("p2c").unwrap(), Policy::PowerOfTwoChoices);
+        assert_eq!(
+            Policy::parse("power-of-two-choices").unwrap(),
+            Policy::PowerOfTwoChoices
+        );
+        assert_eq!(Policy::parse("oracle").unwrap(), Policy::Oracle);
         assert!(Policy::parse("nope").is_err());
     }
 
@@ -712,6 +785,9 @@ mod tests {
         assert_eq!(EnvKind::parse("gilbert-elliott").unwrap(), EnvKind::GilbertElliott);
         assert_eq!(EnvKind::parse("avail").unwrap(), EnvKind::Availability);
         assert_eq!(EnvKind::parse("drift").unwrap(), EnvKind::Drift);
+        assert_eq!(EnvKind::parse("trace").unwrap(), EnvKind::Trace);
+        assert_eq!(EnvKind::parse("adv").unwrap(), EnvKind::Adversarial);
+        assert_eq!(EnvKind::parse("adversarial").unwrap(), EnvKind::Adversarial);
         assert!(EnvKind::parse("nope").is_err());
         // The paper's setting is the default everywhere.
         assert_eq!(Config::for_dataset("cifar").unwrap().env.kind, EnvKind::Static);
@@ -746,8 +822,45 @@ mod tests {
             EnvKind::parse_list("static,ge").unwrap(),
             vec![EnvKind::Static, EnvKind::GilbertElliott]
         );
-        assert_eq!(EnvKind::parse_list("all").unwrap(), EnvKind::ALL.to_vec());
+        // `all` expands to the synthetic set: trace needs a log file, so
+        // it is never implied.
+        assert_eq!(
+            EnvKind::parse_list("all").unwrap(),
+            EnvKind::SYNTHETIC.to_vec()
+        );
+        assert!(!EnvKind::SYNTHETIC.contains(&EnvKind::Trace));
         assert!(EnvKind::parse_list("static,nope").is_err());
+    }
+
+    #[test]
+    fn trace_env_requires_a_path_and_adv_knobs_validate() {
+        let mut cfg = Config::for_dataset("cifar").unwrap();
+        cfg.env.kind = EnvKind::Trace;
+        assert!(cfg.validate().is_err(), "trace without a path must fail");
+        cfg.env.trace_path = "somewhere.csv".into();
+        assert!(cfg.validate().is_ok());
+
+        let mut cfg = Config::for_dataset("cifar").unwrap();
+        cfg.env.kind = EnvKind::Adversarial;
+        assert!(cfg.validate().is_ok());
+        cfg.env.adv_degrade = 0.0;
+        assert!(cfg.validate().is_err());
+        cfg.env.adv_degrade = 1.5;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn trace_and_adv_knobs_are_inert_unless_selected() {
+        let a = Config::for_dataset("cifar").unwrap();
+        let mut b = a.clone();
+        b.env.trace_path = "elsewhere.csv".into(); // inert: kind is static
+        b.env.adv_degrade = 0.5;
+        assert_eq!(a.hash_hex(), b.hash_hex());
+        let mut c = a.clone();
+        c.env.kind = EnvKind::Adversarial;
+        let mut d = c.clone();
+        d.env.adv_degrade = 0.5; // live once adv is selected
+        assert_ne!(c.hash_hex(), d.hash_hex());
     }
 
     #[test]

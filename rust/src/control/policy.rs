@@ -9,7 +9,8 @@
 //! one [`REGISTRY`] line; no server code changes.
 //!
 //! The registered schemes mirror the paper's §VII-A comparison plus the
-//! two cheap scheduling baselines the related work suggests:
+//! scheduling baselines the related work suggests and the clairvoyant
+//! regret anchor:
 //!
 //! | name   | resources `(f, p)`        | sampling `q` / selection      |
 //! |--------|---------------------------|-------------------------------|
@@ -19,6 +20,19 @@
 //! | DivFL  | static energy balance     | greedy facility location      |
 //! | Greedy | static energy balance     | K best-channel devices        |
 //! | RR     | static energy balance     | round-robin over global ids   |
+//! | P2C    | static energy balance     | power-of-two-choices draws    |
+//! | Oracle | `f_max` / `p_max`         | the min-latency device        |
+//!
+//! The oracle is the latency **lower bound**: with the current channel
+//! known at decision time (as every policy sees), the per-round makespan
+//! is minimized by running the single fastest reachable device at full
+//! resources, so no policy can complete the horizon sooner on the same
+//! environment stream.  `lroa regret` reports each online policy's gap
+//! against it.  When the environment is previewable the oracle also
+//! reads next-round gains ([`RoundContext::next_h`], fed by
+//! [`crate::env::Environment::peek`]) to break exact latency ties in
+//! favor of devices whose channel is about to degrade — foresight that
+//! never costs it the current round.
 //!
 //! Under a dynamic environment ([`crate::env`]) the server hands the
 //! policy only the *reachable* sub-problem: every slice in
@@ -55,6 +69,11 @@ pub struct RoundContext<'a> {
     pub h: &'a [f64],
     /// Virtual-queue backlogs `Q_n^t` (candidate positions).
     pub backlogs: &'a [f64],
+    /// Next round's channel gains (candidate positions), when the
+    /// environment is previewable AND the policy asked for foresight
+    /// ([`RoundPolicy::wants_peek`]); `None` otherwise.  Only the oracle
+    /// reads it.
+    pub next_h: Option<&'a [f64]>,
 }
 
 /// A policy's decisions for one round.
@@ -89,6 +108,14 @@ pub trait RoundPolicy: Send {
     /// Feed back one participant's model delta after local training.
     /// Only stateful selectors (DivFL) care; the default ignores it.
     fn observe_update(&mut self, _client: usize, _delta: &[f32]) {}
+
+    /// Whether the server should attempt an [`crate::env::Environment::peek`]
+    /// and populate [`RoundContext::next_h`].  Default false: online
+    /// policies must not see the future (that is the paper's whole
+    /// premise); only the oracle anchor opts in.
+    fn wants_peek(&self) -> bool {
+        false
+    }
 }
 
 fn uniform_q(n: usize) -> Vec<f64> {
@@ -366,6 +393,145 @@ impl RoundPolicy for RoundRobinPolicy {
 }
 
 // ---------------------------------------------------------------------------
+// Power-of-two-choices — two uniform probes per slot, keep the better
+// channel, static resources.
+// ---------------------------------------------------------------------------
+
+/// The classic load-balancing sampler as a scheduling baseline: each of
+/// the `K` slots draws two devices uniformly and keeps the better
+/// instantaneous channel.  Exact per-slot marginals
+/// ([`sampling::p2c_marginals`]) serve as both the round's sampling
+/// distribution (P1 objective) and the eq. (4) coefficients, so the
+/// aggregate stays unbiased.
+pub struct PowerOfTwoPolicy {
+    sys: SystemConfig,
+    model_bits: f64,
+}
+
+impl PowerOfTwoPolicy {
+    pub fn new(init: &PolicyInit<'_>) -> Self {
+        Self {
+            sys: init.sys.clone(),
+            model_bits: init.model_bits,
+        }
+    }
+}
+
+impl RoundPolicy for PowerOfTwoPolicy {
+    fn name(&self) -> &'static str {
+        "P2C"
+    }
+
+    fn plan(&mut self, ctx: &RoundContext<'_>, rng: &mut Rng) -> RoundPlan {
+        let mut controls =
+            static_alloc::solve_static(&self.sys, ctx.devices, self.model_bits, ctx.h);
+        let q = sampling::p2c_marginals(ctx.h);
+        let selection = sampling::sample_power_of_two(ctx.h, &q, ctx.weights, ctx.k, rng);
+        controls.q = q.clone();
+        RoundPlan {
+            controls,
+            stats: SolverStats::default(),
+            selection,
+            q_eff: q,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Oracle — the clairvoyant latency lower bound (regret anchor).
+// ---------------------------------------------------------------------------
+
+/// Fill every slot with the single fastest reachable device at full
+/// resources (`f_max`, `p_max`).
+///
+/// Per-device latency is monotone decreasing in both `f` and `p`, so
+/// `T_n(f_max, p_max)` is each device's floor, and a round's makespan is
+/// bounded below by `min_n T_n(f_max, p_max)` for **any** selection any
+/// policy can make.  The oracle achieves that bound every round, which
+/// makes its cumulative latency a true lower bound on the same
+/// environment stream — the anchor `lroa regret` measures against.  It
+/// deliberately ignores energy budgets (its queues may grow without
+/// bound): it answers "how fast could the horizon possibly finish",
+/// nothing else.
+///
+/// Foresight: when [`RoundContext::next_h`] is populated
+/// (previewable environment), exact latency ties break toward the
+/// device whose *next* gain is lower — use a channel while it lasts.
+/// Tie-breaking never changes the current round's makespan, so the
+/// bound survives.
+pub struct OraclePolicy {
+    sys: SystemConfig,
+    model_bits: f64,
+}
+
+impl OraclePolicy {
+    pub fn new(init: &PolicyInit<'_>) -> Self {
+        Self {
+            sys: init.sys.clone(),
+            model_bits: init.model_bits,
+        }
+    }
+}
+
+impl RoundPolicy for OraclePolicy {
+    fn name(&self) -> &'static str {
+        "Oracle"
+    }
+
+    fn wants_peek(&self) -> bool {
+        true
+    }
+
+    fn plan(&mut self, ctx: &RoundContext<'_>, _rng: &mut Rng) -> RoundPlan {
+        let n = ctx.devices.len();
+        let f_hz: Vec<f64> = ctx.devices.iter().map(|d| d.f_max_hz).collect();
+        let p_w: Vec<f64> = ctx.devices.iter().map(|d| d.p_max_w).collect();
+        let times: Vec<f64> = (0..n)
+            .map(|i| {
+                crate::system::round_time_s(
+                    &self.sys,
+                    &ctx.devices[i],
+                    self.model_bits,
+                    ctx.h[i],
+                    f_hz[i],
+                    p_w[i],
+                )
+            })
+            .collect();
+        let mut best = 0usize;
+        for i in 1..n {
+            if times[i] < times[best] {
+                best = i;
+            } else if times[i] == times[best] {
+                if let Some(nh) = ctx.next_h {
+                    if nh[i] < nh[best] {
+                        best = i;
+                    }
+                }
+            }
+        }
+        // K copies of the single fastest device: the makespan is exactly
+        // `min_n T_n`, and the K equal 1/K coefficients aggregate to its
+        // plain delta.
+        let selection = sampling::fedavg_selection(vec![best; ctx.k], ctx.weights);
+        let mut q_eff = vec![0.0; n];
+        q_eff[best] = 1.0;
+        RoundPlan {
+            // Uniform q keeps the recorded P1 objective finite and
+            // comparable; the ledgers charge through q_eff.
+            controls: Controls {
+                f_hz,
+                p_w,
+                q: vec![1.0 / n as f64; n],
+            },
+            stats: SolverStats::default(),
+            selection,
+            q_eff,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Registry.
 // ---------------------------------------------------------------------------
 
@@ -429,6 +595,14 @@ fn build_round_robin(init: &PolicyInit<'_>) -> Box<dyn RoundPolicy> {
     Box::new(RoundRobinPolicy::new(init))
 }
 
+fn build_power_of_two(init: &PolicyInit<'_>) -> Box<dyn RoundPolicy> {
+    Box::new(PowerOfTwoPolicy::new(init))
+}
+
+fn build_oracle(init: &PolicyInit<'_>) -> Box<dyn RoundPolicy> {
+    Box::new(OraclePolicy::new(init))
+}
+
 /// The name → constructor registry all dispatch goes through.
 pub const REGISTRY: &[PolicySpec] = &[
     PolicySpec {
@@ -460,6 +634,16 @@ pub const REGISTRY: &[PolicySpec] = &[
         id: Policy::RoundRobin,
         name: "RR",
         build: build_round_robin,
+    },
+    PolicySpec {
+        id: Policy::PowerOfTwoChoices,
+        name: "P2C",
+        build: build_power_of_two,
+    },
+    PolicySpec {
+        id: Policy::Oracle,
+        name: "Oracle",
+        build: build_oracle,
     },
 ];
 
@@ -511,7 +695,10 @@ mod tests {
                 "{policy} missing from registry"
             );
         }
-        assert_eq!(names(), vec!["LROA", "Uni-D", "Uni-S", "DivFL", "Greedy", "RR"]);
+        assert_eq!(
+            names(),
+            vec!["LROA", "Uni-D", "Uni-S", "DivFL", "Greedy", "RR", "P2C", "Oracle"]
+        );
     }
 
     #[test]
@@ -534,6 +721,9 @@ mod tests {
             "uniform-dynamic",
             "greedy-channel",
             "round-robin",
+            "p2c",
+            "power-of-two-choices",
+            "oracle",
         ] {
             assert!(from_name(alias, &init).is_ok(), "{alias}");
         }
@@ -563,6 +753,7 @@ mod tests {
                 ids: &ids,
                 h: &h,
                 backlogs: &backlogs,
+                next_h: None,
             };
             let plan = policy.plan(&ctx, &mut rng);
             assert_eq!(policy.name(), spec.name);
@@ -608,6 +799,7 @@ mod tests {
             ids: &ids,
             h: &h,
             backlogs: &backlogs,
+            next_h: None,
         };
         let mut unid = build(Policy::UniformDynamic, &init);
         let mut unis = build(Policy::UniformStatic, &init);
@@ -645,6 +837,7 @@ mod tests {
             ids: &ids,
             h: &h,
             backlogs: &backlogs,
+            next_h: None,
         };
         let mut policy = build(Policy::GreedyChannel, &init);
         let plan = policy.plan(&ctx, &mut Rng::new(1));
@@ -677,12 +870,154 @@ mod tests {
                 ids: &ids,
                 h: &h,
                 backlogs: &backlogs,
+                next_h: None,
             };
             let plan = policy.plan(&ctx, &mut rng);
             assert_eq!(plan.selection.members.len(), 2);
             seen.extend(plan.selection.members.iter().copied());
         }
         assert_eq!(seen.len(), 12, "6 rounds × K=2 must cover all 12 devices");
+    }
+
+    #[test]
+    fn oracle_achieves_the_per_round_latency_floor() {
+        let (sys, ctl, fleet, h, backlogs) = setup();
+        let init = PolicyInit {
+            sys: &sys,
+            ctl: &ctl,
+            lambda: 1.0,
+            v: 1e4,
+            model_bits: 3.2e6,
+            seed: 7,
+        };
+        let ids: Vec<usize> = (0..12).collect();
+        let ctx = RoundContext {
+            t: 0,
+            k: 2,
+            devices: &fleet.devices,
+            weights: fleet.weights(),
+            ids: &ids,
+            h: &h,
+            backlogs: &backlogs,
+            next_h: None,
+        };
+        let mut policy = build(Policy::Oracle, &init);
+        assert!(policy.wants_peek());
+        let plan = policy.plan(&ctx, &mut Rng::new(1));
+        // All slots the same device, coefs aggregate to its plain delta.
+        let best = plan.selection.members[0];
+        assert!(plan.selection.members.iter().all(|&m| m == best));
+        let s: f64 = plan.selection.coefs.iter().sum();
+        assert!((s - 1.0).abs() < 1e-12);
+        // Full resources, and no device could have been faster.
+        let t_best = crate::system::round_time_s(
+            &sys,
+            &fleet.devices[best],
+            3.2e6,
+            h[best],
+            fleet.devices[best].f_max_hz,
+            fleet.devices[best].p_max_w,
+        );
+        for (i, d) in fleet.devices.iter().enumerate() {
+            assert_eq!(plan.controls.f_hz[i], d.f_max_hz);
+            assert_eq!(plan.controls.p_w[i], d.p_max_w);
+            let t_i = crate::system::round_time_s(&sys, d, 3.2e6, h[i], d.f_max_hz, d.p_max_w);
+            assert!(t_best <= t_i, "device {i} beats the oracle's pick");
+        }
+    }
+
+    #[test]
+    fn oracle_foresight_breaks_exact_ties_toward_the_fading_channel() {
+        // Two identical devices with identical gains this round: without
+        // foresight the lower position wins; with next_h the one about
+        // to fade is used first.
+        let (sys, ctl, _, mut h, backlogs) = setup();
+        // Fully homogeneous fleet (spread 0, equal data sizes), so equal
+        // h means exactly equal latency.
+        let mut rng = Rng::new(9);
+        let fleet = Fleet::generate(&sys, (100, 100), &mut rng);
+        h[3] = 0.2;
+        h[7] = 0.2;
+        for (i, v) in h.iter_mut().enumerate() {
+            if i != 3 && i != 7 {
+                *v = 0.05; // clearly slower
+            }
+        }
+        let init = PolicyInit {
+            sys: &sys,
+            ctl: &ctl,
+            lambda: 1.0,
+            v: 1e4,
+            model_bits: 3.2e6,
+            seed: 7,
+        };
+        let ids: Vec<usize> = (0..12).collect();
+        let next_h: Vec<f64> = (0..12).map(|i| if i == 7 { 0.01 } else { 0.4 }).collect();
+        let ctx_blind = RoundContext {
+            t: 0,
+            k: 2,
+            devices: &fleet.devices,
+            weights: fleet.weights(),
+            ids: &ids,
+            h: &h,
+            backlogs: &backlogs,
+            next_h: None,
+        };
+        let ctx_peek = RoundContext {
+            t: 0,
+            k: 2,
+            devices: &fleet.devices,
+            weights: fleet.weights(),
+            ids: &ids,
+            h: &h,
+            backlogs: &backlogs,
+            next_h: Some(&next_h),
+        };
+        let mut policy = build(Policy::Oracle, &init);
+        let blind = policy.plan(&ctx_blind, &mut Rng::new(1));
+        assert_eq!(blind.selection.members[0], 3, "position breaks blind ties");
+        let peeked = policy.plan(&ctx_peek, &mut Rng::new(1));
+        assert_eq!(
+            peeked.selection.members[0], 7,
+            "foresight uses the channel that is about to fade"
+        );
+    }
+
+    #[test]
+    fn p2c_marginals_drive_objective_and_queues() {
+        let (sys, ctl, fleet, h, backlogs) = setup();
+        let init = PolicyInit {
+            sys: &sys,
+            ctl: &ctl,
+            lambda: 1.0,
+            v: 1e4,
+            model_bits: 3.2e6,
+            seed: 7,
+        };
+        let ids: Vec<usize> = (0..12).collect();
+        let ctx = RoundContext {
+            t: 0,
+            k: 3,
+            devices: &fleet.devices,
+            weights: fleet.weights(),
+            ids: &ids,
+            h: &h,
+            backlogs: &backlogs,
+            next_h: None,
+        };
+        let mut policy = build(Policy::PowerOfTwoChoices, &init);
+        assert!(!policy.wants_peek());
+        let plan = policy.plan(&ctx, &mut Rng::new(9));
+        let expect = crate::sampling::p2c_marginals(&h);
+        assert_eq!(plan.controls.q, expect);
+        assert_eq!(plan.q_eff, expect);
+        assert_eq!(plan.selection.members.len(), 3);
+        // Better channels carry strictly larger marginals.
+        let mut idx: Vec<usize> = (0..12).collect();
+        idx.sort_by(|&a, &b| h[a].partial_cmp(&h[b]).unwrap());
+        for w in idx.windows(2) {
+            assert!(plan.q_eff[w[0]] < plan.q_eff[w[1]]);
+        }
     }
 
     #[test]
@@ -710,6 +1045,7 @@ mod tests {
             ids: &ids,
             h: &sub_h,
             backlogs: &sub_b,
+            next_h: None,
         };
         let mut policy = build(Policy::RoundRobin, &init);
         let plan = policy.plan(&ctx, &mut Rng::new(1));

@@ -1,0 +1,224 @@
+//! Adversarial worst-case channel for regret experiments.
+//!
+//! The paper's claim is that Lyapunov control works *without knowledge
+//! of future dynamics*; the sharpest stress of that claim is an
+//! adversary that reacts to the scheduler.  This environment draws the
+//! same IID clipped-exponential gains as `static` (same
+//! [`ChannelProcess`] construction and seed, so the base realization is
+//! comparable round for round) and then degrades a budget of devices:
+//!
+//! * the devices **selected last round** (reported through
+//!   [`Environment::observe_selection`]) — punishing schedulers that
+//!   ride a good channel, and
+//! * the remaining budget goes to the **best current gains** — exactly
+//!   the devices a greedy best-channel scheduler would pick next.
+//!
+//! Degraded gains are multiplied by `env.adv_degrade` and clamped to the
+//! clip floor, so they stay inside the paper's outlier band.  The budget
+//! is `env.adv_targets` devices (0 = `2K`: the previous selection plus
+//! greedy's predicted next picks).
+//!
+//! Because the next round depends on a selection the server has not made
+//! yet, this environment is **not previewable**: [`Environment::peek`]
+//! keeps its `None` default, and the oracle regret anchor runs against
+//! its own adversary stream (the standard adaptive-adversary regret
+//! convention).
+//!
+//! [`ChannelProcess`]: crate::system::ChannelProcess
+
+use super::{EnvInit, Environment, RoundEnv};
+use crate::system::{ChannelProcess, Device};
+
+/// Selection-reactive worst-case channel.
+pub struct AdversarialEnv {
+    channel: ChannelProcess,
+    /// Gain multiplier applied to targeted devices.
+    degrade: f64,
+    /// Devices degraded per round.
+    budget: usize,
+    clip_lo: f64,
+    /// Unique global ids selected last round (empty before round 1).
+    prev_selected: Vec<usize>,
+}
+
+impl AdversarialEnv {
+    pub fn new(init: &EnvInit<'_>) -> Self {
+        let budget = if init.env.adv_targets > 0 {
+            init.env.adv_targets
+        } else {
+            2 * init.sys.k
+        };
+        Self {
+            channel: ChannelProcess::new(init.sys, init.seed),
+            degrade: init.env.adv_degrade,
+            budget: budget.min(init.sys.num_devices),
+            clip_lo: init.sys.channel_clip.0,
+            prev_selected: Vec::new(),
+        }
+    }
+
+    /// The devices degraded this round given the base draw: last round's
+    /// selection first, then the best remaining gains up to the budget.
+    fn targets(&self, gains: &[f64]) -> Vec<usize> {
+        let n = gains.len();
+        let mut hit = vec![false; n];
+        let mut out = Vec::with_capacity(self.budget);
+        for &s in &self.prev_selected {
+            if out.len() == self.budget {
+                return out;
+            }
+            if s < n && !hit[s] {
+                hit[s] = true;
+                out.push(s);
+            }
+        }
+        // Fill with greedy's predicted picks: best gains first, ties
+        // broken by id for determinism.
+        let mut order: Vec<usize> = (0..n).filter(|&i| !hit[i]).collect();
+        order.sort_by(|&a, &b| {
+            gains[b]
+                .partial_cmp(&gains[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        out.extend(order.into_iter().take(self.budget - out.len()));
+        out
+    }
+}
+
+impl Environment for AdversarialEnv {
+    fn name(&self) -> &'static str {
+        "adv"
+    }
+
+    fn next_round(&mut self, _base: &[Device]) -> RoundEnv {
+        let mut gains = self.channel.next_round();
+        for t in self.targets(&gains) {
+            gains[t] = (gains[t] * self.degrade).max(self.clip_lo);
+        }
+        RoundEnv {
+            gains,
+            available: None,
+            devices: None,
+        }
+    }
+
+    // peek: deliberately the default `None` — the future depends on the
+    // selection the server has not made yet.
+
+    fn observe_selection(&mut self, selected: &[usize]) {
+        self.prev_selected = selected.to_vec();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EnvConfig, SystemConfig};
+
+    fn build(n: usize, k: usize, env_cfg: &EnvConfig, seed: u64) -> AdversarialEnv {
+        let sys = SystemConfig {
+            num_devices: n,
+            k,
+            ..SystemConfig::default()
+        };
+        AdversarialEnv::new(&EnvInit {
+            sys: &sys,
+            env: env_cfg,
+            seed,
+        })
+    }
+
+    #[test]
+    fn degrades_exactly_the_greedy_targets_before_any_selection() {
+        let cfg = EnvConfig::default();
+        let mut adv = build(10, 2, &cfg, 3);
+        let sys = SystemConfig {
+            num_devices: 10,
+            k: 2,
+            ..SystemConfig::default()
+        };
+        let mut reference = ChannelProcess::new(&sys, 3);
+        let base: Vec<Device> = Vec::new();
+        let got = adv.next_round(&base).gains;
+        let raw = reference.next_round();
+        // Budget 2K = 4: the four best raw gains are degraded, the rest
+        // are untouched.
+        let mut order: Vec<usize> = (0..10).collect();
+        order.sort_by(|&a, &b| raw[b].partial_cmp(&raw[a]).unwrap().then(a.cmp(&b)));
+        for (rank, &i) in order.iter().enumerate() {
+            if rank < 4 {
+                let want = (raw[i] * cfg.adv_degrade).max(0.01);
+                assert_eq!(got[i], want, "device {i} should be degraded");
+            } else {
+                assert_eq!(got[i], raw[i], "device {i} should be untouched");
+            }
+        }
+    }
+
+    #[test]
+    fn punishes_the_previous_selection() {
+        let cfg = EnvConfig {
+            adv_targets: 2,
+            ..EnvConfig::default()
+        };
+        let mut adv = build(12, 2, &cfg, 7);
+        let sys = SystemConfig {
+            num_devices: 12,
+            k: 2,
+            ..SystemConfig::default()
+        };
+        let mut reference = ChannelProcess::new(&sys, 7);
+        let base: Vec<Device> = Vec::new();
+        adv.next_round(&base);
+        reference.next_round();
+        // Whatever was selected takes the whole budget next round.
+        adv.observe_selection(&[3, 8]);
+        let got = adv.next_round(&base).gains;
+        let raw = reference.next_round();
+        for i in [3usize, 8] {
+            assert_eq!(got[i], (raw[i] * cfg.adv_degrade).max(0.01));
+        }
+        for i in (0..12).filter(|i| ![3, 8].contains(i)) {
+            assert_eq!(got[i], raw[i], "device {i}");
+        }
+    }
+
+    #[test]
+    fn gains_stay_in_band_and_runs_are_deterministic() {
+        let cfg = EnvConfig {
+            adv_degrade: 0.01, // drives degraded gains into the floor
+            ..EnvConfig::default()
+        };
+        let mut a = build(8, 2, &cfg, 5);
+        let mut b = build(8, 2, &cfg, 5);
+        let base: Vec<Device> = Vec::new();
+        for _ in 0..100 {
+            let (ra, rb) = (a.next_round(&base), b.next_round(&base));
+            assert_eq!(ra.gains, rb.gains);
+            assert!(ra.gains.iter().all(|&h| (0.01..=0.5).contains(&h)));
+            a.observe_selection(&[1, 2]);
+            b.observe_selection(&[1, 2]);
+        }
+    }
+
+    #[test]
+    fn is_not_previewable() {
+        let cfg = EnvConfig::default();
+        let adv = build(6, 2, &cfg, 1);
+        let base: Vec<Device> = Vec::new();
+        assert!(adv.peek(&base).is_none());
+    }
+
+    #[test]
+    fn budget_is_clamped_to_the_fleet() {
+        let cfg = EnvConfig {
+            adv_targets: 999,
+            ..EnvConfig::default()
+        };
+        let mut adv = build(4, 2, &cfg, 2);
+        let base: Vec<Device> = Vec::new();
+        let re = adv.next_round(&base);
+        assert_eq!(re.gains.len(), 4);
+    }
+}

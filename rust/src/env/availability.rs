@@ -18,6 +18,7 @@ use crate::system::{ChannelProcess, Device};
 ///   the chain leaves fewer than `K` devices online, offline devices are
 ///   forced back on in ascending id order until `K` are reachable (a
 ///   deterministic repair that keeps trajectories reproducible).
+#[derive(Clone)]
 pub struct AvailabilityEnv {
     channel: ChannelProcess,
     streams: Vec<Rng>,
@@ -72,6 +73,11 @@ impl Environment for AvailabilityEnv {
             available: Some(available),
             devices: None,
         }
+    }
+
+    fn peek(&self, base: &[Device]) -> Option<RoundEnv> {
+        // Action-independent: stepping a clone previews the stream.
+        Some(self.clone().next_round(base))
     }
 }
 

@@ -21,6 +21,7 @@ use crate::system::{ChannelProcess, Device};
 /// latency/energy) see; the control policy still planned against
 /// whatever the environment reports, so an online controller is graded
 /// on how it tracks the drift.
+#[derive(Clone)]
 pub struct DriftEnv {
     channel: ChannelProcess,
     streams: Vec<Rng>,
@@ -79,6 +80,11 @@ impl Environment for DriftEnv {
             available: None,
             devices: Some(devices),
         }
+    }
+
+    fn peek(&self, base: &[Device]) -> Option<RoundEnv> {
+        // Action-independent: stepping a clone previews the stream.
+        Some(self.clone().next_round(base))
     }
 }
 

@@ -18,6 +18,7 @@ use crate::system::{draw_clipped_exponential, Device};
 /// from the root exactly like [`crate::system::ChannelProcess`]) carries
 /// both the transition and the gain draws, so device `n`'s trajectory is
 /// independent of the fleet size.
+#[derive(Clone)]
 pub struct GilbertElliottEnv {
     streams: Vec<Rng>,
     good: Vec<bool>,
@@ -83,6 +84,11 @@ impl Environment for GilbertElliottEnv {
             available: None,
             devices: None,
         }
+    }
+
+    fn peek(&self, base: &[Device]) -> Option<RoundEnv> {
+        // Action-independent: stepping a clone previews the stream.
+        Some(self.clone().next_round(base))
     }
 }
 

@@ -16,7 +16,7 @@
 //! unreachable devices.  Adding an environment is one impl plus one
 //! [`REGISTRY`] line, mirroring [`crate::control::policy`].
 //!
-//! The four registered environments:
+//! The six registered environments:
 //!
 //! | name     | channel                      | availability     | parameters |
 //! |----------|------------------------------|------------------|------------|
@@ -24,25 +24,43 @@
 //! | `ge`     | Gilbert–Elliott Markov fading| always-on        | fixed      |
 //! | `avail`  | IID exponential              | Markov on/off    | fixed      |
 //! | `drift`  | IID exponential              | always-on        | random walk|
+//! | `trace`  | recorded CSV log (replayed)  | from the log     | fixed      |
+//! | `adv`    | adversarially degraded exp.  | always-on        | fixed      |
 //!
 //! `static` is bitwise-identical to the pre-env [`ChannelProcess`] path
 //! (`tests/policy_parity.rs` proves it), so the paper's figures are
-//! untouched by this layer.  `avail` and `drift` reuse the *same* channel
-//! construction as `static`, so their gains coincide with the static
-//! realization round for round — the masking/drift is the only delta,
-//! which makes robustness comparisons clean.
+//! untouched by this layer.  `avail`, `drift`, and `adv` reuse the *same*
+//! channel construction as `static`, so their gains coincide with (or,
+//! for `adv`, start from) the static realization round for round — the
+//! masking/drift/degradation is the only delta, which makes robustness
+//! comparisons clean.
+//!
+//! Two trait hooks extend the per-round contract:
+//!
+//! * [`Environment::peek`] previews the *next* round without advancing
+//!   the stream — `Some` only for action-independent environments, whose
+//!   future is a pure function of their state; the adversarial channel
+//!   returns `None` because its next round depends on the selection it
+//!   has not yet observed.  The oracle regret anchor
+//!   ([`crate::control::policy`]) is the consumer.
+//! * [`Environment::observe_selection`] feeds the realized selection
+//!   back after each round; only reactive environments (`adv`) listen.
 //!
 //! [`ChannelProcess`]: crate::system::ChannelProcess
 
+mod adversarial;
 mod availability;
 mod drift;
 mod gilbert_elliott;
 mod static_env;
+mod trace;
 
+pub use adversarial::AdversarialEnv;
 pub use availability::AvailabilityEnv;
 pub use drift::DriftEnv;
 pub use gilbert_elliott::GilbertElliottEnv;
 pub use static_env::StaticEnv;
+pub use trace::TraceEnv;
 
 use crate::config::{EnvConfig, EnvKind, SystemConfig};
 use crate::rng::Rng;
@@ -91,6 +109,23 @@ pub trait Environment: Send {
     /// Realize the next round: gains, candidate set, parameter drift.
     /// `base` is the fleet's static parameter set (drift applies on top).
     fn next_round(&mut self, base: &[Device]) -> RoundEnv;
+
+    /// Preview the round that the *next* [`Environment::next_round`] call
+    /// will realize, without advancing the stream.  Default `None`: the
+    /// environment cannot be previewed.  Action-independent environments
+    /// implement it by stepping a clone of their state, so a peek
+    /// followed by `next_round` returns the identical realization; the
+    /// adversarial channel keeps the default because its future depends
+    /// on a selection that has not happened yet.
+    fn peek(&self, base: &[Device]) -> Option<RoundEnv> {
+        let _ = base;
+        None
+    }
+
+    /// Feed back the round's realized selection (unique global device
+    /// ids).  Only reactive environments (`adv`) care; the default
+    /// ignores it.
+    fn observe_selection(&mut self, _selected: &[usize]) {}
 }
 
 /// Everything an environment constructor may need.
@@ -102,7 +137,10 @@ pub struct EnvInit<'a> {
     pub seed: u64,
 }
 
-type EnvCtor = fn(&EnvInit<'_>) -> Box<dyn Environment>;
+/// Constructors are fallible: the trace environment parses its log file
+/// at build time (missing file / bad schema must surface as a config
+/// error, not a panic inside the round loop).
+type EnvCtor = fn(&EnvInit<'_>) -> Result<Box<dyn Environment>>;
 
 /// One registry row: environment id, canonical name, constructor.
 pub struct EnvSpec {
@@ -111,20 +149,28 @@ pub struct EnvSpec {
     pub build: EnvCtor,
 }
 
-fn build_static(init: &EnvInit<'_>) -> Box<dyn Environment> {
-    Box::new(StaticEnv::new(init))
+fn build_static(init: &EnvInit<'_>) -> Result<Box<dyn Environment>> {
+    Ok(Box::new(StaticEnv::new(init)))
 }
 
-fn build_gilbert_elliott(init: &EnvInit<'_>) -> Box<dyn Environment> {
-    Box::new(GilbertElliottEnv::new(init))
+fn build_gilbert_elliott(init: &EnvInit<'_>) -> Result<Box<dyn Environment>> {
+    Ok(Box::new(GilbertElliottEnv::new(init)))
 }
 
-fn build_availability(init: &EnvInit<'_>) -> Box<dyn Environment> {
-    Box::new(AvailabilityEnv::new(init))
+fn build_availability(init: &EnvInit<'_>) -> Result<Box<dyn Environment>> {
+    Ok(Box::new(AvailabilityEnv::new(init)))
 }
 
-fn build_drift(init: &EnvInit<'_>) -> Box<dyn Environment> {
-    Box::new(DriftEnv::new(init))
+fn build_drift(init: &EnvInit<'_>) -> Result<Box<dyn Environment>> {
+    Ok(Box::new(DriftEnv::new(init)))
+}
+
+fn build_trace(init: &EnvInit<'_>) -> Result<Box<dyn Environment>> {
+    Ok(Box::new(TraceEnv::new(init)?))
+}
+
+fn build_adversarial(init: &EnvInit<'_>) -> Result<Box<dyn Environment>> {
+    Ok(Box::new(AdversarialEnv::new(init)))
 }
 
 /// The name → constructor registry all dispatch goes through.
@@ -149,10 +195,20 @@ pub const REGISTRY: &[EnvSpec] = &[
         name: "drift",
         build: build_drift,
     },
+    EnvSpec {
+        id: EnvKind::Trace,
+        name: "trace",
+        build: build_trace,
+    },
+    EnvSpec {
+        id: EnvKind::Adversarial,
+        name: "adv",
+        build: build_adversarial,
+    },
 ];
 
 /// Build the registered environment for a config [`EnvKind`] id.
-pub fn build(kind: EnvKind, init: &EnvInit<'_>) -> Box<dyn Environment> {
+pub fn build(kind: EnvKind, init: &EnvInit<'_>) -> Result<Box<dyn Environment>> {
     let spec = REGISTRY
         .iter()
         .find(|s| s.id == kind)
@@ -162,7 +218,7 @@ pub fn build(kind: EnvKind, init: &EnvInit<'_>) -> Box<dyn Environment> {
 
 /// Build an environment by name or alias (alias table: [`EnvKind::parse`]).
 pub fn from_name(name: &str, init: &EnvInit<'_>) -> Result<Box<dyn Environment>> {
-    Ok(build(EnvKind::parse(name)?, init))
+    build(EnvKind::parse(name)?, init)
 }
 
 /// Canonical names of every registered environment, registry order.
@@ -179,7 +235,11 @@ mod tests {
             num_devices: 10,
             ..SystemConfig::default()
         };
-        (sys, EnvConfig::default())
+        let env = EnvConfig {
+            trace_path: crate::test_util::campus_fixture(),
+            ..EnvConfig::default()
+        };
+        (sys, env)
     }
 
     #[test]
@@ -190,7 +250,7 @@ mod tests {
                 "{kind} missing from registry"
             );
         }
-        assert_eq!(names(), vec!["static", "ge", "avail", "drift"]);
+        assert_eq!(names(), vec!["static", "ge", "avail", "drift", "trace", "adv"]);
     }
 
     #[test]
@@ -201,10 +261,32 @@ mod tests {
             env: &env,
             seed: 1,
         };
-        for alias in ["static", "ge", "gilbert-elliott", "avail", "availability", "drift"] {
+        for alias in [
+            "static",
+            "ge",
+            "gilbert-elliott",
+            "avail",
+            "availability",
+            "drift",
+            "trace",
+            "adv",
+            "adversarial",
+        ] {
             assert!(from_name(alias, &init).is_ok(), "{alias}");
         }
         assert!(from_name("nope", &init).is_err());
+    }
+
+    #[test]
+    fn trace_build_fails_cleanly_on_a_missing_log() {
+        let (sys, mut env) = setup();
+        env.trace_path = "/nonexistent/trace.csv".into();
+        let init = EnvInit {
+            sys: &sys,
+            env: &env,
+            seed: 1,
+        };
+        assert!(build(EnvKind::Trace, &init).is_err());
     }
 
     #[test]
@@ -218,7 +300,7 @@ mod tests {
         let mut rng = crate::rng::Rng::new(3);
         let fleet = crate::system::Fleet::generate(&sys, (50, 100), &mut rng);
         for spec in REGISTRY {
-            let mut e = (spec.build)(&init);
+            let mut e = (spec.build)(&init).unwrap();
             assert_eq!(e.name(), spec.name);
             for _ in 0..50 {
                 let re = e.next_round(&fleet.devices);
@@ -244,6 +326,49 @@ mod tests {
                 }
                 if let Some(devs) = &re.devices {
                     assert_eq!(devs.len(), 10, "{}", spec.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn peek_previews_exactly_the_next_round() {
+        // For every action-independent environment, peek must equal the
+        // next_round that follows it, at every point in the stream; the
+        // adversarial channel must refuse to be previewed.
+        let (sys, env) = setup();
+        let init = EnvInit {
+            sys: &sys,
+            env: &env,
+            seed: 11,
+        };
+        let mut rng = crate::rng::Rng::new(5);
+        let fleet = crate::system::Fleet::generate(&sys, (50, 100), &mut rng);
+        for spec in REGISTRY {
+            let mut e = (spec.build)(&init).unwrap();
+            if spec.id == EnvKind::Adversarial {
+                assert!(
+                    e.peek(&fleet.devices).is_none(),
+                    "adv must not be previewable (its future depends on the selection)"
+                );
+                continue;
+            }
+            for t in 0..20 {
+                let peeked = e
+                    .peek(&fleet.devices)
+                    .unwrap_or_else(|| panic!("{}: peek unavailable", spec.name));
+                let real = e.next_round(&fleet.devices);
+                assert_eq!(peeked.gains, real.gains, "{} round {t}", spec.name);
+                assert_eq!(peeked.available, real.available, "{} round {t}", spec.name);
+                match (&peeked.devices, &real.devices) {
+                    (None, None) => {}
+                    (Some(a), Some(b)) => {
+                        for (da, db) in a.iter().zip(b) {
+                            assert_eq!(da.f_max_hz, db.f_max_hz, "{} round {t}", spec.name);
+                            assert_eq!(da.alpha, db.alpha, "{} round {t}", spec.name);
+                        }
+                    }
+                    _ => panic!("{}: peek/next devices disagree", spec.name),
                 }
             }
         }

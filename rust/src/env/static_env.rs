@@ -9,6 +9,7 @@ use crate::system::{ChannelProcess, Device};
 /// This wraps [`ChannelProcess`] with the exact seed the pre-env server
 /// used, so trajectories are **bitwise identical** to the pre-env code
 /// path — the golden parity tests in `tests/policy_parity.rs` pin this.
+#[derive(Clone)]
 pub struct StaticEnv {
     channel: ChannelProcess,
 }
@@ -32,6 +33,11 @@ impl Environment for StaticEnv {
             available: None,
             devices: None,
         }
+    }
+
+    fn peek(&self, base: &[Device]) -> Option<RoundEnv> {
+        // Action-independent: stepping a clone previews the stream.
+        Some(self.clone().next_round(base))
     }
 }
 

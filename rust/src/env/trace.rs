@@ -1,0 +1,403 @@
+//! Trace replay: a recorded channel/availability log as an environment.
+//!
+//! Real measurement campaigns (the evaluation style of Shi et al. and
+//! Luo et al.) log per-device channel quality at coarse intervals; this
+//! environment replays such a log as the round process, so schedulers
+//! are graded on *recorded* dynamics instead of synthetic Markov ones.
+//!
+//! The log is a CSV with header `round,device,gain[,available]`
+//! (schema documented in `tests/fixtures/README.md`):
+//!
+//! * rows may be sparse in `round` — gains are **linearly interpolated**
+//!   between a device's recorded samples (and held flat before the first
+//!   / after the last sample of a period);
+//! * `available` (optional, default 1) is a step function: a device
+//!   keeps its last recorded on/off state until the next sample;
+//! * the log **wraps cyclically** past its last recorded round, so any
+//!   horizon can replay a finite trace;
+//! * a fleet larger than the trace maps device `n` onto trace track
+//!   `n % tracks` (the standard trace-stretching convention);
+//! * if the log leaves fewer than `K` devices online, offline devices
+//!   are forced back on in ascending id order (the same deterministic
+//!   repair as the `avail` environment).
+//!
+//! Replay consumes **no randomness** at all, so trajectories are
+//! trivially bitwise-identical across seeds, processes, and thread
+//! counts, and [`Environment::peek`] is exact (a pure function of the
+//! round index).
+
+use std::path::Path;
+
+use super::{EnvInit, Environment, RoundEnv};
+use crate::system::Device;
+use crate::Result;
+
+/// One recorded sample of one trace track.
+#[derive(Clone, Debug)]
+struct Sample {
+    round: usize,
+    gain: f64,
+    available: bool,
+}
+
+/// Replay of a recorded channel/availability log.
+#[derive(Clone)]
+pub struct TraceEnv {
+    /// Per-track samples, sorted by round, non-empty.
+    tracks: Vec<Vec<Sample>>,
+    /// Replay period: last recorded round + 1 (the log wraps).
+    period: usize,
+    /// Next round index to realize.
+    t: usize,
+    clip: (f64, f64),
+    min_online: usize,
+    num_devices: usize,
+}
+
+impl TraceEnv {
+    pub fn new(init: &EnvInit<'_>) -> Result<Self> {
+        let path = Path::new(&init.env.trace_path);
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("env.trace_path {path:?}: {e}"))?;
+        let tracks = parse_trace(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+        let period = tracks
+            .iter()
+            .flat_map(|t| t.iter().map(|s| s.round))
+            .max()
+            .expect("parse_trace guarantees at least one sample")
+            + 1;
+        Ok(Self {
+            tracks,
+            period,
+            t: 0,
+            clip: init.sys.channel_clip,
+            min_online: init.sys.k.max(1),
+            num_devices: init.sys.num_devices,
+        })
+    }
+
+    /// Number of recorded tracks (fleet devices map onto them modulo).
+    pub fn num_tracks(&self) -> usize {
+        self.tracks.len()
+    }
+
+    /// Replay period in rounds.
+    pub fn period(&self) -> usize {
+        self.period
+    }
+
+    /// Realize round `t` — a pure function, shared by `next_round` and
+    /// `peek`.
+    fn round_env(&self, t: usize) -> RoundEnv {
+        let t_eff = t % self.period;
+        let (lo, hi) = self.clip;
+        let mut gains = Vec::with_capacity(self.num_devices);
+        let mut online = Vec::with_capacity(self.num_devices);
+        for i in 0..self.num_devices {
+            let track = &self.tracks[i % self.tracks.len()];
+            let (gain, avail) = sample_track(track, t_eff);
+            gains.push(gain.clamp(lo, hi));
+            online.push(avail);
+        }
+        // Repair: guarantee at least K reachable devices.
+        let mut count = online.iter().filter(|&&b| b).count();
+        for on in online.iter_mut() {
+            if count >= self.min_online {
+                break;
+            }
+            if !*on {
+                *on = true;
+                count += 1;
+            }
+        }
+        let available = if count == self.num_devices {
+            None
+        } else {
+            Some((0..self.num_devices).filter(|&i| online[i]).collect())
+        };
+        RoundEnv {
+            gains,
+            available,
+            devices: None,
+        }
+    }
+}
+
+/// Gain (linear interpolation, flat extrapolation) and availability
+/// (step function, last sample at or before `t`) of one track at `t`.
+fn sample_track(track: &[Sample], t: usize) -> (f64, bool) {
+    // Index of the first sample strictly after t.
+    let after = track.partition_point(|s| s.round <= t);
+    if after == 0 {
+        // Before the first sample: hold it flat.
+        return (track[0].gain, track[0].available);
+    }
+    let left = &track[after - 1];
+    if after == track.len() || left.round == t {
+        return (left.gain, left.available);
+    }
+    let right = &track[after];
+    let frac = (t - left.round) as f64 / (right.round - left.round) as f64;
+    let gain = left.gain + (right.gain - left.gain) * frac;
+    (gain, left.available)
+}
+
+/// Parse the `round,device,gain[,available]` CSV into per-track sample
+/// lists (sorted by round, device ids contiguous from 0).
+fn parse_trace(text: &str) -> Result<Vec<Vec<Sample>>> {
+    let mut lines = text.lines().enumerate();
+    let header = loop {
+        match lines.next() {
+            Some((_, l)) if l.trim().is_empty() || l.trim_start().starts_with('#') => continue,
+            Some((_, l)) => break l.trim(),
+            None => anyhow::bail!("empty trace file"),
+        }
+    };
+    let cols: Vec<&str> = header.split(',').map(str::trim).collect();
+    anyhow::ensure!(
+        cols.len() >= 3
+            && cols[0].eq_ignore_ascii_case("round")
+            && cols[1].eq_ignore_ascii_case("device")
+            && cols[2].eq_ignore_ascii_case("gain")
+            && (cols.len() == 3 || (cols.len() == 4 && cols[3].eq_ignore_ascii_case("available"))),
+        "bad trace header {header:?} (expected round,device,gain[,available])"
+    );
+    let has_avail = cols.len() == 4;
+
+    let mut tracks: Vec<Vec<Sample>> = Vec::new();
+    for (lineno, raw) in lines {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        anyhow::ensure!(
+            fields.len() == cols.len(),
+            "line {}: expected {} fields, got {}",
+            lineno + 1,
+            cols.len(),
+            fields.len()
+        );
+        let round: usize = fields[0]
+            .parse()
+            .map_err(|e| anyhow::anyhow!("line {}: bad round: {e}", lineno + 1))?;
+        let device: usize = fields[1]
+            .parse()
+            .map_err(|e| anyhow::anyhow!("line {}: bad device: {e}", lineno + 1))?;
+        let gain: f64 = fields[2]
+            .parse()
+            .map_err(|e| anyhow::anyhow!("line {}: bad gain: {e}", lineno + 1))?;
+        anyhow::ensure!(
+            gain.is_finite() && gain > 0.0,
+            "line {}: gain must be finite and > 0",
+            lineno + 1
+        );
+        let available = if has_avail {
+            match fields[3] {
+                "0" | "false" => false,
+                "1" | "true" => true,
+                other => anyhow::bail!("line {}: bad available {other:?} (0|1)", lineno + 1),
+            }
+        } else {
+            true
+        };
+        if device >= tracks.len() {
+            tracks.resize_with(device + 1, Vec::new);
+        }
+        tracks[device].push(Sample {
+            round,
+            gain,
+            available,
+        });
+    }
+    anyhow::ensure!(!tracks.is_empty(), "trace has no data rows");
+    for (d, track) in tracks.iter_mut().enumerate() {
+        anyhow::ensure!(
+            !track.is_empty(),
+            "trace device ids must be contiguous from 0 (device {d} has no rows)"
+        );
+        track.sort_by_key(|s| s.round);
+        anyhow::ensure!(
+            track.windows(2).all(|w| w[0].round < w[1].round),
+            "device {d} has duplicate rounds"
+        );
+    }
+    Ok(tracks)
+}
+
+impl Environment for TraceEnv {
+    fn name(&self) -> &'static str {
+        "trace"
+    }
+
+    fn next_round(&mut self, _base: &[Device]) -> RoundEnv {
+        let re = self.round_env(self.t);
+        self.t += 1;
+        re
+    }
+
+    fn peek(&self, _base: &[Device]) -> Option<RoundEnv> {
+        // A pure function of the round index: peek is exact and free.
+        Some(self.round_env(self.t))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EnvConfig, SystemConfig};
+
+    fn write_trace(name: &str, body: &str) -> String {
+        let dir = std::env::temp_dir().join("lroa_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        std::fs::write(&path, body).unwrap();
+        path.to_string_lossy().into_owned()
+    }
+
+    fn build(n: usize, k: usize, path: &str) -> Result<TraceEnv> {
+        let sys = SystemConfig {
+            num_devices: n,
+            k,
+            ..SystemConfig::default()
+        };
+        let env = EnvConfig {
+            trace_path: path.to_string(),
+            ..EnvConfig::default()
+        };
+        TraceEnv::new(&EnvInit {
+            sys: &sys,
+            env: &env,
+            seed: 0,
+        })
+    }
+
+    #[test]
+    fn interpolates_between_sparse_samples() {
+        let path = write_trace(
+            "interp.csv",
+            "round,device,gain\n0,0,0.10\n4,0,0.30\n0,1,0.20\n",
+        );
+        let env = build(2, 1, &path).unwrap();
+        assert_eq!(env.num_tracks(), 2);
+        assert_eq!(env.period(), 5);
+        // Device 0: linear from 0.10 at t=0 to 0.30 at t=4.
+        let g: Vec<f64> = (0..5).map(|t| env.round_env(t).gains[0]).collect();
+        for (t, got) in g.iter().enumerate() {
+            let want = 0.10 + 0.05 * t as f64;
+            assert!((got - want).abs() < 1e-12, "t={t}: {got} vs {want}");
+        }
+        // Device 1: single sample held flat.
+        assert_eq!(env.round_env(3).gains[1], 0.20);
+    }
+
+    #[test]
+    fn replay_wraps_cyclically() {
+        let path = write_trace(
+            "wrap.csv",
+            "round,device,gain\n0,0,0.10\n2,0,0.30\n",
+        );
+        let mut env = build(1, 1, &path).unwrap();
+        let base: Vec<Device> = Vec::new();
+        let first: Vec<f64> = (0..3).map(|_| env.next_round(&base).gains[0]).collect();
+        let second: Vec<f64> = (0..3).map(|_| env.next_round(&base).gains[0]).collect();
+        assert_eq!(first, second, "period-3 trace must repeat exactly");
+    }
+
+    #[test]
+    fn availability_is_a_step_function_with_k_floor() {
+        let path = write_trace(
+            "avail.csv",
+            "round,device,gain,available\n\
+             0,0,0.2,1\n2,0,0.2,0\n5,0,0.2,1\n\
+             0,1,0.3,1\n\
+             0,2,0.1,1\n2,2,0.1,0\n",
+        );
+        let mut env = build(3, 1, &path).unwrap();
+        let base: Vec<Device> = Vec::new();
+        let avail: Vec<Option<Vec<usize>>> =
+            (0..6).map(|_| env.next_round(&base).available).collect();
+        // t=0,1: everyone on -> fast path (None).
+        assert_eq!(avail[0], None);
+        assert_eq!(avail[1], None);
+        // t=2..4: devices 0 and 2 off.
+        for t in 2..5 {
+            assert_eq!(avail[t], Some(vec![1]), "t={t}");
+        }
+        // t=5: device 0 back on.
+        assert_eq!(avail[5], Some(vec![0, 1]));
+    }
+
+    #[test]
+    fn k_floor_repairs_an_all_offline_round() {
+        let path = write_trace(
+            "dead.csv",
+            "round,device,gain,available\n0,0,0.2,0\n0,1,0.3,0\n",
+        );
+        let mut env = build(2, 2, &path).unwrap();
+        let base: Vec<Device> = Vec::new();
+        let re = env.next_round(&base);
+        // Both forced back on -> full fleet -> fast path.
+        assert_eq!(re.available, None);
+    }
+
+    #[test]
+    fn fleet_larger_than_trace_maps_modulo() {
+        let path = write_trace(
+            "small.csv",
+            "round,device,gain\n0,0,0.11\n0,1,0.22\n",
+        );
+        let mut env = build(5, 1, &path).unwrap();
+        let base: Vec<Device> = Vec::new();
+        let g = env.next_round(&base).gains;
+        assert_eq!(g, vec![0.11, 0.22, 0.11, 0.22, 0.11]);
+    }
+
+    #[test]
+    fn gains_are_clamped_to_the_clip_band() {
+        let path = write_trace(
+            "clip.csv",
+            "round,device,gain\n0,0,7.5\n1,0,0.0001\n",
+        );
+        let mut env = build(1, 1, &path).unwrap();
+        let base: Vec<Device> = Vec::new();
+        assert_eq!(env.next_round(&base).gains[0], 0.5);
+        assert_eq!(env.next_round(&base).gains[0], 0.01);
+    }
+
+    #[test]
+    fn deterministic_and_peek_exact() {
+        let path = write_trace(
+            "det.csv",
+            "round,device,gain\n0,0,0.1\n3,0,0.4\n0,1,0.2\n2,1,0.3\n",
+        );
+        let mut a = build(2, 1, &path).unwrap();
+        let mut b = build(2, 1, &path).unwrap();
+        let base: Vec<Device> = Vec::new();
+        for _ in 0..10 {
+            let pa = a.peek(&base).unwrap();
+            let ra = a.next_round(&base);
+            let rb = b.next_round(&base);
+            assert_eq!(ra.gains, rb.gains);
+            assert_eq!(pa.gains, ra.gains);
+            assert_eq!(pa.available, ra.available);
+        }
+    }
+
+    #[test]
+    fn bad_traces_are_rejected() {
+        for (name, body) in [
+            ("empty.csv", ""),
+            ("header.csv", "time,device,gain\n0,0,0.1\n"),
+            ("no_rows.csv", "round,device,gain\n"),
+            ("gap.csv", "round,device,gain\n0,0,0.1\n0,2,0.2\n"),
+            ("dup.csv", "round,device,gain\n0,0,0.1\n0,0,0.2\n"),
+            ("neg.csv", "round,device,gain\n0,0,-0.1\n"),
+            ("bad_avail.csv", "round,device,gain,available\n0,0,0.1,maybe\n"),
+        ] {
+            let path = write_trace(name, body);
+            assert!(build(2, 1, &path).is_err(), "{name} should be rejected");
+        }
+        assert!(build(2, 1, "/nonexistent/x.csv").is_err());
+    }
+}

@@ -9,18 +9,23 @@
 //!   machine-readable grid manifest ([`manifest_json`]) the figure
 //!   pipeline consumes;
 //! * [`runner`] — the thread-pooled scenario runner (deterministic
-//!   per-scenario results, slot-ordered output) and the mean±std
-//!   aggregation of seed repeats.
+//!   per-scenario results, slot-ordered output, per-cell wall-clock
+//!   budgets) and the mean±std aggregation of seed repeats;
+//! * [`regret`] — the regret planner: shadows every online cell with a
+//!   clairvoyant oracle run on the same environment stream and fills
+//!   the `regret` CSV column (`lroa regret`).
 //!
 //! Sweeps are resumable: `lroa sweep --resume` skips cells whose CSV
-//! already exists under `--out`, so a killed grid continues where it
-//! stopped.  The `lroa sweep` CLI subcommand, the figure examples, and
-//! the harness all sit on top of this module.
+//! already exists under `--out` (and re-reads them so `summary.json`
+//! still aggregates the full grid), so a killed grid continues where it
+//! stopped.  The `lroa sweep`/`lroa regret` CLI subcommands, the figure
+//! examples, and the harness all sit on top of this module.
 
+pub mod regret;
 pub mod runner;
 pub mod spec;
 
 pub use runner::{
     run_scenarios, summarize_groups, GroupSummary, ScenarioResult, Stat,
 };
-pub use spec::{manifest_json, Scenario, SweepSpec};
+pub use spec::{manifest_json, EnvSel, Scenario, SweepSpec};

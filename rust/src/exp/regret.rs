@@ -1,0 +1,212 @@
+//! Regret experiments: every online cell paired with a clairvoyant
+//! oracle anchor on the same environment stream.
+//!
+//! The paper's premise is online control *without knowledge of future
+//! dynamics*; the natural question is how much that ignorance costs.
+//! Following the clairvoyant-anchor methodology of Shi et al. and Luo
+//! et al., `lroa regret` runs a policy × environment grid where every
+//! cell is shadowed by an [`Policy::Oracle`] run on the *same* draws:
+//! environments are pure functions of `(config, train.seed)` (never of
+//! the policy), so building a second server with only `train.policy`
+//! changed forks an identical stream.  The selection-reactive `adv`
+//! environment is the documented exception — there the oracle faces its
+//! own adaptive adversary, the standard convention for adaptive-regret
+//! comparisons.
+//!
+//! Each online cell's CSV gains a populated `regret` column:
+//! `regret[t] = total_time_s[t] − total_time_s_oracle[t]`, the
+//! cumulative latency the policy has paid for being online.  Oracle
+//! cells carry `regret = 0`.  The manifest links each cell to its
+//! anchor via `regret_vs`.
+
+use std::collections::BTreeMap;
+
+use super::runner::{run_scenarios, ScenarioResult};
+use super::spec::{Scenario, SweepSpec};
+use crate::config::Policy;
+use crate::Result;
+
+/// Expand a regret grid: the spec's online cells plus one oracle cell
+/// per distinct environment stream (dataset × env × K × µ/ν × seed ×
+/// rounds), each online cell back-linked to its anchor via
+/// [`Scenario::regret_vs`].  Oracle cells come last, with no link.
+pub fn plan(spec: &SweepSpec) -> Result<Vec<Scenario>> {
+    anyhow::ensure!(
+        !spec.policies.contains(&Policy::Oracle),
+        "regret: the oracle anchor is added automatically; drop it from --policies"
+    );
+    let online = spec.expand()?;
+    let mut oracle_spec = spec.clone();
+    oracle_spec.policies = vec![Policy::Oracle];
+    let oracle = oracle_spec.expand()?;
+
+    // Stream key: the cell's config with the policy normalized away —
+    // two cells share an environment stream iff everything else matches.
+    let stream_key = |sc: &Scenario| -> String {
+        let mut cfg = sc.cfg.clone();
+        cfg.train.policy = Policy::Oracle;
+        cfg.hash_hex()
+    };
+    let anchors: BTreeMap<String, String> = oracle
+        .iter()
+        .map(|sc| (stream_key(sc), sc.label.clone()))
+        .collect();
+
+    let mut out = Vec::with_capacity(online.len() + oracle.len());
+    for mut sc in online {
+        let anchor = anchors
+            .get(&stream_key(&sc))
+            .expect("the oracle grid covers every stream by construction")
+            .clone();
+        sc.regret_vs = Some(anchor);
+        out.push(sc);
+    }
+    out.extend(oracle);
+    Ok(out)
+}
+
+/// Run a planned regret grid and populate the `regret` column: oracle
+/// cells get 0, online cells get their cumulative latency gap against
+/// their anchor, round for round.
+pub fn run(scenarios: Vec<Scenario>, threads: usize) -> Result<Vec<ScenarioResult>> {
+    let mut results = run_scenarios(scenarios, threads)?;
+    let oracle_times: BTreeMap<String, Vec<f64>> = results
+        .iter()
+        .filter(|r| r.scenario.cfg.train.policy == Policy::Oracle)
+        .map(|r| {
+            let series = r.recorder.rounds.iter().map(|x| x.total_time_s).collect();
+            (r.scenario.label.clone(), series)
+        })
+        .collect();
+    for r in &mut results {
+        if r.scenario.cfg.train.policy == Policy::Oracle {
+            for rec in &mut r.recorder.rounds {
+                rec.regret = 0.0;
+            }
+            continue;
+        }
+        let anchor = r
+            .scenario
+            .regret_vs
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("cell {} has no oracle anchor", r.scenario.label))?;
+        let base = oracle_times
+            .get(anchor)
+            .ok_or_else(|| anyhow::anyhow!("oracle cell {anchor} missing from the grid"))?;
+        anyhow::ensure!(
+            base.len() == r.recorder.rounds.len(),
+            "cell {} and anchor {anchor} ran different horizons",
+            r.scenario.label
+        );
+        for (rec, oracle_total) in r.recorder.rounds.iter_mut().zip(base) {
+            rec.regret = rec.total_time_s - oracle_total;
+        }
+    }
+    Ok(results)
+}
+
+/// The smallest final regret across online cells — ≥ 0 whenever the
+/// oracle is the latency lower bound it is designed to be (exact on
+/// action-independent environments; empirical under the adaptive `adv`
+/// adversary, where the streams differ by construction).
+pub fn min_final_regret(results: &[ScenarioResult]) -> f64 {
+    results
+        .iter()
+        .filter(|r| r.scenario.cfg.train.policy != Policy::Oracle)
+        .map(|r| r.recorder.final_regret())
+        .fold(f64::INFINITY, f64::min)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EnvKind;
+    use crate::exp::EnvSel;
+
+    fn small_spec() -> SweepSpec {
+        let trace = format!("trace:{}", crate::test_util::campus_fixture());
+        SweepSpec {
+            datasets: vec!["cifar".into()],
+            policies: vec![Policy::Lroa, Policy::GreedyChannel, Policy::PowerOfTwoChoices],
+            envs: vec![
+                EnvSel::parse(&trace).unwrap(),
+                EnvSel::from(EnvKind::Adversarial),
+            ],
+            seeds: vec![1, 2],
+            rounds: Some(30),
+            overrides: vec!["--system.num_devices=12".into()],
+            ..SweepSpec::default()
+        }
+    }
+
+    #[test]
+    fn plan_pairs_every_online_cell_with_an_anchor() {
+        let cells = plan(&small_spec()).unwrap();
+        // 3 policies × 2 envs × 2 seeds online + 2 envs × 2 seeds oracle.
+        assert_eq!(cells.len(), 3 * 2 * 2 + 2 * 2);
+        let oracle_labels: Vec<&str> = cells
+            .iter()
+            .filter(|c| c.cfg.train.policy == Policy::Oracle)
+            .map(|c| c.label.as_str())
+            .collect();
+        assert_eq!(oracle_labels.len(), 4);
+        for c in cells.iter().filter(|c| c.cfg.train.policy != Policy::Oracle) {
+            let anchor = c.regret_vs.as_deref().expect("online cell unpaired");
+            assert!(oracle_labels.contains(&anchor), "{}: bad anchor {anchor}", c.label);
+            // The anchor shares env kind and seed.
+            let a = cells.iter().find(|x| x.label == anchor).unwrap();
+            assert_eq!(a.cfg.env.kind, c.cfg.env.kind);
+            assert_eq!(a.cfg.train.seed, c.cfg.train.seed);
+        }
+        // Oracle must not be passed as an online policy.
+        let mut bad = small_spec();
+        bad.policies.push(Policy::Oracle);
+        assert!(plan(&bad).is_err());
+    }
+
+    #[test]
+    fn run_populates_a_consistent_regret_column() {
+        let cells = plan(&small_spec()).unwrap();
+        let results = run(cells, 2).unwrap();
+        for r in &results {
+            let is_oracle = r.scenario.cfg.train.policy == Policy::Oracle;
+            for rec in &r.recorder.rounds {
+                assert!(
+                    !rec.regret.is_nan(),
+                    "{}: regret column not populated",
+                    r.scenario.label
+                );
+                if is_oracle {
+                    assert_eq!(rec.regret, 0.0);
+                }
+            }
+            if !is_oracle {
+                // Cumulative latency gap is non-decreasing exactly when
+                // the oracle is the per-round lower bound; on the trace
+                // env (shared stream) that is a theorem.
+                if r.scenario.cfg.env.kind == EnvKind::Trace {
+                    let regs: Vec<f64> =
+                        r.recorder.rounds.iter().map(|x| x.regret).collect();
+                    assert!(
+                        regs.windows(2).all(|w| w[1] >= w[0] - 1e-9),
+                        "{}: regret decreased on a shared stream",
+                        r.scenario.label
+                    );
+                    assert!(regs[0] >= -1e-9);
+                }
+                // On the adaptive `adv` stream the bound is empirical,
+                // not a theorem (the anchor faces its own adversary) —
+                // but this grid is fully seeded, so the check is stable:
+                // if it ever fires, the oracle stopped being a usable
+                // anchor for these defaults and that *should* be loud.
+                assert!(
+                    r.recorder.final_regret() >= -1e-9,
+                    "{}: oracle not a lower bound (final regret {})",
+                    r.scenario.label,
+                    r.recorder.final_regret()
+                );
+            }
+        }
+        assert!(min_final_regret(&results) >= -1e-9);
+    }
+}

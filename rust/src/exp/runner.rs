@@ -44,7 +44,9 @@ pub fn run_scenarios(mut scenarios: Vec<Scenario>, threads: usize) -> Result<Vec
 fn run_one(scenario: Scenario) -> Result<ScenarioResult> {
     let t0 = Instant::now();
     let mut server = Server::new(scenario.cfg.clone(), scenario.mode)?;
-    server.run()?;
+    server
+        .run_with_timeout(scenario.timeout_s)
+        .map_err(|e| anyhow::anyhow!("cell {}: {e:#}", scenario.label))?;
     let mut recorder = std::mem::take(&mut server.recorder);
     recorder.label = scenario.label.clone();
     // Stream the cell's CSV out the moment it finishes: a sweep killed
@@ -124,6 +126,9 @@ pub struct GroupSummary {
     pub final_accuracy: Stat,
     pub time_avg_energy: Stat,
     pub time_avg_objective: Stat,
+    /// Final cumulative regret vs the oracle anchor (NaN-mean outside
+    /// `lroa regret` runs, where the column is unpopulated).
+    pub final_regret: Stat,
 }
 
 /// Collapse seed repeats: one mean±std row per scenario group, in first-
@@ -156,6 +161,7 @@ pub fn summarize_groups(results: &[ScenarioResult]) -> Vec<GroupSummary> {
                 time_avg_objective: Stat::from_values(&pick(&|r| {
                     r.time_avg_objective().last().copied().unwrap_or(f64::NAN)
                 })),
+                final_regret: Stat::from_values(&pick(&|r| r.final_regret())),
             }
         })
         .collect()

@@ -4,7 +4,61 @@
 use crate::config::{Config, EnvKind, Policy};
 use crate::fl::SimMode;
 use crate::json::{obj, Json};
+use crate::metrics::CSV_COLUMNS;
 use crate::Result;
+
+/// One environment-axis entry: a kind plus the per-entry data some kinds
+/// carry (today: the trace log path, so `--envs=trace:campus.csv,adv`
+/// can put two differently-sourced environments on one axis).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EnvSel {
+    pub kind: EnvKind,
+    /// Trace log path; only meaningful for [`EnvKind::Trace`] (a bare
+    /// `trace` entry relies on an `--env.trace_path=...` override).
+    pub trace_path: Option<String>,
+}
+
+impl From<EnvKind> for EnvSel {
+    fn from(kind: EnvKind) -> Self {
+        Self {
+            kind,
+            trace_path: None,
+        }
+    }
+}
+
+impl EnvSel {
+    /// Parse one axis entry: an [`EnvKind`] name/alias, or
+    /// `trace:<path>`.
+    pub fn parse(s: &str) -> Result<EnvSel> {
+        if let Some(path) = s.strip_prefix("trace:") {
+            anyhow::ensure!(!path.is_empty(), "empty path in {s:?}");
+            return Ok(EnvSel {
+                kind: EnvKind::Trace,
+                trace_path: Some(path.to_string()),
+            });
+        }
+        Ok(EnvKind::parse(s)?.into())
+    }
+
+    /// Parse a comma list; `all` expands to every synthetic environment
+    /// ([`EnvKind::SYNTHETIC`] — trace needs a log, so it is never
+    /// implied).
+    pub fn parse_list(val: &str) -> Result<Vec<EnvSel>> {
+        if val == "all" {
+            return Ok(EnvKind::SYNTHETIC.iter().map(|&k| k.into()).collect());
+        }
+        val.split(',').map(EnvSel::parse).collect()
+    }
+
+    /// Pin this environment onto a cell config.
+    pub fn apply(&self, cfg: &mut Config) {
+        cfg.env.kind = self.kind;
+        if let Some(p) = &self.trace_path {
+            cfg.env.trace_path = p.clone();
+        }
+    }
+}
 
 /// One fully-resolved experiment cell: a config plus naming metadata.
 #[derive(Clone, Debug)]
@@ -22,6 +76,13 @@ pub struct Scenario {
     /// this cell completes (not at the end-of-grid barrier), so a killed
     /// sweep is resumable cell by cell (`lroa sweep --resume`).
     pub csv_dir: Option<std::path::PathBuf>,
+    /// Per-cell wall-clock budget [s] (`--cell_timeout_s`); exceeding it
+    /// fails the cell loudly instead of truncating its series.
+    pub timeout_s: Option<f64>,
+    /// Label of the oracle cell this cell's `regret` column is measured
+    /// against (populated by the `lroa regret` planner; appears in the
+    /// manifest so figure scripts can join the pair).
+    pub regret_vs: Option<String>,
 }
 
 impl Scenario {
@@ -50,8 +111,9 @@ impl Scenario {
 pub struct SweepSpec {
     pub datasets: Vec<String>,
     pub policies: Vec<Policy>,
-    /// Dynamic environments ([`crate::env`]).
-    pub envs: Vec<EnvKind>,
+    /// Dynamic environments ([`crate::env`]); entries may carry a trace
+    /// path (`trace:<file>`).
+    pub envs: Vec<EnvSel>,
     /// Sampling frequency `K` values.
     pub ks: Vec<usize>,
     /// λ scale factors µ.
@@ -72,6 +134,9 @@ pub struct SweepSpec {
     /// the duplicate-label guard, and per-cell `csv_dir` assignment);
     /// `expand()`/`run_scenarios` do not act on it themselves.
     pub resume: bool,
+    /// Per-cell wall-clock timeout [s] (`--cell_timeout_s`); None = no
+    /// budget.
+    pub cell_timeout_s: Option<f64>,
     /// Extra `--section.key=value` overrides applied to every cell.
     pub overrides: Vec<String>,
 }
@@ -91,17 +156,18 @@ impl Default for SweepSpec {
             threads: 0,
             out_dir: "runs/sweep".into(),
             resume: false,
+            cell_timeout_s: None,
             overrides: Vec::new(),
         }
     }
 }
 
 /// An axis iterates its values, or `None` once when empty (= keep base).
-fn axis<T: Copy>(values: &[T]) -> Vec<Option<T>> {
+fn axis<T: Clone>(values: &[T]) -> Vec<Option<T>> {
     if values.is_empty() {
         vec![None]
     } else {
-        values.iter().map(|&v| Some(v)).collect()
+        values.iter().cloned().map(Some).collect()
     }
 }
 
@@ -121,9 +187,10 @@ impl SweepSpec {
         F: FnMut(&str) -> Result<Config>,
     {
         let mut out = Vec::new();
+        let envs = axis(&self.envs);
         for dataset in &self.datasets {
             for &p in &axis(&self.policies) {
-                for &e in &axis(&self.envs) {
+                for e in &envs {
                     for &k in &axis(&self.ks) {
                         for &mu in &axis(&self.mus) {
                             for &nu in &axis(&self.nus) {
@@ -133,7 +200,7 @@ impl SweepSpec {
                                         cfg.train.policy = p;
                                     }
                                     if let Some(e) = e {
-                                        cfg.env.kind = e;
+                                        e.apply(&mut cfg);
                                     }
                                     if let Some(k) = k {
                                         cfg.system.k = k;
@@ -171,6 +238,8 @@ impl SweepSpec {
                                         cfg,
                                         mode: self.mode,
                                         csv_dir: None,
+                                        timeout_s: self.cell_timeout_s,
+                                        regret_vs: None,
                                     });
                                 }
                             }
@@ -188,6 +257,19 @@ impl SweepSpec {
         let mut s = format!("{}-{}", cfg.train.policy.name(), dataset);
         if self.envs.len() > 1 {
             s.push_str(&format!("-{}", cfg.env.kind));
+            // Two trace entries with different logs are different
+            // environments: disambiguate by the log's file stem so their
+            // labels (and CSVs) can never collide or merge as seed
+            // repeats of one group.
+            if cfg.env.kind == EnvKind::Trace
+                && self.envs.iter().filter(|e| e.kind == EnvKind::Trace).count() > 1
+            {
+                let stem = std::path::Path::new(&cfg.env.trace_path)
+                    .file_stem()
+                    .map(|t| t.to_string_lossy().into_owned())
+                    .unwrap_or_default();
+                s.push_str(&format!("-{stem}"));
+            }
         }
         if self.ks.len() > 1 {
             s.push_str(&format!("-K{}", cfg.system.k));
@@ -201,15 +283,17 @@ impl SweepSpec {
         s
     }
 
-    /// Parse the `lroa sweep` command line.
+    /// Parse the `lroa sweep` / `lroa regret` command line.
     ///
     /// Recognized (all `--key=value`): `--datasets`, `--policies`,
-    /// `--envs` (comma list of environment names or `all`), `--ks`,
-    /// `--mus`, `--nus`, `--seeds` (comma list or `a..b` inclusive),
-    /// `--rounds`, `--threads`, `--mode=sim|train`, `--out`, plus the
-    /// bare flag `--resume` (skip cells whose CSV already exists).
-    /// Dotted `--section.key=value` config overrides pass through to
-    /// every cell; anything else is an error.
+    /// `--envs` (comma list of environment names, `trace:<path>`
+    /// entries, or `all`), `--ks`, `--mus`, `--nus`, `--seeds` (comma
+    /// list or `a..b` inclusive), `--rounds`, `--threads`,
+    /// `--cell_timeout_s` (per-cell wall-clock budget),
+    /// `--mode=sim|train`, `--out`, plus the bare flag `--resume` (skip
+    /// cells whose CSV already exists).  Dotted `--section.key=value`
+    /// config overrides pass through to every cell; anything else is an
+    /// error.
     pub fn from_cli(args: &[String]) -> Result<SweepSpec> {
         let mut spec = SweepSpec::default();
         for arg in args {
@@ -234,13 +318,18 @@ impl SweepSpec {
                             .collect::<Result<Vec<_>>>()?
                     }
                 }
-                "envs" => spec.envs = EnvKind::parse_list(val)?,
+                "envs" => spec.envs = EnvSel::parse_list(val)?,
                 "ks" => spec.ks = parse_list(val, "ks")?,
                 "mus" => spec.mus = parse_list(val, "mus")?,
                 "nus" => spec.nus = parse_list(val, "nus")?,
                 "seeds" => spec.seeds = parse_seeds(val)?,
                 "rounds" => spec.rounds = Some(parse_one(val, "rounds")?),
                 "threads" => spec.threads = parse_one(val, "threads")?,
+                "cell_timeout_s" => {
+                    let t: f64 = parse_one(val, "cell_timeout_s")?;
+                    anyhow::ensure!(t > 0.0, "sweep: --cell_timeout_s must be > 0");
+                    spec.cell_timeout_s = Some(t);
+                }
                 "out" => spec.out_dir = val.to_string(),
                 "mode" => {
                     spec.mode = match val {
@@ -258,14 +347,17 @@ impl SweepSpec {
 }
 
 /// Machine-readable description of every cell in an expanded grid — the
-/// contract between `lroa sweep` and the figure pipeline.  Written to
-/// `<out>/manifest.json` right after expansion (before any cell runs),
-/// so a crashed or `--resume`d sweep still documents its full grid.
+/// contract between `lroa sweep`/`lroa regret` and the figure pipeline.
+/// Written to `<out>/manifest.json` right after expansion (before any
+/// cell runs), so a crashed or `--resume`d sweep still documents its
+/// full grid.  `columns` is the cell-CSV schema
+/// ([`crate::metrics::CSV_COLUMNS`], including `regret`); regret cells
+/// additionally name their oracle anchor under `regret_vs`.
 pub fn manifest_json(scenarios: &[Scenario]) -> Json {
     let cells: Vec<Json> = scenarios
         .iter()
         .map(|s| {
-            obj(vec![
+            let mut fields = vec![
                 ("group", Json::Str(s.group.clone())),
                 ("label", Json::Str(s.label.clone())),
                 ("seed", Json::Num(s.cfg.train.seed as f64)),
@@ -285,10 +377,28 @@ pub fn manifest_json(scenarios: &[Scenario]) -> Json {
                 ("rounds", Json::Num(s.cfg.train.rounds as f64)),
                 ("config_hash", Json::Str(s.cfg.hash_hex())),
                 ("csv", Json::Str(format!("{}.csv", s.label))),
-            ])
+            ];
+            if s.cfg.env.kind == EnvKind::Trace {
+                fields.push(("env_trace", Json::Str(s.cfg.env.trace_path.clone())));
+            }
+            if let Some(anchor) = &s.regret_vs {
+                fields.push(("regret_vs", Json::Str(anchor.clone())));
+            }
+            obj(fields)
         })
         .collect();
-    obj(vec![("cells", Json::Arr(cells))])
+    obj(vec![
+        (
+            "columns",
+            Json::Arr(
+                CSV_COLUMNS
+                    .iter()
+                    .map(|c| Json::Str(c.to_string()))
+                    .collect(),
+            ),
+        ),
+        ("cells", Json::Arr(cells)),
+    ])
 }
 
 fn parse_one<T: std::str::FromStr>(val: &str, what: &str) -> Result<T> {
@@ -390,6 +500,7 @@ mod tests {
             "--seeds=1..3",
             "--rounds=50",
             "--threads=4",
+            "--cell_timeout_s=30",
             "--datasets=femnist",
             "--mode=sim",
             "--out=runs/mysweep",
@@ -401,18 +512,96 @@ mod tests {
         .collect();
         let spec = SweepSpec::from_cli(&args).unwrap();
         assert_eq!(spec.policies, vec![Policy::Lroa, Policy::UniformStatic]);
-        assert_eq!(spec.envs, vec![EnvKind::Static, EnvKind::GilbertElliott]);
+        assert_eq!(
+            spec.envs,
+            vec![EnvSel::from(EnvKind::Static), EnvSel::from(EnvKind::GilbertElliott)]
+        );
         assert_eq!(spec.ks, vec![2, 4]);
         assert_eq!(spec.nus, vec![1e4, 1e5]);
         assert_eq!(spec.seeds, vec![1, 2, 3]);
         assert_eq!(spec.rounds, Some(50));
         assert_eq!(spec.threads, 4);
+        assert_eq!(spec.cell_timeout_s, Some(30.0));
         assert_eq!(spec.out_dir, "runs/mysweep");
         assert!(spec.resume);
         assert_eq!(spec.overrides, vec!["--system.num_devices=32".to_string()]);
         let cells = spec.expand().unwrap();
         assert_eq!(cells.len(), 2 * 2 * 2 * 2 * 3);
         assert!(cells.iter().all(|c| c.cfg.system.num_devices == 32));
+        assert!(cells.iter().all(|c| c.timeout_s == Some(30.0)));
+    }
+
+    #[test]
+    fn env_sel_parses_trace_entries_and_pins_the_path() {
+        assert_eq!(
+            EnvSel::parse("ge").unwrap(),
+            EnvSel::from(EnvKind::GilbertElliott)
+        );
+        let sel = EnvSel::parse("trace:logs/campus.csv").unwrap();
+        assert_eq!(sel.kind, EnvKind::Trace);
+        assert_eq!(sel.trace_path.as_deref(), Some("logs/campus.csv"));
+        assert!(EnvSel::parse("trace:").is_err());
+        assert!(EnvSel::parse("nope").is_err());
+        // `all` never implies trace.
+        let all = EnvSel::parse_list("all").unwrap();
+        assert!(all.iter().all(|s| s.kind != EnvKind::Trace));
+        assert_eq!(all.len(), EnvKind::SYNTHETIC.len());
+
+        // Expansion pins both the kind and the path into the config.
+        let spec = SweepSpec {
+            datasets: vec!["cifar".into()],
+            envs: vec![
+                EnvSel::parse("trace:logs/campus.csv").unwrap(),
+                EnvSel::from(EnvKind::Adversarial),
+            ],
+            rounds: Some(5),
+            ..SweepSpec::default()
+        };
+        let cells = spec.expand().unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].cfg.env.kind, EnvKind::Trace);
+        assert_eq!(cells[0].cfg.env.trace_path, "logs/campus.csv");
+        assert_eq!(cells[0].label, "LROA-cifar-trace");
+        assert_eq!(cells[1].cfg.env.kind, EnvKind::Adversarial);
+        assert_eq!(cells[1].label, "LROA-cifar-adv");
+
+        // A bare trace entry without a path (and no override) fails
+        // validation at expansion, not inside the round loop.
+        let bare = SweepSpec {
+            datasets: vec!["cifar".into()],
+            envs: vec![EnvSel::from(EnvKind::Trace)],
+            ..SweepSpec::default()
+        };
+        assert!(bare.expand().is_err());
+    }
+
+    #[test]
+    fn two_traces_on_one_axis_get_distinct_labels() {
+        let spec = SweepSpec {
+            datasets: vec!["cifar".into()],
+            envs: vec![
+                EnvSel::parse("trace:logs/campus.csv").unwrap(),
+                EnvSel::parse("trace:logs/downtown.csv").unwrap(),
+            ],
+            rounds: Some(5),
+            ..SweepSpec::default()
+        };
+        let cells = spec.expand().unwrap();
+        assert_eq!(cells[0].label, "LROA-cifar-trace-campus");
+        assert_eq!(cells[1].label, "LROA-cifar-trace-downtown");
+        assert_ne!(cells[0].group, cells[1].group);
+        // A single trace entry keeps the plain kind segment.
+        let single = SweepSpec {
+            datasets: vec!["cifar".into()],
+            envs: vec![
+                EnvSel::parse("trace:logs/campus.csv").unwrap(),
+                EnvSel::from(EnvKind::Adversarial),
+            ],
+            rounds: Some(5),
+            ..SweepSpec::default()
+        };
+        let cells = single.expand().unwrap();
+        assert_eq!(cells[0].label, "LROA-cifar-trace");
     }
 
     #[test]
@@ -432,7 +621,8 @@ mod tests {
         let spec = SweepSpec::from_cli(&["--policies=all".to_string()]).unwrap();
         assert_eq!(spec.policies, Policy::ALL.to_vec());
         let spec = SweepSpec::from_cli(&["--envs=all".to_string()]).unwrap();
-        assert_eq!(spec.envs, EnvKind::ALL.to_vec());
+        let want: Vec<EnvSel> = EnvKind::SYNTHETIC.iter().map(|&k| k.into()).collect();
+        assert_eq!(spec.envs, want);
     }
 
     #[test]
@@ -440,22 +630,24 @@ mod tests {
         let spec = SweepSpec {
             datasets: vec!["cifar".into()],
             policies: vec![Policy::Lroa, Policy::UniformStatic],
-            envs: EnvKind::ALL.to_vec(),
+            envs: EnvKind::SYNTHETIC.iter().map(|&k| k.into()).collect(),
             seeds: vec![1],
             rounds: Some(5),
             ..SweepSpec::default()
         };
         let cells = spec.expand().unwrap();
-        assert_eq!(cells.len(), 2 * 4);
+        assert_eq!(cells.len(), 2 * 5);
         assert_eq!(cells[0].label, "LROA-cifar-static");
         assert_eq!(cells[1].label, "LROA-cifar-ge");
         assert_eq!(cells[2].label, "LROA-cifar-avail");
         assert_eq!(cells[3].label, "LROA-cifar-drift");
+        assert_eq!(cells[4].label, "LROA-cifar-adv");
         assert_eq!(cells[3].cfg.env.kind, EnvKind::Drift);
+        assert_eq!(cells[4].cfg.env.kind, EnvKind::Adversarial);
         // A single pinned env adds no label segment.
         let pinned = SweepSpec {
             datasets: vec!["cifar".into()],
-            envs: vec![EnvKind::GilbertElliott],
+            envs: vec![EnvKind::GilbertElliott.into()],
             ..SweepSpec::default()
         };
         let cells = pinned.expand().unwrap();
@@ -468,13 +660,23 @@ mod tests {
         let spec = SweepSpec {
             datasets: vec!["cifar".into()],
             policies: vec![Policy::Lroa, Policy::UniformStatic],
-            envs: vec![EnvKind::Static, EnvKind::Availability],
+            envs: vec![EnvKind::Static.into(), EnvKind::Availability.into()],
             seeds: vec![1, 2],
             rounds: Some(7),
             ..SweepSpec::default()
         };
         let cells = spec.expand().unwrap();
         let manifest = manifest_json(&cells);
+        // The CSV schema is published, regret column included.
+        let columns: Vec<&str> = manifest
+            .get("columns")
+            .and_then(|c| c.as_arr())
+            .unwrap()
+            .iter()
+            .filter_map(|c| c.as_str())
+            .collect();
+        assert_eq!(columns, crate::metrics::CSV_COLUMNS);
+        assert!(columns.contains(&"regret"));
         let arr = manifest.get("cells").and_then(|c| c.as_arr()).unwrap();
         assert_eq!(arr.len(), cells.len());
         for (cell, sc) in arr.iter().zip(&cells) {

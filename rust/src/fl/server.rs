@@ -180,7 +180,13 @@ impl Server {
         let budgets = fleet.devices.iter().map(|d| d.energy_budget_j).collect();
         // The environment owns the round randomness; it receives the seed
         // the pre-env server gave ChannelProcess, so `env = static`
-        // reproduces the paper's gain streams bitwise.
+        // reproduces the paper's gain streams bitwise.  Because the seed
+        // depends only on `train.seed` (never on the policy), two servers
+        // built from configs differing only in `train.policy` fork
+        // *identical* env streams — the property `lroa regret` relies on
+        // to run the oracle against the same draws as each online policy
+        // (the selection-reactive `adv` environment is the documented
+        // exception: each policy faces its own adaptive adversary).
         let environment = env::build(
             cfg.env.kind,
             &env::EnvInit {
@@ -188,7 +194,7 @@ impl Server {
                 env: &cfg.env,
                 seed: seed ^ 0xC4A1,
             },
-        );
+        )?;
 
         let label = format!("{}-{}", round_policy.name(), cfg.train.dataset);
         Ok(Server {
@@ -244,7 +250,27 @@ impl Server {
 
     /// Run the full training horizon.
     pub fn run(&mut self) -> Result<()> {
+        self.run_with_timeout(None)
+    }
+
+    /// Run the horizon with an optional wall-clock budget.  Exceeding it
+    /// is an error naming the progress made, so a sweep's
+    /// `--cell_timeout_s` guard rail fails loudly instead of silently
+    /// truncating a cell's series.
+    pub fn run_with_timeout(&mut self, timeout_s: Option<f64>) -> Result<()> {
+        let t0 = std::time::Instant::now();
         for t in 0..self.cfg.train.rounds {
+            if let Some(limit) = timeout_s {
+                if t0.elapsed().as_secs_f64() > limit {
+                    anyhow::bail!(
+                        "cell timed out after {:.1}s wall-clock ({}/{} rounds done); \
+                         raise --cell_timeout_s or shrink the cell",
+                        t0.elapsed().as_secs_f64(),
+                        t,
+                        self.cfg.train.rounds
+                    );
+                }
+            }
             self.round(t)?;
         }
         Ok(())
@@ -259,6 +285,14 @@ impl Server {
             available,
             devices: drifted,
         } = self.env.next_round(&self.fleet.devices);
+        // Foresight, only when the scheme asks (the oracle anchor) and
+        // the environment is previewable — online policies never see it.
+        let peeked = if self.policy.wants_peek() {
+            self.env.peek(&self.fleet.devices)
+        } else {
+            None
+        };
+        let next_h = peeked.as_ref().map(|p| p.gains.as_slice());
         let n = self.fleet.len();
         let devices: &[Device] = drifted.as_deref().unwrap_or(&self.fleet.devices);
 
@@ -275,6 +309,8 @@ impl Server {
                 let sub_h: Vec<f64> = avail.iter().map(|&i| h[i]).collect();
                 let backlogs = self.queues.backlogs();
                 let sub_backlogs: Vec<f64> = avail.iter().map(|&i| backlogs[i]).collect();
+                let sub_next_h: Option<Vec<f64>> =
+                    next_h.map(|nh| avail.iter().map(|&i| nh[i]).collect());
                 let ctx = RoundContext {
                     t,
                     k,
@@ -283,6 +319,7 @@ impl Server {
                     ids: avail,
                     h: &sub_h,
                     backlogs: &sub_backlogs,
+                    next_h: sub_next_h.as_deref(),
                 };
                 let sub_plan = self.policy.plan(&ctx, &mut self.sample_rng);
                 scatter_plan(sub_plan, avail, &self.fleet.devices)
@@ -297,11 +334,14 @@ impl Server {
                     ids: &self.identity,
                     h: &h,
                     backlogs: self.queues.backlogs(),
+                    next_h,
                 };
                 self.policy.plan(&ctx, &mut self.sample_rng)
             }
         };
         let unique = plan.selection.unique_members();
+        // Reactive environments (adv) observe what was actually used.
+        self.env.observe_selection(&unique);
 
         // (4) Latency/energy bookkeeping (eqs. 6-15), under the possibly
         // drifted device parameters.
@@ -430,6 +470,8 @@ impl Server {
             test_accuracy: f64::NAN,
             test_loss: f64::NAN,
             solver_time_s: plan.stats.solve_time_s,
+            // Populated post-hoc by the regret runner (crate::exp).
+            regret: f64::NAN,
         };
 
         let is_eval_round = self.mode == SimMode::Full
@@ -529,13 +571,21 @@ mod tests {
         }
     }
 
+    use crate::test_util::campus_fixture;
+
     #[test]
     fn every_environment_runs_every_policy() {
         use crate::config::EnvKind;
         for kind in EnvKind::ALL {
-            for policy in [Policy::Lroa, Policy::UniformStatic, Policy::RoundRobin] {
+            for policy in [
+                Policy::Lroa,
+                Policy::UniformStatic,
+                Policy::RoundRobin,
+                Policy::Oracle,
+            ] {
                 let mut cfg = base_cfg(policy, 25);
                 cfg.env.kind = kind;
+                cfg.env.trace_path = campus_fixture();
                 cfg.env.avail_p_drop = 0.3; // make dropout actually bite
                 let mut server = Server::new(cfg, SimMode::ControlPlaneOnly).unwrap();
                 server.run().unwrap();
@@ -666,6 +716,86 @@ mod tests {
             t_lroa < t_unis,
             "LROA {t_lroa} should beat Uni-S {t_unis}"
         );
+    }
+
+    #[test]
+    fn oracle_is_the_latency_lower_bound_on_shared_streams() {
+        // On any action-independent environment two servers with the
+        // same seed see identical draws, so the oracle's per-round
+        // pointwise minimum must dominate every policy cumulatively.
+        use crate::config::EnvKind;
+        for kind in [EnvKind::Static, EnvKind::GilbertElliott, EnvKind::Trace] {
+            let run = |policy: Policy| -> f64 {
+                let mut cfg = base_cfg(policy, 60);
+                cfg.env.kind = kind;
+                cfg.env.trace_path = campus_fixture();
+                let mut server = Server::new(cfg, SimMode::ControlPlaneOnly).unwrap();
+                server.run().unwrap();
+                server.recorder.total_time_s()
+            };
+            let t_oracle = run(Policy::Oracle);
+            for policy in [
+                Policy::Lroa,
+                Policy::UniformStatic,
+                Policy::GreedyChannel,
+                Policy::PowerOfTwoChoices,
+                Policy::RoundRobin,
+            ] {
+                let t = run(policy);
+                assert!(
+                    t_oracle <= t + 1e-9,
+                    "{kind}: oracle {t_oracle} must lower-bound {policy} {t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn adversarial_env_reacts_to_the_policy_but_stays_deterministic() {
+        use crate::config::EnvKind;
+        let run = |policy: Policy| -> Vec<f64> {
+            let mut cfg = base_cfg(policy, 40);
+            cfg.env.kind = EnvKind::Adversarial;
+            let mut s = Server::new(cfg, SimMode::ControlPlaneOnly).unwrap();
+            s.run().unwrap();
+            s.recorder.rounds.iter().map(|r| r.round_time_s).collect()
+        };
+        assert_eq!(run(Policy::Lroa), run(Policy::Lroa), "adv not deterministic");
+        // The adversary punishes greedy's predicted picks, so greedy's
+        // trajectory differs from its static-env one.
+        let adv_greedy = run(Policy::GreedyChannel);
+        let static_greedy = {
+            let cfg = base_cfg(Policy::GreedyChannel, 40);
+            let mut s = Server::new(cfg, SimMode::ControlPlaneOnly).unwrap();
+            s.run().unwrap();
+            s.recorder
+                .rounds
+                .iter()
+                .map(|r| r.round_time_s)
+                .collect::<Vec<_>>()
+        };
+        assert_ne!(adv_greedy, static_greedy, "adversary never bit greedy");
+        // And greedy pays for chasing the degraded top channels.
+        let sum_adv: f64 = adv_greedy.iter().sum();
+        let sum_static: f64 = static_greedy.iter().sum();
+        assert!(
+            sum_adv > sum_static,
+            "adv should slow greedy: {sum_adv} vs {sum_static}"
+        );
+    }
+
+    #[test]
+    fn run_with_timeout_fails_loudly_when_exceeded() {
+        let cfg = base_cfg(Policy::Lroa, 100_000);
+        let mut server = Server::new(cfg, SimMode::ControlPlaneOnly).unwrap();
+        let err = server.run_with_timeout(Some(0.0)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("timed out"), "unexpected error {msg}");
+        // A generous budget completes normally.
+        let cfg = base_cfg(Policy::Lroa, 5);
+        let mut server = Server::new(cfg, SimMode::ControlPlaneOnly).unwrap();
+        server.run_with_timeout(Some(3600.0)).unwrap();
+        assert_eq!(server.recorder.rounds.len(), 5);
     }
 
     #[test]

@@ -13,8 +13,8 @@
 
 use std::path::{Path, PathBuf};
 
-use crate::config::{Config, EnvKind, Policy};
-use crate::exp::{self, Scenario, ScenarioResult};
+use crate::config::{Config, Policy};
+use crate::exp::{self, EnvSel, Scenario, ScenarioResult};
 use crate::fl::SimMode;
 use crate::json::{obj, Json};
 use crate::metrics::Recorder;
@@ -34,12 +34,13 @@ pub struct Args {
     pub repeats: usize,
     /// Scenario-runner pool width (0 = one per core).
     pub threads: usize,
-    /// Environment axis (`--envs=static,ge,avail,drift|all`); empty =
-    /// keep the base config's environment.  Examples that support the
-    /// axis (fig1_2_baselines) read it through [`Args::validated_envs`]
-    /// and feed it into [`crate::exp::SweepSpec::envs`]; the rest call
+    /// Environment axis (`--envs=static,ge,avail,drift,adv,
+    /// trace:<path>|all`); empty = keep the base config's environment.
+    /// Examples that support the axis (fig1_2_baselines) read it through
+    /// [`Args::validated_envs`] and feed it into
+    /// [`crate::exp::SweepSpec::envs`]; the rest call
     /// [`Args::reject_envs`] so the flag is never silently ignored.
-    pub envs: Vec<EnvKind>,
+    pub envs: Vec<EnvSel>,
     /// Parse error from `--envs`, surfaced by [`Args::validated_envs`] /
     /// [`Args::reject_envs`] — a typo must never silently shrink a grid.
     envs_err: Option<String>,
@@ -106,7 +107,7 @@ impl Args {
                 "--dataset" => a.dataset = Some(value),
                 "--repeats" => a.repeats = value.parse().unwrap_or(1),
                 "--threads" => a.threads = value.parse().unwrap_or(0),
-                "--envs" => match EnvKind::parse_list(&value) {
+                "--envs" => match EnvSel::parse_list(&value) {
                     Ok(envs) => a.envs = envs,
                     Err(e) => a.envs_err = Some(e.to_string()),
                 },
@@ -123,7 +124,7 @@ impl Args {
 
     /// The `--envs` axis, validated: a typo is a hard error, never a
     /// silently smaller grid.
-    pub fn validated_envs(&self) -> Result<Vec<EnvKind>> {
+    pub fn validated_envs(&self) -> Result<Vec<EnvSel>> {
         if let Some(e) = &self.envs_err {
             anyhow::bail!("bad --envs value: {e}");
         }
@@ -199,6 +200,8 @@ pub fn run_policy(mut cfg: Config, policy: Policy, mode: SimMode, label: &str) -
         cfg,
         mode,
         csv_dir: None,
+        timeout_s: None,
+        regret_vs: None,
     };
     let mut results = exp::run_scenarios(vec![scenario], 1)?;
     Ok(results.remove(0).recorder)
@@ -329,11 +332,20 @@ mod tests {
 
     #[test]
     fn envs_flag_parses_lists_and_all() {
+        use crate::config::EnvKind;
         let a = Args::from_vec(argv(&["--envs=static,ge"]));
-        assert_eq!(a.envs, vec![EnvKind::Static, EnvKind::GilbertElliott]);
+        assert_eq!(
+            a.envs,
+            vec![EnvSel::from(EnvKind::Static), EnvSel::from(EnvKind::GilbertElliott)]
+        );
         assert_eq!(a.validated_envs().unwrap().len(), 2);
         let a = Args::from_vec(argv(&["--envs", "all"]));
-        assert_eq!(a.envs, EnvKind::ALL.to_vec());
+        let want: Vec<EnvSel> = EnvKind::SYNTHETIC.iter().map(|&k| k.into()).collect();
+        assert_eq!(a.envs, want);
+        // Trace entries carry their path through the harness axis.
+        let a = Args::from_vec(argv(&["--envs=trace:logs/a.csv,adv"]));
+        assert_eq!(a.envs.len(), 2);
+        assert_eq!(a.envs[0].trace_path.as_deref(), Some("logs/a.csv"));
         assert!(Args::from_vec(vec![]).envs.is_empty());
     }
 

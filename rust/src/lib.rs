@@ -26,7 +26,7 @@
 //! | [`json`] | minimal JSON parser/serializer for manifests + metrics |
 //! | [`config`] | experiment configuration (file + CLI overrides) |
 //! | [`system`] | device fleet, wireless channel model, latency/energy (eqs. 5–17) |
-//! | [`env`] | dynamic edge environments: Markov fading, availability, compute drift (name → ctor registry) |
+//! | [`env`] | dynamic edge environments: Markov fading, availability, compute drift, trace replay, adversarial channel (name → ctor registry; `peek`/`observe_selection` hooks) |
 //! | [`control`] | the paper's contribution: queues, Theorems 2–3, SUM, Algorithm 2 |
 //! | [`control::policy`] | the [`control::RoundPolicy`] trait, scheme impls, name → ctor registry |
 //! | [`sampling`] | client samplers: LROA adaptive, uniform, DivFL |
@@ -34,7 +34,7 @@
 //! | [`runtime`] | PJRT client, artifact manifest, typed executables |
 //! | [`fl`] | federated training loop: staged server pipeline, local trainer, evaluator |
 //! | [`par`] | deterministic scoped-thread fan-out (client training, scenario pool) |
-//! | [`exp`] | declarative scenario sweeps: grid expansion, parallel runner, seed stats |
+//! | [`exp`] | declarative scenario sweeps: grid expansion, parallel runner, seed stats, oracle-regret grids |
 //! | [`harness`] | figure-example CLI + reporting glue on top of `exp` |
 //! | [`metrics`] | run recorder, CSV emission, summaries |
 //! | [`bench`] | self-contained timing harness used by `cargo bench` |
@@ -57,3 +57,17 @@ pub mod system;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;
+
+/// Shared helpers for in-crate unit tests (integration tests have their
+/// own copy in `tests/common.rs` — they cannot see `cfg(test)` items).
+#[cfg(test)]
+pub(crate) mod test_util {
+    /// Absolute path of the recorded-trace fixture
+    /// (`tests/fixtures/campus.csv`; schema in `tests/fixtures/README.md`).
+    pub(crate) fn campus_fixture() -> String {
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("tests/fixtures/campus.csv")
+            .to_string_lossy()
+            .into_owned()
+    }
+}

@@ -4,7 +4,11 @@
 //!
 //! * `train`  — run one federated training (full stack through PJRT);
 //! * `sim`    — control-plane-only simulation (no artifacts needed);
-//! * `sweep`  — run a policy × K × µ/ν × seed × dataset grid in parallel;
+//! * `sweep`  — run a policy × env × K × µ/ν × seed × dataset grid in parallel;
+//! * `regret` — a sweep where every cell is shadowed by the clairvoyant
+//!   oracle on the same environment stream (populates the `regret` column);
+//! * `bench`  — the criterion-free round-path benchmark with a JSON
+//!   emitter and a regression gate (CI's perf trajectory);
 //! * `info`   — inspect artifacts, fleet, and the λ/V estimates;
 //! * `help`   — this text.
 //!
@@ -12,18 +16,20 @@
 //! `config.rs`), e.g.:
 //!
 //! ```text
-//! lroa train --train.dataset=femnist --train.rounds=200 --control.mu=10
-//! lroa sim   --train.policy=uni-s --system.k=4 --train.rounds=1000
-//! lroa sweep --policies=all --ks=2,4,6 --seeds=1..5 --rounds=200
+//! lroa train  --train.dataset=femnist --train.rounds=200 --control.mu=10
+//! lroa sim    --train.policy=uni-s --system.k=4 --train.rounds=1000
+//! lroa sweep  --policies=all --ks=2,4,6 --seeds=1..5 --rounds=200
+//! lroa regret --envs=trace:tests/fixtures/campus.csv,adv --policies=lroa,greedy,p2c
+//! lroa bench  --json --quick --baseline=BENCH_baseline.json
 //! ```
 
 use std::path::Path;
 
 use lroa::config::Config;
-use lroa::exp::{self, SweepSpec};
+use lroa::exp::{self, Scenario, SweepSpec};
 use lroa::fl::{Server, SimMode};
 use lroa::json::{obj, Json};
-use lroa::metrics::num_or_null;
+use lroa::metrics::{num_or_null, Recorder};
 use lroa::runtime::Manifest;
 
 const HELP: &str = "\
@@ -31,34 +37,57 @@ lroa — Lyapunov-based online client scheduling for federated edge learning
 
 USAGE:
     lroa <train|sim|info> [--config FILE] [--section.key=value ...]
-    lroa sweep [--key=value ...] [--section.key=value ...]
+    lroa <sweep|regret> [--key=value ...] [--section.key=value ...]
+    lroa bench [--json] [--quick] [--out=FILE] [--baseline=FILE] [--max-regress=F]
 
 SUBCOMMANDS:
     train   full federated training through the AOT artifacts
     sim     control-plane-only simulation (latency/energy/queues)
     sweep   parallel scenario grid; seed repeats aggregate to mean±std,
             manifest.json documents every cell for the figure pipeline
+    regret  sweep + a clairvoyant oracle anchor per environment stream;
+            cell CSVs gain a populated `regret` column (cumulative latency
+            gap vs the oracle), manifest cells link to their anchor via
+            `regret_vs`, and the oracle is the latency lower bound
+    bench   time the round path (control-plane rounds per policy); --json
+            emits a machine-readable report, --out writes it to a file,
+            --baseline gates against a committed report (fails when
+            round_total regresses more than --max-regress, default 0.25)
     info    print artifact manifest, fleet summary, λ/V estimates
 
-SWEEP FLAGS (all --key=value unless noted):
-    --policies=lroa,uni-d,uni-s,divfl,greedy,rr|all   --datasets=cifar,femnist
-    --envs=static,ge,avail,drift|all        (dynamic environments, see below)
-    --ks=2,4,6      --mus=0.1,1,10          --nus=1e4,1e5,1e6
-    --seeds=1..30   --rounds=N              --threads=T (0 = cores)
-    --mode=sim|train                        --out=DIR
-    --resume        (bare flag: skip cells whose CSV already exists in --out)
+SWEEP / REGRET FLAGS (all --key=value unless noted):
+    --policies=lroa,uni-d,uni-s,divfl,greedy,rr,p2c|all  --datasets=cifar,femnist
+    --envs=static,ge,avail,drift,adv,trace:<log.csv>|all  (see below)
+    --ks=2,4,6       --mus=0.1,1,10          --nus=1e4,1e5,1e6
+    --seeds=1..30    --rounds=N              --threads=T (0 = cores)
+    --cell_timeout_s=F (per-cell wall-clock budget; exceeding fails loudly)
+    --mode=sim|train                         --out=DIR
+    --resume         (sweep only, bare flag: skip cells whose CSV already
+                      exists in --out; skipped cells are re-read so
+                      summary.json still aggregates the full grid)
 
 ENVIRONMENTS (the --envs axis / --env.kind override):
     static  the paper's IID exponential channel, always-on fleet (default)
     ge      Gilbert-Elliott two-state Markov fading per device
     avail   Markov device dropout/arrival (candidate set varies per round)
     drift   random-walk drift on per-device compute/energy parameters
+    trace   replay of a recorded channel/availability CSV; on the --envs
+            axis write trace:<path>, standalone use --env.trace_path=FILE
+            (schema: round,device,gain[,available] — tests/fixtures/README.md)
+    adv     adversarial channel: degrades last round's selection and the
+            gains a greedy scheduler would chase (--env.adv_degrade,
+            --env.adv_targets); `all` expands to every env except trace
+
+POLICIES: lroa uni-d uni-s divfl greedy rr p2c oracle
+    (oracle = clairvoyant latency lower bound; `regret` adds it
+     automatically — do not list it under --policies there)
 
 COMMON OVERRIDES:
-    --train.dataset=cifar|femnist   --train.rounds=N     --train.policy=lroa|...|rr
+    --train.dataset=cifar|femnist   --train.rounds=N     --train.policy=lroa|...|p2c
     --system.k=K                    --control.mu=F       --control.nu=F
-    --train.seed=N                  --env.kind=static|ge|avail|drift
+    --train.seed=N                  --env.kind=static|ge|avail|drift|trace|adv
     --env.ge_p_bad=F --env.avail_p_drop=F --env.drift_sigma=F   (see config.rs)
+    --env.trace_path=FILE --env.adv_degrade=F --env.adv_targets=N
     --run.out_dir=DIR               --run.artifacts_dir=DIR
 ";
 
@@ -154,57 +183,88 @@ fn sweep(args: &[String]) -> lroa::Result<()> {
     // `.hash` sidecar — written by the runner at cell *completion* —
     // matches this cell's fingerprint (sim mode + config hash), so stale
     // CSVs from an older config (different --rounds, --mode, knobs ...)
-    // are re-run, never silently kept.  The groups touched by skipped
-    // cells are tracked so the summary never reports a partial seed set
-    // under a full group label.
-    let mut skipped = 0usize;
-    let mut partial_groups = std::collections::BTreeSet::new();
-    let mut scenarios = if spec.resume {
-        let (done, todo): (Vec<_>, Vec<_>) = scenarios.into_iter().partition(|s| {
-            dir.join(format!("{}.csv", s.label)).exists()
+    // are re-run, never silently kept.  Finished cells are *re-read*
+    // from their CSVs (cheap: no simulation), so summary.json always
+    // aggregates the full grid — a resumed invocation is no longer a
+    // second-class run with partial groups.
+    let mut resumed: Vec<(usize, exp::ScenarioResult)> = Vec::new();
+    let mut to_run: Vec<(usize, Scenario)> = Vec::new();
+    if spec.resume {
+        for (idx, s) in scenarios.into_iter().enumerate() {
+            let csv = dir.join(format!("{}.csv", s.label));
+            let done = csv.exists()
                 && std::fs::read_to_string(dir.join(format!("{}.hash", s.label)))
                     .map(|h| h.trim() == s.fingerprint())
-                    .unwrap_or(false)
-        });
-        skipped = done.len();
-        partial_groups.extend(done.iter().map(|s| s.group.clone()));
-        println!(
-            "resume: skipping {} cells with existing CSVs, running {}",
-            done.len(),
-            todo.len()
-        );
-        if todo.is_empty() {
-            println!("resume: nothing left to run");
-            if !dir.join("summary.json").exists() {
-                println!(
-                    "warning: summary.json is missing (it is written by an \
-                     invocation that runs at least one cell); re-run without \
-                     --resume to regenerate the aggregate"
-                );
+                    .unwrap_or(false);
+            if done {
+                let mut recorder = Recorder::read_csv(&csv)?;
+                recorder.label = s.label.clone();
+                resumed.push((
+                    idx,
+                    exp::ScenarioResult {
+                        scenario: s,
+                        recorder,
+                        wall_s: 0.0,
+                    },
+                ));
+            } else {
+                to_run.push((idx, s));
             }
-            return Ok(());
         }
-        todo
+        println!(
+            "resume: skipping {} cells with existing CSVs (re-read for the \
+             aggregate), running {}",
+            resumed.len(),
+            to_run.len()
+        );
+        if to_run.is_empty() {
+            println!("resume: nothing left to run");
+        }
     } else {
-        scenarios
-    };
+        to_run = scenarios.into_iter().enumerate().collect();
+    }
+    let skipped = resumed.len();
+
     // Each cell's CSV streams out as it completes, so a killed grid is
     // resumable from exactly where it stopped.
-    for s in &mut scenarios {
+    for (_, s) in &mut to_run {
         s.csv_dir = Some(dir.clone());
     }
+    let (idxs, run_scenarios): (Vec<usize>, Vec<Scenario>) = to_run.into_iter().unzip();
+    let fresh = exp::run_scenarios(run_scenarios, spec.threads)?;
 
-    let results = exp::run_scenarios(scenarios, spec.threads)?;
+    // Stitch resumed + fresh results back into grid order.
+    let mut combined = resumed;
+    combined.extend(idxs.into_iter().zip(fresh));
+    combined.sort_by_key(|(i, _)| *i);
+    let results: Vec<exp::ScenarioResult> = combined.into_iter().map(|(_, r)| r).collect();
 
-    // Aggregate summary bundle (per-cell CSVs were written by the runner).
-    let run_summaries: Vec<Json> = results.iter().map(|r| r.recorder.summary_json()).collect();
     let groups = exp::summarize_groups(&results);
+    write_summary(&dir, &results, &groups, skipped)?;
+    if skipped > 0 {
+        println!(
+            "note: {} resumed cells were aggregated from their CSVs; \
+             summary.json covers the full {}-cell grid",
+            skipped,
+            results.len()
+        );
+    }
+
+    print_group_table(&groups, false);
+    println!("\nCSV + summary.json under {}", dir.display());
+    Ok(())
+}
+
+/// The machine-readable aggregate bundle shared by `sweep` and `regret`.
+fn write_summary(
+    dir: &std::path::Path,
+    results: &[exp::ScenarioResult],
+    groups: &[exp::GroupSummary],
+    resumed_cells: usize,
+) -> lroa::Result<()> {
+    let run_summaries: Vec<Json> = results.iter().map(|r| r.recorder.summary_json()).collect();
     let group_json: Vec<Json> = groups
         .iter()
-        // A group with resumed (not re-aggregated) cells would report
-        // statistics over a subset of its seeds: omit it from the
-        // machine-readable summary rather than mislabel it.
-        .filter(|g| !partial_groups.contains(&g.group))
         .map(|g| {
             obj(vec![
                 ("group", Json::Str(g.group.clone())),
@@ -212,6 +272,8 @@ fn sweep(args: &[String]) -> lroa::Result<()> {
                 ("total_time_s_mean", num_or_null(g.total_time_s.mean)),
                 ("total_time_s_std", num_or_null(g.total_time_s.std)),
                 ("final_accuracy_mean", num_or_null(g.final_accuracy.mean)),
+                ("final_regret_mean", num_or_null(g.final_regret.mean)),
+                ("final_regret_std", num_or_null(g.final_regret.std)),
             ])
         })
         .collect();
@@ -220,56 +282,249 @@ fn sweep(args: &[String]) -> lroa::Result<()> {
         obj(vec![
             ("groups", Json::Arr(group_json)),
             ("runs", Json::Arr(run_summaries)),
-            // Cells skipped by --resume are NOT aggregated here; their
-            // CSVs (and the full grid) are listed in manifest.json.
-            ("skipped_cells", Json::Num(skipped as f64)),
-            (
-                "partial_groups",
-                Json::Arr(
-                    partial_groups
-                        .iter()
-                        .map(|g| Json::Str(g.clone()))
-                        .collect(),
-                ),
-            ),
+            ("resumed_cells", Json::Num(resumed_cells as f64)),
         ])
         .to_string(),
     )?;
-    if skipped > 0 {
+    Ok(())
+}
+
+/// The mean±std table the paper's seed-averaged figures report.
+fn print_group_table(groups: &[exp::GroupSummary], with_regret: bool) {
+    if with_regret {
         println!(
-            "note: summary.json aggregates only the {} cells run in this \
-             invocation ({} resumed cells excluded; groups with resumed \
-             cells are listed under partial_groups); per-cell CSVs + \
-             manifest.json cover the full grid",
-            results.len(),
-            skipped
+            "\n{:<28} {:>5} {:>24} {:>20} {:>24}",
+            "group", "runs", "total time [s]", "final acc", "regret vs oracle [s]"
+        );
+    } else {
+        println!(
+            "\n{:<28} {:>5} {:>24} {:>20} {:>24}",
+            "group", "runs", "total time [s]", "final acc", "time-avg energy [J]"
         );
     }
-
-    // The mean±std table the paper's seed-averaged figures report.
-    println!(
-        "\n{:<28} {:>5} {:>24} {:>20} {:>24}",
-        "group", "runs", "total time [s]", "final acc", "time-avg energy [J]"
-    );
-    for g in &groups {
-        // A group with resumed cells aggregates only this invocation's
-        // seeds — flag it so the number is never mistaken for the full
-        // seed average.
-        let name = if partial_groups.contains(&g.group) {
-            format!("{} (partial)", g.group)
+    for g in groups {
+        let last = if with_regret {
+            g.final_regret.to_string()
         } else {
-            g.group.clone()
+            g.time_avg_energy.to_string()
         };
         println!(
             "{:<28} {:>5} {:>24} {:>20} {:>24}",
-            name,
+            g.group,
             g.runs,
             g.total_time_s.to_string(),
             g.final_accuracy.to_string(),
-            g.time_avg_energy.to_string(),
+            last,
+        );
+    }
+}
+
+/// `lroa regret`: a sweep where every online cell is shadowed by the
+/// clairvoyant oracle on the same environment stream, and the `regret`
+/// column lands in every cell CSV, summary.json, and the manifest.
+fn regret(args: &[String]) -> lroa::Result<()> {
+    let mut spec = SweepSpec::from_cli(args)?;
+    anyhow::ensure!(
+        !spec.resume,
+        "regret: --resume is not supported (the regret column is computed \
+         across the whole grid in one invocation)"
+    );
+    if !args.iter().any(|a| a.starts_with("--out=")) {
+        spec.out_dir = "runs/regret".into();
+    }
+    let scenarios = exp::regret::plan(&spec)?;
+    println!(
+        "regret: {} cells ({} oracle anchors), pool width {}",
+        scenarios.len(),
+        scenarios
+            .iter()
+            .filter(|s| s.cfg.train.policy == lroa::config::Policy::Oracle)
+            .count(),
+        if spec.threads == 0 { "auto".to_string() } else { spec.threads.to_string() },
+    );
+    {
+        let mut seen = std::collections::BTreeSet::new();
+        for s in &scenarios {
+            anyhow::ensure!(
+                seen.insert(s.label.as_str()),
+                "regret: duplicate cell label {:?} (repeated axis value, or an \
+                 override clobbering a swept axis?)",
+                s.label
+            );
+        }
+    }
+
+    let dir = std::path::PathBuf::from(&spec.out_dir);
+    std::fs::create_dir_all(&dir)?;
+    let manifest_path = dir.join("manifest.json");
+    // Written before any cell runs: a crashed grid still documents
+    // itself, anchors (`regret_vs`) and CSV schema (`columns`) included.
+    std::fs::write(&manifest_path, exp::manifest_json(&scenarios).to_string())?;
+    println!("wrote {}", manifest_path.display());
+
+    // Cells stream raw CSVs as they complete (regret column still
+    // empty), so a crashed or timed-out grid leaves every finished
+    // cell's evidence on disk instead of discarding the whole run ...
+    let mut scenarios = scenarios;
+    for s in &mut scenarios {
+        s.csv_dir = Some(dir.clone());
+    }
+    // ... and once the whole grid is in, every CSV is rewritten with the
+    // regret column populated, so a *completed* run never ships one
+    // without it.
+    let results = exp::regret::run(scenarios, spec.threads)?;
+    for r in &results {
+        r.recorder
+            .write_csv(&dir.join(format!("{}.csv", r.recorder.label)))?;
+    }
+
+    let groups = exp::summarize_groups(&results);
+    write_summary(&dir, &results, &groups, 0)?;
+    print_group_table(&groups, true);
+
+    let min_regret = exp::regret::min_final_regret(&results);
+    println!(
+        "\noracle lower-bound check: min final regret across online cells = {min_regret:.4}"
+    );
+    if min_regret < -1e-9 {
+        println!(
+            "warning: a cell finished faster than its oracle anchor — only \
+             possible under the adaptive `adv` environment, where the \
+             anchor faces its own adversary stream"
         );
     }
     println!("\nCSV + summary.json under {}", dir.display());
+    Ok(())
+}
+
+/// `lroa bench`: the criterion-free round-path benchmark with a JSON
+/// report and a regression gate.
+///
+/// Cases are one full control-plane round (environment draw + control
+/// solve + sampling + queues + metrics) per headline policy at paper
+/// scale (N = 120).  `round_total` — the sum of the per-policy medians —
+/// is the gated headline: with `--baseline=FILE`, the run fails when it
+/// regresses more than `--max-regress` (default 0.25) over the committed
+/// report, which is how CI holds the perf trajectory.
+fn bench_cmd(args: &[String]) -> lroa::Result<()> {
+    use lroa::config::Policy;
+
+    let mut json_out = false;
+    let mut quick = false;
+    let mut out_path: Option<String> = None;
+    let mut baseline: Option<String> = None;
+    let mut max_regress = 0.25f64;
+    for a in args {
+        match a.as_str() {
+            "--json" => json_out = true,
+            "--quick" => quick = true,
+            _ => {
+                if let Some(v) = a.strip_prefix("--out=") {
+                    out_path = Some(v.to_string());
+                } else if let Some(v) = a.strip_prefix("--baseline=") {
+                    baseline = Some(v.to_string());
+                } else if let Some(v) = a.strip_prefix("--max-regress=") {
+                    max_regress = v
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("bad --max-regress value {v:?}: {e}"))?;
+                    anyhow::ensure!(max_regress > 0.0, "--max-regress must be > 0");
+                } else {
+                    anyhow::bail!(
+                        "bench: unknown argument {a:?} \
+                         (--json --quick --out=FILE --baseline=FILE --max-regress=F)"
+                    );
+                }
+            }
+        }
+    }
+
+    let mut b = if quick {
+        lroa::bench::Bencher::quick()
+    } else {
+        lroa::bench::Bencher::new()
+    };
+    // The policies whose round paths CI tracks: the paper's solver (the
+    // hot path), the cheapest closed-form baseline, and a deterministic
+    // selector — three different control-plane profiles.
+    for policy in [Policy::Lroa, Policy::UniformStatic, Policy::GreedyChannel] {
+        let mut cfg = Config::for_dataset("cifar")?;
+        cfg.train.policy = policy;
+        cfg.train.rounds = 1_000_000; // never reached; rounds driven manually
+        let mut server = Server::new(cfg, SimMode::ControlPlaneOnly)?;
+        let mut t = 0usize;
+        b.bench(&format!("round/{policy}"), || {
+            server.round(t).unwrap();
+            t += 1;
+        });
+    }
+
+    let samples: Vec<(&str, Json)> = b
+        .results()
+        .iter()
+        .map(|s| {
+            (
+                s.name.as_str(),
+                obj(vec![
+                    ("median_ns", Json::Num(s.median.as_nanos() as f64)),
+                    ("p10_ns", Json::Num(s.p10.as_nanos() as f64)),
+                    ("p90_ns", Json::Num(s.p90.as_nanos() as f64)),
+                    ("iters", Json::Num(s.iters as f64)),
+                ]),
+            )
+        })
+        .collect();
+    let round_total_ns: f64 = b.results().iter().map(|s| s.median.as_nanos() as f64).sum();
+    let report = obj(vec![
+        ("schema", Json::Str("lroa-bench-v1".into())),
+        ("quick", Json::Bool(quick)),
+        (
+            "round_total",
+            obj(vec![("median_ns", Json::Num(round_total_ns))]),
+        ),
+        ("samples", obj(samples)),
+    ]);
+
+    if json_out {
+        println!("{report}");
+    } else {
+        b.report();
+        println!("round_total median: {:.3}ms", round_total_ns / 1e6);
+    }
+    if let Some(path) = &out_path {
+        std::fs::write(path, report.to_string())?;
+        eprintln!("wrote {path}");
+    }
+
+    // The regression gate: compare against the committed baseline.
+    if let Some(path) = &baseline {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("baseline {path}: {e}"))?;
+        let base = Json::parse(&text).map_err(|e| anyhow::anyhow!("baseline {path}: {e}"))?;
+        let base_total = base
+            .path(&["round_total", "median_ns"])
+            .and_then(|j| j.as_f64())
+            .ok_or_else(|| {
+                anyhow::anyhow!("baseline {path}: missing round_total.median_ns")
+            })?;
+        let ratio = round_total_ns / base_total;
+        eprintln!(
+            "bench gate: round_total {:.3}ms vs baseline {:.3}ms (x{:.3}, limit x{:.3})",
+            round_total_ns / 1e6,
+            base_total / 1e6,
+            ratio,
+            1.0 + max_regress
+        );
+        anyhow::ensure!(
+            ratio <= 1.0 + max_regress,
+            "round_total regressed {:.1}% over the baseline (limit {:.0}%): \
+             {:.3}ms vs {:.3}ms — if intentional, refresh the committed \
+             baseline with `lroa bench --json --quick --out={path}`",
+            (ratio - 1.0) * 100.0,
+            max_regress * 100.0,
+            round_total_ns / 1e6,
+            base_total / 1e6
+        );
+    }
     Ok(())
 }
 
@@ -316,6 +571,8 @@ fn main() {
         "train" => run(SimMode::Full, &rest),
         "sim" => run(SimMode::ControlPlaneOnly, &rest),
         "sweep" => sweep(&rest),
+        "regret" => regret(&rest),
+        "bench" => bench_cmd(&rest),
         "info" => info(&rest),
         "help" | "--help" | "-h" => {
             print!("{HELP}");

@@ -11,8 +11,28 @@ use std::path::Path;
 use crate::json::{arr_f64, obj, Json};
 use crate::Result;
 
+/// The cell-CSV column set, in emission order — the schema contract
+/// shared by [`Recorder::write_csv`], [`Recorder::read_csv`], and the
+/// sweep manifest (`lroa sweep`/`lroa regret` publish it under
+/// `columns` so figure scripts never hard-code it).
+pub const CSV_COLUMNS: &[&str] = &[
+    "round",
+    "round_time_s",
+    "total_time_s",
+    "objective",
+    "mean_energy_j",
+    "mean_queue",
+    "max_queue",
+    "selected",
+    "train_loss",
+    "test_accuracy",
+    "test_loss",
+    "solver_time_s",
+    "regret",
+];
+
 /// One communication round's record.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct RoundRecord {
     pub round: usize,
     /// Modeled wall-clock of this round: `max_{n in K^t} T_n^t` (eq. 10).
@@ -37,6 +57,31 @@ pub struct RoundRecord {
     pub test_loss: f64,
     /// Algorithm 2 solve time [s] (control-plane overhead).
     pub solver_time_s: f64,
+    /// Cumulative latency gap vs the oracle anchor on the same
+    /// environment stream: `total_time_s − total_time_s(oracle)` up to
+    /// this round.  NaN (empty CSV field) outside `lroa regret` runs.
+    pub regret: f64,
+}
+
+impl Default for RoundRecord {
+    fn default() -> Self {
+        Self {
+            round: 0,
+            round_time_s: 0.0,
+            total_time_s: 0.0,
+            objective: 0.0,
+            mean_energy_j: 0.0,
+            mean_queue: 0.0,
+            max_queue: 0.0,
+            selected: 0,
+            train_loss: 0.0,
+            test_accuracy: 0.0,
+            test_loss: 0.0,
+            solver_time_s: 0.0,
+            // "Not a regret run", not "zero regret".
+            regret: f64::NAN,
+        }
+    }
 }
 
 /// Recorder for a full run.
@@ -98,14 +143,11 @@ impl Recorder {
             std::fs::create_dir_all(parent)?;
         }
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        writeln!(
-            f,
-            "round,round_time_s,total_time_s,objective,mean_energy_j,mean_queue,max_queue,selected,train_loss,test_accuracy,test_loss,solver_time_s"
-        )?;
+        writeln!(f, "{}", CSV_COLUMNS.join(","))?;
         for r in &self.rounds {
             writeln!(
                 f,
-                "{},{},{},{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{}",
                 r.round,
                 r.round_time_s,
                 r.total_time_s,
@@ -118,9 +160,84 @@ impl Recorder {
                 csv_f64(r.test_accuracy),
                 csv_f64(r.test_loss),
                 r.solver_time_s,
+                csv_f64(r.regret),
             )?;
         }
         Ok(())
+    }
+
+    /// Read a cell CSV back into a recorder (the label is the file
+    /// stem).  The inverse of [`Recorder::write_csv`]: header-driven, so
+    /// column order is free, unknown columns are ignored, and CSVs
+    /// written before a column existed (e.g. pre-`regret` cells) load
+    /// with that field NaN.  This is what lets a `--resume`d sweep
+    /// aggregate *skipped* cells into `summary.json` instead of silently
+    /// excluding them.
+    pub fn read_csv(path: &Path) -> Result<Recorder> {
+        let text = std::fs::read_to_string(path)?;
+        let mut lines = text.lines();
+        let header = lines
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("{}: empty CSV", path.display()))?;
+        let cols: Vec<&str> = header.split(',').map(str::trim).collect();
+        let col = |name: &str| cols.iter().position(|c| *c == name);
+        let need = |name: &str| {
+            col(name).ok_or_else(|| {
+                anyhow::anyhow!("{}: missing CSV column {name:?}", path.display())
+            })
+        };
+        let idx_round = need("round")?;
+        let idx_selected = need("selected")?;
+        // Every f64 field binds by column *name* (never by position in
+        // CSV_COLUMNS), so reordering or inserting columns can never
+        // silently misbind a resumed cell; absent columns load NaN.
+        let f64_col = |r: &[&str], name: &str| -> f64 {
+            match col(name).and_then(|i| r.get(i)) {
+                Some(s) if !s.is_empty() => s.parse().unwrap_or(f64::NAN),
+                _ => f64::NAN,
+            }
+        };
+        let mut rec = Recorder::new(
+            path.file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        );
+        for (lineno, line) in lines.enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+            let int = |i: usize| -> Result<usize> {
+                fields
+                    .get(i)
+                    .and_then(|s| s.parse().ok())
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("{}: line {}: bad integer", path.display(), lineno + 2)
+                    })
+            };
+            rec.push(RoundRecord {
+                round: int(idx_round)?,
+                round_time_s: f64_col(&fields, "round_time_s"),
+                total_time_s: f64_col(&fields, "total_time_s"),
+                objective: f64_col(&fields, "objective"),
+                mean_energy_j: f64_col(&fields, "mean_energy_j"),
+                mean_queue: f64_col(&fields, "mean_queue"),
+                max_queue: f64_col(&fields, "max_queue"),
+                selected: int(idx_selected)?,
+                train_loss: f64_col(&fields, "train_loss"),
+                test_accuracy: f64_col(&fields, "test_accuracy"),
+                test_loss: f64_col(&fields, "test_loss"),
+                solver_time_s: f64_col(&fields, "solver_time_s"),
+                regret: f64_col(&fields, "regret"),
+            });
+        }
+        Ok(rec)
+    }
+
+    /// Final cumulative regret vs the oracle anchor (NaN outside
+    /// `lroa regret` runs).
+    pub fn final_regret(&self) -> f64 {
+        self.rounds.last().map(|r| r.regret).unwrap_or(f64::NAN)
     }
 
     /// Summary as JSON (for EXPERIMENTS.md extraction).
@@ -130,6 +247,7 @@ impl Recorder {
             ("rounds", Json::Num(self.rounds.len() as f64)),
             ("total_time_s", Json::Num(self.total_time_s())),
             ("final_accuracy", num_or_null(self.final_accuracy())),
+            ("final_regret", num_or_null(self.final_regret())),
             (
                 "final_time_avg_energy",
                 num_or_null(self.time_avg_energy().last().copied().unwrap_or(f64::NAN)),
@@ -254,6 +372,64 @@ mod tests {
         assert!(lines[0].starts_with("round,"));
         // NaN accuracy serializes as empty field.
         assert!(lines[1].contains(",,"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_round_trips_through_the_reader() {
+        let dir = std::env::temp_dir().join("lroa_metrics_roundtrip");
+        let path = dir.join("cell-label.csv");
+        let mut w = Recorder::new("cell-label");
+        for i in 0..4 {
+            w.push(RoundRecord {
+                round: i,
+                round_time_s: 1.5 + i as f64,
+                total_time_s: 10.0 * (i + 1) as f64,
+                objective: 3.25,
+                mean_energy_j: 0.5,
+                mean_queue: 1.0,
+                max_queue: 2.0,
+                selected: 2,
+                train_loss: f64::NAN,
+                test_accuracy: if i == 3 { 0.75 } else { f64::NAN },
+                test_loss: f64::NAN,
+                solver_time_s: 1e-4,
+                regret: if i % 2 == 0 { i as f64 } else { f64::NAN },
+            });
+        }
+        w.write_csv(&path).unwrap();
+        let r = Recorder::read_csv(&path).unwrap();
+        assert_eq!(r.label, "cell-label");
+        assert_eq!(r.rounds.len(), 4);
+        for (a, b) in w.rounds.iter().zip(&r.rounds) {
+            assert_eq!(a.round, b.round);
+            assert_eq!(a.round_time_s, b.round_time_s);
+            assert_eq!(a.total_time_s, b.total_time_s);
+            assert_eq!(a.selected, b.selected);
+            assert_eq!(a.test_accuracy.is_nan(), b.test_accuracy.is_nan());
+            assert_eq!(a.regret.is_nan(), b.regret.is_nan());
+            if !a.regret.is_nan() {
+                assert_eq!(a.regret, b.regret);
+            }
+        }
+        assert_eq!(r.total_time_s(), 40.0);
+        assert_eq!(r.final_accuracy(), 0.75);
+        // A pre-regret CSV (no such column) still loads, regret = NaN.
+        let legacy = dir.join("legacy.csv");
+        std::fs::write(
+            &legacy,
+            "round,round_time_s,total_time_s,objective,mean_energy_j,mean_queue,\
+             max_queue,selected,train_loss,test_accuracy,test_loss,solver_time_s\n\
+             0,1,1,0,0,0,0,2,,,,0\n",
+        )
+        .unwrap();
+        let r = Recorder::read_csv(&legacy).unwrap();
+        assert_eq!(r.rounds.len(), 1);
+        assert!(r.rounds[0].regret.is_nan());
+        // Garbage is rejected, not silently zeroed.
+        let bad = dir.join("bad.csv");
+        std::fs::write(&bad, "nope,cols\n1,2\n").unwrap();
+        assert!(Recorder::read_csv(&bad).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -5,11 +5,17 @@ use std::path::Path;
 use anyhow::Context;
 
 use super::manifest::{Manifest, VariantInfo};
-// Without the `pjrt` feature the engine compiles against the in-tree
-// API-compatible stub; with it, `xla::` resolves to the real bindings
-// crate via the extern prelude.
+// `xla::` is the engine's single binding point.  Without the `pjrt`
+// feature it is the in-tree API-compatible stub; with the feature it is
+// *still the stub* until the real bindings crate is vendored into the
+// offline registry — the alias below is the one line to swap then.
+// Keeping the feature compilable either way lets CI's feature-matrix
+// job (`cargo check --features pjrt`) guard the gated code path today,
+// instead of a compile_error! tripping before anything is checked.
 #[cfg(not(feature = "pjrt"))]
 use super::xla_stub as xla;
+#[cfg(feature = "pjrt")]
+use super::xla_stub as xla; // TODO(vendoring): `use ::xla;` once the crate lands
 use crate::Result;
 
 /// Output of one local SGD step.

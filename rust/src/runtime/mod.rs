@@ -10,17 +10,7 @@
 
 mod engine;
 mod manifest;
-#[cfg(not(feature = "pjrt"))]
 pub(crate) mod xla_stub;
-
-// The feature flips engine.rs from the stub to the real bindings, which
-// are not in the offline registry yet — fail with the instruction
-// instead of an opaque unresolved-crate error.
-#[cfg(feature = "pjrt")]
-compile_error!(
-    "the `pjrt` feature requires the `xla` PJRT bindings crate: add it to \
-     [dependencies] in Cargo.toml and delete this guard (runtime/mod.rs)"
-);
 
 pub use engine::{Engine, TrainOutput};
 pub use manifest::{LayerInfo, Manifest, VariantInfo};

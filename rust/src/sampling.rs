@@ -45,6 +45,61 @@ pub fn sample_uniform(n: usize, weights: &[f64], k: usize, rng: &mut Rng) -> Sel
     sample_by_probability(&q, weights, k, rng)
 }
 
+/// Exact per-slot marginals of the power-of-two-choices draw over
+/// `scores`: pick two devices uniformly with replacement, keep the
+/// better score (ties: lower position wins).  `P(n) = (1 + 2·worse_n) /
+/// N²` where `worse_n` counts the devices `n` beats — a proper
+/// distribution (sums to 1), so eq. (4) coefficients `w_n / (K q_n)`
+/// keep the aggregate unbiased.
+pub fn p2c_marginals(scores: &[f64]) -> Vec<f64> {
+    let n = scores.len();
+    // Ascending in the "beats" total order: worse scores first; among
+    // equals the larger position first (the lower position wins ties).
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        scores[a]
+            .partial_cmp(&scores[b])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(b.cmp(&a))
+    });
+    let mut q = vec![0.0; n];
+    for (rank, &i) in order.iter().enumerate() {
+        q[i] = (1 + 2 * rank) as f64 / (n * n) as f64;
+    }
+    q
+}
+
+/// Power-of-two-choices sampling: `k` slots, each the better-scored of
+/// two independent uniform draws.  `marginals` must be
+/// [`p2c_marginals`]`(scores)` (passed in so callers can reuse it as the
+/// round's sampling distribution without recomputing).
+pub fn sample_power_of_two(
+    scores: &[f64],
+    marginals: &[f64],
+    weights: &[f64],
+    k: usize,
+    rng: &mut Rng,
+) -> Selection {
+    let n = scores.len();
+    let members: Vec<usize> = (0..k)
+        .map(|_| {
+            let a = rng.below(n);
+            let b = rng.below(n);
+            let a_wins = scores[a] > scores[b] || (scores[a] == scores[b] && a <= b);
+            if a_wins {
+                a
+            } else {
+                b
+            }
+        })
+        .collect();
+    let coefs = members
+        .iter()
+        .map(|&m| weights[m] / (k as f64 * marginals[m]))
+        .collect();
+    Selection { members, coefs }
+}
+
 /// FedAvg-style aggregation over a *distinct* member set: slot
 /// coefficient `w_n / Σ_{m∈S} w_m` (the DivFL convention, shared by the
 /// deterministic greedy-channel and round-robin baselines).
@@ -311,6 +366,71 @@ mod tests {
         let sel = st.select(&w, 4);
         let uniq = sel.unique_members();
         assert_eq!(uniq.len(), 4);
+    }
+
+    #[test]
+    fn p2c_marginals_are_a_distribution_favoring_high_scores() {
+        let scores = vec![0.1, 0.4, 0.2, 0.3];
+        let q = p2c_marginals(&scores);
+        assert!((q.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        // N=4: worst gets 1/16, best gets 7/16.
+        assert!((q[0] - 1.0 / 16.0).abs() < 1e-12);
+        assert!((q[1] - 7.0 / 16.0).abs() < 1e-12);
+        assert!((q[2] - 3.0 / 16.0).abs() < 1e-12);
+        assert!((q[3] - 5.0 / 16.0).abs() < 1e-12);
+        // Ties resolve deterministically: lower position wins, so it
+        // takes the higher marginal.
+        let tied = p2c_marginals(&[0.2, 0.2]);
+        assert!(tied[0] > tied[1]);
+        assert!((tied.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn p2c_empirical_frequencies_match_the_marginals() {
+        let scores = vec![0.05, 0.3, 0.1, 0.2, 0.15];
+        let q = p2c_marginals(&scores);
+        let w = vec![0.2; 5];
+        let mut rng = Rng::new(11);
+        let mut counts = [0usize; 5];
+        let trials = 100_000;
+        for _ in 0..trials {
+            let sel = sample_power_of_two(&scores, &q, &w, 1, &mut rng);
+            counts[sel.members[0]] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let emp = c as f64 / trials as f64;
+            assert!(
+                (emp - q[i]).abs() < 0.01,
+                "device {i}: empirical {emp} vs marginal {}",
+                q[i]
+            );
+        }
+    }
+
+    #[test]
+    fn p2c_aggregation_is_unbiased() {
+        // Same contract as sample_by_probability: eq. (4) coefficients
+        // make the aggregate unbiased for any sampling distribution.
+        let scores = vec![0.4, 0.1, 0.25];
+        let q = p2c_marginals(&scores);
+        let w = vec![0.2, 0.3, 0.5];
+        let v = [1.0, 10.0, 100.0];
+        let k = 2;
+        let mut rng = Rng::new(21);
+        let trials = 400_000;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let sel = sample_power_of_two(&scores, &q, &w, k, &mut rng);
+            for (slot, &n) in sel.members.iter().enumerate() {
+                acc += sel.coefs[slot] * v[n];
+            }
+        }
+        let emp = acc / trials as f64;
+        let expect: f64 = w.iter().zip(&v).map(|(wn, vn)| wn * vn).sum();
+        assert!(
+            (emp - expect).abs() / expect < 0.01,
+            "empirical {emp} vs {expect}"
+        );
     }
 
     #[test]

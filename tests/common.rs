@@ -1,0 +1,12 @@
+//! Helpers shared by the integration-test targets (each pulls this in
+//! with `mod common;` — explicit `[[test]]` targets in Cargo.toml keep
+//! Cargo from treating this file as a test target of its own).
+
+/// Absolute path of the recorded-trace fixture
+/// (`tests/fixtures/campus.csv`; schema in `tests/fixtures/README.md`).
+pub fn campus_fixture() -> String {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/campus.csv")
+        .to_string_lossy()
+        .into_owned()
+}

@@ -9,9 +9,12 @@
 
 use lroa::config::{Config, EnvConfig, EnvKind, Policy, SystemConfig};
 use lroa::env::{self, EnvInit, Environment};
-use lroa::exp::{self, SweepSpec};
+use lroa::exp::{self, EnvSel, SweepSpec};
 use lroa::rng::Rng;
 use lroa::system::{ChannelProcess, Fleet};
+
+mod common;
+use common::campus_fixture as fixture_path;
 
 fn sys(n: usize) -> SystemConfig {
     SystemConfig {
@@ -28,6 +31,7 @@ fn env_cfg() -> EnvConfig {
         avail_p_drop: 0.3,
         avail_p_join: 0.3,
         drift_sigma: 0.05,
+        trace_path: fixture_path(),
         ..EnvConfig::default()
     }
 }
@@ -41,6 +45,7 @@ fn build(kind: EnvKind, sys: &SystemConfig, ecfg: &EnvConfig, seed: u64) -> Box<
             seed,
         },
     )
+    .unwrap()
 }
 
 /// One round's observable environment trace, for exact comparison.
@@ -79,7 +84,13 @@ fn every_environment_is_a_pure_function_of_its_seed() {
         let b = trajectory(kind, 11, 80);
         assert_eq!(a, b, "{kind}: same seed diverged");
         let c = trajectory(kind, 12, 80);
-        assert_ne!(a, c, "{kind}: different seeds coincided");
+        if kind == EnvKind::Trace {
+            // Replay consumes no randomness at all: any seed yields the
+            // recorded log, bitwise.
+            assert_eq!(a, c, "{kind}: replay must be seed-independent");
+        } else {
+            assert_ne!(a, c, "{kind}: different seeds coincided");
+        }
     }
 }
 
@@ -125,10 +136,12 @@ fn availability_varies_but_respects_the_k_floor() {
 }
 
 fn grid_spec() -> SweepSpec {
+    let mut envs: Vec<EnvSel> = EnvKind::SYNTHETIC.iter().map(|&k| k.into()).collect();
+    envs.push(EnvSel::parse(&format!("trace:{}", fixture_path())).unwrap());
     SweepSpec {
         datasets: vec!["cifar".into()],
         policies: vec![Policy::Lroa, Policy::RoundRobin],
-        envs: EnvKind::ALL.to_vec(),
+        envs,
         seeds: vec![1],
         rounds: Some(12),
         overrides: vec![
@@ -145,7 +158,7 @@ fn policy_by_env_grid_is_thread_count_invariant() {
     // trajectories at any scenario-pool width.
     let seq = exp::run_scenarios(grid_spec().expand().unwrap(), 1).unwrap();
     let par = exp::run_scenarios(grid_spec().expand().unwrap(), 4).unwrap();
-    assert_eq!(seq.len(), 2 * 4);
+    assert_eq!(seq.len(), 2 * 6);
     for (a, b) in seq.iter().zip(&par) {
         assert_eq!(a.scenario.label, b.scenario.label);
         for (ra, rb) in a.recorder.rounds.iter().zip(&b.recorder.rounds) {
@@ -166,7 +179,7 @@ fn policy_by_env_grid_is_thread_count_invariant() {
     };
     let stat = &seq[0];
     assert_eq!(stat.scenario.cfg.env.kind, EnvKind::Static);
-    for r in &seq[1..4] {
+    for r in &seq[1..6] {
         assert_ne!(
             series(stat),
             series(r),
@@ -182,18 +195,30 @@ fn sweep_manifest_covers_the_whole_env_grid() {
     let cells = spec.expand().unwrap();
     let manifest = exp::manifest_json(&cells);
     let arr = manifest.get("cells").and_then(|c| c.as_arr()).unwrap();
-    assert_eq!(arr.len(), 8);
+    assert_eq!(arr.len(), 12);
     let envs: Vec<&str> = arr
         .iter()
         .map(|c| c.get("env").unwrap().as_str().unwrap())
         .collect();
-    for name in ["static", "ge", "avail", "drift"] {
+    for name in ["static", "ge", "avail", "drift", "trace", "adv"] {
         assert_eq!(
             envs.iter().filter(|&&e| e == name).count(),
             2,
             "{name} cells missing from manifest"
         );
     }
+    // Trace cells record their log; the schema names the regret column.
+    let trace_cell = arr
+        .iter()
+        .find(|c| c.get("env").unwrap().as_str() == Some("trace"))
+        .unwrap();
+    assert!(trace_cell
+        .get("env_trace")
+        .and_then(|t| t.as_str())
+        .unwrap()
+        .ends_with("campus.csv"));
+    let columns = manifest.get("columns").and_then(|c| c.as_arr()).unwrap();
+    assert!(columns.iter().any(|c| c.as_str() == Some("regret")));
 }
 
 #[test]
