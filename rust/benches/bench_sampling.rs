@@ -4,7 +4,9 @@
 
 use lroa::bench::bencher_from_args;
 use lroa::rng::Rng;
-use lroa::sampling::{sample_by_probability, DivFlState, Projector};
+use lroa::sampling::{
+    p2c_marginals, sample_by_probability, softmax_distribution, DivFlState, Projector,
+};
 
 fn main() {
     let mut b = bencher_from_args();
@@ -39,6 +41,19 @@ fn main() {
                 st.select(&weights, k)
             });
         }
+    }
+
+    // Marginal kernels: P2C's exact per-slot marginals and the bandit's
+    // softmax distribution (one update per round each).
+    for &n in &[120usize, 480, 1920] {
+        let mut rng = Rng::new(11);
+        let scores: Vec<f64> = (0..n).map(|_| rng.range(0.0, 1.0)).collect();
+        b.bench(&format!("sample/p2c-marginals/N={n}"), || {
+            p2c_marginals(&scores)
+        });
+        b.bench(&format!("sample/bandit-distribution/N={n}"), || {
+            softmax_distribution(&scores, 0.25, 0.05)
+        });
     }
 
     // Embedding projection of a full model delta.

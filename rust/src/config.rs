@@ -32,15 +32,25 @@ pub enum Policy {
     /// Power-of-two-choices: per slot, sample two devices uniformly and
     /// keep the better channel — the classic load-balancing sampler.
     PowerOfTwoChoices,
+    /// Contextual bandit: UCB-scored softmax sampling over per-device
+    /// context vectors (recent observed gains, availability streak,
+    /// virtual energy-queue backlog), with exact selection marginals so
+    /// eq. (4) aggregation stays unbiased (knobs: `[bandit]`).
+    Bandit,
     /// Oracle: clairvoyant latency lower bound (best reachable device at
     /// `f_max`/`p_max`, foresight tie-breaking via `Environment::peek`) —
     /// the regret anchor of `lroa regret`.
     Oracle,
+    /// Oracle-E: the clairvoyant *and* budget-feasible anchor — per round
+    /// it solves the same queue-priced energy-constrained resource
+    /// problem as LROA (Theorem 2/3 kernels) before picking the fastest
+    /// device, splitting regret into online + budget components.
+    OracleEnergy,
 }
 
 impl Policy {
     /// Every scheme, registry order (LROA first — the comparison anchor).
-    pub const ALL: [Policy; 8] = [
+    pub const ALL: [Policy; 10] = [
         Policy::Lroa,
         Policy::UniformDynamic,
         Policy::UniformStatic,
@@ -48,7 +58,9 @@ impl Policy {
         Policy::GreedyChannel,
         Policy::RoundRobin,
         Policy::PowerOfTwoChoices,
+        Policy::Bandit,
         Policy::Oracle,
+        Policy::OracleEnergy,
     ];
 
     pub fn parse(s: &str) -> Result<Policy> {
@@ -60,9 +72,12 @@ impl Policy {
             "greedy" | "greedy-channel" => Policy::GreedyChannel,
             "rr" | "round-robin" | "roundrobin" => Policy::RoundRobin,
             "p2c" | "power-of-two" | "power-of-two-choices" => Policy::PowerOfTwoChoices,
+            "bandit" | "ucb" | "contextual-bandit" => Policy::Bandit,
             "oracle" => Policy::Oracle,
+            "oracle-e" | "oraclee" | "oracle-energy" => Policy::OracleEnergy,
             other => anyhow::bail!(
-                "unknown policy {other:?} (lroa|uni-d|uni-s|divfl|greedy|rr|p2c|oracle)"
+                "unknown policy {other:?} \
+                 (lroa|uni-d|uni-s|divfl|greedy|rr|p2c|bandit|oracle|oracle-e)"
             ),
         })
     }
@@ -76,7 +91,9 @@ impl Policy {
             Policy::GreedyChannel => "Greedy",
             Policy::RoundRobin => "RR",
             Policy::PowerOfTwoChoices => "P2C",
+            Policy::Bandit => "Bandit",
             Policy::Oracle => "Oracle",
+            Policy::OracleEnergy => "Oracle-E",
         }
     }
 }
@@ -214,6 +231,40 @@ impl Default for EnvConfig {
             trace_path: String::new(),
             adv_degrade: 0.2,
             adv_targets: 0,
+        }
+    }
+}
+
+/// Contextual-bandit scheduler knobs (`[bandit]` section).  Inert unless
+/// `train.policy = bandit`; see [`crate::control::policy`] for how the
+/// scores and the exact sampling marginals are formed.
+#[derive(Clone, Debug)]
+pub struct BanditConfig {
+    /// UCB exploration-bonus coefficient `c` in
+    /// `c·sqrt(ln(t+1) / (1 + pulls_n))`.
+    pub ucb_c: f64,
+    /// Softmax temperature mapping scores to sampling probabilities
+    /// (lower = greedier).
+    pub temp: f64,
+    /// Uniform exploration floor ε mixed into the softmax (keeps every
+    /// marginal strictly positive, so eq. (4) coefficients stay finite).
+    pub eps: f64,
+    /// EMA factor for the recent-observed-gain context feature.
+    pub gain_ema: f64,
+    /// Mixing weight of the context prior vs the empirical pulled-arm
+    /// reward in the exploitation term (1 = pure context, 0 = pure
+    /// reward history).
+    pub ctx_weight: f64,
+}
+
+impl Default for BanditConfig {
+    fn default() -> Self {
+        Self {
+            ucb_c: 0.5,
+            temp: 0.25,
+            eps: 0.05,
+            gain_ema: 0.3,
+            ctx_weight: 0.5,
         }
     }
 }
@@ -388,6 +439,7 @@ pub struct Config {
     pub control: ControlConfig,
     pub train: TrainConfig,
     pub env: EnvConfig,
+    pub bandit: BanditConfig,
     /// Where AOT artifacts live.
     pub artifacts_dir: String,
     /// Where run outputs (CSV/JSON) go.
@@ -514,6 +566,11 @@ impl Config {
             "env.trace_path" => self.env.trace_path = val.into(),
             "env.adv_degrade" => self.env.adv_degrade = f()?,
             "env.adv_targets" => self.env.adv_targets = u()?,
+            "bandit.ucb_c" => self.bandit.ucb_c = f()?,
+            "bandit.temp" => self.bandit.temp = f()?,
+            "bandit.eps" => self.bandit.eps = f()?,
+            "bandit.gain_ema" => self.bandit.gain_ema = f()?,
+            "bandit.ctx_weight" => self.bandit.ctx_weight = f()?,
             "run.artifacts_dir" => self.artifacts_dir = val.into(),
             "run.out_dir" => self.out_dir = val.into(),
             other => anyhow::bail!("unknown config key {other:?}"),
@@ -581,6 +638,21 @@ impl Config {
             e.adv_degrade > 0.0 && e.adv_degrade <= 1.0,
             "env.adv_degrade must be in (0, 1]"
         );
+        let b = &self.bandit;
+        anyhow::ensure!(b.ucb_c >= 0.0, "bandit.ucb_c must be >= 0");
+        anyhow::ensure!(b.temp > 0.0, "bandit.temp must be > 0");
+        anyhow::ensure!(
+            (0.0..1.0).contains(&b.eps),
+            "bandit.eps must be in [0, 1)"
+        );
+        anyhow::ensure!(
+            b.gain_ema > 0.0 && b.gain_ema <= 1.0,
+            "bandit.gain_ema must be in (0, 1]"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&b.ctx_weight),
+            "bandit.ctx_weight must be in [0, 1]"
+        );
         Ok(())
     }
 
@@ -624,6 +696,11 @@ impl Config {
             c.env.adv_degrade = d.adv_degrade;
             c.env.adv_targets = d.adv_targets;
         }
+        // Bandit knobs are only read by the bandit policy — inert (and
+        // resume-neutral) everywhere else, like unselected env knobs.
+        if c.train.policy != Policy::Bandit {
+            c.bandit = BanditConfig::default();
+        }
         let repr = format!("{c:?}");
         let mut h: u64 = 0xcbf2_9ce4_8422_2325;
         for b in repr.bytes() {
@@ -639,11 +716,13 @@ impl Config {
         let c = &self.control;
         let t = &self.train;
         let e = &self.env;
+        let b = &self.bandit;
         format!(
             "[system] N={} K={} E={} B={:.3e} N0={} h_mean={} clip=({},{}) p=({},{}) f=({:.2e},{:.2e}) alpha={:.2e} c_n={:.2e} Ebar={} M_bits={} dl_bps={} spread={}\n\
              [control] mu={} nu={} lambda*={} V*={} eps=({},{}) iters=({},{}) q_min={}\n\
              [train] dataset={} rounds={} lr0={} decay=({},{}) samples=({},{}) test={} eval_every={} seed={} policy={} snr={} threads={}\n\
              [env] kind={} ge=({},{},{}) avail=({},{}) drift=({},{},{}) trace={:?} adv=({},{})\n\
+             [bandit] ucb_c={} temp={} eps={} gain_ema={} ctx_weight={}\n\
              [run] artifacts_dir={}",
             s.num_devices, s.k, s.local_epochs, s.bandwidth_hz, s.noise_w, s.channel_mean,
             s.channel_clip.0, s.channel_clip.1, s.p_min_w, s.p_max_w, s.f_min_hz, s.f_max_hz,
@@ -656,7 +735,9 @@ impl Config {
             t.seed, t.policy, t.data_snr, t.train_threads,
             e.kind, e.ge_p_bad, e.ge_p_good, e.ge_bad_scale, e.avail_p_drop, e.avail_p_join,
             e.drift_sigma, e.drift_clip.0, e.drift_clip.1, e.trace_path, e.adv_degrade,
-            e.adv_targets, self.artifacts_dir,
+            e.adv_targets,
+            b.ucb_c, b.temp, b.eps, b.gain_ema, b.ctx_weight,
+            self.artifacts_dir,
         )
     }
 }
@@ -774,8 +855,43 @@ mod tests {
             Policy::parse("power-of-two-choices").unwrap(),
             Policy::PowerOfTwoChoices
         );
+        assert_eq!(Policy::parse("bandit").unwrap(), Policy::Bandit);
+        assert_eq!(Policy::parse("contextual-bandit").unwrap(), Policy::Bandit);
         assert_eq!(Policy::parse("oracle").unwrap(), Policy::Oracle);
+        assert_eq!(Policy::parse("oracle-e").unwrap(), Policy::OracleEnergy);
+        assert_eq!(Policy::parse("oracle-energy").unwrap(), Policy::OracleEnergy);
         assert!(Policy::parse("nope").is_err());
+    }
+
+    #[test]
+    fn bandit_knobs_override_validate_and_stay_inert_off_policy() {
+        let mut cfg = Config::for_dataset("cifar").unwrap();
+        cfg.apply_cli(&["--bandit.ucb_c=1.5", "--bandit.temp=0.1", "--bandit.eps=0.2"])
+            .unwrap();
+        assert_eq!(cfg.bandit.ucb_c, 1.5);
+        assert_eq!(cfg.bandit.temp, 0.1);
+        assert_eq!(cfg.bandit.eps, 0.2);
+        assert!(cfg.validate().is_ok());
+        cfg.bandit.temp = 0.0;
+        assert!(cfg.validate().is_err());
+        cfg.bandit.temp = 0.25;
+        cfg.bandit.eps = 1.0;
+        assert!(cfg.validate().is_err());
+        cfg.bandit.eps = 0.05;
+        cfg.bandit.gain_ema = 0.0;
+        assert!(cfg.validate().is_err());
+
+        // Inert unless the bandit policy is selected: same hash, so a
+        // resumed grid never re-runs non-bandit cells over a knob edit.
+        let a = Config::for_dataset("cifar").unwrap();
+        let mut b = a.clone();
+        b.bandit.ucb_c = 9.0;
+        assert_eq!(a.hash_hex(), b.hash_hex());
+        let mut c = a.clone();
+        c.train.policy = Policy::Bandit;
+        let mut d = c.clone();
+        d.bandit.ucb_c = 9.0;
+        assert_ne!(c.hash_hex(), d.hash_hex());
     }
 
     #[test]

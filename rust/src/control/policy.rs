@@ -12,16 +12,43 @@
 //! scheduling baselines the related work suggests and the clairvoyant
 //! regret anchor:
 //!
-//! | name   | resources `(f, p)`        | sampling `q` / selection      |
-//! |--------|---------------------------|-------------------------------|
-//! | LROA   | Algorithm 2 (dynamic)     | Algorithm 2 probabilities     |
-//! | Uni-D  | Algorithm 2 at `q = 1/N`  | uniform with replacement      |
-//! | Uni-S  | static energy balance     | uniform with replacement      |
-//! | DivFL  | static energy balance     | greedy facility location      |
-//! | Greedy | static energy balance     | K best-channel devices        |
-//! | RR     | static energy balance     | round-robin over global ids   |
-//! | P2C    | static energy balance     | power-of-two-choices draws    |
-//! | Oracle | `f_max` / `p_max`         | the min-latency device        |
+//! | name     | resources `(f, p)`        | sampling `q` / selection      |
+//! |----------|---------------------------|-------------------------------|
+//! | LROA     | Algorithm 2 (dynamic)     | Algorithm 2 probabilities     |
+//! | Uni-D    | Algorithm 2 at `q = 1/N`  | uniform with replacement      |
+//! | Uni-S    | static energy balance     | uniform with replacement      |
+//! | DivFL    | static energy balance     | greedy facility location      |
+//! | Greedy   | static energy balance     | K best-channel devices        |
+//! | RR       | static energy balance     | round-robin over global ids   |
+//! | P2C      | static energy balance     | power-of-two-choices draws    |
+//! | Bandit   | static energy balance     | UCB-scored softmax marginals  |
+//! | Oracle   | `f_max` / `p_max`         | the min-latency device        |
+//! | Oracle-E | Theorem 2/3 at `q = 1`    | the min-latency device        |
+//!
+//! The contextual bandit ([`ContextualBanditPolicy`]) scores each
+//! reachable device from a per-device context vector drawn from the
+//! environment registry's observable surface — the EMA of its observed
+//! gains, its availability streak, and its virtual energy-queue backlog
+//! ([`crate::control::queues`]) — plus a UCB exploration bonus over its
+//! pull count, then samples `K` slots from the exact softmax marginals
+//! ([`crate::sampling::softmax_distribution`]).  Because the marginals
+//! are exact, the eq. (4) coefficients `w_n / (K q_n)` keep the
+//! aggregate unbiased, exactly like `p2c`'s.  Rewards (the realized
+//! relative speed of the pulled devices) flow back through
+//! [`RoundPolicy::observe_round`].
+//!
+//! `Oracle-E` ([`OracleEnergyPolicy`]) is the *budget-feasible*
+//! clairvoyant anchor: like the oracle it runs the single fastest
+//! reachable device and peeks at next-round gains for tie-breaking, but
+//! its resources come from the same queue-priced Theorem 2/3 kernels
+//! ([`crate::control::freq`], [`crate::control::power`]) LROA uses —
+//! at `q = 1` for the device it will run — so its virtual queues, and
+//! therefore its time-average energy, stay bounded by the same budgets
+//! the online policies are held to.  `lroa regret` uses both anchors to
+//! decompose each online cell's regret into `regret_online`
+//! (vs Oracle-E: the price of not knowing the future) and
+//! `regret_budget` (Oracle-E vs Oracle: the price of the energy
+//! constraint itself).
 //!
 //! The oracle is the latency **lower bound**: with the current channel
 //! known at decision time (as every policy sees), the per-round makespan
@@ -42,11 +69,11 @@
 //! key on global identity (DivFL's embeddings, RR's cursor) must go
 //! through `ids`.
 
-use crate::config::{ControlConfig, Policy, SystemConfig};
-use crate::control::{static_alloc, Controls, LroaSolver, SolverStats};
+use crate::config::{BanditConfig, ControlConfig, Policy, SystemConfig};
+use crate::control::{freq, power, static_alloc, Controls, LroaSolver, SolverStats};
 use crate::rng::Rng;
 use crate::sampling::{self, DivFlState, Projector, Selection};
-use crate::system::Device;
+use crate::system::{Device, RoundCosts};
 use crate::Result;
 
 /// DivFL update-embedding dimensionality (random projection target).
@@ -108,6 +135,14 @@ pub trait RoundPolicy: Send {
     /// Feed back one participant's model delta after local training.
     /// Only stateful selectors (DivFL) care; the default ignores it.
     fn observe_update(&mut self, _client: usize, _delta: &[f32]) {}
+
+    /// Feed back the round's realized costs after the cost-model stage:
+    /// `selected` is the unique participant set in **global** device ids
+    /// and `costs` is fleet-indexed.  Fires in every sim mode (unlike
+    /// [`RoundPolicy::observe_update`], which needs local training to
+    /// run).  Only learning policies (the bandit) care; the default
+    /// ignores it.
+    fn observe_round(&mut self, _selected: &[usize], _costs: &RoundCosts) {}
 
     /// Whether the server should attempt an [`crate::env::Environment::peek`]
     /// and populate [`RoundContext::next_h`].  Default false: online
@@ -438,6 +473,183 @@ impl RoundPolicy for PowerOfTwoPolicy {
 }
 
 // ---------------------------------------------------------------------------
+// Contextual bandit — UCB-scored softmax sampling over per-device context
+// vectors, static resources.
+// ---------------------------------------------------------------------------
+
+/// Saturation constant of the availability-streak feature: a device
+/// candidate for this many consecutive rounds scores 0.5 on the feature.
+const BANDIT_STREAK_HALF: f64 = 8.0;
+
+/// Contextual UCB scheduler (the bandit-style scheduling of Shi et al.,
+/// adapted to the dynamic-environment registry).
+///
+/// Per round, every reachable device gets a score
+///
+/// `score_n = (1-w)·exploit_n + w·prior_n + c·sqrt(ln(t+1)/(1+pulls_n))`
+///
+/// where `prior_n` averages three context features drawn from what the
+/// environment lets an online scheduler observe — the EMA of the
+/// device's past gains, its availability streak, and its energy-queue
+/// headroom `1/(1 + Q_n/Ē_n)` — and `exploit_n` is the empirical mean
+/// reward of its pulls (the realized relative speed fed back through
+/// [`RoundPolicy::observe_round`]; the context prior cold-starts unpulled
+/// arms).  Scores map to *exact* sampling marginals via
+/// [`sampling::softmax_distribution`], so the eq. (4) coefficients stay
+/// unbiased, and the same marginals price the queues (`q_eff`) and the
+/// recorded P1 objective (`controls.q`).
+///
+/// All state is keyed by **global** device id, so the scheduler keeps
+/// learning across rounds where the candidate set (`RoundContext::ids`)
+/// shifts under it.
+pub struct ContextualBanditPolicy {
+    sys: SystemConfig,
+    model_bits: f64,
+    knobs: BanditConfig,
+    /// Rounds planned so far (drives the UCB log term and streaks).
+    t: usize,
+    /// EMA of observed gains per global id.
+    ema_h: Vec<f64>,
+    seen: Vec<bool>,
+    /// Round stamp of each device's last candidacy + its current
+    /// consecutive-candidacy streak.
+    last_seen: Vec<usize>,
+    streak: Vec<u32>,
+    /// Pull statistics per global id (updated by `observe_round`).
+    pulls: Vec<u64>,
+    reward_sum: Vec<f64>,
+    /// The candidate ids of the round most recently planned — the
+    /// reward baseline in `observe_round` is the best latency among
+    /// devices the scheduler could actually have picked.
+    last_candidates: Vec<usize>,
+}
+
+impl ContextualBanditPolicy {
+    pub fn new(init: &PolicyInit<'_>) -> Self {
+        let n = init.sys.num_devices;
+        Self {
+            sys: init.sys.clone(),
+            model_bits: init.model_bits,
+            knobs: init.bandit.clone(),
+            t: 0,
+            ema_h: vec![0.0; n],
+            seen: vec![false; n],
+            last_seen: vec![0; n],
+            streak: vec![0; n],
+            pulls: vec![0; n],
+            reward_sum: vec![0.0; n],
+            last_candidates: Vec::new(),
+        }
+    }
+}
+
+impl RoundPolicy for ContextualBanditPolicy {
+    fn name(&self) -> &'static str {
+        "Bandit"
+    }
+
+    fn plan(&mut self, ctx: &RoundContext<'_>, rng: &mut Rng) -> RoundPlan {
+        self.t += 1;
+        let n = ctx.devices.len();
+        // Context update over this round's candidates: gain EMAs and
+        // availability streaks (absence resets a streak to 1 on return).
+        let a = self.knobs.gain_ema;
+        for (pos, &g) in ctx.ids.iter().enumerate() {
+            self.ema_h[g] = if self.seen[g] {
+                (1.0 - a) * self.ema_h[g] + a * ctx.h[pos]
+            } else {
+                ctx.h[pos]
+            };
+            self.seen[g] = true;
+            self.streak[g] = if self.last_seen[g] + 1 == self.t {
+                self.streak[g] + 1
+            } else {
+                1
+            };
+            self.last_seen[g] = self.t;
+        }
+
+        let (clip_lo, clip_hi) = self.sys.channel_clip;
+        let span = (clip_hi - clip_lo).max(f64::MIN_POSITIVE);
+        let scores: Vec<f64> = (0..n)
+            .map(|pos| {
+                let g = ctx.ids[pos];
+                let gain = ((self.ema_h[g] - clip_lo) / span).clamp(0.0, 1.0);
+                let streak = self.streak[g] as f64;
+                let avail = streak / (streak + BANDIT_STREAK_HALF);
+                let budget = ctx.devices[pos].energy_budget_j.max(f64::MIN_POSITIVE);
+                let headroom = 1.0 / (1.0 + ctx.backlogs[pos] / budget);
+                let prior = (gain + avail + headroom) / 3.0;
+                let exploit = if self.pulls[g] > 0 {
+                    self.reward_sum[g] / self.pulls[g] as f64
+                } else {
+                    prior
+                };
+                let mean = (1.0 - self.knobs.ctx_weight) * exploit
+                    + self.knobs.ctx_weight * prior;
+                mean + self.knobs.ucb_c
+                    * (((self.t + 1) as f64).ln() / (1.0 + self.pulls[g] as f64)).sqrt()
+            })
+            .collect();
+        let q = sampling::softmax_distribution(&scores, self.knobs.temp, self.knobs.eps);
+
+        let mut controls =
+            static_alloc::solve_static(&self.sys, ctx.devices, self.model_bits, ctx.h);
+        // The exact marginals are both the recorded sampling distribution
+        // (P1 objective) and the queue/energy marginals.
+        controls.q = q.clone();
+        let selection = sampling::sample_by_probability(&q, ctx.weights, ctx.k, rng);
+        self.last_candidates.clear();
+        self.last_candidates.extend_from_slice(ctx.ids);
+        RoundPlan {
+            controls,
+            stats: SolverStats::default(),
+            selection,
+            q_eff: q,
+        }
+    }
+
+    fn observe_round(&mut self, selected: &[usize], costs: &RoundCosts) {
+        // Reward = relative speed of the pulled device against the best
+        // candidate this round, in (0, 1] — computable online (the
+        // scheduler saw every candidate's gain at decision time), no
+        // foresight involved.
+        let t_best = self
+            .last_candidates
+            .iter()
+            .map(|&g| costs.time_s[g])
+            .fold(f64::INFINITY, f64::min);
+        if !t_best.is_finite() || t_best <= 0.0 {
+            return;
+        }
+        for &g in selected {
+            self.pulls[g] += 1;
+            self.reward_sum[g] += t_best / costs.time_s[g];
+        }
+    }
+}
+
+/// Position of the latency-minimal device; exact ties break toward the
+/// device whose *next-round* gain is lower when foresight is available.
+/// Shared by both clairvoyant anchors — tie-breaking never changes the
+/// current round's makespan, so the lower-bound arguments survive.
+fn min_latency_pick(times: &[f64], next_h: Option<&[f64]>) -> usize {
+    let mut best = 0usize;
+    for i in 1..times.len() {
+        if times[i] < times[best] {
+            best = i;
+        } else if times[i] == times[best] {
+            if let Some(nh) = next_h {
+                if nh[i] < nh[best] {
+                    best = i;
+                }
+            }
+        }
+    }
+    best
+}
+
+// ---------------------------------------------------------------------------
 // Oracle — the clairvoyant latency lower bound (regret anchor).
 // ---------------------------------------------------------------------------
 
@@ -498,27 +710,115 @@ impl RoundPolicy for OraclePolicy {
                 )
             })
             .collect();
-        let mut best = 0usize;
-        for i in 1..n {
-            if times[i] < times[best] {
-                best = i;
-            } else if times[i] == times[best] {
-                if let Some(nh) = ctx.next_h {
-                    if nh[i] < nh[best] {
-                        best = i;
-                    }
-                }
-            }
-        }
         // K copies of the single fastest device: the makespan is exactly
         // `min_n T_n`, and the K equal 1/K coefficients aggregate to its
         // plain delta.
+        let best = min_latency_pick(&times, ctx.next_h);
         let selection = sampling::fedavg_selection(vec![best; ctx.k], ctx.weights);
         let mut q_eff = vec![0.0; n];
         q_eff[best] = 1.0;
         RoundPlan {
             // Uniform q keeps the recorded P1 objective finite and
             // comparable; the ledgers charge through q_eff.
+            controls: Controls {
+                f_hz,
+                p_w,
+                q: vec![1.0 / n as f64; n],
+            },
+            stats: SolverStats::default(),
+            selection,
+            q_eff,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Oracle-E — the clairvoyant *and* budget-feasible anchor.
+// ---------------------------------------------------------------------------
+
+/// Run the single fastest reachable device, but at the latency-minimal
+/// resources that respect its energy prices — the same per-round
+/// energy-constrained problem LROA solves.
+///
+/// For every candidate the Theorem 2 and Theorem 3 kernels
+/// ([`freq::optimal_freq`], [`power::optimal_power`]) are evaluated at
+/// `q = 1` (the device, if picked, participates surely) under its
+/// current virtual-queue backlog, and the device with the smallest
+/// resulting latency wins; ties break on foresight exactly like
+/// [`OraclePolicy`].  Empty queues price energy at zero, so the plan
+/// degenerates to the unconstrained oracle's `f_max`/`p_max`; as a
+/// hammered device's backlog grows the kernels throttle it, its latency
+/// rises, and the anchor rotates — the Lyapunov mechanism that keeps
+/// its time-average energy within the same budgets `Ē_n` the online
+/// policies are held to.  Its `q_eff` is the 0/1 indicator of the one
+/// device it uses, so the queues charge the *full* realized draw.
+///
+/// Since per-device latency is monotone decreasing in `f` and `p`,
+/// every round satisfies `T_oracle ≤ T_oracle_e ≤ T_policy-feasible`,
+/// which is what makes `regret_budget = T_oracle_e − T_oracle` a
+/// non-negative series on shared environment streams.
+pub struct OracleEnergyPolicy {
+    sys: SystemConfig,
+    model_bits: f64,
+    /// V — the latency price the kernels trade against queue-priced
+    /// energy (the cell's scaled value, shared with its LROA run).
+    v: f64,
+}
+
+impl OracleEnergyPolicy {
+    pub fn new(init: &PolicyInit<'_>) -> Self {
+        Self {
+            sys: init.sys.clone(),
+            model_bits: init.model_bits,
+            v: init.v,
+        }
+    }
+}
+
+impl RoundPolicy for OracleEnergyPolicy {
+    fn name(&self) -> &'static str {
+        "Oracle-E"
+    }
+
+    fn wants_peek(&self) -> bool {
+        true
+    }
+
+    fn plan(&mut self, ctx: &RoundContext<'_>, _rng: &mut Rng) -> RoundPlan {
+        let n = ctx.devices.len();
+        let mut f_hz = Vec::with_capacity(n);
+        let mut p_w = Vec::with_capacity(n);
+        let mut times = Vec::with_capacity(n);
+        for i in 0..n {
+            let d = &ctx.devices[i];
+            let f = freq::optimal_freq(d, self.v, 1.0, ctx.backlogs[i], ctx.k);
+            let p = power::optimal_power(
+                d,
+                self.v,
+                1.0,
+                ctx.h[i],
+                ctx.backlogs[i],
+                ctx.k,
+                self.sys.noise_w,
+            );
+            times.push(crate::system::round_time_s(
+                &self.sys,
+                d,
+                self.model_bits,
+                ctx.h[i],
+                f,
+                p,
+            ));
+            f_hz.push(f);
+            p_w.push(p);
+        }
+        let best = min_latency_pick(&times, ctx.next_h);
+        let selection = sampling::fedavg_selection(vec![best; ctx.k], ctx.weights);
+        let mut q_eff = vec![0.0; n];
+        q_eff[best] = 1.0;
+        RoundPlan {
+            // Uniform q keeps the recorded P1 objective finite and
+            // comparable (as for the oracle); the ledgers charge q_eff.
             controls: Controls {
                 f_hz,
                 p_w,
@@ -539,6 +839,9 @@ impl RoundPolicy for OraclePolicy {
 pub struct PolicyInit<'a> {
     pub sys: &'a SystemConfig,
     pub ctl: &'a ControlConfig,
+    /// Contextual-bandit knobs (`[bandit]`; only the bandit reads them —
+    /// by value, the struct is five floats).
+    pub bandit: BanditConfig,
     /// λ, already scaled (µ·λ₀ or explicit override).
     pub lambda: f64,
     /// V, already scaled (ν·V₀ or explicit override).
@@ -599,8 +902,16 @@ fn build_power_of_two(init: &PolicyInit<'_>) -> Box<dyn RoundPolicy> {
     Box::new(PowerOfTwoPolicy::new(init))
 }
 
+fn build_bandit(init: &PolicyInit<'_>) -> Box<dyn RoundPolicy> {
+    Box::new(ContextualBanditPolicy::new(init))
+}
+
 fn build_oracle(init: &PolicyInit<'_>) -> Box<dyn RoundPolicy> {
     Box::new(OraclePolicy::new(init))
+}
+
+fn build_oracle_energy(init: &PolicyInit<'_>) -> Box<dyn RoundPolicy> {
+    Box::new(OracleEnergyPolicy::new(init))
 }
 
 /// The name → constructor registry all dispatch goes through.
@@ -641,9 +952,19 @@ pub const REGISTRY: &[PolicySpec] = &[
         build: build_power_of_two,
     },
     PolicySpec {
+        id: Policy::Bandit,
+        name: "Bandit",
+        build: build_bandit,
+    },
+    PolicySpec {
         id: Policy::Oracle,
         name: "Oracle",
         build: build_oracle,
+    },
+    PolicySpec {
+        id: Policy::OracleEnergy,
+        name: "Oracle-E",
+        build: build_oracle_energy,
     },
 ];
 
@@ -697,7 +1018,10 @@ mod tests {
         }
         assert_eq!(
             names(),
-            vec!["LROA", "Uni-D", "Uni-S", "DivFL", "Greedy", "RR", "P2C", "Oracle"]
+            vec![
+                "LROA", "Uni-D", "Uni-S", "DivFL", "Greedy", "RR", "P2C", "Bandit",
+                "Oracle", "Oracle-E"
+            ]
         );
     }
 
@@ -707,6 +1031,7 @@ mod tests {
         let init = PolicyInit {
             sys: &sys,
             ctl: &ctl,
+            bandit: BanditConfig::default(),
             lambda: 1.0,
             v: 1e4,
             model_bits: 3.2e6,
@@ -723,7 +1048,11 @@ mod tests {
             "round-robin",
             "p2c",
             "power-of-two-choices",
+            "bandit",
+            "contextual-bandit",
             "oracle",
+            "oracle-e",
+            "oracle-energy",
         ] {
             assert!(from_name(alias, &init).is_ok(), "{alias}");
         }
@@ -736,6 +1065,7 @@ mod tests {
         let init = PolicyInit {
             sys: &sys,
             ctl: &ctl,
+            bandit: BanditConfig::default(),
             lambda: 1.0,
             v: 1e4,
             model_bits: 3.2e6,
@@ -785,6 +1115,7 @@ mod tests {
         let init = PolicyInit {
             sys: &sys,
             ctl: &ctl,
+            bandit: BanditConfig::default(),
             lambda: 1.0,
             v: 1e4,
             model_bits: 3.2e6,
@@ -823,6 +1154,7 @@ mod tests {
         let init = PolicyInit {
             sys: &sys,
             ctl: &ctl,
+            bandit: BanditConfig::default(),
             lambda: 1.0,
             v: 1e4,
             model_bits: 3.2e6,
@@ -852,6 +1184,7 @@ mod tests {
         let init = PolicyInit {
             sys: &sys,
             ctl: &ctl,
+            bandit: BanditConfig::default(),
             lambda: 1.0,
             v: 1e4,
             model_bits: 3.2e6,
@@ -885,6 +1218,7 @@ mod tests {
         let init = PolicyInit {
             sys: &sys,
             ctl: &ctl,
+            bandit: BanditConfig::default(),
             lambda: 1.0,
             v: 1e4,
             model_bits: 3.2e6,
@@ -946,6 +1280,7 @@ mod tests {
         let init = PolicyInit {
             sys: &sys,
             ctl: &ctl,
+            bandit: BanditConfig::default(),
             lambda: 1.0,
             v: 1e4,
             model_bits: 3.2e6,
@@ -989,6 +1324,7 @@ mod tests {
         let init = PolicyInit {
             sys: &sys,
             ctl: &ctl,
+            bandit: BanditConfig::default(),
             lambda: 1.0,
             v: 1e4,
             model_bits: 3.2e6,
@@ -1026,6 +1362,7 @@ mod tests {
         let init = PolicyInit {
             sys: &sys,
             ctl: &ctl,
+            bandit: BanditConfig::default(),
             lambda: 1.0,
             v: 1e4,
             model_bits: 3.2e6,
@@ -1052,5 +1389,245 @@ mod tests {
         // Cursor starts at 0: the nearest reachable ids are 1 and 5,
         // i.e. positions 0 and 1.
         assert_eq!(plan.selection.members, vec![0, 1]);
+    }
+
+    #[test]
+    fn bandit_marginals_match_empirical_frequencies() {
+        // The bandit's q_eff are its *exact* selection marginals: 1e5
+        // independent draws from fresh policies at the same context must
+        // reproduce them within 1% — the p2c contract, mirrored.
+        let (sys, ctl, fleet, h, backlogs) = setup();
+        let init = PolicyInit {
+            sys: &sys,
+            ctl: &ctl,
+            bandit: BanditConfig::default(),
+            lambda: 1.0,
+            v: 1e4,
+            model_bits: 3.2e6,
+            seed: 7,
+        };
+        let ids: Vec<usize> = (0..12).collect();
+        let ctx = RoundContext {
+            t: 0,
+            k: 1,
+            devices: &fleet.devices,
+            weights: fleet.weights(),
+            ids: &ids,
+            h: &h,
+            backlogs: &backlogs,
+            next_h: None,
+        };
+        // Reference marginals from one fresh policy (the scores are a
+        // pure function of the initial state + context, never of the rng).
+        let reference = build(Policy::Bandit, &init).plan(&ctx, &mut Rng::new(1));
+        let q = reference.q_eff.clone();
+        assert_eq!(reference.controls.q, q, "marginals must drive the objective");
+        assert!((q.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(q.iter().all(|&v| v > 0.0), "eps floor keeps marginals positive");
+        // eq. (4) coefficients follow w/(K q) exactly.
+        let w = fleet.weights();
+        for (slot, &m) in reference.selection.members.iter().enumerate() {
+            let expect = w[m] / (ctx.k as f64 * q[m]);
+            assert!((reference.selection.coefs[slot] - expect).abs() < 1e-12);
+        }
+
+        let trials = 100_000;
+        let mut counts = vec![0usize; 12];
+        let mut rng = Rng::new(33);
+        for _ in 0..trials {
+            let plan = build(Policy::Bandit, &init).plan(&ctx, &mut rng);
+            counts[plan.selection.members[0]] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let emp = c as f64 / trials as f64;
+            assert!(
+                (emp - q[i]).abs() < 0.01,
+                "device {i}: empirical {emp} vs marginal {}",
+                q[i]
+            );
+        }
+    }
+
+    #[test]
+    fn bandit_learns_to_favor_the_fast_device() {
+        // Homogeneous fleet, device 4 holds the best channel every
+        // round: with rewards flowing back through observe_round the
+        // bandit's marginal on device 4 must end up the largest.
+        let (sys, ctl, _, mut h, backlogs) = setup();
+        let mut rng = Rng::new(9);
+        let fleet = crate::system::Fleet::generate(&sys, (100, 100), &mut rng);
+        for (i, v) in h.iter_mut().enumerate() {
+            *v = if i == 4 { 0.49 } else { 0.05 };
+        }
+        let init = PolicyInit {
+            sys: &sys,
+            ctl: &ctl,
+            bandit: BanditConfig {
+                ucb_c: 0.1,
+                temp: 0.1,
+                ..BanditConfig::default()
+            },
+            lambda: 1.0,
+            v: 1e4,
+            model_bits: 3.2e6,
+            seed: 7,
+        };
+        let ids: Vec<usize> = (0..12).collect();
+        let mut policy = build(Policy::Bandit, &init);
+        let mut sample_rng = Rng::new(5);
+        let mut last_q = Vec::new();
+        for t in 0..80 {
+            let ctx = RoundContext {
+                t,
+                k: 1,
+                devices: &fleet.devices,
+                weights: fleet.weights(),
+                ids: &ids,
+                h: &h,
+                backlogs: &backlogs,
+                next_h: None,
+            };
+            let plan = policy.plan(&ctx, &mut sample_rng);
+            let costs = crate::system::RoundCosts::evaluate(
+                &sys,
+                &fleet.devices,
+                3.2e6,
+                &h,
+                &plan.controls.f_hz,
+                &plan.controls.p_w,
+            );
+            policy.observe_round(&plan.selection.unique_members(), &costs);
+            last_q = plan.q_eff;
+        }
+        let best = last_q
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(best, 4, "bandit should converge on the best channel: {last_q:?}");
+        assert!(
+            last_q[4] > 1.5 / 12.0,
+            "marginal on the learned arm should clear uniform: {}",
+            last_q[4]
+        );
+    }
+
+    #[test]
+    fn oracle_e_runs_flat_out_on_empty_queues_and_throttles_under_pressure() {
+        let (sys, ctl, fleet, h, _) = setup();
+        let init = PolicyInit {
+            sys: &sys,
+            ctl: &ctl,
+            bandit: BanditConfig::default(),
+            lambda: 1.0,
+            v: 1e4,
+            model_bits: 3.2e6,
+            seed: 7,
+        };
+        let ids: Vec<usize> = (0..12).collect();
+        let mut policy = build(Policy::OracleEnergy, &init);
+        assert!(policy.wants_peek());
+
+        // Empty queues: energy is free, so the plan coincides with the
+        // unconstrained oracle (full resources, same pick).
+        let zeros = vec![0.0; 12];
+        let ctx = RoundContext {
+            t: 0,
+            k: 2,
+            devices: &fleet.devices,
+            weights: fleet.weights(),
+            ids: &ids,
+            h: &h,
+            backlogs: &zeros,
+            next_h: None,
+        };
+        let plan = policy.plan(&ctx, &mut Rng::new(1));
+        for (i, d) in fleet.devices.iter().enumerate() {
+            assert_eq!(plan.controls.f_hz[i], d.f_max_hz);
+            assert_eq!(plan.controls.p_w[i], d.p_max_w);
+        }
+        let oracle_plan = build(Policy::Oracle, &init).plan(&ctx, &mut Rng::new(1));
+        assert_eq!(plan.selection.members, oracle_plan.selection.members);
+        let s: f64 = plan.selection.coefs.iter().sum();
+        assert!((s - 1.0).abs() < 1e-12);
+        assert_eq!(plan.q_eff.iter().sum::<f64>(), 1.0, "0/1 indicator on one device");
+
+        // Crushing backlogs: the Theorem 2/3 kernels saturate at the
+        // resource floors — the budget constraint visibly bites.
+        let heavy = vec![1e12; 12];
+        let ctx = RoundContext {
+            t: 1,
+            k: 2,
+            devices: &fleet.devices,
+            weights: fleet.weights(),
+            ids: &ids,
+            h: &h,
+            backlogs: &heavy,
+            next_h: None,
+        };
+        let plan = policy.plan(&ctx, &mut Rng::new(1));
+        for (i, d) in fleet.devices.iter().enumerate() {
+            assert_eq!(plan.controls.f_hz[i], d.f_min_hz);
+            assert_eq!(plan.controls.p_w[i], d.p_min_w);
+        }
+    }
+
+    #[test]
+    fn oracle_e_never_beats_the_unconstrained_oracle_per_round() {
+        // Pointwise budget dominance: under any backlog vector the
+        // energy-feasible anchor's makespan is at least the oracle's
+        // floor — the theorem behind `regret_budget >= 0`.
+        let (sys, ctl, fleet, h, _) = setup();
+        let init = PolicyInit {
+            sys: &sys,
+            ctl: &ctl,
+            bandit: BanditConfig::default(),
+            lambda: 1.0,
+            v: 1e4,
+            model_bits: 3.2e6,
+            seed: 7,
+        };
+        let ids: Vec<usize> = (0..12).collect();
+        let mut oracle_e = build(Policy::OracleEnergy, &init);
+        let mut rng = Rng::new(13);
+        for trial in 0..20 {
+            // Wide backlog range: some trials leave the kernels at the
+            // full-resource corner, others throttle all the way to the
+            // floors — the bound must hold across the whole spectrum.
+            let backlogs: Vec<f64> = (0..12).map(|_| rng.range(0.0, 1e7)).collect();
+            let ctx = RoundContext {
+                t: trial,
+                k: 2,
+                devices: &fleet.devices,
+                weights: fleet.weights(),
+                ids: &ids,
+                h: &h,
+                backlogs: &backlogs,
+                next_h: None,
+            };
+            let plan = oracle_e.plan(&ctx, &mut Rng::new(1));
+            let chosen = plan.selection.members[0];
+            let t_oe = crate::system::round_time_s(
+                &sys,
+                &fleet.devices[chosen],
+                3.2e6,
+                h[chosen],
+                plan.controls.f_hz[chosen],
+                plan.controls.p_w[chosen],
+            );
+            let t_o = fleet
+                .devices
+                .iter()
+                .enumerate()
+                .map(|(i, d)| {
+                    crate::system::round_time_s(&sys, d, 3.2e6, h[i], d.f_max_hz, d.p_max_w)
+                })
+                .fold(f64::INFINITY, f64::min);
+            assert!(
+                t_oe >= t_o - 1e-12,
+                "trial {trial}: oracle-e {t_oe} beat the latency floor {t_o}"
+            );
+        }
     }
 }

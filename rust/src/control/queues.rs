@@ -27,6 +27,12 @@ impl VirtualQueues {
         &self.q
     }
 
+    /// The per-device budgets `Ē_n` the arrivals are measured against
+    /// (read by context-driven schedulers and the invariant suite).
+    pub fn budgets(&self) -> &[f64] {
+        &self.budgets
+    }
+
     pub fn len(&self) -> usize {
         self.q.len()
     }
@@ -80,6 +86,7 @@ mod tests {
     fn starts_empty() {
         let q = VirtualQueues::new(vec![5.0; 4]);
         assert_eq!(q.backlogs(), &[0.0; 4]);
+        assert_eq!(q.budgets(), &[5.0; 4]);
         assert_eq!(q.lyapunov(), 0.0);
     }
 

@@ -1,23 +1,43 @@
-//! Regret experiments: every online cell paired with a clairvoyant
-//! oracle anchor on the same environment stream.
+//! Regret experiments: every online cell paired with *two* clairvoyant
+//! anchors on the same environment stream, and its regret decomposed
+//! into online and budget components.
 //!
 //! The paper's premise is online control *without knowledge of future
-//! dynamics*; the natural question is how much that ignorance costs.
-//! Following the clairvoyant-anchor methodology of Shi et al. and Luo
-//! et al., `lroa regret` runs a policy × environment grid where every
-//! cell is shadowed by an [`Policy::Oracle`] run on the *same* draws:
-//! environments are pure functions of `(config, train.seed)` (never of
-//! the policy), so building a second server with only `train.policy`
-//! changed forks an identical stream.  The selection-reactive `adv`
-//! environment is the documented exception — there the oracle faces its
-//! own adaptive adversary, the standard convention for adaptive-regret
-//! comparisons.
+//! dynamics and under per-device energy budgets*; those are two separate
+//! handicaps, and a single unconstrained oracle anchor conflates them.
+//! Following the regret-splitting ideas of the bandit-scheduling line
+//! (Shi et al.) and the energy/latency framing of Luo et al., `lroa
+//! regret` shadows every online cell with both anchors on the same
+//! draws:
 //!
-//! Each online cell's CSV gains a populated `regret` column:
-//! `regret[t] = total_time_s[t] − total_time_s_oracle[t]`, the
-//! cumulative latency the policy has paid for being online.  Oracle
-//! cells carry `regret = 0`.  The manifest links each cell to its
-//! anchor via `regret_vs`.
+//! * [`Policy::Oracle`] — clairvoyant and budget-blind: the latency
+//!   floor (`f_max`/`p_max`, fastest device);
+//! * [`Policy::OracleEnergy`] — clairvoyant and budget-feasible: the
+//!   same per-round energy-constrained problem LROA solves (Theorem 2/3
+//!   kernels under queue prices), fastest device afterwards.
+//!
+//! Environments are pure functions of `(config, train.seed)` (never of
+//! the policy), so building servers that differ only in `train.policy`
+//! forks identical streams.  The selection-reactive `adv` environment is
+//! the documented exception — there every cell faces its own adaptive
+//! adversary, the standard convention for adaptive-regret comparisons.
+//!
+//! Each online cell's CSV gains three populated columns:
+//!
+//! * `regret_online[t] = total_time_s[t] − total_time_s_oracle_e[t]`
+//! * `regret_budget[t] = total_time_s_oracle_e[t] − total_time_s_oracle[t]`
+//! * `regret[t]        = regret_online[t] + regret_budget[t]`
+//!
+//! `regret` is *derived as that sum* — not recomputed as
+//! `total − total_oracle`, which would only match up to rounding — so
+//! `regret_online + regret_budget == regret` holds **bitwise** by
+//! construction, and `regret_budget ≥ 0` on every action-independent
+//! environment (per-device latency is monotone in `f` and `p`, so the
+//! throttled clairvoyant can never beat the unthrottled one on a shared
+//! stream).  Oracle cells carry all-zero columns; oracle-e cells carry
+//! their own budget gap (`regret = regret_budget`, `regret_online = 0`)
+//! — the price of feasibility in isolation.  The manifest links each
+//! online cell to its anchors via `regret_vs` / `regret_vs_e`.
 
 use std::collections::BTreeMap;
 
@@ -26,19 +46,26 @@ use super::spec::{Scenario, SweepSpec};
 use crate::config::Policy;
 use crate::Result;
 
-/// Expand a regret grid: the spec's online cells plus one oracle cell
-/// per distinct environment stream (dataset × env × K × µ/ν × seed ×
-/// rounds), each online cell back-linked to its anchor via
-/// [`Scenario::regret_vs`].  Oracle cells come last, with no link.
+/// Expand a regret grid: the spec's online cells plus one `oracle` and
+/// one `oracle-e` cell per distinct environment stream (dataset × env ×
+/// K × µ/ν × seed × rounds).  Online cells are back-linked to both
+/// anchors via [`Scenario::regret_vs`] / [`Scenario::regret_vs_e`];
+/// `oracle-e` cells link to their `oracle` via `regret_vs` (their regret
+/// *is* the budget gap).  Anchor cells come last.
 pub fn plan(spec: &SweepSpec) -> Result<Vec<Scenario>> {
-    anyhow::ensure!(
-        !spec.policies.contains(&Policy::Oracle),
-        "regret: the oracle anchor is added automatically; drop it from --policies"
-    );
+    for anchor in [Policy::Oracle, Policy::OracleEnergy] {
+        anyhow::ensure!(
+            !spec.policies.contains(&anchor),
+            "regret: the {anchor} anchor is added automatically; drop it from --policies"
+        );
+    }
     let online = spec.expand()?;
     let mut oracle_spec = spec.clone();
     oracle_spec.policies = vec![Policy::Oracle];
     let oracle = oracle_spec.expand()?;
+    let mut oracle_e_spec = spec.clone();
+    oracle_e_spec.policies = vec![Policy::OracleEnergy];
+    let oracle_e = oracle_e_spec.expand()?;
 
     // Stream key: the cell's config with the policy normalized away —
     // two cells share an environment stream iff everything else matches.
@@ -51,9 +78,29 @@ pub fn plan(spec: &SweepSpec) -> Result<Vec<Scenario>> {
         .iter()
         .map(|sc| (stream_key(sc), sc.label.clone()))
         .collect();
+    let anchors_e: BTreeMap<String, String> = oracle_e
+        .iter()
+        .map(|sc| (stream_key(sc), sc.label.clone()))
+        .collect();
 
-    let mut out = Vec::with_capacity(online.len() + oracle.len());
+    let mut out = Vec::with_capacity(online.len() + oracle.len() + oracle_e.len());
     for mut sc in online {
+        let key = stream_key(&sc);
+        let anchor = anchors
+            .get(&key)
+            .expect("the oracle grid covers every stream by construction")
+            .clone();
+        let anchor_e = anchors_e
+            .get(&key)
+            .expect("the oracle-e grid covers every stream by construction")
+            .clone();
+        sc.regret_vs = Some(anchor);
+        sc.regret_vs_e = Some(anchor_e);
+        out.push(sc);
+    }
+    for mut sc in oracle_e {
+        // The budget anchor's own regret is measured against the
+        // unconstrained oracle on the same stream.
         let anchor = anchors
             .get(&stream_key(&sc))
             .expect("the oracle grid covers every stream by construction")
@@ -65,44 +112,89 @@ pub fn plan(spec: &SweepSpec) -> Result<Vec<Scenario>> {
     Ok(out)
 }
 
-/// Run a planned regret grid and populate the `regret` column: oracle
-/// cells get 0, online cells get their cumulative latency gap against
-/// their anchor, round for round.
+/// Run a planned regret grid and populate the decomposition columns:
+/// oracle cells get zeros, oracle-e cells get their budget gap, online
+/// cells get `regret` vs the oracle plus the bitwise split
+/// `regret = regret_online + regret_budget`.
 pub fn run(scenarios: Vec<Scenario>, threads: usize) -> Result<Vec<ScenarioResult>> {
     let mut results = run_scenarios(scenarios, threads)?;
-    let oracle_times: BTreeMap<String, Vec<f64>> = results
-        .iter()
-        .filter(|r| r.scenario.cfg.train.policy == Policy::Oracle)
-        .map(|r| {
-            let series = r.recorder.rounds.iter().map(|x| x.total_time_s).collect();
-            (r.scenario.label.clone(), series)
-        })
-        .collect();
+    let collect = |results: &[ScenarioResult], policy: Policy| -> BTreeMap<String, Vec<f64>> {
+        results
+            .iter()
+            .filter(|r| r.scenario.cfg.train.policy == policy)
+            .map(|r| {
+                let series = r.recorder.rounds.iter().map(|x| x.total_time_s).collect();
+                (r.scenario.label.clone(), series)
+            })
+            .collect()
+    };
+    let oracle_times = collect(&results, Policy::Oracle);
+    let oracle_e_times = collect(&results, Policy::OracleEnergy);
+
     for r in &mut results {
-        if r.scenario.cfg.train.policy == Policy::Oracle {
-            for rec in &mut r.recorder.rounds {
-                rec.regret = 0.0;
+        let label = r.scenario.label.clone();
+        let len = r.recorder.rounds.len();
+        match r.scenario.cfg.train.policy {
+            Policy::Oracle => {
+                for rec in &mut r.recorder.rounds {
+                    rec.regret = 0.0;
+                    rec.regret_online = 0.0;
+                    rec.regret_budget = 0.0;
+                }
             }
-            continue;
-        }
-        let anchor = r
-            .scenario
-            .regret_vs
-            .as_ref()
-            .ok_or_else(|| anyhow::anyhow!("cell {} has no oracle anchor", r.scenario.label))?;
-        let base = oracle_times
-            .get(anchor)
-            .ok_or_else(|| anyhow::anyhow!("oracle cell {anchor} missing from the grid"))?;
-        anyhow::ensure!(
-            base.len() == r.recorder.rounds.len(),
-            "cell {} and anchor {anchor} ran different horizons",
-            r.scenario.label
-        );
-        for (rec, oracle_total) in r.recorder.rounds.iter_mut().zip(base) {
-            rec.regret = rec.total_time_s - oracle_total;
+            Policy::OracleEnergy => {
+                let base = anchor_series(&r.scenario.regret_vs, &oracle_times, &label, len)?;
+                for (rec, oracle_total) in r.recorder.rounds.iter_mut().zip(&base) {
+                    rec.regret = rec.total_time_s - oracle_total;
+                    rec.regret_budget = rec.regret;
+                    rec.regret_online = 0.0;
+                }
+            }
+            _ => {
+                let base_o = anchor_series(&r.scenario.regret_vs, &oracle_times, &label, len)?;
+                let base_e =
+                    anchor_series(&r.scenario.regret_vs_e, &oracle_e_times, &label, len)?;
+                for ((rec, oracle_total), oracle_e_total) in
+                    r.recorder.rounds.iter_mut().zip(&base_o).zip(&base_e)
+                {
+                    rec.regret_online = rec.total_time_s - oracle_e_total;
+                    rec.regret_budget = oracle_e_total - oracle_total;
+                    // The headline is *derived as the sum*, so the
+                    // decomposition is a bitwise identity — computing it
+                    // as total − total_oracle would only match up to
+                    // floating-point rounding.
+                    rec.regret = rec.regret_online + rec.regret_budget;
+                }
+            }
         }
     }
     Ok(results)
+}
+
+/// Look up a cell's anchor series by its back-link and check horizons
+/// match (anchors and online cells must run identical grids).
+fn anchor_series(
+    link: &Option<String>,
+    table: &BTreeMap<String, Vec<f64>>,
+    label: &str,
+    len: usize,
+) -> Result<Vec<f64>> {
+    let anchor = link
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("cell {label} has no anchor link"))?;
+    let base = table
+        .get(anchor)
+        .ok_or_else(|| anyhow::anyhow!("anchor cell {anchor} missing from the grid"))?;
+    anyhow::ensure!(
+        base.len() == len,
+        "cell {label} and anchor {anchor} ran different horizons"
+    );
+    Ok(base.clone())
+}
+
+/// Whether a cell is one of the two clairvoyant anchors.
+pub fn is_anchor(policy: Policy) -> bool {
+    matches!(policy, Policy::Oracle | Policy::OracleEnergy)
 }
 
 /// The smallest final regret across online cells — ≥ 0 whenever the
@@ -112,7 +204,7 @@ pub fn run(scenarios: Vec<Scenario>, threads: usize) -> Result<Vec<ScenarioResul
 pub fn min_final_regret(results: &[ScenarioResult]) -> f64 {
     results
         .iter()
-        .filter(|r| r.scenario.cfg.train.policy != Policy::Oracle)
+        .filter(|r| !is_anchor(r.scenario.cfg.train.policy))
         .map(|r| r.recorder.final_regret())
         .fold(f64::INFINITY, f64::min)
 }
@@ -140,50 +232,89 @@ mod tests {
     }
 
     #[test]
-    fn plan_pairs_every_online_cell_with_an_anchor() {
+    fn plan_pairs_every_online_cell_with_both_anchors() {
         let cells = plan(&small_spec()).unwrap();
-        // 3 policies × 2 envs × 2 seeds online + 2 envs × 2 seeds oracle.
-        assert_eq!(cells.len(), 3 * 2 * 2 + 2 * 2);
-        let oracle_labels: Vec<&str> = cells
-            .iter()
-            .filter(|c| c.cfg.train.policy == Policy::Oracle)
-            .map(|c| c.label.as_str())
-            .collect();
+        // 3 policies × 2 envs × 2 seeds online + 2 anchor policies × 2
+        // envs × 2 seeds.
+        assert_eq!(cells.len(), 3 * 2 * 2 + 2 * 2 * 2);
+        let labels_of = |p: Policy| -> Vec<&str> {
+            cells
+                .iter()
+                .filter(|c| c.cfg.train.policy == p)
+                .map(|c| c.label.as_str())
+                .collect()
+        };
+        let oracle_labels = labels_of(Policy::Oracle);
+        let oracle_e_labels = labels_of(Policy::OracleEnergy);
         assert_eq!(oracle_labels.len(), 4);
-        for c in cells.iter().filter(|c| c.cfg.train.policy != Policy::Oracle) {
+        assert_eq!(oracle_e_labels.len(), 4);
+        for c in cells.iter().filter(|c| !is_anchor(c.cfg.train.policy)) {
             let anchor = c.regret_vs.as_deref().expect("online cell unpaired");
+            let anchor_e = c.regret_vs_e.as_deref().expect("online cell missing oracle-e");
             assert!(oracle_labels.contains(&anchor), "{}: bad anchor {anchor}", c.label);
-            // The anchor shares env kind and seed.
-            let a = cells.iter().find(|x| x.label == anchor).unwrap();
-            assert_eq!(a.cfg.env.kind, c.cfg.env.kind);
-            assert_eq!(a.cfg.train.seed, c.cfg.train.seed);
+            assert!(
+                oracle_e_labels.contains(&anchor_e),
+                "{}: bad oracle-e anchor {anchor_e}",
+                c.label
+            );
+            // Both anchors share env kind and seed with the online cell.
+            for a in [anchor, anchor_e] {
+                let ac = cells.iter().find(|x| x.label == a).unwrap();
+                assert_eq!(ac.cfg.env.kind, c.cfg.env.kind);
+                assert_eq!(ac.cfg.train.seed, c.cfg.train.seed);
+            }
         }
-        // Oracle must not be passed as an online policy.
-        let mut bad = small_spec();
-        bad.policies.push(Policy::Oracle);
-        assert!(plan(&bad).is_err());
+        // Oracle-e cells link to their oracle; oracle cells to nothing.
+        for c in cells.iter().filter(|c| c.cfg.train.policy == Policy::OracleEnergy) {
+            let anchor = c.regret_vs.as_deref().expect("oracle-e cell unpaired");
+            assert!(oracle_labels.contains(&anchor));
+            assert!(c.regret_vs_e.is_none());
+        }
+        for c in cells.iter().filter(|c| c.cfg.train.policy == Policy::Oracle) {
+            assert!(c.regret_vs.is_none() && c.regret_vs_e.is_none());
+        }
+        // Neither anchor may be passed as an online policy.
+        for anchor in [Policy::Oracle, Policy::OracleEnergy] {
+            let mut bad = small_spec();
+            bad.policies.push(anchor);
+            assert!(plan(&bad).is_err());
+        }
     }
 
     #[test]
-    fn run_populates_a_consistent_regret_column() {
+    fn run_populates_a_consistent_regret_decomposition() {
         let cells = plan(&small_spec()).unwrap();
         let results = run(cells, 2).unwrap();
         for r in &results {
-            let is_oracle = r.scenario.cfg.train.policy == Policy::Oracle;
+            let policy = r.scenario.cfg.train.policy;
             for rec in &r.recorder.rounds {
                 assert!(
-                    !rec.regret.is_nan(),
-                    "{}: regret column not populated",
+                    !rec.regret.is_nan()
+                        && !rec.regret_online.is_nan()
+                        && !rec.regret_budget.is_nan(),
+                    "{}: decomposition columns not populated",
                     r.scenario.label
                 );
-                if is_oracle {
+                // The decomposition is a bitwise identity everywhere.
+                assert_eq!(
+                    rec.regret_online + rec.regret_budget,
+                    rec.regret,
+                    "{}: decomposition broke",
+                    r.scenario.label
+                );
+                if policy == Policy::Oracle {
                     assert_eq!(rec.regret, 0.0);
                 }
+                if policy == Policy::OracleEnergy {
+                    assert_eq!(rec.regret_online, 0.0);
+                    assert_eq!(rec.regret_budget, rec.regret);
+                }
             }
-            if !is_oracle {
+            if !is_anchor(policy) {
                 // Cumulative latency gap is non-decreasing exactly when
                 // the oracle is the per-round lower bound; on the trace
-                // env (shared stream) that is a theorem.
+                // env (shared stream) that is a theorem — for the budget
+                // component too.
                 if r.scenario.cfg.env.kind == EnvKind::Trace {
                     let regs: Vec<f64> =
                         r.recorder.rounds.iter().map(|x| x.regret).collect();
@@ -193,6 +324,14 @@ mod tests {
                         r.scenario.label
                     );
                     assert!(regs[0] >= -1e-9);
+                    for rec in &r.recorder.rounds {
+                        assert!(
+                            rec.regret_budget >= -1e-9,
+                            "{}: negative budget regret {} on a shared stream",
+                            r.scenario.label,
+                            rec.regret_budget
+                        );
+                    }
                 }
                 // On the adaptive `adv` stream the bound is empirical,
                 // not a theorem (the anchor faces its own adversary) —

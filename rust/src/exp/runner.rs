@@ -129,6 +129,12 @@ pub struct GroupSummary {
     /// Final cumulative regret vs the oracle anchor (NaN-mean outside
     /// `lroa regret` runs, where the column is unpopulated).
     pub final_regret: Stat,
+    /// Final online-component regret (vs the budget-feasible `oracle-e`
+    /// anchor); NaN-mean outside `lroa regret` runs.
+    pub final_regret_online: Stat,
+    /// Final budget-component regret (`oracle-e` vs `oracle`); NaN-mean
+    /// outside `lroa regret` runs.
+    pub final_regret_budget: Stat,
 }
 
 /// Collapse seed repeats: one mean±std row per scenario group, in first-
@@ -162,6 +168,8 @@ pub fn summarize_groups(results: &[ScenarioResult]) -> Vec<GroupSummary> {
                     r.time_avg_objective().last().copied().unwrap_or(f64::NAN)
                 })),
                 final_regret: Stat::from_values(&pick(&|r| r.final_regret())),
+                final_regret_online: Stat::from_values(&pick(&|r| r.final_regret_online())),
+                final_regret_budget: Stat::from_values(&pick(&|r| r.final_regret_budget())),
             }
         })
         .collect()

@@ -83,6 +83,11 @@ pub struct Scenario {
     /// against (populated by the `lroa regret` planner; appears in the
     /// manifest so figure scripts can join the pair).
     pub regret_vs: Option<String>,
+    /// Label of the *budget-feasible* `oracle-e` cell on the same stream
+    /// — the second anchor of the regret decomposition
+    /// (`regret_online`/`regret_budget`).  Populated by the `lroa
+    /// regret` planner for online cells; anchors themselves carry none.
+    pub regret_vs_e: Option<String>,
 }
 
 impl Scenario {
@@ -240,6 +245,7 @@ impl SweepSpec {
                                         csv_dir: None,
                                         timeout_s: self.cell_timeout_s,
                                         regret_vs: None,
+                                        regret_vs_e: None,
                                     });
                                 }
                             }
@@ -351,8 +357,10 @@ impl SweepSpec {
 /// Written to `<out>/manifest.json` right after expansion (before any
 /// cell runs), so a crashed or `--resume`d sweep still documents its
 /// full grid.  `columns` is the cell-CSV schema
-/// ([`crate::metrics::CSV_COLUMNS`], including `regret`); regret cells
-/// additionally name their oracle anchor under `regret_vs`.
+/// ([`crate::metrics::CSV_COLUMNS`], including `regret` and its
+/// decomposition `regret_online`/`regret_budget`); regret cells
+/// additionally name their clairvoyant anchor under `regret_vs` and
+/// their budget-feasible `oracle-e` anchor under `regret_vs_e`.
 pub fn manifest_json(scenarios: &[Scenario]) -> Json {
     let cells: Vec<Json> = scenarios
         .iter()
@@ -383,6 +391,9 @@ pub fn manifest_json(scenarios: &[Scenario]) -> Json {
             }
             if let Some(anchor) = &s.regret_vs {
                 fields.push(("regret_vs", Json::Str(anchor.clone())));
+            }
+            if let Some(anchor) = &s.regret_vs_e {
+                fields.push(("regret_vs_e", Json::Str(anchor.clone())));
             }
             obj(fields)
         })

@@ -170,6 +170,7 @@ impl Server {
         let init = PolicyInit {
             sys: &cfg.system,
             ctl: &cfg.control,
+            bandit: cfg.bandit.clone(),
             lambda,
             v,
             model_bits,
@@ -354,6 +355,10 @@ impl Server {
             &plan.controls.p_w,
         );
         let round_time = costs.makespan_s(&unique);
+        // Context feed: learning policies (the contextual bandit) see
+        // the round's realized per-device costs.  Fires in every sim
+        // mode, unlike observe_update, which needs local training.
+        self.policy.observe_round(&unique, &costs);
 
         // (5) Local updates + eq. (4) aggregation (Full mode).
         let train_loss = self.train_round(t, &plan, &unique)?;
@@ -472,6 +477,8 @@ impl Server {
             solver_time_s: plan.stats.solve_time_s,
             // Populated post-hoc by the regret runner (crate::exp).
             regret: f64::NAN,
+            regret_online: f64::NAN,
+            regret_budget: f64::NAN,
         };
 
         let is_eval_round = self.mode == SimMode::Full
@@ -556,6 +563,8 @@ mod tests {
             Policy::UniformStatic,
             Policy::GreedyChannel,
             Policy::RoundRobin,
+            Policy::Bandit,
+            Policy::OracleEnergy,
         ] {
             let cfg = base_cfg(policy, 30);
             let mut server = Server::new(cfg, SimMode::ControlPlaneOnly).unwrap();
@@ -581,7 +590,9 @@ mod tests {
                 Policy::Lroa,
                 Policy::UniformStatic,
                 Policy::RoundRobin,
+                Policy::Bandit,
                 Policy::Oracle,
+                Policy::OracleEnergy,
             ] {
                 let mut cfg = base_cfg(policy, 25);
                 cfg.env.kind = kind;
@@ -719,6 +730,48 @@ mod tests {
     }
 
     #[test]
+    fn oracle_e_keeps_queues_bounded_where_the_oracle_does_not() {
+        // The budget-feasible anchor's whole point: under budgets the
+        // clairvoyant `oracle` violates freely, `oracle-e`'s virtual
+        // queues (and so its time-average energy) stay bounded by the
+        // same Lyapunov mechanism the online policies are held to.  A
+        // small V makes the energy price bite within a short horizon.
+        let run = |policy: Policy| -> (f64, f64, f64) {
+            let mut cfg = Config::for_dataset("cifar").unwrap();
+            cfg.system.num_devices = 16;
+            cfg.system.energy_budget_j = 2.5;
+            cfg.control.v_explicit = 10.0;
+            cfg.train.policy = policy;
+            cfg.train.rounds = 400;
+            cfg.train.samples_per_device = (40, 40);
+            let mut s = Server::new(cfg, SimMode::ControlPlaneOnly).unwrap();
+            s.run().unwrap();
+            let mid_backlog = s.recorder.rounds[199].max_queue;
+            let avg_energy = *s.recorder.time_avg_energy().last().unwrap();
+            (s.queues().max_backlog(), mid_backlog, avg_energy)
+        };
+        let (oracle_end, _, oracle_avg) = run(Policy::Oracle);
+        let (oe_end, oe_mid, oe_avg) = run(Policy::OracleEnergy);
+        assert!(
+            oracle_end > 400.0,
+            "unconstrained oracle queues should run away: {oracle_end}"
+        );
+        assert!(oe_end < 200.0, "oracle-e backlog must stay bounded: {oe_end}");
+        // Plateau, not a slower blow-up: the second half adds little.
+        assert!(
+            oe_end < 2.0 * oe_mid + 50.0,
+            "oracle-e backlog still growing: {oe_mid} -> {oe_end}"
+        );
+        // Time-average expected energy: oracle-e near the budget scale,
+        // oracle far above it (budget 2.5 J across 16 devices).
+        assert!(oe_avg < 5.0, "oracle-e time-avg energy {oe_avg} off budget scale");
+        assert!(
+            oracle_avg > oe_avg,
+            "oracle should draw more than oracle-e: {oracle_avg} vs {oe_avg}"
+        );
+    }
+
+    #[test]
     fn oracle_is_the_latency_lower_bound_on_shared_streams() {
         // On any action-independent environment two servers with the
         // same seed see identical draws, so the oracle's per-round
@@ -740,6 +793,8 @@ mod tests {
                 Policy::GreedyChannel,
                 Policy::PowerOfTwoChoices,
                 Policy::RoundRobin,
+                Policy::Bandit,
+                Policy::OracleEnergy,
             ] {
                 let t = run(policy);
                 assert!(

@@ -202,6 +202,7 @@ pub fn run_policy(mut cfg: Config, policy: Policy, mode: SimMode, label: &str) -
         csv_dir: None,
         timeout_s: None,
         regret_vs: None,
+        regret_vs_e: None,
     };
     let mut results = exp::run_scenarios(vec![scenario], 1)?;
     Ok(results.remove(0).recorder)

@@ -45,10 +45,13 @@ SUBCOMMANDS:
     sim     control-plane-only simulation (latency/energy/queues)
     sweep   parallel scenario grid; seed repeats aggregate to mean±std,
             manifest.json documents every cell for the figure pipeline
-    regret  sweep + a clairvoyant oracle anchor per environment stream;
-            cell CSVs gain a populated `regret` column (cumulative latency
-            gap vs the oracle), manifest cells link to their anchor via
-            `regret_vs`, and the oracle is the latency lower bound
+    regret  sweep + two clairvoyant anchors per environment stream: the
+            budget-blind latency floor (oracle) and the budget-feasible
+            oracle-e (Theorem 2/3 kernels under queue prices); cell CSVs
+            gain populated `regret`, `regret_online`, `regret_budget`
+            columns with regret_online + regret_budget == regret bitwise,
+            and manifest cells link to their anchors via `regret_vs` /
+            `regret_vs_e`
     bench   time the round path (control-plane rounds per policy); --json
             emits a machine-readable report, --out writes it to a file,
             --baseline gates against a committed report (fails when
@@ -56,7 +59,7 @@ SUBCOMMANDS:
     info    print artifact manifest, fleet summary, λ/V estimates
 
 SWEEP / REGRET FLAGS (all --key=value unless noted):
-    --policies=lroa,uni-d,uni-s,divfl,greedy,rr,p2c|all  --datasets=cifar,femnist
+    --policies=lroa,uni-d,uni-s,divfl,greedy,rr,p2c,bandit|all  --datasets=cifar,femnist
     --envs=static,ge,avail,drift,adv,trace:<log.csv>|all  (see below)
     --ks=2,4,6       --mus=0.1,1,10          --nus=1e4,1e5,1e6
     --seeds=1..30    --rounds=N              --threads=T (0 = cores)
@@ -78,16 +81,23 @@ ENVIRONMENTS (the --envs axis / --env.kind override):
             gains a greedy scheduler would chase (--env.adv_degrade,
             --env.adv_targets); `all` expands to every env except trace
 
-POLICIES: lroa uni-d uni-s divfl greedy rr p2c oracle
-    (oracle = clairvoyant latency lower bound; `regret` adds it
-     automatically — do not list it under --policies there)
+POLICIES: lroa uni-d uni-s divfl greedy rr p2c bandit oracle oracle-e
+    bandit   = contextual UCB scheduler: per-device context (gain EMA,
+               availability streak, queue backlog) -> exact softmax
+               sampling marginals, so eq. (4) stays unbiased
+               (knobs: --bandit.ucb_c/temp/eps/gain_ema/ctx_weight)
+    oracle   = clairvoyant latency lower bound (budget-blind)
+    oracle-e = clairvoyant AND energy-budget-feasible anchor
+    (`regret` adds both anchors automatically — do not list them
+     under --policies there)
 
 COMMON OVERRIDES:
-    --train.dataset=cifar|femnist   --train.rounds=N     --train.policy=lroa|...|p2c
+    --train.dataset=cifar|femnist   --train.rounds=N     --train.policy=lroa|...|bandit
     --system.k=K                    --control.mu=F       --control.nu=F
     --train.seed=N                  --env.kind=static|ge|avail|drift|trace|adv
     --env.ge_p_bad=F --env.avail_p_drop=F --env.drift_sigma=F   (see config.rs)
     --env.trace_path=FILE --env.adv_degrade=F --env.adv_targets=N
+    --bandit.ucb_c=F --bandit.temp=F --bandit.eps=F     (bandit policy only)
     --run.out_dir=DIR               --run.artifacts_dir=DIR
 ";
 
@@ -274,6 +284,22 @@ fn write_summary(
                 ("final_accuracy_mean", num_or_null(g.final_accuracy.mean)),
                 ("final_regret_mean", num_or_null(g.final_regret.mean)),
                 ("final_regret_std", num_or_null(g.final_regret.std)),
+                (
+                    "final_regret_online_mean",
+                    num_or_null(g.final_regret_online.mean),
+                ),
+                (
+                    "final_regret_online_std",
+                    num_or_null(g.final_regret_online.std),
+                ),
+                (
+                    "final_regret_budget_mean",
+                    num_or_null(g.final_regret_budget.mean),
+                ),
+                (
+                    "final_regret_budget_std",
+                    num_or_null(g.final_regret_budget.std),
+                ),
             ])
         })
         .collect();
@@ -293,29 +319,35 @@ fn write_summary(
 fn print_group_table(groups: &[exp::GroupSummary], with_regret: bool) {
     if with_regret {
         println!(
-            "\n{:<28} {:>5} {:>24} {:>20} {:>24}",
-            "group", "runs", "total time [s]", "final acc", "regret vs oracle [s]"
+            "\n{:<28} {:>5} {:>22} {:>20} {:>20} {:>20}",
+            "group", "runs", "total time [s]", "regret [s]", "online [s]", "budget [s]"
         );
+        for g in groups {
+            println!(
+                "{:<28} {:>5} {:>22} {:>20} {:>20} {:>20}",
+                g.group,
+                g.runs,
+                g.total_time_s.to_string(),
+                g.final_regret.to_string(),
+                g.final_regret_online.to_string(),
+                g.final_regret_budget.to_string(),
+            );
+        }
     } else {
         println!(
             "\n{:<28} {:>5} {:>24} {:>20} {:>24}",
             "group", "runs", "total time [s]", "final acc", "time-avg energy [J]"
         );
-    }
-    for g in groups {
-        let last = if with_regret {
-            g.final_regret.to_string()
-        } else {
-            g.time_avg_energy.to_string()
-        };
-        println!(
-            "{:<28} {:>5} {:>24} {:>20} {:>24}",
-            g.group,
-            g.runs,
-            g.total_time_s.to_string(),
-            g.final_accuracy.to_string(),
-            last,
-        );
+        for g in groups {
+            println!(
+                "{:<28} {:>5} {:>24} {:>20} {:>24}",
+                g.group,
+                g.runs,
+                g.total_time_s.to_string(),
+                g.final_accuracy.to_string(),
+                g.time_avg_energy.to_string(),
+            );
+        }
     }
 }
 
@@ -334,11 +366,11 @@ fn regret(args: &[String]) -> lroa::Result<()> {
     }
     let scenarios = exp::regret::plan(&spec)?;
     println!(
-        "regret: {} cells ({} oracle anchors), pool width {}",
+        "regret: {} cells ({} oracle + oracle-e anchors), pool width {}",
         scenarios.len(),
         scenarios
             .iter()
-            .filter(|s| s.cfg.train.policy == lroa::config::Policy::Oracle)
+            .filter(|s| exp::regret::is_anchor(s.cfg.train.policy))
             .count(),
         if spec.threads == 0 { "auto".to_string() } else { spec.threads.to_string() },
     );
@@ -402,10 +434,12 @@ fn regret(args: &[String]) -> lroa::Result<()> {
 ///
 /// Cases are one full control-plane round (environment draw + control
 /// solve + sampling + queues + metrics) per headline policy at paper
-/// scale (N = 120).  `round_total` — the sum of the per-policy medians —
-/// is the gated headline: with `--baseline=FILE`, the run fails when it
-/// regresses more than `--max-regress` (default 0.25) over the committed
-/// report, which is how CI holds the perf trajectory.
+/// scale (N = 120), plus sub-round sampling/bandit kernels.
+/// `round_total` — the sum of the per-policy `round/*` medians (kernel
+/// rows are reported but not gated) — is the gated headline: with
+/// `--baseline=FILE`, the run fails when it regresses more than
+/// `--max-regress` (default 0.25) over the committed report, which is
+/// how CI holds the perf trajectory.
 fn bench_cmd(args: &[String]) -> lroa::Result<()> {
     use lroa::config::Policy;
 
@@ -444,9 +478,14 @@ fn bench_cmd(args: &[String]) -> lroa::Result<()> {
         lroa::bench::Bencher::new()
     };
     // The policies whose round paths CI tracks: the paper's solver (the
-    // hot path), the cheapest closed-form baseline, and a deterministic
-    // selector — three different control-plane profiles.
-    for policy in [Policy::Lroa, Policy::UniformStatic, Policy::GreedyChannel] {
+    // hot path), the cheapest closed-form baseline, a deterministic
+    // selector, and the learning bandit — four control-plane profiles.
+    for policy in [
+        Policy::Lroa,
+        Policy::UniformStatic,
+        Policy::GreedyChannel,
+        Policy::Bandit,
+    ] {
         let mut cfg = Config::for_dataset("cifar")?;
         cfg.train.policy = policy;
         cfg.train.rounds = 1_000_000; // never reached; rounds driven manually
@@ -455,6 +494,25 @@ fn bench_cmd(args: &[String]) -> lroa::Result<()> {
         b.bench(&format!("round/{policy}"), || {
             server.round(t).unwrap();
             t += 1;
+        });
+    }
+
+    // Sub-round kernels (ROADMAP perf-trajectory item: report beyond
+    // whole control-plane rounds).  Not part of the gated round_total.
+    {
+        let n = 120usize;
+        let mut rng = lroa::rng::Rng::new(7);
+        let scores: Vec<f64> = (0..n).map(|_| rng.range(0.0, 1.0)).collect();
+        let q = lroa::sampling::softmax_distribution(&scores, 0.25, 0.05);
+        let weights = vec![1.0 / n as f64; n];
+        b.bench("kernel/sample-with-replacement/N=120/K=2", || {
+            lroa::sampling::sample_by_probability(&q, &weights, 2, &mut rng)
+        });
+        b.bench("kernel/p2c-marginals/N=120", || {
+            lroa::sampling::p2c_marginals(&scores)
+        });
+        b.bench("kernel/bandit-distribution/N=120", || {
+            lroa::sampling::softmax_distribution(&scores, 0.25, 0.05)
         });
     }
 
@@ -473,7 +531,14 @@ fn bench_cmd(args: &[String]) -> lroa::Result<()> {
             )
         })
         .collect();
-    let round_total_ns: f64 = b.results().iter().map(|s| s.median.as_nanos() as f64).sum();
+    // The gated headline sums only the whole-round cases: kernel rows
+    // inform the report without moving the regression gate.
+    let round_total_ns: f64 = b
+        .results()
+        .iter()
+        .filter(|s| s.name.starts_with("round/"))
+        .map(|s| s.median.as_nanos() as f64)
+        .sum();
     let report = obj(vec![
         ("schema", Json::Str("lroa-bench-v1".into())),
         ("quick", Json::Bool(quick)),

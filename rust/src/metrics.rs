@@ -29,6 +29,8 @@ pub const CSV_COLUMNS: &[&str] = &[
     "test_loss",
     "solver_time_s",
     "regret",
+    "regret_online",
+    "regret_budget",
 ];
 
 /// One communication round's record.
@@ -59,8 +61,21 @@ pub struct RoundRecord {
     pub solver_time_s: f64,
     /// Cumulative latency gap vs the oracle anchor on the same
     /// environment stream: `total_time_s − total_time_s(oracle)` up to
-    /// this round.  NaN (empty CSV field) outside `lroa regret` runs.
+    /// this round.  In `lroa regret` runs it is derived as
+    /// `regret_online + regret_budget`, so the decomposition holds
+    /// bitwise; NaN (empty CSV field) outside them.
     pub regret: f64,
+    /// The online component of `regret`: the gap vs the *budget-feasible*
+    /// clairvoyant anchor, `total_time_s − total_time_s(oracle-e)` —
+    /// what not knowing the future costs once both sides respect the
+    /// energy budgets.  NaN outside `lroa regret` runs.
+    pub regret_online: f64,
+    /// The budget component of `regret`:
+    /// `total_time_s(oracle-e) − total_time_s(oracle)` on the same
+    /// stream — what energy feasibility alone costs a clairvoyant
+    /// scheduler (≥ 0 on action-independent environments).  NaN outside
+    /// `lroa regret` runs.
+    pub regret_budget: f64,
 }
 
 impl Default for RoundRecord {
@@ -80,6 +95,8 @@ impl Default for RoundRecord {
             solver_time_s: 0.0,
             // "Not a regret run", not "zero regret".
             regret: f64::NAN,
+            regret_online: f64::NAN,
+            regret_budget: f64::NAN,
         }
     }
 }
@@ -147,7 +164,7 @@ impl Recorder {
         for r in &self.rounds {
             writeln!(
                 f,
-                "{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
                 r.round,
                 r.round_time_s,
                 r.total_time_s,
@@ -161,6 +178,8 @@ impl Recorder {
                 csv_f64(r.test_loss),
                 r.solver_time_s,
                 csv_f64(r.regret),
+                csv_f64(r.regret_online),
+                csv_f64(r.regret_budget),
             )?;
         }
         Ok(())
@@ -229,6 +248,8 @@ impl Recorder {
                 test_loss: f64_col(&fields, "test_loss"),
                 solver_time_s: f64_col(&fields, "solver_time_s"),
                 regret: f64_col(&fields, "regret"),
+                regret_online: f64_col(&fields, "regret_online"),
+                regret_budget: f64_col(&fields, "regret_budget"),
             });
         }
         Ok(rec)
@@ -240,6 +261,24 @@ impl Recorder {
         self.rounds.last().map(|r| r.regret).unwrap_or(f64::NAN)
     }
 
+    /// Final online-component regret (vs the budget-feasible `oracle-e`
+    /// anchor); NaN outside `lroa regret` runs.
+    pub fn final_regret_online(&self) -> f64 {
+        self.rounds
+            .last()
+            .map(|r| r.regret_online)
+            .unwrap_or(f64::NAN)
+    }
+
+    /// Final budget-component regret (`oracle-e` vs `oracle`); NaN
+    /// outside `lroa regret` runs.
+    pub fn final_regret_budget(&self) -> f64 {
+        self.rounds
+            .last()
+            .map(|r| r.regret_budget)
+            .unwrap_or(f64::NAN)
+    }
+
     /// Summary as JSON (for EXPERIMENTS.md extraction).
     pub fn summary_json(&self) -> Json {
         obj(vec![
@@ -248,6 +287,14 @@ impl Recorder {
             ("total_time_s", Json::Num(self.total_time_s())),
             ("final_accuracy", num_or_null(self.final_accuracy())),
             ("final_regret", num_or_null(self.final_regret())),
+            (
+                "final_regret_online",
+                num_or_null(self.final_regret_online()),
+            ),
+            (
+                "final_regret_budget",
+                num_or_null(self.final_regret_budget()),
+            ),
             (
                 "final_time_avg_energy",
                 num_or_null(self.time_avg_energy().last().copied().unwrap_or(f64::NAN)),
@@ -395,6 +442,8 @@ mod tests {
                 test_loss: f64::NAN,
                 solver_time_s: 1e-4,
                 regret: if i % 2 == 0 { i as f64 } else { f64::NAN },
+                regret_online: if i % 2 == 0 { 0.25 * i as f64 } else { f64::NAN },
+                regret_budget: if i % 2 == 0 { 0.75 * i as f64 } else { f64::NAN },
             });
         }
         w.write_csv(&path).unwrap();
@@ -410,6 +459,8 @@ mod tests {
             assert_eq!(a.regret.is_nan(), b.regret.is_nan());
             if !a.regret.is_nan() {
                 assert_eq!(a.regret, b.regret);
+                assert_eq!(a.regret_online, b.regret_online);
+                assert_eq!(a.regret_budget, b.regret_budget);
             }
         }
         assert_eq!(r.total_time_s(), 40.0);
@@ -426,6 +477,8 @@ mod tests {
         let r = Recorder::read_csv(&legacy).unwrap();
         assert_eq!(r.rounds.len(), 1);
         assert!(r.rounds[0].regret.is_nan());
+        assert!(r.rounds[0].regret_online.is_nan());
+        assert!(r.rounds[0].regret_budget.is_nan());
         // Garbage is rejected, not silently zeroed.
         let bad = dir.join("bad.csv");
         std::fs::write(&bad, "nope,cols\n1,2\n").unwrap();

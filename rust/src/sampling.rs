@@ -100,6 +100,34 @@ pub fn sample_power_of_two(
     Selection { members, coefs }
 }
 
+/// Exact sampling distribution of the contextual-bandit scheduler: a
+/// temperature-`temp` softmax over the per-device scores, mixed with a
+/// uniform exploration floor `eps`.  The result is renormalized exactly,
+/// so it is a proper distribution (sums to 1, every entry strictly
+/// positive) and can serve directly as both the round's sampling
+/// distribution and the eq. (4) marginals — the same unbiasedness
+/// contract [`p2c_marginals`] provides for P2C.
+pub fn softmax_distribution(scores: &[f64], temp: f64, eps: f64) -> Vec<f64> {
+    let n = scores.len();
+    assert!(n > 0, "empty score vector");
+    assert!(temp > 0.0 && (0.0..1.0).contains(&eps), "bad temp/eps");
+    // Max-shifted for overflow safety; the shift cancels in the ratio.
+    let m = scores.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let w: Vec<f64> = scores.iter().map(|s| ((s - m) / temp).exp()).collect();
+    let wsum: f64 = w.iter().sum();
+    let mut q: Vec<f64> = w
+        .iter()
+        .map(|x| (1.0 - eps) * x / wsum + eps / n as f64)
+        .collect();
+    // Exact renormalization: floating error in the mixture must not
+    // leak a bias into the `w_n / (K q_n)` coefficients.
+    let total: f64 = q.iter().sum();
+    for v in &mut q {
+        *v /= total;
+    }
+    q
+}
+
 /// FedAvg-style aggregation over a *distinct* member set: slot
 /// coefficient `w_n / Σ_{m∈S} w_m` (the DivFL convention, shared by the
 /// deterministic greedy-channel and round-robin baselines).
@@ -421,6 +449,79 @@ mod tests {
         let mut acc = 0.0;
         for _ in 0..trials {
             let sel = sample_power_of_two(&scores, &q, &w, k, &mut rng);
+            for (slot, &n) in sel.members.iter().enumerate() {
+                acc += sel.coefs[slot] * v[n];
+            }
+        }
+        let emp = acc / trials as f64;
+        let expect: f64 = w.iter().zip(&v).map(|(wn, vn)| wn * vn).sum();
+        assert!(
+            (emp - expect).abs() / expect < 0.01,
+            "empirical {emp} vs {expect}"
+        );
+    }
+
+    #[test]
+    fn softmax_distribution_is_a_proper_floored_distribution() {
+        let scores = vec![0.1, 0.9, 0.5, 0.3];
+        let q = softmax_distribution(&scores, 0.25, 0.05);
+        assert!((q.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        // Strictly positive everywhere, floored near eps/n.
+        for &v in &q {
+            assert!(v > 0.04 / 4.0, "floor violated: {v}");
+        }
+        // Monotone: better scores carry strictly larger marginals.
+        let mut idx: Vec<usize> = (0..4).collect();
+        idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+        for w in idx.windows(2) {
+            assert!(q[w[0]] < q[w[1]]);
+        }
+        // Temperature → 0 concentrates on the argmax; eps keeps the floor.
+        let cold = softmax_distribution(&scores, 0.01, 0.05);
+        assert!(cold[1] > 0.9);
+        // eps = 0 degenerates to the plain softmax, still a distribution.
+        let plain = softmax_distribution(&scores, 0.25, 0.0);
+        assert!((plain.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn softmax_empirical_frequencies_match_the_marginals() {
+        // The bandit's sampling path is sample_by_probability over the
+        // softmax marginals: 1e5 draws must reproduce them within 1%.
+        let scores = vec![0.2, 0.7, 0.45, 0.1, 0.55];
+        let q = softmax_distribution(&scores, 0.3, 0.05);
+        let w = vec![0.2; 5];
+        let mut rng = Rng::new(17);
+        let mut counts = [0usize; 5];
+        let trials = 100_000;
+        for _ in 0..trials {
+            let sel = sample_by_probability(&q, &w, 1, &mut rng);
+            counts[sel.members[0]] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let emp = c as f64 / trials as f64;
+            assert!(
+                (emp - q[i]).abs() < 0.01,
+                "device {i}: empirical {emp} vs marginal {}",
+                q[i]
+            );
+        }
+    }
+
+    #[test]
+    fn softmax_aggregation_is_unbiased() {
+        // Same eq. (4) contract as the p2c test: coefficients w/(Kq)
+        // make the aggregate unbiased under the softmax marginals.
+        let scores = vec![0.5, 0.1, 0.3];
+        let q = softmax_distribution(&scores, 0.25, 0.1);
+        let w = vec![0.2, 0.3, 0.5];
+        let v = [1.0, 10.0, 100.0];
+        let k = 2;
+        let mut rng = Rng::new(29);
+        let trials = 400_000;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let sel = sample_by_probability(&q, &w, k, &mut rng);
             for (slot, &n) in sel.members.iter().enumerate() {
                 acc += sel.coefs[slot] * v[n];
             }

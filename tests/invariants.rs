@@ -1,0 +1,261 @@
+//! Property-style invariant suite over the full policy × environment
+//! registry cross-product.
+//!
+//! Every `(RoundPolicy, Environment)` pair — taken from the two
+//! name→constructor registries, so a policy or environment **cannot** be
+//! added without being covered here — is driven through a seeded round
+//! loop that mirrors the server pipeline (environment draw → compaction
+//! → plan → scatter → cost model → queue advance), and every round's
+//! plan is checked against the structural invariants the rest of the
+//! system relies on:
+//!
+//! * the sampling distribution `controls.q` is a proper distribution
+//!   over the compacted candidate set (strictly positive, sums to 1);
+//! * the participation marginals `q_eff` are either a distribution or a
+//!   0/1 indicator (the deterministic selectors), never outside [0, 1];
+//! * the participant multiset fills every one of the `K` slots with a
+//!   position that is reachable in the compacted `RoundContext.ids`;
+//! * per-device `f`/`p` stay inside `[f_min, f_max]`/`[p_min, p_max]`
+//!   of the (possibly drifted) device parameters the policy was handed;
+//! * virtual energy queues stay non-negative and finite after the
+//!   round's update.
+//!
+//! The generator loop is plain seeded iteration (no external property-
+//! testing dependency); failures name the offending
+//! `(policy, env, seed, round)` tuple.  Conventions for extending this
+//! suite live in `tests/README.md`.
+
+use lroa::config::{Config, EnvKind, Policy};
+use lroa::control::policy::{self, PolicyInit, RoundContext};
+use lroa::control::VirtualQueues;
+use lroa::env::{self, EnvInit};
+use lroa::rng::Rng;
+use lroa::system::{Device, Fleet, RoundCosts};
+
+mod common;
+
+/// Rounds driven per (policy, env, seed) case.
+const ROUNDS: usize = 25;
+
+/// Seeds of the generator loop; each also perturbs the scenario shape
+/// (fleet size, sampling frequency) so one pass covers several problem
+/// geometries.
+const SEEDS: [u64; 3] = [1, 2, 6];
+
+#[test]
+fn registries_cover_every_enum_variant() {
+    // A new `Policy`/`EnvKind` variant that is not registered would
+    // silently escape the cross-product below — make that impossible.
+    for p in Policy::ALL {
+        assert!(
+            policy::REGISTRY.iter().any(|s| s.id == p),
+            "{p} missing from the policy registry"
+        );
+    }
+    for e in EnvKind::ALL {
+        assert!(
+            env::REGISTRY.iter().any(|s| s.id == e),
+            "{e} missing from the env registry"
+        );
+    }
+}
+
+#[test]
+fn every_policy_env_pair_upholds_the_round_invariants() {
+    for pspec in policy::REGISTRY {
+        for espec in env::REGISTRY {
+            for &seed in &SEEDS {
+                check_pair(pspec, espec, seed);
+            }
+        }
+    }
+}
+
+fn check_pair(pspec: &policy::PolicySpec, espec: &env::EnvSpec, seed: u64) {
+    let tag = format!("(policy={}, env={}, seed={seed})", pspec.name, espec.name);
+
+    // Scenario generator: the seed perturbs the problem geometry.
+    let mut cfg = Config::for_dataset("cifar").unwrap();
+    cfg.system.num_devices = 10 + (seed as usize % 3) * 4; // 10 | 14 | 18
+    cfg.system.k = 2 + (seed as usize % 2); //                2 | 3
+    cfg.train.seed = seed;
+    cfg.train.policy = pspec.id;
+    cfg.env.kind = espec.id;
+    cfg.env.trace_path = common::campus_fixture();
+    cfg.env.avail_p_drop = 0.35; // make the candidate set actually move
+    cfg.env.avail_p_join = 0.3;
+    cfg.validate().unwrap_or_else(|e| panic!("{tag}: bad scenario config: {e:#}"));
+
+    let n = cfg.system.num_devices;
+    let k = cfg.system.k;
+    let model_bits = 32.0 * 136_874.0;
+    let mut fleet_rng = Rng::new(seed ^ 0xF1EE_7000);
+    let fleet = Fleet::generate(&cfg.system, (40, 120), &mut fleet_rng);
+
+    let init = PolicyInit {
+        sys: &cfg.system,
+        ctl: &cfg.control,
+        bandit: cfg.bandit.clone(),
+        lambda: 1.0,
+        v: 1e4,
+        model_bits,
+        seed,
+    };
+    let mut round_policy = (pspec.build)(&init);
+    let mut environment = (espec.build)(&EnvInit {
+        sys: &cfg.system,
+        env: &cfg.env,
+        seed: seed ^ 0xC4A1,
+    })
+    .unwrap_or_else(|e| panic!("{tag}: env build failed: {e:#}"));
+    let mut queues =
+        VirtualQueues::new(fleet.devices.iter().map(|d| d.energy_budget_j).collect());
+    assert_eq!(queues.budgets().len(), n, "{tag}: queue budgets sized to the fleet");
+    let mut sample_rng = Rng::new(seed ^ 0x5A3B_1E00);
+    let identity: Vec<usize> = (0..n).collect();
+
+    for t in 0..ROUNDS {
+        let round = environment.next_round(&fleet.devices);
+        let devices: &[Device] = round.devices.as_deref().unwrap_or(&fleet.devices);
+        let h = &round.gains;
+        let peeked = if round_policy.wants_peek() {
+            environment.peek(&fleet.devices)
+        } else {
+            None
+        };
+        let next_gains = peeked.map(|p| p.gains);
+
+        // Compact to the reachable candidate set, as the server does.
+        let avail: Vec<usize> = match &round.available {
+            Some(a) if a.len() < n => a.clone(),
+            _ => identity.clone(),
+        };
+        let m = avail.len();
+        assert!(
+            m >= k,
+            "{tag} round={t}: environment left fewer than K candidates ({m} < {k})"
+        );
+        let sub_devices: Vec<Device> = avail.iter().map(|&i| devices[i].clone()).collect();
+        let w = fleet.weights();
+        let wsum: f64 = avail.iter().map(|&i| w[i]).sum();
+        let sub_weights: Vec<f64> = avail.iter().map(|&i| w[i] / wsum).collect();
+        let sub_h: Vec<f64> = avail.iter().map(|&i| h[i]).collect();
+        let backlogs = queues.backlogs().to_vec();
+        let sub_backlogs: Vec<f64> = avail.iter().map(|&i| backlogs[i]).collect();
+        let sub_next: Option<Vec<f64>> = next_gains
+            .as_ref()
+            .map(|nh| avail.iter().map(|&i| nh[i]).collect());
+        let ctx = RoundContext {
+            t,
+            k,
+            devices: &sub_devices,
+            weights: &sub_weights,
+            ids: &avail,
+            h: &sub_h,
+            backlogs: &sub_backlogs,
+            next_h: sub_next.as_deref(),
+        };
+        let plan = round_policy.plan(&ctx, &mut sample_rng);
+
+        // --- plan shape --------------------------------------------------
+        assert_eq!(plan.controls.q.len(), m, "{tag} round={t}: q length");
+        assert_eq!(plan.controls.f_hz.len(), m, "{tag} round={t}: f length");
+        assert_eq!(plan.controls.p_w.len(), m, "{tag} round={t}: p length");
+        assert_eq!(plan.q_eff.len(), m, "{tag} round={t}: q_eff length");
+
+        // --- sampling distribution ---------------------------------------
+        let qsum: f64 = plan.controls.q.iter().sum();
+        assert!(
+            (qsum - 1.0).abs() < 1e-6,
+            "{tag} round={t}: sampling distribution sums to {qsum}, not 1"
+        );
+        for (i, &qv) in plan.controls.q.iter().enumerate() {
+            assert!(
+                qv > 0.0 && qv <= 1.0 + 1e-12,
+                "{tag} round={t}: q[{i}] = {qv} outside (0, 1]"
+            );
+        }
+
+        // --- participation marginals -------------------------------------
+        let esum: f64 = plan.q_eff.iter().sum();
+        let indicator = plan.q_eff.iter().all(|&v| v == 0.0 || v == 1.0);
+        assert!(
+            (esum - 1.0).abs() < 1e-6 || indicator,
+            "{tag} round={t}: q_eff is neither a distribution nor a 0/1 \
+             indicator (sum {esum})"
+        );
+        for (i, &v) in plan.q_eff.iter().enumerate() {
+            assert!(
+                (0.0..=1.0).contains(&v),
+                "{tag} round={t}: q_eff[{i}] = {v} outside [0, 1]"
+            );
+        }
+
+        // --- selection ---------------------------------------------------
+        assert_eq!(
+            plan.selection.members.len(),
+            k,
+            "{tag} round={t}: K slots must all be filled"
+        );
+        for &member in &plan.selection.members {
+            assert!(
+                member < m,
+                "{tag} round={t}: member {member} not reachable in the \
+                 compacted candidate set (|N^t| = {m})"
+            );
+        }
+        for (slot, c) in plan.selection.coefs.iter().enumerate() {
+            assert!(
+                c.is_finite() && *c >= 0.0,
+                "{tag} round={t}: coef[{slot}] = {c} not finite/non-negative"
+            );
+        }
+
+        // --- resource boxes (against the drifted parameters) -------------
+        for (i, d) in sub_devices.iter().enumerate() {
+            let f = plan.controls.f_hz[i];
+            let p = plan.controls.p_w[i];
+            assert!(
+                f >= d.f_min_hz - 1e-9 && f <= d.f_max_hz + 1e-9,
+                "{tag} round={t}: f[{i}] = {f} outside [{}, {}]",
+                d.f_min_hz,
+                d.f_max_hz
+            );
+            assert!(
+                p >= d.p_min_w - 1e-12 && p <= d.p_max_w + 1e-12,
+                "{tag} round={t}: p[{i}] = {p} outside [{}, {}]",
+                d.p_min_w,
+                d.p_max_w
+            );
+        }
+
+        // --- scatter + world advance, mirroring the server ---------------
+        let mut f_full: Vec<f64> = devices.iter().map(|d| d.f_min_hz).collect();
+        let mut p_full: Vec<f64> = devices.iter().map(|d| d.p_min_w).collect();
+        let mut q_eff_full = vec![0.0; n];
+        for (pos, &g) in avail.iter().enumerate() {
+            f_full[g] = plan.controls.f_hz[pos];
+            p_full[g] = plan.controls.p_w[pos];
+            q_eff_full[g] = plan.q_eff[pos];
+        }
+        let costs = RoundCosts::evaluate(&cfg.system, devices, model_bits, h, &f_full, &p_full);
+        let mut unique: Vec<usize> =
+            plan.selection.members.iter().map(|&mm| avail[mm]).collect();
+        unique.sort_unstable();
+        unique.dedup();
+        let makespan = costs.makespan_s(&unique);
+        assert!(
+            makespan.is_finite() && makespan > 0.0,
+            "{tag} round={t}: makespan {makespan}"
+        );
+        environment.observe_selection(&unique);
+        round_policy.observe_round(&unique, &costs);
+        queues.update(&q_eff_full, k, &costs.energy_j);
+        for (i, &b) in queues.backlogs().iter().enumerate() {
+            assert!(
+                b >= 0.0 && b.is_finite(),
+                "{tag} round={t}: virtual queue[{i}] = {b} went negative/non-finite"
+            );
+        }
+    }
+}

@@ -91,6 +91,9 @@ fn reference_trajectory(cfg: &Config) -> Vec<RefRecord> {
             Policy::UniformStatic | Policy::DivFl => {
                 static_alloc::solve_static(&cfg.system, &fleet.devices, model_bits, &h)
             }
+            // The reference transcribes only the pre-refactor server,
+            // which knew exactly the four schemes above.
+            other => unreachable!("no pre-refactor reference for {other}"),
         };
 
         // (3) The old three-way sampling dispatch.
@@ -108,6 +111,7 @@ fn reference_trajectory(cfg: &Config) -> Vec<RefRecord> {
                 .as_mut()
                 .expect("divfl state")
                 .select(fleet.weights(), k),
+            other => unreachable!("no pre-refactor reference for {other}"),
         };
         let unique = selection.unique_members();
 

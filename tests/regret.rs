@@ -47,10 +47,14 @@ fn oracle_lower_bounds_every_online_policy_on_the_trace_fixture() {
         Policy::PowerOfTwoChoices,
     ]);
     let cells = exp::regret::plan(&spec).unwrap();
-    assert_eq!(cells.len(), 7 + 1, "7 online cells + 1 oracle anchor");
+    assert_eq!(
+        cells.len(),
+        7 + 2,
+        "7 online cells + the oracle and oracle-e anchors"
+    );
     let results = exp::regret::run(cells, 0).unwrap();
     for r in &results {
-        if r.scenario.cfg.train.policy == Policy::Oracle {
+        if exp::regret::is_anchor(r.scenario.cfg.train.policy) {
             continue;
         }
         // Cumulative regret is non-negative and non-decreasing: the
@@ -72,6 +76,94 @@ fn oracle_lower_bounds_every_online_policy_on_the_trace_fixture() {
         );
     }
     assert!(exp::regret::min_final_regret(&results) > 0.0);
+}
+
+#[test]
+fn regret_decomposition_is_bitwise_with_a_nonnegative_budget_component() {
+    // A biting budget (small V, small Ē) forces the feasible anchor to
+    // throttle early, so the budget component is strictly positive by
+    // the end of the horizon — and the decomposition must still be a
+    // bitwise identity on every row of every cell.
+    let mut spec = trace_spec(vec![Policy::Lroa, Policy::GreedyChannel, Policy::Bandit]);
+    spec.overrides = vec![
+        "--system.num_devices=12".into(),
+        "--system.energy_budget_j=2.0".into(),
+        "--control.v=10".into(),
+        "--train.samples_lo=40".into(),
+        "--train.samples_hi=40".into(),
+    ];
+    let cells = exp::regret::plan(&spec).unwrap();
+    assert_eq!(cells.len(), 3 + 2, "3 online cells + 2 anchors");
+    let results = exp::regret::run(cells, 0).unwrap();
+    for r in &results {
+        let policy = r.scenario.cfg.train.policy;
+        for rec in &r.recorder.rounds {
+            assert_eq!(
+                rec.regret_online + rec.regret_budget,
+                rec.regret,
+                "{}: regret_online + regret_budget must equal regret bitwise",
+                r.scenario.label
+            );
+            // The budget gap is a theorem on the shared trace stream:
+            // the throttled clairvoyant never beats the unthrottled one.
+            assert!(
+                rec.regret_budget >= -1e-9,
+                "{}: negative regret_budget {}",
+                r.scenario.label,
+                rec.regret_budget
+            );
+        }
+        // Round 0 runs on empty queues: both anchors coincide exactly.
+        assert_eq!(r.recorder.rounds[0].regret_budget, 0.0, "{}", r.scenario.label);
+        if !exp::regret::is_anchor(policy) {
+            assert!(
+                r.recorder.final_regret_budget() > 0.0,
+                "{}: the budget never bit (final regret_budget {})",
+                r.scenario.label,
+                r.recorder.final_regret_budget()
+            );
+            // The budget series is non-decreasing (cumulative sum of
+            // per-round non-negative gaps).
+            let buds: Vec<f64> = r.recorder.rounds.iter().map(|x| x.regret_budget).collect();
+            assert!(
+                buds.windows(2).all(|w| w[1] >= w[0] - 1e-9),
+                "{}: regret_budget decreased",
+                r.scenario.label
+            );
+        }
+        if policy == Policy::OracleEnergy {
+            for rec in &r.recorder.rounds {
+                assert_eq!(rec.regret_online, 0.0);
+                assert_eq!(rec.regret_budget, rec.regret);
+            }
+        }
+    }
+}
+
+#[test]
+fn oracle_e_and_decomposition_are_thread_count_invariant() {
+    // The whole regret grid — anchors included — must be bitwise
+    // identical no matter how wide the scenario pool runs.
+    let run = |threads: usize| {
+        let spec = trace_spec(vec![Policy::Lroa, Policy::Bandit]);
+        let cells = exp::regret::plan(&spec).unwrap();
+        exp::regret::run(cells, threads).unwrap()
+    };
+    let seq = run(1);
+    let par = run(4);
+    assert_eq!(seq.len(), par.len());
+    let mut saw_oracle_e = false;
+    for (a, b) in seq.iter().zip(&par) {
+        assert_eq!(a.scenario.label, b.scenario.label);
+        saw_oracle_e |= a.scenario.cfg.train.policy == Policy::OracleEnergy;
+        for (ra, rb) in a.recorder.rounds.iter().zip(&b.recorder.rounds) {
+            assert_eq!(ra.round_time_s, rb.round_time_s, "{}", a.scenario.label);
+            assert_eq!(ra.regret, rb.regret, "{}", a.scenario.label);
+            assert_eq!(ra.regret_online, rb.regret_online, "{}", a.scenario.label);
+            assert_eq!(ra.regret_budget, rb.regret_budget, "{}", a.scenario.label);
+        }
+    }
+    assert!(saw_oracle_e, "the grid must contain an oracle-e anchor");
 }
 
 #[test]
