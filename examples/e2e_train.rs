@@ -30,19 +30,23 @@ fn main() -> lroa::Result<()> {
         mode: SimMode::Full,
         ..SweepSpec::default()
     };
-    let scenarios = spec.expand_with(|ds| {
-        let mut cfg = args.config(ds)?;
-        cfg.train.samples_per_device = (50, 150);
-        cfg.train.eval_every = 10;
-        Ok(cfg)
-    })?;
+    let session = args
+        .experiment(spec)
+        .base_with(|ds| {
+            let mut cfg = args.config(ds)?;
+            cfg.train.samples_per_device = (50, 150);
+            cfg.train.eval_every = 10;
+            Ok(cfg)
+        })
+        .build()?;
     println!(
         "=== end-to-end driver: {} rounds, N={} ===",
-        scenarios[0].cfg.train.rounds, scenarios[0].cfg.system.num_devices
+        session.cells()[0].cfg.train.rounds,
+        session.cells()[0].cfg.system.num_devices
     );
-    println!("{}", scenarios[0].cfg.dump());
+    println!("{}", session.cells()[0].cfg.dump());
 
-    let recs = harness::recorders(args.run(scenarios)?);
+    let recs = harness::recorders(session.run()?.results);
     let (lroa, unis) = (&recs[0], &recs[1]);
 
     let dir = args.out_dir("e2e");

@@ -6,7 +6,7 @@
 //! realizations.  Paper numbers: LROA saves 20.8% / 50.1% total latency
 //! vs Uni-D / Uni-S on CIFAR-10 and 15.3% / 49.9% on FEMNIST.
 //!
-//! Each policy is one `exp` sweep cell and runs concurrently
+//! Each policy is one cell of an `exp::Experiment` and runs concurrently
 //! (`--threads` controls the pool).  Pass `--envs=static,ge,avail,drift`
 //! (or `all`) to stress the same comparison under dynamic environments.
 //!
@@ -36,8 +36,7 @@ fn main() -> lroa::Result<()> {
             mode: SimMode::Full,
             ..SweepSpec::default()
         };
-        let scenarios = spec.expand_with(|ds| args.config(ds))?;
-        let results = args.run(scenarios)?;
+        let results = args.experiment(spec).run()?.results;
         let recs: Vec<_> = results.iter().map(|r| r.recorder.clone()).collect();
 
         harness::save_all(&args.out_dir(fig), &recs)?;

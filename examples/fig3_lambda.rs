@@ -33,8 +33,7 @@ fn main() -> lroa::Result<()> {
             mode: SimMode::Full,
             ..SweepSpec::default()
         };
-        let scenarios = spec.expand_with(|ds| args.config(ds))?;
-        let recs = harness::recorders(args.run(scenarios)?);
+        let recs = harness::recorders(args.experiment(spec).run()?.results);
 
         harness::save_all(&args.out_dir("fig3"), &recs)?;
         harness::print_series(&recs);

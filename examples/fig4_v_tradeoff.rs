@@ -33,20 +33,24 @@ fn main() -> lroa::Result<()> {
             seeds: (1..=args.repeats as u64).collect(),
             ..SweepSpec::default()
         };
-        let scenarios = spec.expand_with(|ds| {
-            let mut cfg = args.config(ds)?;
-            // Control-plane-only: use the paper horizons even in quick
-            // mode, and the paper's data density (CIFAR's 50k/120 ≈ 417
-            // samples/device) so the energy constraint (16) actually
-            // binds — that is the regime where V matters.
-            cfg.train.rounds = args
-                .rounds
-                .unwrap_or(if ds == "cifar" { 2000 } else { 1000 });
-            cfg.train.samples_per_device = (300, 500);
-            cfg.system.energy_budget_j = budget;
-            Ok(cfg)
-        })?;
-        let results = args.run(scenarios)?;
+        let results = args
+            .experiment(spec)
+            .base_with(|ds| {
+                let mut cfg = args.config(ds)?;
+                // Control-plane-only: use the paper horizons even in
+                // quick mode, and the paper's data density (CIFAR's
+                // 50k/120 ≈ 417 samples/device) so the energy constraint
+                // (16) actually binds — that is the regime where V
+                // matters.
+                cfg.train.rounds = args
+                    .rounds
+                    .unwrap_or(if ds == "cifar" { 2000 } else { 1000 });
+                cfg.train.samples_per_device = (300, 500);
+                cfg.system.energy_budget_j = budget;
+                Ok(cfg)
+            })
+            .run()?
+            .results;
 
         // Seed-average the two series per ν.
         let mut rows: Vec<(f64, Vec<f64>, Vec<f64>)> = Vec::new();

@@ -42,7 +42,7 @@ fn main() -> lroa::Result<()> {
             mode: SimMode::Full,
             ..SweepSpec::default()
         };
-        let results = args.run(spec.expand_with(|ds| args.config(ds))?)?;
+        let results = args.experiment(spec).run()?.results;
 
         // Pick the best grid point per (policy, K), as in §VII-B.3.
         let mut all: Vec<Recorder> = Vec::new();

@@ -1,4 +1,5 @@
-//! Quickstart: a small end-to-end LROA run through the `exp` engine.
+//! Quickstart: a small end-to-end LROA run, embedded through the
+//! `exp::session` API.
 //!
 //! 16 devices, femnist-like task, 30 rounds of full federated training
 //! through the AOT artifacts, with the evaluation checkpoints printed.
@@ -6,38 +7,53 @@
 //!
 //! ```text
 //! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart -- --sim   # control plane only,
+//!                                                     # no artifacts needed
 //! ```
+//!
+//! `--sim` is what CI drives: its CSV must be byte-identical to the same
+//! cell run through `lroa sweep` (both are consumers of the one session
+//! engine).
 
 use lroa::config::Policy;
-use lroa::exp::SweepSpec;
+use lroa::exp::{Experiment, ProgressObserver, SweepSpec};
 use lroa::fl::SimMode;
 use lroa::harness::Args;
 
 fn main() -> lroa::Result<()> {
     let args = Args::parse();
     args.reject_envs("quickstart")?;
+    let mode = if args.flag("--sim") {
+        SimMode::ControlPlaneOnly
+    } else {
+        SimMode::Full
+    };
     let spec = SweepSpec {
         datasets: vec!["femnist".into()],
         policies: vec![Policy::Lroa],
-        mode: SimMode::Full,
+        mode,
         ..SweepSpec::default()
     };
-    let scenarios = spec.expand_with(|ds| {
-        // Paper defaults, not the harness's quick-mode scaling: the
-        // quickstart demonstrates LROA under the real 5 J budget.
-        let mut cfg = lroa::config::Config::for_dataset(ds)?;
-        cfg.system.num_devices = 16;
-        cfg.train.rounds = args.rounds.unwrap_or(30);
-        cfg.train.samples_per_device = (40, 100);
-        cfg.train.test_samples = 256;
-        cfg.train.eval_every = 5;
-        cfg.apply_cli(&std::env::args().collect::<Vec<_>>())?;
-        Ok(cfg)
-    })?;
-    println!("{}", scenarios[0].cfg.dump());
+    let session = Experiment::from_spec(spec)
+        .base_with(|ds| {
+            // Paper defaults, not the harness's quick-mode scaling: the
+            // quickstart demonstrates LROA under the real 5 J budget.
+            let mut cfg = lroa::config::Config::for_dataset(ds)?;
+            cfg.system.num_devices = 16;
+            cfg.train.rounds = args.rounds.unwrap_or(30);
+            cfg.train.samples_per_device = (40, 100);
+            cfg.train.test_samples = 256;
+            cfg.train.eval_every = 5;
+            cfg.apply_cli(&std::env::args().collect::<Vec<_>>())?;
+            Ok(cfg)
+        })
+        .threads(args.threads)
+        .observe(ProgressObserver::new())
+        .build()?;
+    println!("{}", session.cells()[0].cfg.dump());
 
-    let results = args.run(scenarios)?;
-    let rec = &results[0].recorder;
+    let report = session.run()?;
+    let rec = &report.results[0].recorder;
 
     println!("{:>6} {:>12} {:>10} {:>10} {:>10}", "round", "time [s]", "trainloss", "acc", "queue");
     for r in rec.rounds.iter().filter(|r| !r.test_accuracy.is_nan()) {

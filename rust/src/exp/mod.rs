@@ -2,30 +2,44 @@
 //!
 //! The paper's evaluation is a grid: policy × environment × K × µ/ν ×
 //! seed × dataset, every cell run on shared channel realizations.  This
-//! subsystem makes that grid a value instead of a hand-rolled loop:
+//! subsystem makes that grid a value instead of a hand-rolled loop, and
+//! its execution one embeddable session:
 //!
 //! * [`spec`] — [`SweepSpec`], the declarative grid, its expansion into
 //!   concrete [`Scenario`]s (config + label + group key), and the
 //!   machine-readable grid manifest ([`manifest_json`]) the figure
 //!   pipeline consumes;
-//! * [`runner`] — the thread-pooled scenario runner (deterministic
-//!   per-scenario results, slot-ordered output, per-cell wall-clock
-//!   budgets) and the mean±std aggregation of seed repeats;
-//! * [`regret`] — the regret planner: shadows every online cell with a
-//!   clairvoyant oracle run on the same environment stream and fills
-//!   the `regret` CSV column (`lroa regret`).
+//! * [`session`] — the [`Experiment`] builder that compiles to a
+//!   [`Session`]: the one entry path behind `lroa sweep`, `lroa regret`,
+//!   the figure harness, and every example.  Cells execute on the
+//!   scoped thread pool through the server's step-wise
+//!   [`crate::fl::RoundDriver`], deterministically and in grid order at
+//!   any pool width, with per-cell wall-clock budgets;
+//! * [`observer`] — the streaming [`Observer`] trait and the built-in
+//!   sinks (per-cell CSVs + resume sidecars, `manifest.json`,
+//!   `summary.json`, progress lines, the `--json` summary stream);
+//! * [`runner`] — scenario results and the mean±std seed aggregation
+//!   ([`summarize_groups`]), plus the thin pre-session
+//!   [`run_scenarios`] compat wrapper;
+//! * [`regret`] — the regret planner and decomposition: every online
+//!   cell shadowed by the two clairvoyant anchors on the same
+//!   environment stream (`lroa regret`, or any [`Experiment`] with
+//!   [`Anchors::Both`]).
 //!
-//! Sweeps are resumable: `lroa sweep --resume` skips cells whose CSV
-//! already exists under `--out` (and re-reads them so `summary.json`
-//! still aggregates the full grid), so a killed grid continues where it
-//! stopped.  The `lroa sweep`/`lroa regret` CLI subcommands, the figure
-//! examples, and the harness all sit on top of this module.
+//! Sweeps are resumable: a resumed session skips cells whose CSV (and
+//! matching `.hash` fingerprint) already exists under its out dir, and
+//! re-reads them so the summary still aggregates the full grid.
 
+pub mod observer;
 pub mod regret;
 pub mod runner;
+pub mod session;
 pub mod spec;
 
-pub use runner::{
-    run_scenarios, summarize_groups, GroupSummary, ScenarioResult, Stat,
+pub use observer::{
+    CellResult, CellStart, CsvObserver, GridSummary, JsonObserver, ManifestObserver, Observer,
+    ProgressObserver, RoundEvent, SummaryObserver,
 };
+pub use runner::{run_scenarios, summarize_groups, GroupSummary, ScenarioResult, Stat};
+pub use session::{Anchors, Experiment, Session, SessionReport};
 pub use spec::{manifest_json, EnvSel, Scenario, SweepSpec};

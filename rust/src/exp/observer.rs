@@ -1,0 +1,365 @@
+//! Streaming experiment observers: the event surface of the session
+//! engine.
+//!
+//! A [`crate::exp::Session`] does not harvest results at the end of a
+//! grid — it *streams* them.  Every sink that used to be hard-wired into
+//! the CLI front-ends (per-cell CSV emission and resume sidecars, the
+//! grid manifest, `summary.json`, progress lines, the `--json` summary)
+//! is an [`Observer`] implementation here, attached by the consumer via
+//! [`crate::exp::Experiment::observe`].  Embedders implement the trait
+//! themselves to pipe rounds into their own telemetry.
+//!
+//! Event order, per session run:
+//!
+//! 1. [`Observer::on_grid_start`] — once, with the full planned grid
+//!    (before any cell executes);
+//! 2. [`Observer::on_resume`] — once, only on `--resume` runs, with the
+//!    skip partition;
+//! 3. per fresh cell: [`Observer::on_cell_start`], then (for observers
+//!    that opt in via [`Observer::wants_rounds`]) one
+//!    [`Observer::on_round`] per round **in round order**, then
+//!    [`Observer::on_cell_done`].  Cells run concurrently, so events of
+//!    *different* cells interleave; within one cell the order is exact
+//!    (pinned by `tests/session_parity.rs`).  Resumed cells re-read from
+//!    disk emit no per-cell events — they surface in the grid summary;
+//! 4. [`Observer::on_grid_done`] — once, after seed aggregation (and
+//!    after the regret decomposition on anchored sessions).
+//!
+//! Observers run under the session's event lock, so implementations may
+//! keep plain mutable state; fallible sinks (`on_cell_done`,
+//! `on_grid_start`, `on_grid_done`) fail the session loudly.
+
+use std::path::PathBuf;
+
+use super::runner::{GroupSummary, ScenarioResult};
+use super::spec::{manifest_json, Scenario};
+use crate::json::{obj, Json};
+use crate::metrics::{num_or_null, Recorder, RoundRecord};
+use crate::Result;
+
+/// A cell is about to execute.
+pub struct CellStart<'a> {
+    /// Grid position (index into the planned cell list).
+    pub cell: usize,
+    pub label: &'a str,
+    pub group: &'a str,
+    /// Total cells in the planned grid (resumed cells included).
+    pub cells_total: usize,
+}
+
+/// One round of one cell just executed (opt-in via
+/// [`Observer::wants_rounds`]).
+pub struct RoundEvent<'a> {
+    /// Grid position of the cell this round belongs to.
+    pub cell: usize,
+    pub label: &'a str,
+    pub round: usize,
+    pub record: &'a RoundRecord,
+}
+
+/// A cell finished: its full metrics ledger plus metadata.
+pub struct CellResult<'a> {
+    /// Grid position.
+    pub cell: usize,
+    pub scenario: &'a Scenario,
+    pub recorder: &'a Recorder,
+    /// Host wall-clock of this cell [s].
+    pub wall_s: f64,
+}
+
+/// The completed grid: per-cell results in grid order plus the
+/// seed-aggregated group rows.  On anchored (regret) sessions the
+/// recorders carry the populated decomposition columns.
+pub struct GridSummary<'a> {
+    pub results: &'a [ScenarioResult],
+    pub groups: &'a [GroupSummary],
+    /// Cells satisfied from existing CSVs by a `--resume` run.
+    pub resumed_cells: usize,
+}
+
+/// A streaming sink for session events.  All methods default to no-ops;
+/// implement the ones you care about.
+pub trait Observer: Send {
+    /// Opt into per-round [`Observer::on_round`] events.  Off by default
+    /// so sessions that only consume cell/grid events never pay the
+    /// per-round event dispatch.
+    fn wants_rounds(&self) -> bool {
+        false
+    }
+
+    /// The planned grid, before any cell executes.
+    fn on_grid_start(&mut self, _cells: &[Scenario]) -> Result<()> {
+        Ok(())
+    }
+
+    /// The `--resume` skip partition: `skipped` cells were satisfied from
+    /// existing CSVs, `to_run` remain.
+    fn on_resume(&mut self, _skipped: usize, _to_run: usize) {}
+
+    fn on_cell_start(&mut self, _ev: &CellStart<'_>) {}
+
+    fn on_round(&mut self, _ev: &RoundEvent<'_>) {}
+
+    fn on_cell_done(&mut self, _ev: &CellResult<'_>) -> Result<()> {
+        Ok(())
+    }
+
+    fn on_grid_done(&mut self, _summary: &GridSummary<'_>) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Writes the machine-readable grid manifest (`manifest.json`) the
+/// moment the grid starts — before any cell runs, so a crashed or
+/// resumed session still documents its full grid (cell labels, config
+/// hashes, the CSV `columns` schema, regret anchor links).
+#[derive(Debug)]
+pub struct ManifestObserver {
+    dir: PathBuf,
+    quiet: bool,
+}
+
+impl ManifestObserver {
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Self {
+            dir: dir.into(),
+            quiet: false,
+        }
+    }
+
+    /// Announce the written manifest on stderr instead of stdout — for
+    /// `--json` runs, whose stdout must stay a pure JSON stream.
+    pub fn quiet(mut self) -> Self {
+        self.quiet = true;
+        self
+    }
+}
+
+impl Observer for ManifestObserver {
+    fn on_grid_start(&mut self, cells: &[Scenario]) -> Result<()> {
+        std::fs::create_dir_all(&self.dir)?;
+        let path = self.dir.join("manifest.json");
+        std::fs::write(&path, manifest_json(cells).to_string())?;
+        if self.quiet {
+            eprintln!("wrote {}", path.display());
+        } else {
+            println!("wrote {}", path.display());
+        }
+        Ok(())
+    }
+}
+
+/// Streams each cell's CSV out the moment it finishes, so a killed grid
+/// keeps every completed cell and `--resume` can skip them.  Writes are
+/// write-then-rename (a kill mid-write never leaves a truncated CSV that
+/// resume would mistake for a finished cell), and the `.hash` sidecar —
+/// written last — records the fingerprint the cell actually ran under,
+/// so resume re-runs cells whose config has since changed.
+#[derive(Debug)]
+pub struct CsvObserver {
+    dir: PathBuf,
+    rewrite_final: bool,
+}
+
+impl CsvObserver {
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Self {
+            dir: dir.into(),
+            rewrite_final: false,
+        }
+    }
+
+    /// Rewrite every cell CSV once the grid completes.  Anchored
+    /// (regret) sessions need this: cells stream *raw* CSVs as they
+    /// finish (decomposition columns still empty), and the final rewrite
+    /// lands the populated columns — so a completed run never ships a
+    /// CSV without them, while a crashed run still keeps its evidence.
+    pub fn rewrite_final(mut self) -> Self {
+        self.rewrite_final = true;
+        self
+    }
+}
+
+impl Observer for CsvObserver {
+    fn on_cell_done(&mut self, ev: &CellResult<'_>) -> Result<()> {
+        std::fs::create_dir_all(&self.dir)?;
+        let tmp = self.dir.join(format!("{}.csv.tmp", ev.recorder.label));
+        ev.recorder.write_csv(&tmp)?;
+        std::fs::rename(&tmp, self.dir.join(format!("{}.csv", ev.recorder.label)))?;
+        std::fs::write(
+            self.dir.join(format!("{}.hash", ev.recorder.label)),
+            ev.scenario.fingerprint(),
+        )?;
+        Ok(())
+    }
+
+    fn on_grid_done(&mut self, summary: &GridSummary<'_>) -> Result<()> {
+        if self.rewrite_final {
+            for r in summary.results {
+                // Same write-then-rename discipline as the streaming
+                // path: the cell's `.hash` sidecar already validates, so
+                // an in-place rewrite killed mid-write would leave a
+                // truncated CSV that a later resume trusts.
+                let tmp = self.dir.join(format!("{}.csv.tmp", r.recorder.label));
+                r.recorder.write_csv(&tmp)?;
+                std::fs::rename(&tmp, self.dir.join(format!("{}.csv", r.recorder.label)))?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The seed-aggregated group rows as JSON objects — the one shape shared
+/// by `summary.json` ([`SummaryObserver`]) and the `--json` stdout
+/// stream ([`JsonObserver`]), so the two can never drift apart.
+pub fn groups_json(groups: &[GroupSummary]) -> Vec<Json> {
+    groups
+        .iter()
+        .map(|g| {
+            obj(vec![
+                ("group", Json::Str(g.group.clone())),
+                ("runs", Json::Num(g.runs as f64)),
+                ("total_time_s_mean", num_or_null(g.total_time_s.mean)),
+                ("total_time_s_std", num_or_null(g.total_time_s.std)),
+                ("final_accuracy_mean", num_or_null(g.final_accuracy.mean)),
+                ("final_regret_mean", num_or_null(g.final_regret.mean)),
+                ("final_regret_std", num_or_null(g.final_regret.std)),
+                (
+                    "final_regret_online_mean",
+                    num_or_null(g.final_regret_online.mean),
+                ),
+                (
+                    "final_regret_online_std",
+                    num_or_null(g.final_regret_online.std),
+                ),
+                (
+                    "final_regret_budget_mean",
+                    num_or_null(g.final_regret_budget.mean),
+                ),
+                (
+                    "final_regret_budget_std",
+                    num_or_null(g.final_regret_budget.std),
+                ),
+            ])
+        })
+        .collect()
+}
+
+/// Writes the machine-readable aggregate bundle (`summary.json`: group
+/// rows, per-run summaries, resumed-cell count) when the grid completes.
+#[derive(Debug)]
+pub struct SummaryObserver {
+    dir: PathBuf,
+}
+
+impl SummaryObserver {
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Self { dir: dir.into() }
+    }
+}
+
+impl Observer for SummaryObserver {
+    fn on_grid_done(&mut self, summary: &GridSummary<'_>) -> Result<()> {
+        let run_summaries: Vec<Json> = summary
+            .results
+            .iter()
+            .map(|r| r.recorder.summary_json())
+            .collect();
+        std::fs::create_dir_all(&self.dir)?;
+        std::fs::write(
+            self.dir.join("summary.json"),
+            obj(vec![
+                ("groups", Json::Arr(groups_json(summary.groups))),
+                ("runs", Json::Arr(run_summaries)),
+                ("resumed_cells", Json::Num(summary.resumed_cells as f64)),
+            ])
+            .to_string(),
+        )?;
+        Ok(())
+    }
+}
+
+/// Human progress, exactly where the pre-session CLI printed it: the
+/// resume partition on stdout, one line per completed cell on stderr.
+#[derive(Debug, Default)]
+pub struct ProgressObserver {
+    quiet: bool,
+}
+
+impl ProgressObserver {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Route the resume-partition lines to stderr too — for `--json`
+    /// runs, whose stdout must stay a pure JSON stream.
+    pub fn quiet(mut self) -> Self {
+        self.quiet = true;
+        self
+    }
+}
+
+impl Observer for ProgressObserver {
+    fn on_resume(&mut self, skipped: usize, to_run: usize) {
+        let line = format!(
+            "resume: skipping {skipped} cells with existing CSVs (re-read for the \
+             aggregate), running {to_run}"
+        );
+        if self.quiet {
+            eprintln!("{line}");
+            if to_run == 0 {
+                eprintln!("resume: nothing left to run");
+            }
+        } else {
+            println!("{line}");
+            if to_run == 0 {
+                println!("resume: nothing left to run");
+            }
+        }
+    }
+
+    fn on_cell_done(&mut self, ev: &CellResult<'_>) -> Result<()> {
+        eprintln!(
+            "[exp] {}: {} rounds, modeled {:.1}s, final acc {:.4}, wall {:.1}s",
+            ev.recorder.label,
+            ev.recorder.rounds.len(),
+            ev.recorder.total_time_s(),
+            ev.recorder.final_accuracy(),
+            ev.wall_s
+        );
+        Ok(())
+    }
+}
+
+/// Streams the grid summary to stdout as one JSON object when the grid
+/// completes — the machine-readable sibling of the printed table
+/// (`lroa sweep --json` / `lroa regret --json`).  Shape:
+/// `{"groups": [...], "resumed_cells": N}` with the same group fields as
+/// `summary.json` (shared via [`groups_json`]).
+///
+/// stdout purity is the attacher's contract, not this type's: pair it
+/// with stderr-routed chrome ([`ManifestObserver::quiet`],
+/// [`ProgressObserver::quiet`], the CLI's `say` helper) so the stream
+/// stays exactly one JSON object — `lroa sweep --json | json_tool` is
+/// CI-pinned.
+#[derive(Debug, Default)]
+pub struct JsonObserver;
+
+impl JsonObserver {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl Observer for JsonObserver {
+    fn on_grid_done(&mut self, summary: &GridSummary<'_>) -> Result<()> {
+        println!(
+            "{}",
+            obj(vec![
+                ("groups", Json::Arr(groups_json(summary.groups))),
+                ("resumed_cells", Json::Num(summary.resumed_cells as f64)),
+            ])
+        );
+        Ok(())
+    }
+}

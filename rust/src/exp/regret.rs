@@ -43,29 +43,40 @@ use std::collections::BTreeMap;
 
 use super::runner::{run_scenarios, ScenarioResult};
 use super::spec::{Scenario, SweepSpec};
-use crate::config::Policy;
+use crate::config::{Config, Policy};
 use crate::Result;
 
-/// Expand a regret grid: the spec's online cells plus one `oracle` and
-/// one `oracle-e` cell per distinct environment stream (dataset × env ×
-/// K × µ/ν × seed × rounds).  Online cells are back-linked to both
-/// anchors via [`Scenario::regret_vs`] / [`Scenario::regret_vs_e`];
-/// `oracle-e` cells link to their `oracle` via `regret_vs` (their regret
-/// *is* the budget gap).  Anchor cells come last.
+/// Expand a regret grid against the paper-default base configs: the
+/// spec's online cells plus one `oracle` and one `oracle-e` cell per
+/// distinct environment stream (dataset × env × K × µ/ν × seed ×
+/// rounds).  Online cells are back-linked to both anchors via
+/// [`Scenario::regret_vs`] / [`Scenario::regret_vs_e`]; `oracle-e` cells
+/// link to their `oracle` via `regret_vs` (their regret *is* the budget
+/// gap).  Anchor cells come last.
 pub fn plan(spec: &SweepSpec) -> Result<Vec<Scenario>> {
+    plan_with(spec, Config::for_dataset)
+}
+
+/// [`plan`] with a caller-supplied base-config builder (called once per
+/// cell with the dataset name) — how an anchored
+/// [`crate::exp::Experiment`] plans its grid over a custom base.
+pub fn plan_with<F>(spec: &SweepSpec, mut base: F) -> Result<Vec<Scenario>>
+where
+    F: FnMut(&str) -> Result<Config>,
+{
     for anchor in [Policy::Oracle, Policy::OracleEnergy] {
         anyhow::ensure!(
             !spec.policies.contains(&anchor),
             "regret: the {anchor} anchor is added automatically; drop it from --policies"
         );
     }
-    let online = spec.expand()?;
+    let online = spec.expand_with(&mut base)?;
     let mut oracle_spec = spec.clone();
     oracle_spec.policies = vec![Policy::Oracle];
-    let oracle = oracle_spec.expand()?;
+    let oracle = oracle_spec.expand_with(&mut base)?;
     let mut oracle_e_spec = spec.clone();
     oracle_e_spec.policies = vec![Policy::OracleEnergy];
-    let oracle_e = oracle_e_spec.expand()?;
+    let oracle_e = oracle_e_spec.expand_with(&mut base)?;
 
     // Stream key: the cell's config with the policy normalized away —
     // two cells share an environment stream iff everything else matches.
@@ -112,12 +123,21 @@ pub fn plan(spec: &SweepSpec) -> Result<Vec<Scenario>> {
     Ok(out)
 }
 
-/// Run a planned regret grid and populate the decomposition columns:
-/// oracle cells get zeros, oracle-e cells get their budget gap, online
-/// cells get `regret` vs the oracle plus the bitwise split
-/// `regret = regret_online + regret_budget`.
+/// Run a planned regret grid and populate the decomposition columns —
+/// [`run_scenarios`] + [`decompose`].  The pre-session compat surface;
+/// an anchored [`crate::exp::Experiment`] runs the same two stages with
+/// observers streaming in between.
 pub fn run(scenarios: Vec<Scenario>, threads: usize) -> Result<Vec<ScenarioResult>> {
     let mut results = run_scenarios(scenarios, threads)?;
+    decompose(&mut results)?;
+    Ok(results)
+}
+
+/// Populate the regret decomposition columns of a completed, planned
+/// grid in place: oracle cells get zeros, oracle-e cells their budget
+/// gap, online cells `regret` vs the oracle plus the bitwise split
+/// `regret = regret_online + regret_budget`.
+pub fn decompose(results: &mut [ScenarioResult]) -> Result<()> {
     let collect = |results: &[ScenarioResult], policy: Policy| -> BTreeMap<String, Vec<f64>> {
         results
             .iter()
@@ -128,10 +148,10 @@ pub fn run(scenarios: Vec<Scenario>, threads: usize) -> Result<Vec<ScenarioResul
             })
             .collect()
     };
-    let oracle_times = collect(&results, Policy::Oracle);
-    let oracle_e_times = collect(&results, Policy::OracleEnergy);
+    let oracle_times = collect(&*results, Policy::Oracle);
+    let oracle_e_times = collect(&*results, Policy::OracleEnergy);
 
-    for r in &mut results {
+    for r in results.iter_mut() {
         let label = r.scenario.label.clone();
         let len = r.recorder.rounds.len();
         match r.scenario.cfg.train.policy {
@@ -168,7 +188,7 @@ pub fn run(scenarios: Vec<Scenario>, threads: usize) -> Result<Vec<ScenarioResul
             }
         }
     }
-    Ok(results)
+    Ok(())
 }
 
 /// Look up a cell's anchor series by its back-link and check horizons

@@ -1,12 +1,11 @@
-//! Thread-pooled scenario execution and seed aggregation.
+//! Scenario results and seed aggregation (and the thin pre-session
+//! compat runner).
 
 use std::collections::BTreeMap;
-use std::time::Instant;
 
+use super::session::Session;
 use super::spec::Scenario;
-use crate::fl::Server;
 use crate::metrics::Recorder;
-use crate::par;
 use crate::Result;
 
 /// One completed scenario: the run's full metrics plus its metadata.
@@ -23,62 +22,12 @@ pub struct ScenarioResult {
 /// deterministic and come back **in scenario order** regardless of the
 /// pool width.  The first failing scenario's error is propagated.
 ///
-/// When the pool itself is parallel, scenarios whose
-/// `train.train_threads` is still auto (0) are pinned to sequential
-/// local training — otherwise every Full-mode cell would spawn its own
-/// per-core training pool on top of the scenario pool, oversubscribing
-/// the machine.  An explicit non-zero `train_threads` is honored.
-/// Training results are bitwise-identical either way (see [`par`]).
-pub fn run_scenarios(mut scenarios: Vec<Scenario>, threads: usize) -> Result<Vec<ScenarioResult>> {
-    let width = par::effective_threads(threads, scenarios.len());
-    if width > 1 {
-        for sc in &mut scenarios {
-            if sc.cfg.train.train_threads == 0 {
-                sc.cfg.train.train_threads = 1;
-            }
-        }
-    }
-    par::fan_out(scenarios, width, || (), |_, sc| run_one(sc))
-}
-
-fn run_one(scenario: Scenario) -> Result<ScenarioResult> {
-    let t0 = Instant::now();
-    let mut server = Server::new(scenario.cfg.clone(), scenario.mode)?;
-    server
-        .run_with_timeout(scenario.timeout_s)
-        .map_err(|e| anyhow::anyhow!("cell {}: {e:#}", scenario.label))?;
-    let mut recorder = std::mem::take(&mut server.recorder);
-    recorder.label = scenario.label.clone();
-    // Stream the cell's CSV out the moment it finishes: a sweep killed
-    // mid-grid keeps every completed cell, and --resume skips them.
-    // Write-then-rename so a kill mid-write never leaves a truncated
-    // CSV that --resume would mistake for a finished cell; the `.hash`
-    // sidecar (written last) records the config the cell actually ran
-    // under, so resume re-runs cells whose config has since changed.
-    if let Some(dir) = &scenario.csv_dir {
-        std::fs::create_dir_all(dir)?;
-        let tmp = dir.join(format!("{}.csv.tmp", recorder.label));
-        recorder.write_csv(&tmp)?;
-        std::fs::rename(&tmp, dir.join(format!("{}.csv", recorder.label)))?;
-        std::fs::write(
-            dir.join(format!("{}.hash", recorder.label)),
-            scenario.fingerprint(),
-        )?;
-    }
-    let wall_s = t0.elapsed().as_secs_f64();
-    eprintln!(
-        "[exp] {}: {} rounds, modeled {:.1}s, final acc {:.4}, wall {:.1}s",
-        scenario.label,
-        recorder.rounds.len(),
-        recorder.total_time_s(),
-        recorder.final_accuracy(),
-        wall_s
-    );
-    Ok(ScenarioResult {
-        scenario,
-        recorder,
-        wall_s,
-    })
+/// This is the pre-session compat surface: a bare [`Session`] over the
+/// given cells, with no observers attached.  New code should build a
+/// [`crate::exp::Experiment`] instead — it adds anchors, resume, and the
+/// streaming observer sinks on the same engine.
+pub fn run_scenarios(scenarios: Vec<Scenario>, threads: usize) -> Result<Vec<ScenarioResult>> {
+    Ok(Session::from_cells(scenarios, threads).run()?.results)
 }
 
 /// Mean ± population std over the finite entries of a sample.

@@ -1,0 +1,602 @@
+//! The embeddable experiment session: one typed entry path for every
+//! grid this crate runs.
+//!
+//! [`Experiment`] is a builder over a [`SweepSpec`]-shaped grid (axes,
+//! base config, anchors, output directory, observers) that *compiles* to
+//! a [`Session`] — the planned, validated cell list plus its sinks.
+//! [`Session::run`] executes the grid on the scoped thread pool, streams
+//! [`crate::exp::Observer`] events as cells progress (driving each cell
+//! through the server's step-wise [`crate::fl::RoundDriver`]), applies
+//! the regret decomposition on anchored grids, and returns the
+//! [`SessionReport`].
+//!
+//! The CLI front-ends (`lroa sweep`, `lroa regret`), the figure-example
+//! harness, and the examples are all consumers of this one API; their
+//! former private plumbing (CSV streaming, resume bookkeeping, manifest
+//! emission, summary bundles, progress lines) lives in
+//! [`crate::exp::observer`].  Embedding the engine is ten lines:
+//!
+//! ```no_run
+//! use lroa::config::{Config, Policy};
+//! use lroa::exp::{Anchors, Experiment};
+//!
+//! # fn main() -> lroa::Result<()> {
+//! let report = Experiment::new(Config::for_dataset("cifar")?)
+//!     .policies(&[Policy::Lroa, Policy::UniformStatic])
+//!     .seeds(&[1, 2, 3])
+//!     .rounds(200)
+//!     .anchors(Anchors::Both)
+//!     .threads(0)
+//!     .run()?;
+//! for g in &report.groups {
+//!     println!("{}: {} (regret {})", g.group, g.total_time_s, g.final_regret);
+//! }
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Outputs are bitwise-identical to the pre-session pipeline: same cell
+//! CSV bytes, same `summary.json`, same `manifest.json` (pinned by
+//! `tests/session_parity.rs`).
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::observer::{CellResult, CellStart, GridSummary, Observer, RoundEvent};
+use super::regret;
+use super::runner::{summarize_groups, GroupSummary, ScenarioResult};
+use super::spec::{manifest_json, EnvSel, Scenario, SweepSpec};
+use crate::config::{Config, Policy};
+use crate::fl::{Server, SimMode};
+use crate::json::Json;
+use crate::metrics::Recorder;
+use crate::par;
+use crate::Result;
+
+/// Which clairvoyant anchors shadow the grid's online cells.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Anchors {
+    /// Plain sweep: only the cells you asked for.
+    None,
+    /// `lroa regret` mode: every environment stream gains an `oracle`
+    /// (budget-blind latency floor) and an `oracle-e` (budget-feasible)
+    /// cell, online cells are back-linked to both, and the session
+    /// populates the `regret`/`regret_online`/`regret_budget` columns
+    /// after the grid completes (see [`crate::exp::regret`]).
+    Both,
+}
+
+/// How each cell's base [`Config`] is built from its dataset name.
+enum Base<'a> {
+    /// Paper defaults per dataset ([`Config::for_dataset`]).
+    Defaults,
+    /// One explicit config for every cell (the embedded-use path); the
+    /// dataset axis only overrides `train.dataset` on top of it.
+    Fixed(Box<Config>),
+    /// Caller-supplied builder (e.g. the figure harness's quick-mode
+    /// scaling).
+    With(Box<dyn FnMut(&str) -> Result<Config> + 'a>),
+}
+
+/// Typed builder for an experiment grid.  Compile it to a [`Session`]
+/// with [`Experiment::build`] (or run directly via [`Experiment::run`]).
+pub struct Experiment<'a> {
+    spec: SweepSpec,
+    base: Base<'a>,
+    anchors: Anchors,
+    out_dir: Option<PathBuf>,
+    observers: Vec<Box<dyn Observer>>,
+}
+
+impl<'a> Experiment<'a> {
+    /// An experiment over one explicit base config: every cell starts
+    /// from `cfg` (the dataset axis defaults to `cfg.train.dataset`),
+    /// with axis values and overrides applied on top.
+    pub fn new(cfg: Config) -> Experiment<'a> {
+        let spec = SweepSpec {
+            datasets: vec![cfg.train.dataset.clone()],
+            ..SweepSpec::default()
+        };
+        Experiment {
+            spec,
+            base: Base::Fixed(Box::new(cfg)),
+            anchors: Anchors::None,
+            out_dir: None,
+            observers: Vec::new(),
+        }
+    }
+
+    /// An experiment from a declarative [`SweepSpec`] (the CLI path);
+    /// cells expand against the paper-default per-dataset base configs.
+    ///
+    /// The spec is honored in full — including `spec.out_dir`, which
+    /// seeds [`Experiment::out_dir`] so a `--resume` spec works without
+    /// re-wiring the directory (attach file observers at the same path).
+    /// The one exception is `spec.json`: what lands on stdout is the
+    /// front-end's choice of observers, not the grid's.
+    pub fn from_spec(spec: SweepSpec) -> Experiment<'a> {
+        let out_dir = Some(PathBuf::from(&spec.out_dir));
+        Experiment {
+            spec,
+            base: Base::Defaults,
+            anchors: Anchors::None,
+            out_dir,
+            observers: Vec::new(),
+        }
+    }
+
+    /// Build each cell's base config with `base` (called once per cell
+    /// with the dataset name) instead of the paper defaults.
+    pub fn base_with<F>(mut self, base: F) -> Self
+    where
+        F: FnMut(&str) -> Result<Config> + 'a,
+    {
+        self.base = Base::With(Box::new(base));
+        self
+    }
+
+    pub fn datasets(mut self, datasets: &[&str]) -> Self {
+        self.spec.datasets = datasets.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn policies(mut self, policies: &[Policy]) -> Self {
+        self.spec.policies = policies.to_vec();
+        self
+    }
+
+    pub fn envs(mut self, envs: &[EnvSel]) -> Self {
+        self.spec.envs = envs.to_vec();
+        self
+    }
+
+    pub fn ks(mut self, ks: &[usize]) -> Self {
+        self.spec.ks = ks.to_vec();
+        self
+    }
+
+    pub fn mus(mut self, mus: &[f64]) -> Self {
+        self.spec.mus = mus.to_vec();
+        self
+    }
+
+    pub fn nus(mut self, nus: &[f64]) -> Self {
+        self.spec.nus = nus.to_vec();
+        self
+    }
+
+    pub fn seeds(mut self, seeds: &[u64]) -> Self {
+        self.spec.seeds = seeds.to_vec();
+        self
+    }
+
+    /// Horizon override applied to every cell.
+    pub fn rounds(mut self, rounds: usize) -> Self {
+        self.spec.rounds = Some(rounds);
+        self
+    }
+
+    pub fn mode(mut self, mode: SimMode) -> Self {
+        self.spec.mode = mode;
+        self
+    }
+
+    /// Scenario-pool width (0 = one worker per core).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.spec.threads = threads;
+        self
+    }
+
+    /// Per-cell wall-clock budget [s]; exceeding it fails the cell loudly.
+    pub fn cell_timeout_s(mut self, timeout_s: f64) -> Self {
+        self.spec.cell_timeout_s = Some(timeout_s);
+        self
+    }
+
+    /// Add one `--section.key=value` override applied to every cell.
+    pub fn override_arg(mut self, arg: impl Into<String>) -> Self {
+        self.spec.overrides.push(arg.into());
+        self
+    }
+
+    pub fn anchors(mut self, anchors: Anchors) -> Self {
+        self.anchors = anchors;
+        self
+    }
+
+    /// Output directory: enables the resume scan ([`Experiment::resume`])
+    /// and is where the file-writing observers point.  The session itself
+    /// writes nothing — attach [`crate::exp::CsvObserver`] /
+    /// [`crate::exp::SummaryObserver`] / [`crate::exp::ManifestObserver`]
+    /// for files.
+    pub fn out_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.out_dir = Some(dir.into());
+        self
+    }
+
+    /// Skip cells whose CSV (plus a matching `.hash` fingerprint
+    /// sidecar) already exists under the out dir; skipped cells are
+    /// re-read so the grid summary still aggregates the full grid.
+    ///
+    /// The scan reads the files a [`crate::exp::CsvObserver`] pointed at
+    /// the *same* [`Experiment::out_dir`] writes — attach one, or resume
+    /// will find nothing to skip.
+    pub fn resume(mut self, resume: bool) -> Self {
+        self.spec.resume = resume;
+        self
+    }
+
+    /// Attach a streaming observer (events in attach order).
+    pub fn observe(mut self, observer: impl Observer + 'static) -> Self {
+        self.observers.push(Box::new(observer));
+        self
+    }
+
+    /// Expand, anchor, and validate the grid: the planned [`Session`].
+    pub fn build(self) -> Result<Session> {
+        let Experiment {
+            spec,
+            base,
+            anchors,
+            out_dir,
+            observers,
+        } = self;
+        anyhow::ensure!(
+            !(anchors == Anchors::Both && spec.resume),
+            "session: --resume is not supported on anchored grids (the regret \
+             decomposition is computed across the whole grid in one invocation)"
+        );
+        anyhow::ensure!(
+            !spec.resume || out_dir.is_some(),
+            "session: resume needs an out_dir to scan for finished cells"
+        );
+        let mut base: Box<dyn FnMut(&str) -> Result<Config> + 'a> = match base {
+            Base::Defaults => Box::new(Config::for_dataset),
+            Base::Fixed(cfg) => Box::new(move |ds: &str| {
+                let mut c = (*cfg).clone();
+                c.train.dataset = ds.to_string();
+                Ok(c)
+            }),
+            Base::With(f) => f,
+        };
+        let cells = match anchors {
+            Anchors::None => spec.expand_with(&mut base)?,
+            Anchors::Both => regret::plan_with(&spec, &mut base)?,
+        };
+        anyhow::ensure!(!cells.is_empty(), "session: the grid expanded to zero cells");
+        // Streaming CSVs and resume both key on the cell label, so
+        // duplicates would race on one file: reject them up front.
+        {
+            let mut seen = BTreeSet::new();
+            for s in &cells {
+                anyhow::ensure!(
+                    seen.insert(s.label.as_str()),
+                    "session: duplicate cell label {:?} (repeated axis value, or an \
+                     override clobbering a swept axis?)",
+                    s.label
+                );
+            }
+        }
+        Ok(Session {
+            cells,
+            threads: spec.threads,
+            regret: anchors == Anchors::Both,
+            resume: spec.resume,
+            out_dir,
+            observers,
+        })
+    }
+
+    /// [`Experiment::build`] + [`Session::run`] in one call.
+    pub fn run(self) -> Result<SessionReport> {
+        self.build()?.run()
+    }
+}
+
+/// What a completed session hands back: per-cell results in grid order
+/// plus the seed-aggregated group rows.
+pub struct SessionReport {
+    pub results: Vec<ScenarioResult>,
+    pub groups: Vec<GroupSummary>,
+    /// Cells satisfied from existing CSVs by a resume run.
+    pub resumed_cells: usize,
+}
+
+/// A planned, validated grid bound to its observers — ready to run.
+pub struct Session {
+    cells: Vec<Scenario>,
+    threads: usize,
+    regret: bool,
+    resume: bool,
+    out_dir: Option<PathBuf>,
+    observers: Vec<Box<dyn Observer>>,
+}
+
+impl Session {
+    /// A bare session over pre-expanded cells: no observers, no anchors,
+    /// no resume.  This is the compat substrate of
+    /// [`crate::exp::run_scenarios`]; prefer [`Experiment`].
+    pub fn from_cells(cells: Vec<Scenario>, threads: usize) -> Session {
+        Session {
+            cells,
+            threads,
+            regret: false,
+            resume: false,
+            out_dir: None,
+            observers: Vec::new(),
+        }
+    }
+
+    /// The planned grid, in execution order (anchors last on anchored
+    /// sessions).
+    pub fn cells(&self) -> &[Scenario] {
+        &self.cells
+    }
+
+    /// The machine-readable grid manifest ([`manifest_json`]) for this
+    /// session's cells.
+    pub fn manifest(&self) -> Json {
+        manifest_json(&self.cells)
+    }
+
+    /// Execute the grid: resume scan, parallel cell execution with
+    /// streaming events, regret decomposition (anchored sessions), seed
+    /// aggregation, and the grid-done event — in that order.
+    pub fn run(self) -> Result<SessionReport> {
+        let Session {
+            cells,
+            threads,
+            regret,
+            resume,
+            out_dir,
+            observers,
+        } = self;
+        let hub = Hub::new(observers);
+        hub.grid_start(&cells)?;
+        let total = cells.len();
+
+        // Resume scan: a cell is done only if its CSV exists AND its
+        // `.hash` sidecar — written at cell *completion* — matches this
+        // cell's fingerprint, so stale CSVs from an older config are
+        // re-run, never silently kept.  Finished cells are re-read from
+        // their CSVs (cheap: no simulation), so the summary always
+        // aggregates the full grid.
+        let mut resumed: Vec<(usize, ScenarioResult)> = Vec::new();
+        let mut to_run: Vec<(usize, Scenario)> = Vec::new();
+        if resume {
+            let dir = out_dir.as_ref().expect("build() checked resume has an out_dir");
+            for (idx, s) in cells.into_iter().enumerate() {
+                let csv = dir.join(format!("{}.csv", s.label));
+                let done = csv.exists()
+                    && std::fs::read_to_string(dir.join(format!("{}.hash", s.label)))
+                        .map(|h| h.trim() == s.fingerprint())
+                        .unwrap_or(false);
+                if done {
+                    let mut recorder = Recorder::read_csv(&csv)?;
+                    recorder.label = s.label.clone();
+                    resumed.push((
+                        idx,
+                        ScenarioResult {
+                            scenario: s,
+                            recorder,
+                            wall_s: 0.0,
+                        },
+                    ));
+                } else {
+                    to_run.push((idx, s));
+                }
+            }
+            hub.resume_note(resumed.len(), to_run.len());
+        } else {
+            to_run = cells.into_iter().enumerate().collect();
+        }
+        let resumed_cells = resumed.len();
+
+        // When the scenario pool itself is parallel, cells whose
+        // `train.train_threads` is still auto (0) are pinned to
+        // sequential local training — otherwise every Full-mode cell
+        // would spawn its own per-core training pool on top of the
+        // scenario pool.  Training results are bitwise-identical either
+        // way (see [`par`]).
+        let width = par::effective_threads(threads, to_run.len());
+        if width > 1 {
+            for (_, sc) in &mut to_run {
+                if sc.cfg.train.train_threads == 0 {
+                    sc.cfg.train.train_threads = 1;
+                }
+            }
+        }
+        let fresh = par::fan_out(to_run, width, || (), |_, (idx, sc)| {
+            run_cell(idx, sc, total, &hub).map(|r| (idx, r))
+        })?;
+
+        // Stitch resumed + fresh results back into grid order.
+        let mut combined = resumed;
+        combined.extend(fresh);
+        combined.sort_by_key(|(i, _)| *i);
+        let mut results: Vec<ScenarioResult> = combined.into_iter().map(|(_, r)| r).collect();
+
+        // Anchored grids: populate the regret decomposition columns
+        // before aggregation, so group rows and the grid-done event see
+        // the final recorders.
+        if regret {
+            regret::decompose(&mut results)?;
+        }
+        let groups = summarize_groups(&results);
+        hub.grid_done(&GridSummary {
+            results: &results,
+            groups: &groups,
+            resumed_cells,
+        })?;
+        Ok(SessionReport {
+            results,
+            groups,
+            resumed_cells,
+        })
+    }
+}
+
+/// Execute one cell through the step-wise [`crate::fl::RoundDriver`],
+/// streaming events to the hub.
+fn run_cell(index: usize, scenario: Scenario, total: usize, hub: &Hub) -> Result<ScenarioResult> {
+    let t0 = Instant::now();
+    hub.cell_start(&CellStart {
+        cell: index,
+        label: &scenario.label,
+        group: &scenario.group,
+        cells_total: total,
+    });
+    let mut server = Server::new(scenario.cfg.clone(), scenario.mode)?;
+    {
+        let mut driver = server.driver_with_timeout(scenario.timeout_s);
+        loop {
+            let report = driver
+                .step()
+                .map_err(|e| anyhow::anyhow!("cell {}: {e:#}", scenario.label))?;
+            let Some(report) = report else { break };
+            if hub.wants_rounds {
+                hub.round(&RoundEvent {
+                    cell: index,
+                    label: &scenario.label,
+                    round: report.round,
+                    record: &report.record,
+                });
+            }
+        }
+    }
+    let mut recorder = std::mem::take(&mut server.recorder);
+    recorder.label = scenario.label.clone();
+    let wall_s = t0.elapsed().as_secs_f64();
+    let result = ScenarioResult {
+        scenario,
+        recorder,
+        wall_s,
+    };
+    hub.cell_done(&CellResult {
+        cell: index,
+        scenario: &result.scenario,
+        recorder: &result.recorder,
+        wall_s,
+    })?;
+    Ok(result)
+}
+
+/// The session's event fan-in: observers run under one lock, so worker
+/// threads can emit concurrently while each observer sees a serialized,
+/// per-cell-ordered event stream.
+///
+/// One lock is a deliberate simplicity/throughput trade: per-round
+/// events fire only when an observer opts in (`wants_rounds`, checked
+/// lock-free), and the default sinks lock once per *cell* — but a
+/// round-hungry observer on a wide pool serializes there, and CSV
+/// writes happen under the lock.  Sharded per-observer dispatch is a
+/// ROADMAP item for the pipelined/service modes.
+struct Hub {
+    observers: Mutex<Vec<Box<dyn Observer>>>,
+    /// Any observer opted into per-round events (checked lock-free on
+    /// the per-round fast path).
+    wants_rounds: bool,
+}
+
+impl Hub {
+    fn new(observers: Vec<Box<dyn Observer>>) -> Hub {
+        let wants_rounds = observers.iter().any(|o| o.wants_rounds());
+        Hub {
+            observers: Mutex::new(observers),
+            wants_rounds,
+        }
+    }
+
+    fn grid_start(&self, cells: &[Scenario]) -> Result<()> {
+        for o in self.observers.lock().unwrap().iter_mut() {
+            o.on_grid_start(cells)?;
+        }
+        Ok(())
+    }
+
+    fn resume_note(&self, skipped: usize, to_run: usize) {
+        for o in self.observers.lock().unwrap().iter_mut() {
+            o.on_resume(skipped, to_run);
+        }
+    }
+
+    fn cell_start(&self, ev: &CellStart<'_>) {
+        for o in self.observers.lock().unwrap().iter_mut() {
+            o.on_cell_start(ev);
+        }
+    }
+
+    fn round(&self, ev: &RoundEvent<'_>) {
+        for o in self.observers.lock().unwrap().iter_mut() {
+            o.on_round(ev);
+        }
+    }
+
+    fn cell_done(&self, ev: &CellResult<'_>) -> Result<()> {
+        for o in self.observers.lock().unwrap().iter_mut() {
+            o.on_cell_done(ev)?;
+        }
+        Ok(())
+    }
+
+    fn grid_done(&self, summary: &GridSummary<'_>) -> Result<()> {
+        for o in self.observers.lock().unwrap().iter_mut() {
+            o.on_grid_done(summary)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn experiment_over_a_fixed_config_runs_one_cell_per_axis_point() {
+        let mut cfg = Config::for_dataset("cifar").unwrap();
+        cfg.system.num_devices = 12;
+        cfg.train.rounds = 8;
+        let report = Experiment::new(cfg)
+            .policies(&[Policy::Lroa, Policy::UniformStatic])
+            .seeds(&[1, 2])
+            .run()
+            .unwrap();
+        assert_eq!(report.results.len(), 4);
+        assert_eq!(report.groups.len(), 2);
+        assert_eq!(report.resumed_cells, 0);
+        for r in &report.results {
+            assert_eq!(r.scenario.cfg.system.num_devices, 12, "base config kept");
+            assert_eq!(r.recorder.rounds.len(), 8);
+        }
+        assert_eq!(report.results[0].scenario.label, "LROA-cifar-s1");
+    }
+
+    #[test]
+    fn duplicate_labels_are_rejected_at_build_time() {
+        let mut cfg = Config::for_dataset("cifar").unwrap();
+        cfg.train.rounds = 3;
+        // A seed override clobbering the seed axis yields duplicate
+        // labels; build() must refuse instead of racing two cells on one
+        // CSV path.
+        let err = Experiment::new(cfg)
+            .seeds(&[1, 2])
+            .override_arg("--train.seed=7")
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("duplicate cell label"), "{err}");
+    }
+
+    #[test]
+    fn anchored_sessions_refuse_resume() {
+        let cfg = Config::for_dataset("cifar").unwrap();
+        let err = Experiment::new(cfg)
+            .anchors(Anchors::Both)
+            .out_dir(std::env::temp_dir())
+            .resume(true)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("resume"), "{err}");
+    }
+}

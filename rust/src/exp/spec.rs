@@ -72,10 +72,6 @@ pub struct Scenario {
     pub cfg: Config,
     /// Full training or control-plane-only.
     pub mode: SimMode,
-    /// When set, the runner writes `<csv_dir>/<label>.csv` as soon as
-    /// this cell completes (not at the end-of-grid barrier), so a killed
-    /// sweep is resumable cell by cell (`lroa sweep --resume`).
-    pub csv_dir: Option<std::path::PathBuf>,
     /// Per-cell wall-clock budget [s] (`--cell_timeout_s`); exceeding it
     /// fails the cell loudly instead of truncating its series.
     pub timeout_s: Option<f64>,
@@ -135,10 +131,14 @@ pub struct SweepSpec {
     /// Output directory for CSV/JSON emission.
     pub out_dir: String,
     /// Skip cells whose CSV already exists under `out_dir`.  Consumed by
-    /// the `lroa sweep` CLI front-end (which owns the skip partition,
-    /// the duplicate-label guard, and per-cell `csv_dir` assignment);
+    /// the session engine ([`crate::exp::Experiment`] owns the skip
+    /// partition and the duplicate-label guard);
     /// `expand()`/`run_scenarios` do not act on it themselves.
     pub resume: bool,
+    /// Print the seed-aggregated grid summary as JSON on stdout instead
+    /// of the human table (`--json`, via
+    /// [`crate::exp::JsonObserver`]).  Consumed by the CLI front-ends.
+    pub json: bool,
     /// Per-cell wall-clock timeout [s] (`--cell_timeout_s`); None = no
     /// budget.
     pub cell_timeout_s: Option<f64>,
@@ -161,6 +161,7 @@ impl Default for SweepSpec {
             threads: 0,
             out_dir: "runs/sweep".into(),
             resume: false,
+            json: false,
             cell_timeout_s: None,
             overrides: Vec::new(),
         }
@@ -242,7 +243,6 @@ impl SweepSpec {
                                         group,
                                         cfg,
                                         mode: self.mode,
-                                        csv_dir: None,
                                         timeout_s: self.cell_timeout_s,
                                         regret_vs: None,
                                         regret_vs_e: None,
@@ -296,12 +296,14 @@ impl SweepSpec {
     /// entries, or `all`), `--ks`, `--mus`, `--nus`, `--seeds` (comma
     /// list or `a..b` inclusive), `--rounds`, `--threads`,
     /// `--cell_timeout_s` (per-cell wall-clock budget),
-    /// `--mode=sim|train`, `--out`, plus the bare flag `--resume` (skip
-    /// cells whose CSV already exists).  Dotted `--section.key=value`
-    /// config overrides pass through to every cell; anything else is an
-    /// error.
+    /// `--mode=sim|train`, `--out`, plus the bare flags `--resume` (skip
+    /// cells whose CSV already exists) and `--json` (grid summary as
+    /// JSON on stdout instead of the table).  Dotted
+    /// `--section.key=value` config overrides pass through to every
+    /// cell; anything else is an error.
     pub fn from_cli(args: &[String]) -> Result<SweepSpec> {
         let mut spec = SweepSpec::default();
+        let mut seen = std::collections::BTreeSet::new();
         for arg in args {
             let Some(rest) = arg.strip_prefix("--") else {
                 anyhow::bail!("sweep: unexpected argument {arg:?}");
@@ -310,9 +312,22 @@ impl SweepSpec {
                 spec.resume = true;
                 continue;
             }
+            if rest == "json" {
+                spec.json = true;
+                continue;
+            }
             let Some((key, val)) = rest.split_once('=') else {
                 anyhow::bail!("sweep: expected --key=value, got {arg:?}");
             };
+            // A repeated axis flag must error loudly, never last-one-wins:
+            // a second --envs (or --seeds, ...) silently replacing the
+            // first would hand the figure pipeline a half-grid it cannot
+            // detect.  Dotted config overrides are exempt (each names its
+            // own key; Config::set already owns that semantics).
+            anyhow::ensure!(
+                key.contains('.') || seen.insert(key.to_string()),
+                "sweep: --{key} given more than once; pass one combined value list"
+            );
             match key {
                 "datasets" => spec.datasets = val.split(',').map(str::to_string).collect(),
                 "policies" => {
@@ -516,6 +531,7 @@ mod tests {
             "--mode=sim",
             "--out=runs/mysweep",
             "--resume",
+            "--json",
             "--system.num_devices=32",
         ]
         .iter()
@@ -535,6 +551,7 @@ mod tests {
         assert_eq!(spec.cell_timeout_s, Some(30.0));
         assert_eq!(spec.out_dir, "runs/mysweep");
         assert!(spec.resume);
+        assert!(spec.json);
         assert_eq!(spec.overrides, vec!["--system.num_devices=32".to_string()]);
         let cells = spec.expand().unwrap();
         assert_eq!(cells.len(), 2 * 2 * 2 * 2 * 3);
@@ -625,6 +642,24 @@ mod tests {
         assert!(bad("--policies=nope").is_err());
         assert!(bad("--envs=nope").is_err());
         assert!(bad("--seeds=9..3").is_err());
+    }
+
+    #[test]
+    fn cli_rejects_repeated_axis_flags_instead_of_last_one_wins() {
+        let parse = |args: &[&str]| {
+            let args: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+            SweepSpec::from_cli(&args)
+        };
+        let err = parse(&["--envs=static,ge", "--envs=adv"]).unwrap_err();
+        assert!(err.to_string().contains("more than once"), "{err}");
+        assert!(parse(&["--ks=2", "--ks=4"]).is_err());
+        assert!(parse(&["--seeds=1..3", "--seeds=9"]).is_err());
+        // Dotted overrides keep Config::set semantics (own keys, may
+        // legitimately appear with different keys), and one combined
+        // list stays fine.
+        let spec = parse(&["--envs=static,ge", "--system.k=4", "--train.seed=2"]).unwrap();
+        assert_eq!(spec.envs.len(), 2);
+        assert_eq!(spec.overrides.len(), 2);
     }
 
     #[test]

@@ -11,10 +11,13 @@
 //!   [`crate::control::RoundPolicy`], all world-specific randomness to a
 //!   [`crate::env::Environment`] (channels, availability, drift); local
 //!   training fans out over [`crate::par`] worker threads with
-//!   bitwise-deterministic results.
+//!   bitwise-deterministic results.  Rounds execute through the
+//!   step-wise [`RoundDriver`] (`driver.step()? -> RoundReport`), which
+//!   embedders — and the `exp` session engine's streaming observers —
+//!   drive incrementally; [`Server::run`] is a thin loop over it.
 
 mod server;
 mod trainer;
 
-pub use server::{Server, SimMode};
+pub use server::{RoundDriver, RoundReport, Server, SimMode};
 pub use trainer::{Evaluator, LocalTrainer, LocalUpdate};

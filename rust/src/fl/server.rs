@@ -249,7 +249,7 @@ impl Server {
         lr as f32
     }
 
-    /// Run the full training horizon.
+    /// Run the full training horizon: a thin loop over [`RoundDriver`].
     pub fn run(&mut self) -> Result<()> {
         self.run_with_timeout(None)
     }
@@ -259,22 +259,30 @@ impl Server {
     /// `--cell_timeout_s` guard rail fails loudly instead of silently
     /// truncating a cell's series.
     pub fn run_with_timeout(&mut self, timeout_s: Option<f64>) -> Result<()> {
-        let t0 = std::time::Instant::now();
-        for t in 0..self.cfg.train.rounds {
-            if let Some(limit) = timeout_s {
-                if t0.elapsed().as_secs_f64() > limit {
-                    anyhow::bail!(
-                        "cell timed out after {:.1}s wall-clock ({}/{} rounds done); \
-                         raise --cell_timeout_s or shrink the cell",
-                        t0.elapsed().as_secs_f64(),
-                        t,
-                        self.cfg.train.rounds
-                    );
-                }
-            }
-            self.round(t)?;
+        self.driver_with_timeout(timeout_s).finish()
+    }
+
+    /// Step-wise round execution for embedders: the driver owns the
+    /// cursor, so callers advance the horizon one round at a time
+    /// ([`RoundDriver::step`]) and observe every [`RoundReport`] as it
+    /// lands — the substrate of the streaming `exp::Observer` events and
+    /// of future pipelined/service modes that interleave control solves
+    /// with training.  Picks up where the recorder stands, so a driver
+    /// can be re-created mid-horizon.
+    pub fn driver(&mut self) -> RoundDriver<'_> {
+        self.driver_with_timeout(None)
+    }
+
+    /// [`Server::driver`] with a wall-clock budget [s]: a step past the
+    /// budget fails loudly (the `--cell_timeout_s` contract).
+    pub fn driver_with_timeout(&mut self, timeout_s: Option<f64>) -> RoundDriver<'_> {
+        let next = self.recorder.rounds.len();
+        RoundDriver {
+            server: self,
+            next,
+            started: std::time::Instant::now(),
+            timeout_s,
         }
-        Ok(())
     }
 
     /// Execute one communication round: the eight-stage pipeline.
@@ -492,6 +500,81 @@ impl Server {
         }
         self.recorder.push(rec);
         Ok(())
+    }
+}
+
+/// One executed round, as returned by [`RoundDriver::step`]: the round
+/// index plus a copy of the ledger entry the recorder just captured.
+#[derive(Clone, Debug)]
+pub struct RoundReport {
+    pub round: usize,
+    pub record: RoundRecord,
+}
+
+/// Incremental round execution over a borrowed [`Server`].
+///
+/// [`Server::run`] is a thin loop over this driver; embedders (and the
+/// `exp` session engine) call [`RoundDriver::step`] themselves to
+/// interleave rounds with their own work — streaming metrics out, mixing
+/// simulated rounds with external control traffic, or overlapping the
+/// next round's control solve with the current round's training.  The
+/// driver never changes *what* a round computes (it calls the same
+/// [`Server::round`]), so stepping and running are bitwise-identical
+/// (pinned by `tests/session_parity.rs`).
+pub struct RoundDriver<'s> {
+    server: &'s mut Server,
+    /// Next round index to execute (== rounds recorded so far).
+    next: usize,
+    started: std::time::Instant,
+    timeout_s: Option<f64>,
+}
+
+impl RoundDriver<'_> {
+    /// Execute the next round and return its report, or `None` once the
+    /// configured horizon is complete.  With a timeout, a step past the
+    /// budget is a loud error naming the progress made.
+    pub fn step(&mut self) -> Result<Option<RoundReport>> {
+        if self.next >= self.server.cfg.train.rounds {
+            return Ok(None);
+        }
+        if let Some(limit) = self.timeout_s {
+            if self.started.elapsed().as_secs_f64() > limit {
+                anyhow::bail!(
+                    "cell timed out after {:.1}s wall-clock ({}/{} rounds done); \
+                     raise --cell_timeout_s or shrink the cell",
+                    self.started.elapsed().as_secs_f64(),
+                    self.next,
+                    self.server.cfg.train.rounds
+                );
+            }
+        }
+        let t = self.next;
+        self.server.round(t)?;
+        self.next += 1;
+        let record = self
+            .server
+            .recorder
+            .rounds
+            .last()
+            .expect("round() pushes a record")
+            .clone();
+        Ok(Some(RoundReport { round: t, record }))
+    }
+
+    /// Drive the remaining rounds to completion.
+    pub fn finish(mut self) -> Result<()> {
+        while self.step()?.is_some() {}
+        Ok(())
+    }
+
+    /// Rounds executed so far (across the whole server, not this driver).
+    pub fn rounds_done(&self) -> usize {
+        self.next
+    }
+
+    /// The configured horizon `T`.
+    pub fn horizon(&self) -> usize {
+        self.server.cfg.train.rounds
     }
 }
 
@@ -837,6 +920,50 @@ mod tests {
             sum_adv > sum_static,
             "adv should slow greedy: {sum_adv} vs {sum_static}"
         );
+    }
+
+    #[test]
+    fn round_driver_steps_match_run_and_resume_mid_horizon() {
+        let cfg = base_cfg(Policy::Lroa, 20);
+        let mut via_run = Server::new(cfg.clone(), SimMode::ControlPlaneOnly).unwrap();
+        via_run.run().unwrap();
+
+        // Step-wise execution, with the driver dropped and re-created in
+        // the middle: the cursor picks up from the recorder.
+        let mut via_driver = Server::new(cfg, SimMode::ControlPlaneOnly).unwrap();
+        let mut reports = Vec::new();
+        {
+            let mut d = via_driver.driver();
+            assert_eq!(d.horizon(), 20);
+            for _ in 0..7 {
+                reports.push(d.step().unwrap().expect("horizon not reached"));
+            }
+            assert_eq!(d.rounds_done(), 7);
+        }
+        {
+            let mut d = via_driver.driver();
+            assert_eq!(d.rounds_done(), 7, "driver resumes at the recorder");
+            while let Some(rep) = d.step().unwrap() {
+                reports.push(rep);
+            }
+            assert!(d.step().unwrap().is_none(), "horizon stays exhausted");
+        }
+
+        assert_eq!(reports.len(), 20);
+        assert_eq!(via_run.recorder.rounds.len(), via_driver.recorder.rounds.len());
+        for (i, ((a, b), rep)) in via_run
+            .recorder
+            .rounds
+            .iter()
+            .zip(&via_driver.recorder.rounds)
+            .zip(&reports)
+            .enumerate()
+        {
+            assert_eq!(a.round_time_s, b.round_time_s, "round {i}");
+            assert_eq!(a.objective, b.objective, "round {i}");
+            assert_eq!(rep.round, i);
+            assert_eq!(rep.record.round_time_s, b.round_time_s, "report {i}");
+        }
     }
 
     #[test]

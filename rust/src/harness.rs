@@ -8,14 +8,14 @@
 //! and the other `[env]` knobs), quick-mode config scaling, CSV emission
 //! under `runs/<figure>/`, and the comparison tables the paper reports.
 //! Per-policy runs share identical channel realizations (the paper fixes
-//! the channel seed across schemes); the sweep grid itself is expanded
-//! and executed by `exp`.
+//! the channel seed across schemes); each figure's grid is one
+//! [`crate::exp::Experiment`] ([`Args::experiment`]) run through the
+//! session engine.
 
 use std::path::{Path, PathBuf};
 
-use crate::config::{Config, Policy};
-use crate::exp::{self, EnvSel, Scenario, ScenarioResult};
-use crate::fl::SimMode;
+use crate::config::Config;
+use crate::exp::{self, EnvSel, Experiment, ScenarioResult, SweepSpec};
 use crate::json::{obj, Json};
 use crate::metrics::Recorder;
 use crate::Result;
@@ -69,6 +69,7 @@ impl Args {
             envs_err: None,
             raw: Vec::new(),
         };
+        let mut envs_seen = false;
         let mut it = argv.into_iter().peekable();
         while let Some(arg) = it.next() {
             if arg == "--full" {
@@ -107,10 +108,21 @@ impl Args {
                 "--dataset" => a.dataset = Some(value),
                 "--repeats" => a.repeats = value.parse().unwrap_or(1),
                 "--threads" => a.threads = value.parse().unwrap_or(0),
-                "--envs" => match EnvSel::parse_list(&value) {
-                    Ok(envs) => a.envs = envs,
-                    Err(e) => a.envs_err = Some(e.to_string()),
-                },
+                "--envs" => {
+                    // Repeats must error loudly, never last-one-wins: a
+                    // second --envs silently shrinking the grid to its
+                    // own list is exactly the kind of half-run a figure
+                    // pipeline cannot detect.
+                    if envs_seen {
+                        a.envs_err = Some("--envs given more than once".into());
+                    } else {
+                        envs_seen = true;
+                        match EnvSel::parse_list(&value) {
+                            Ok(envs) => a.envs = envs,
+                            Err(e) => a.envs_err = Some(e.to_string()),
+                        }
+                    }
+                }
                 _ => unreachable!("key list above"),
             }
         }
@@ -183,29 +195,18 @@ impl Args {
         PathBuf::from("runs").join(figure)
     }
 
-    /// Run a sweep's scenarios through the exp engine at this invocation's
-    /// pool width.
-    pub fn run(&self, scenarios: Vec<Scenario>) -> Result<Vec<ScenarioResult>> {
-        exp::run_scenarios(scenarios, self.threads)
+    /// An [`Experiment`] over `spec` under this invocation's conventions:
+    /// the quick-mode base-config scaling ([`Args::config`], which also
+    /// applies the raw `--section.key=value` overrides), this
+    /// invocation's pool width, and per-cell progress lines.  Examples
+    /// either `.run()` it directly or layer `.base_with(..)` /
+    /// `.observe(..)` on top first.
+    pub fn experiment(&self, spec: SweepSpec) -> Experiment<'_> {
+        Experiment::from_spec(spec)
+            .base_with(move |ds| self.config(ds))
+            .threads(self.threads)
+            .observe(exp::ProgressObserver::new())
     }
-}
-
-/// Run one policy to completion and return its recorder (a one-cell
-/// sweep through the exp engine).
-pub fn run_policy(mut cfg: Config, policy: Policy, mode: SimMode, label: &str) -> Result<Recorder> {
-    cfg.train.policy = policy;
-    let scenario = Scenario {
-        label: label.to_string(),
-        group: label.to_string(),
-        cfg,
-        mode,
-        csv_dir: None,
-        timeout_s: None,
-        regret_vs: None,
-        regret_vs_e: None,
-    };
-    let mut results = exp::run_scenarios(vec![scenario], 1)?;
-    Ok(results.remove(0).recorder)
 }
 
 /// Strip scenario results down to their recorders (scenario order kept).
@@ -348,6 +349,19 @@ mod tests {
         assert_eq!(a.envs.len(), 2);
         assert_eq!(a.envs[0].trace_path.as_deref(), Some("logs/a.csv"));
         assert!(Args::from_vec(vec![]).envs.is_empty());
+    }
+
+    #[test]
+    fn repeated_envs_flag_errors_instead_of_last_one_wins() {
+        let a = Args::from_vec(argv(&["--envs=static", "--envs=ge"]));
+        assert!(a.validated_envs().is_err(), "repeat must be loud");
+        assert!(a.reject_envs("fig3").is_err());
+        // The two-token form repeats the same way.
+        let a = Args::from_vec(argv(&["--envs", "static", "--envs", "ge"]));
+        assert!(a.validated_envs().is_err());
+        // One combined comma list stays fine.
+        let a = Args::from_vec(argv(&["--envs=static,ge"]));
+        assert_eq!(a.validated_envs().unwrap().len(), 2);
     }
 
     #[test]

@@ -34,7 +34,9 @@
 //! | [`runtime`] | PJRT client, artifact manifest, typed executables |
 //! | [`fl`] | federated training loop: staged server pipeline, local trainer, evaluator |
 //! | [`par`] | deterministic scoped-thread fan-out (client training, scenario pool) |
-//! | [`exp`] | declarative scenario sweeps: grid expansion, parallel runner, seed stats, oracle-regret grids |
+//! | [`exp`] | declarative scenario sweeps: grid expansion, seed stats, oracle-regret grids |
+//! | [`exp::session`] | the embeddable [`exp::Experiment`] builder → [`exp::Session`] engine behind `lroa sweep`/`regret`, the harness, and the examples |
+//! | [`exp::observer`] | streaming [`exp::Observer`] sinks: cell CSVs + resume sidecars, manifest, summary.json, progress, `--json` |
 //! | [`harness`] | figure-example CLI + reporting glue on top of `exp` |
 //! | [`metrics`] | run recorder, CSV emission, summaries |
 //! | [`bench`] | self-contained timing harness used by `cargo bench` |
@@ -58,16 +60,11 @@ pub mod system;
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;
 
-/// Shared helpers for in-crate unit tests (integration tests have their
-/// own copy in `tests/common.rs` — they cannot see `cfg(test)` items).
+/// Shared helpers for in-crate unit tests.  The single source of truth
+/// is `tests/common.rs` — the integration-test targets pull it in as
+/// `mod common;` and the library includes the same file here (they
+/// cannot see each other's items), so the fixture paths can never drift
+/// between the two test surfaces.
 #[cfg(test)]
-pub(crate) mod test_util {
-    /// Absolute path of the recorded-trace fixture
-    /// (`tests/fixtures/campus.csv`; schema in `tests/fixtures/README.md`).
-    pub(crate) fn campus_fixture() -> String {
-        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
-            .join("tests/fixtures/campus.csv")
-            .to_string_lossy()
-            .into_owned()
-    }
-}
+#[path = "../../tests/common.rs"]
+pub(crate) mod test_util;

@@ -26,10 +26,9 @@
 use std::path::Path;
 
 use lroa::config::Config;
-use lroa::exp::{self, Scenario, SweepSpec};
+use lroa::exp::{self, Experiment, SweepSpec};
 use lroa::fl::{Server, SimMode};
 use lroa::json::{obj, Json};
-use lroa::metrics::{num_or_null, Recorder};
 use lroa::runtime::Manifest;
 
 const HELP: &str = "\
@@ -68,6 +67,10 @@ SWEEP / REGRET FLAGS (all --key=value unless noted):
     --resume         (sweep only, bare flag: skip cells whose CSV already
                       exists in --out; skipped cells are re-read so
                       summary.json still aggregates the full grid)
+    --json           (bare flag: stdout carries exactly one JSON object —
+                      the seed-aggregated grid summary, same group fields
+                      as summary.json — and all human output moves to
+                      stderr; the machine-readable sibling of the table)
 
 ENVIRONMENTS (the --envs axis / --env.kind override):
     static  the paper's IID exponential channel, always-on fleet (default)
@@ -136,6 +139,7 @@ fn run(mode: SimMode, args: &[String]) -> lroa::Result<()> {
     let out_dir = std::path::PathBuf::from(&cfg.out_dir).join("cli");
     let mut server = Server::new(cfg, mode)?;
     println!("lambda = {:.4e}, V = {:.4e}", server.lambda, server.v);
+    // Server::run is itself a thin loop over the step-wise RoundDriver.
     server.run()?;
     let rec = &server.recorder;
     println!(
@@ -151,167 +155,88 @@ fn run(mode: SimMode, args: &[String]) -> lroa::Result<()> {
     Ok(())
 }
 
-fn sweep(args: &[String]) -> lroa::Result<()> {
-    let spec = SweepSpec::from_cli(args)?;
-    let scenarios = spec.expand()?;
-    anyhow::ensure!(!scenarios.is_empty(), "sweep expanded to zero scenarios");
-    println!(
-        "sweep: {} scenarios ({} groups), pool width {}",
-        scenarios.len(),
-        scenarios
-            .iter()
-            .map(|s| s.group.as_str())
-            .collect::<std::collections::BTreeSet<_>>()
-            .len(),
-        if spec.threads == 0 { "auto".to_string() } else { spec.threads.to_string() },
-    );
-
-    // Streaming CSVs + resume key on the cell label: duplicates would
-    // race on the same file, so reject them up front.
-    {
-        let mut seen = std::collections::BTreeSet::new();
-        for s in &scenarios {
-            anyhow::ensure!(
-                seen.insert(s.label.as_str()),
-                "sweep: duplicate cell label {:?} (repeated axis value, or an \
-                 override clobbering a swept axis?)",
-                s.label
-            );
-        }
-    }
-
-    let dir = std::path::PathBuf::from(&spec.out_dir);
-    std::fs::create_dir_all(&dir)?;
-    let manifest_path = dir.join("manifest.json");
-
-    // The grid manifest covers *every* cell and is written before any
-    // cell runs, so crashed or resumed sweeps still document their grid.
-    std::fs::write(&manifest_path, exp::manifest_json(&scenarios).to_string())?;
-    println!("wrote {}", manifest_path.display());
-
-    // Resume: a cell is done only if its CSV exists under --out AND its
-    // `.hash` sidecar — written by the runner at cell *completion* —
-    // matches this cell's fingerprint (sim mode + config hash), so stale
-    // CSVs from an older config (different --rounds, --mode, knobs ...)
-    // are re-run, never silently kept.  Finished cells are *re-read*
-    // from their CSVs (cheap: no simulation), so summary.json always
-    // aggregates the full grid — a resumed invocation is no longer a
-    // second-class run with partial groups.
-    let mut resumed: Vec<(usize, exp::ScenarioResult)> = Vec::new();
-    let mut to_run: Vec<(usize, Scenario)> = Vec::new();
-    if spec.resume {
-        for (idx, s) in scenarios.into_iter().enumerate() {
-            let csv = dir.join(format!("{}.csv", s.label));
-            let done = csv.exists()
-                && std::fs::read_to_string(dir.join(format!("{}.hash", s.label)))
-                    .map(|h| h.trim() == s.fingerprint())
-                    .unwrap_or(false);
-            if done {
-                let mut recorder = Recorder::read_csv(&csv)?;
-                recorder.label = s.label.clone();
-                resumed.push((
-                    idx,
-                    exp::ScenarioResult {
-                        scenario: s,
-                        recorder,
-                        wall_s: 0.0,
-                    },
-                ));
-            } else {
-                to_run.push((idx, s));
-            }
-        }
-        println!(
-            "resume: skipping {} cells with existing CSVs (re-read for the \
-             aggregate), running {}",
-            resumed.len(),
-            to_run.len()
-        );
-        if to_run.is_empty() {
-            println!("resume: nothing left to run");
-        }
+/// Human chrome goes to stdout normally, to stderr when `--json` owns
+/// stdout (which must then carry exactly one JSON object).
+fn say(json_out: bool, line: &str) {
+    if json_out {
+        eprintln!("{line}");
     } else {
-        to_run = scenarios.into_iter().enumerate().collect();
+        println!("{line}");
     }
-    let skipped = resumed.len();
-
-    // Each cell's CSV streams out as it completes, so a killed grid is
-    // resumable from exactly where it stopped.
-    for (_, s) in &mut to_run {
-        s.csv_dir = Some(dir.clone());
-    }
-    let (idxs, run_scenarios): (Vec<usize>, Vec<Scenario>) = to_run.into_iter().unzip();
-    let fresh = exp::run_scenarios(run_scenarios, spec.threads)?;
-
-    // Stitch resumed + fresh results back into grid order.
-    let mut combined = resumed;
-    combined.extend(idxs.into_iter().zip(fresh));
-    combined.sort_by_key(|(i, _)| *i);
-    let results: Vec<exp::ScenarioResult> = combined.into_iter().map(|(_, r)| r).collect();
-
-    let groups = exp::summarize_groups(&results);
-    write_summary(&dir, &results, &groups, skipped)?;
-    if skipped > 0 {
-        println!(
-            "note: {} resumed cells were aggregated from their CSVs; \
-             summary.json covers the full {}-cell grid",
-            skipped,
-            results.len()
-        );
-    }
-
-    print_group_table(&groups, false);
-    println!("\nCSV + summary.json under {}", dir.display());
-    Ok(())
 }
 
-/// The machine-readable aggregate bundle shared by `sweep` and `regret`.
-fn write_summary(
+/// The `lroa sweep`/`lroa regret` observer stack: the manifest lands at
+/// grid start (before any cell runs, so crashed or resumed grids still
+/// document themselves), each cell's CSV + resume sidecar streams out as
+/// it completes, and summary.json aggregates the full grid at the end —
+/// each sink one observer.
+fn attach_cli_observers<'a>(
+    experiment: Experiment<'a>,
     dir: &std::path::Path,
-    results: &[exp::ScenarioResult],
-    groups: &[exp::GroupSummary],
-    resumed_cells: usize,
-) -> lroa::Result<()> {
-    let run_summaries: Vec<Json> = results.iter().map(|r| r.recorder.summary_json()).collect();
-    let group_json: Vec<Json> = groups
-        .iter()
-        .map(|g| {
-            obj(vec![
-                ("group", Json::Str(g.group.clone())),
-                ("runs", Json::Num(g.runs as f64)),
-                ("total_time_s_mean", num_or_null(g.total_time_s.mean)),
-                ("total_time_s_std", num_or_null(g.total_time_s.std)),
-                ("final_accuracy_mean", num_or_null(g.final_accuracy.mean)),
-                ("final_regret_mean", num_or_null(g.final_regret.mean)),
-                ("final_regret_std", num_or_null(g.final_regret.std)),
-                (
-                    "final_regret_online_mean",
-                    num_or_null(g.final_regret_online.mean),
-                ),
-                (
-                    "final_regret_online_std",
-                    num_or_null(g.final_regret_online.std),
-                ),
-                (
-                    "final_regret_budget_mean",
-                    num_or_null(g.final_regret_budget.mean),
-                ),
-                (
-                    "final_regret_budget_std",
-                    num_or_null(g.final_regret_budget.std),
-                ),
-            ])
-        })
-        .collect();
-    std::fs::write(
-        dir.join("summary.json"),
-        obj(vec![
-            ("groups", Json::Arr(group_json)),
-            ("runs", Json::Arr(run_summaries)),
-            ("resumed_cells", Json::Num(resumed_cells as f64)),
-        ])
-        .to_string(),
-    )?;
+    json_out: bool,
+    rewrite_final: bool,
+) -> Experiment<'a> {
+    let csv = if rewrite_final {
+        exp::CsvObserver::new(dir).rewrite_final()
+    } else {
+        exp::CsvObserver::new(dir)
+    };
+    let mut experiment = experiment
+        .out_dir(dir)
+        .observe(csv)
+        .observe(exp::SummaryObserver::new(dir));
+    if json_out {
+        experiment = experiment
+            .observe(exp::ManifestObserver::new(dir).quiet())
+            .observe(exp::ProgressObserver::new().quiet())
+            .observe(exp::JsonObserver::new());
+    } else {
+        experiment = experiment
+            .observe(exp::ManifestObserver::new(dir))
+            .observe(exp::ProgressObserver::new());
+    }
+    experiment
+}
+
+fn sweep(args: &[String]) -> lroa::Result<()> {
+    let spec = SweepSpec::from_cli(args)?;
+    let json_out = spec.json;
+    let threads = spec.threads;
+    let dir = std::path::PathBuf::from(&spec.out_dir);
+
+    let experiment = attach_cli_observers(Experiment::from_spec(spec), &dir, json_out, false);
+    let session = experiment.build()?;
+    say(
+        json_out,
+        &format!(
+            "sweep: {} scenarios ({} groups), pool width {}",
+            session.cells().len(),
+            session
+                .cells()
+                .iter()
+                .map(|s| s.group.as_str())
+                .collect::<std::collections::BTreeSet<_>>()
+                .len(),
+            if threads == 0 { "auto".to_string() } else { threads.to_string() },
+        ),
+    );
+
+    let report = session.run()?;
+    if report.resumed_cells > 0 {
+        say(
+            json_out,
+            &format!(
+                "note: {} resumed cells were aggregated from their CSVs; \
+                 summary.json covers the full {}-cell grid",
+                report.resumed_cells,
+                report.results.len()
+            ),
+        );
+    }
+    if !json_out {
+        print_group_table(&report.groups, false);
+    }
+    say(json_out, &format!("\nCSV + summary.json under {}", dir.display()));
     Ok(())
 }
 
@@ -364,68 +289,56 @@ fn regret(args: &[String]) -> lroa::Result<()> {
     if !args.iter().any(|a| a.starts_with("--out=")) {
         spec.out_dir = "runs/regret".into();
     }
-    let scenarios = exp::regret::plan(&spec)?;
-    println!(
-        "regret: {} cells ({} oracle + oracle-e anchors), pool width {}",
-        scenarios.len(),
-        scenarios
-            .iter()
-            .filter(|s| exp::regret::is_anchor(s.cfg.train.policy))
-            .count(),
-        if spec.threads == 0 { "auto".to_string() } else { spec.threads.to_string() },
-    );
-    {
-        let mut seen = std::collections::BTreeSet::new();
-        for s in &scenarios {
-            anyhow::ensure!(
-                seen.insert(s.label.as_str()),
-                "regret: duplicate cell label {:?} (repeated axis value, or an \
-                 override clobbering a swept axis?)",
-                s.label
-            );
-        }
-    }
-
+    let json_out = spec.json;
+    let threads = spec.threads;
     let dir = std::path::PathBuf::from(&spec.out_dir);
-    std::fs::create_dir_all(&dir)?;
-    let manifest_path = dir.join("manifest.json");
-    // Written before any cell runs: a crashed grid still documents
-    // itself, anchors (`regret_vs`) and CSV schema (`columns`) included.
-    std::fs::write(&manifest_path, exp::manifest_json(&scenarios).to_string())?;
-    println!("wrote {}", manifest_path.display());
 
-    // Cells stream raw CSVs as they complete (regret column still
-    // empty), so a crashed or timed-out grid leaves every finished
-    // cell's evidence on disk instead of discarding the whole run ...
-    let mut scenarios = scenarios;
-    for s in &mut scenarios {
-        s.csv_dir = Some(dir.clone());
+    // Same Experiment pipeline as `sweep`, plus the two clairvoyant
+    // anchors per environment stream.  Cells stream *raw* CSVs as they
+    // complete (decomposition columns still empty), so a crashed or
+    // timed-out grid keeps every finished cell's evidence; the
+    // `rewrite_final` pass lands the populated columns once the whole
+    // grid is in, so a *completed* run never ships a CSV without them.
+    let experiment = attach_cli_observers(
+        Experiment::from_spec(spec).anchors(exp::Anchors::Both),
+        &dir,
+        json_out,
+        true,
+    );
+    let session = experiment.build()?;
+    say(
+        json_out,
+        &format!(
+            "regret: {} cells ({} oracle + oracle-e anchors), pool width {}",
+            session.cells().len(),
+            session
+                .cells()
+                .iter()
+                .filter(|s| exp::regret::is_anchor(s.cfg.train.policy))
+                .count(),
+            if threads == 0 { "auto".to_string() } else { threads.to_string() },
+        ),
+    );
+
+    let report = session.run()?;
+    if !json_out {
+        print_group_table(&report.groups, true);
     }
-    // ... and once the whole grid is in, every CSV is rewritten with the
-    // regret column populated, so a *completed* run never ships one
-    // without it.
-    let results = exp::regret::run(scenarios, spec.threads)?;
-    for r in &results {
-        r.recorder
-            .write_csv(&dir.join(format!("{}.csv", r.recorder.label)))?;
-    }
 
-    let groups = exp::summarize_groups(&results);
-    write_summary(&dir, &results, &groups, 0)?;
-    print_group_table(&groups, true);
-
-    let min_regret = exp::regret::min_final_regret(&results);
-    println!(
+    let min_regret = exp::regret::min_final_regret(&report.results);
+    let check = format!(
         "\noracle lower-bound check: min final regret across online cells = {min_regret:.4}"
     );
+    say(json_out, &check);
     if min_regret < -1e-9 {
-        println!(
+        say(
+            json_out,
             "warning: a cell finished faster than its oracle anchor — only \
              possible under the adaptive `adv` environment, where the \
-             anchor faces its own adversary stream"
+             anchor faces its own adversary stream",
         );
     }
-    println!("\nCSV + summary.json under {}", dir.display());
+    say(json_out, &format!("\nCSV + summary.json under {}", dir.display()));
     Ok(())
 }
 

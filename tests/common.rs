@@ -1,6 +1,9 @@
 //! Helpers shared by the integration-test targets (each pulls this in
 //! with `mod common;` — explicit `[[test]]` targets in Cargo.toml keep
-//! Cargo from treating this file as a test target of its own).
+//! Cargo from treating this file as a test target of its own) **and** by
+//! the library's in-crate unit tests, which include the same file as
+//! `lroa::test_util` (`#[path]` module in `rust/src/lib.rs`).  One
+//! source, two inclusion paths: the fixture locations can never drift.
 
 /// Absolute path of the recorded-trace fixture
 /// (`tests/fixtures/campus.csv`; schema in `tests/fixtures/README.md`).

@@ -1,0 +1,367 @@
+//! Golden parity tests for the `exp::session` redesign: the
+//! Experiment/Session/Observer pipeline must be a pure re-plumbing of
+//! the pre-redesign entry paths (`run_scenarios` + the CLI's inline CSV
+//! / summary / manifest emission) — same files, same bytes.
+//!
+//! * sweep + regret grids run through an [`Experiment`] produce CSV,
+//!   `.hash`, `summary.json`, and `manifest.json` files **bitwise
+//!   identical** to the pre-redesign pipeline (replicated here from the
+//!   old `lroa sweep`/`lroa regret` assembly code), at ≥ 2 scenario-pool
+//!   widths;
+//! * stepping a server through [`lroa::fl::RoundDriver`] is bitwise
+//!   equivalent to `Server::run`;
+//! * observer events arrive per cell in round order at any pool width;
+//! * a resumed session re-reads finished cells and re-runs stale ones.
+//!
+//! Scope note: `run_scenarios`/`Server::run` are themselves thin
+//! wrappers over the session engine after this redesign, so the
+//! genuinely *independent* references here are the file-assembly legs
+//! (`reference_summary`, replicated verbatim from the old CLI, and the
+//! manifest/CSV byte comparisons).  Absolute per-round trajectories are
+//! pinned independently by the pre-existing golden suites
+//! (`policy_parity.rs`, `env_determinism.rs`, `regret.rs`).
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use lroa::config::{Config, EnvKind, Policy};
+use lroa::exp::{self, Anchors, EnvSel, Experiment, Observer, Scenario, SweepSpec};
+use lroa::fl::{Server, SimMode};
+use lroa::json::{obj, Json};
+use lroa::metrics::num_or_null;
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("lroa_session_parity_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn sweep_spec() -> SweepSpec {
+    SweepSpec {
+        datasets: vec!["cifar".into()],
+        policies: vec![Policy::Lroa, Policy::UniformStatic],
+        envs: vec![EnvSel::from(EnvKind::Static), EnvSel::from(EnvKind::GilbertElliott)],
+        seeds: vec![1, 2],
+        rounds: Some(12),
+        overrides: vec!["--system.num_devices=12".into()],
+        ..SweepSpec::default()
+    }
+}
+
+/// The pre-redesign `summary.json` assembly, replicated verbatim from
+/// the old `lroa` CLI (`write_summary`): the independent reference the
+/// session's `SummaryObserver` must match byte for byte.
+fn reference_summary(
+    results: &[exp::ScenarioResult],
+    groups: &[exp::GroupSummary],
+    resumed_cells: usize,
+) -> String {
+    let run_summaries: Vec<Json> = results.iter().map(|r| r.recorder.summary_json()).collect();
+    let group_json: Vec<Json> = groups
+        .iter()
+        .map(|g| {
+            obj(vec![
+                ("group", Json::Str(g.group.clone())),
+                ("runs", Json::Num(g.runs as f64)),
+                ("total_time_s_mean", num_or_null(g.total_time_s.mean)),
+                ("total_time_s_std", num_or_null(g.total_time_s.std)),
+                ("final_accuracy_mean", num_or_null(g.final_accuracy.mean)),
+                ("final_regret_mean", num_or_null(g.final_regret.mean)),
+                ("final_regret_std", num_or_null(g.final_regret.std)),
+                (
+                    "final_regret_online_mean",
+                    num_or_null(g.final_regret_online.mean),
+                ),
+                (
+                    "final_regret_online_std",
+                    num_or_null(g.final_regret_online.std),
+                ),
+                (
+                    "final_regret_budget_mean",
+                    num_or_null(g.final_regret_budget.mean),
+                ),
+                (
+                    "final_regret_budget_std",
+                    num_or_null(g.final_regret_budget.std),
+                ),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("groups", Json::Arr(group_json)),
+        ("runs", Json::Arr(run_summaries)),
+        ("resumed_cells", Json::Num(resumed_cells as f64)),
+    ])
+    .to_string()
+}
+
+/// Compare every artifact the session wrote under `dir` against the
+/// reference results: per-cell CSV bytes, `.hash` fingerprints,
+/// `summary.json`, and `manifest.json`.
+fn assert_files_match(
+    dir: &Path,
+    planned: &[Scenario],
+    results: &[exp::ScenarioResult],
+    resumed_cells: usize,
+) {
+    let ref_dir = dir.join("reference");
+    for r in results {
+        let got = std::fs::read(dir.join(format!("{}.csv", r.recorder.label)))
+            .unwrap_or_else(|e| panic!("{}: missing session CSV: {e}", r.recorder.label));
+        let ref_path = ref_dir.join(format!("{}.csv", r.recorder.label));
+        r.recorder.write_csv(&ref_path).unwrap();
+        let want = std::fs::read(&ref_path).unwrap();
+        assert_eq!(got, want, "{}: CSV bytes diverged", r.recorder.label);
+        let hash = std::fs::read_to_string(dir.join(format!("{}.hash", r.recorder.label)))
+            .unwrap_or_else(|e| panic!("{}: missing .hash sidecar: {e}", r.recorder.label));
+        assert_eq!(hash, r.scenario.fingerprint(), "{}", r.recorder.label);
+    }
+    let manifest = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+    assert_eq!(manifest, exp::manifest_json(planned).to_string(), "manifest diverged");
+    let summary = std::fs::read_to_string(dir.join("summary.json")).unwrap();
+    let groups = exp::summarize_groups(results);
+    assert_eq!(
+        summary,
+        reference_summary(results, &groups, resumed_cells),
+        "summary.json diverged"
+    );
+}
+
+#[test]
+fn experiment_sweep_files_match_the_pre_redesign_pipeline_bitwise() {
+    for threads in [1usize, 4] {
+        let dir = fresh_dir(&format!("sweep_t{threads}"));
+        let mut spec = sweep_spec();
+        spec.threads = threads;
+
+        // The new pipeline: main.rs's `lroa sweep` observer stack.
+        let report = Experiment::from_spec(spec.clone())
+            .out_dir(&dir)
+            .observe(exp::ManifestObserver::new(&dir))
+            .observe(exp::CsvObserver::new(&dir))
+            .observe(exp::SummaryObserver::new(&dir))
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(report.results.len(), 8, "2 policies x 2 envs x 2 seeds");
+        assert_eq!(report.resumed_cells, 0);
+
+        // The pre-redesign pipeline: expand + run_scenarios, files
+        // assembled by hand exactly as the old CLI did.
+        let planned = spec.expand().unwrap();
+        let results = exp::run_scenarios(spec.expand().unwrap(), threads).unwrap();
+        assert_files_match(&dir, &planned, &results, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn experiment_regret_files_match_the_pre_redesign_pipeline_bitwise() {
+    for threads in [1usize, 2] {
+        let dir = fresh_dir(&format!("regret_t{threads}"));
+        let mut spec = SweepSpec {
+            datasets: vec!["cifar".into()],
+            policies: vec![Policy::Lroa, Policy::GreedyChannel],
+            seeds: vec![1],
+            rounds: Some(10),
+            overrides: vec!["--system.num_devices=12".into()],
+            ..SweepSpec::default()
+        };
+        spec.threads = threads;
+
+        // The new pipeline: main.rs's `lroa regret` observer stack (raw
+        // CSVs streamed per cell, rewritten with the populated
+        // decomposition columns at grid end).
+        let report = Experiment::from_spec(spec.clone())
+            .anchors(Anchors::Both)
+            .out_dir(&dir)
+            .observe(exp::ManifestObserver::new(&dir))
+            .observe(exp::CsvObserver::new(&dir).rewrite_final())
+            .observe(exp::SummaryObserver::new(&dir))
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(report.results.len(), 2 + 2, "2 online cells + 2 anchors");
+
+        // The pre-redesign pipeline: plan + run (+ the final rewrite the
+        // old CLI performed after decomposition).
+        let planned = exp::regret::plan(&spec).unwrap();
+        let results = exp::regret::run(exp::regret::plan(&spec).unwrap(), threads).unwrap();
+        // Every cell must carry populated decomposition columns in the
+        // files (not just in memory).
+        for r in &results {
+            assert!(r.recorder.rounds.iter().all(|x| !x.regret.is_nan()));
+        }
+        assert_files_match(&dir, &planned, &results, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn round_driver_stepping_is_bitwise_equivalent_to_server_run() {
+    let mut cfg = Config::for_dataset("cifar").unwrap();
+    cfg.system.num_devices = 12;
+    cfg.train.rounds = 15;
+    cfg.train.policy = Policy::Lroa;
+
+    let mut via_run = Server::new(cfg.clone(), SimMode::ControlPlaneOnly).unwrap();
+    via_run.run().unwrap();
+
+    let mut via_step = Server::new(cfg, SimMode::ControlPlaneOnly).unwrap();
+    let mut reports = Vec::new();
+    let mut driver = via_step.driver();
+    while let Some(rep) = driver.step().unwrap() {
+        reports.push(rep);
+    }
+
+    assert_eq!(reports.len(), 15);
+    assert_eq!(via_run.recorder.rounds.len(), via_step.recorder.rounds.len());
+    for (i, (a, b)) in via_run
+        .recorder
+        .rounds
+        .iter()
+        .zip(&via_step.recorder.rounds)
+        .enumerate()
+    {
+        assert_eq!(a.round_time_s, b.round_time_s, "round {i}");
+        assert_eq!(a.objective, b.objective, "round {i}");
+        assert_eq!(a.mean_energy_j, b.mean_energy_j, "round {i}");
+        assert_eq!(a.mean_queue, b.mean_queue, "round {i}");
+        assert_eq!(reports[i].round, i);
+        assert_eq!(reports[i].record.round_time_s, b.round_time_s, "report {i}");
+    }
+
+    // The strongest form: identical CSV bytes.
+    let dir = fresh_dir("driver");
+    let (pa, pb) = (dir.join("run.csv"), dir.join("step.csv"));
+    via_run.recorder.write_csv(&pa).unwrap();
+    via_step.recorder.write_csv(&pb).unwrap();
+    assert_eq!(std::fs::read(&pa).unwrap(), std::fs::read(&pb).unwrap());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Records every event it sees, tagged by cell label, through a shared
+/// handle (the session consumes the observer itself).
+#[derive(Clone, Default)]
+struct Recording(Arc<Mutex<Vec<(String, String)>>>);
+
+impl Observer for Recording {
+    fn wants_rounds(&self) -> bool {
+        true
+    }
+
+    fn on_grid_start(&mut self, cells: &[Scenario]) -> lroa::Result<()> {
+        self.0
+            .lock()
+            .unwrap()
+            .push(("<grid>".into(), format!("start:{}", cells.len())));
+        Ok(())
+    }
+
+    fn on_cell_start(&mut self, ev: &exp::CellStart<'_>) {
+        self.0
+            .lock()
+            .unwrap()
+            .push((ev.label.to_string(), "cell_start".into()));
+    }
+
+    fn on_round(&mut self, ev: &exp::RoundEvent<'_>) {
+        self.0
+            .lock()
+            .unwrap()
+            .push((ev.label.to_string(), format!("round:{}", ev.round)));
+    }
+
+    fn on_cell_done(&mut self, ev: &exp::CellResult<'_>) -> lroa::Result<()> {
+        self.0
+            .lock()
+            .unwrap()
+            .push((ev.recorder.label.clone(), "cell_done".into()));
+        Ok(())
+    }
+
+    fn on_grid_done(&mut self, summary: &exp::GridSummary<'_>) -> lroa::Result<()> {
+        self.0
+            .lock()
+            .unwrap()
+            .push(("<grid>".into(), format!("done:{}", summary.results.len())));
+        Ok(())
+    }
+}
+
+#[test]
+fn observer_events_arrive_per_cell_in_round_order_at_any_pool_width() {
+    for threads in [1usize, 4] {
+        let recording = Recording::default();
+        let events = recording.0.clone();
+        let mut cfg = Config::for_dataset("cifar").unwrap();
+        cfg.system.num_devices = 10;
+        cfg.train.rounds = 5;
+        let report = Experiment::new(cfg)
+            .policies(&[Policy::Lroa, Policy::UniformStatic])
+            .seeds(&[1, 2])
+            .threads(threads)
+            .observe(recording)
+            .run()
+            .unwrap();
+        assert_eq!(report.results.len(), 4);
+
+        let events = events.lock().unwrap();
+        let grid = "<grid>".to_string();
+        assert_eq!(events.first().unwrap(), &(grid.clone(), "start:4".to_string()));
+        assert_eq!(events.last().unwrap(), &(grid, "done:4".to_string()));
+        for r in &report.results {
+            let label = &r.recorder.label;
+            let seq: Vec<&str> = events
+                .iter()
+                .filter(|(l, _)| l == label)
+                .map(|(_, e)| e.as_str())
+                .collect();
+            let mut want = vec!["cell_start".to_string()];
+            want.extend((0..5).map(|t| format!("round:{t}")));
+            want.push("cell_done".to_string());
+            assert_eq!(seq, want, "threads={threads}, cell={label}");
+        }
+    }
+}
+
+#[test]
+fn resumed_session_re_reads_finished_cells_and_re_runs_stale_ones() {
+    let dir = fresh_dir("resume");
+    let session = |resume: bool| {
+        let mut spec = sweep_spec();
+        spec.threads = 2;
+        Experiment::from_spec(spec)
+            .out_dir(&dir)
+            .resume(resume)
+            .observe(exp::ManifestObserver::new(&dir))
+            .observe(exp::CsvObserver::new(&dir))
+            .observe(exp::SummaryObserver::new(&dir))
+            .run()
+            .unwrap()
+    };
+
+    let first = session(false);
+    assert_eq!(first.resumed_cells, 0);
+
+    // A finished grid resumes as a no-op: every cell re-read from disk,
+    // summary still covering the full grid.
+    let second = session(true);
+    assert_eq!(second.resumed_cells, 8);
+    assert_eq!(second.results.len(), 8);
+    for (a, b) in first.results.iter().zip(&second.results) {
+        assert_eq!(a.recorder.label, b.recorder.label);
+        assert_eq!(a.recorder.total_time_s(), b.recorder.total_time_s());
+    }
+    let summary = std::fs::read_to_string(dir.join("summary.json")).unwrap();
+    assert!(summary.contains("\"resumed_cells\":8"), "{summary}");
+
+    // A stale fingerprint (config drift) forces that one cell to re-run.
+    let stale = &first.results[3].recorder.label;
+    std::fs::write(dir.join(format!("{stale}.hash")), "stale").unwrap();
+    let third = session(true);
+    assert_eq!(third.resumed_cells, 7);
+    let _ = std::fs::remove_dir_all(&dir);
+}
