@@ -367,6 +367,10 @@ pub struct ControlConfig {
     pub max_inner_iters: usize,
     /// Probability floor keeping `q_n` in (0, 1].
     pub q_min: f64,
+    /// Warm-start Algorithm 2 from the previous round's fixed point
+    /// (default).  `false` restores the paper's cold midpoint/uniform
+    /// initialization every round — the parity anchor.
+    pub warm_start: bool,
 }
 
 impl Default for ControlConfig {
@@ -381,6 +385,7 @@ impl Default for ControlConfig {
             max_outer_iters: 50,
             max_inner_iters: 200,
             q_min: 1e-6,
+            warm_start: true,
         }
     }
 }
@@ -513,6 +518,13 @@ impl Config {
             val.parse::<usize>()
                 .map_err(|e| anyhow::anyhow!("bad int for {key}: {e}"))
         };
+        let b = || -> Result<bool> {
+            match val {
+                "true" | "1" | "on" | "yes" => Ok(true),
+                "false" | "0" | "off" | "no" => Ok(false),
+                _ => Err(anyhow::anyhow!("bad bool for {key}: {val:?}")),
+            }
+        };
         match key {
             "system.num_devices" => self.system.num_devices = u()?,
             "system.k" => self.system.k = u()?,
@@ -541,6 +553,7 @@ impl Config {
             "control.max_outer_iters" => self.control.max_outer_iters = u()?,
             "control.max_inner_iters" => self.control.max_inner_iters = u()?,
             "control.q_min" => self.control.q_min = f()?,
+            "control.warm_start" => self.control.warm_start = b()?,
             "train.dataset" => self.train.dataset = val.into(),
             "train.rounds" => self.train.rounds = u()?,
             "train.lr0" => self.train.lr0 = f()?,
@@ -701,6 +714,12 @@ impl Config {
         if c.train.policy != Policy::Bandit {
             c.bandit = BanditConfig::default();
         }
+        // Warm start only affects the iterative Algorithm-2 solve, which
+        // only the LROA policy runs (`solve_uniform_dynamic` is a single
+        // exact pass).
+        if c.train.policy != Policy::Lroa {
+            c.control.warm_start = ControlConfig::default().warm_start;
+        }
         let repr = format!("{c:?}");
         let mut h: u64 = 0xcbf2_9ce4_8422_2325;
         for b in repr.bytes() {
@@ -719,7 +738,7 @@ impl Config {
         let b = &self.bandit;
         format!(
             "[system] N={} K={} E={} B={:.3e} N0={} h_mean={} clip=({},{}) p=({},{}) f=({:.2e},{:.2e}) alpha={:.2e} c_n={:.2e} Ebar={} M_bits={} dl_bps={} spread={}\n\
-             [control] mu={} nu={} lambda*={} V*={} eps=({},{}) iters=({},{}) q_min={}\n\
+             [control] mu={} nu={} lambda*={} V*={} eps=({},{}) iters=({},{}) q_min={} warm_start={}\n\
              [train] dataset={} rounds={} lr0={} decay=({},{}) samples=({},{}) test={} eval_every={} seed={} policy={} snr={} threads={}\n\
              [env] kind={} ge=({},{},{}) avail=({},{}) drift=({},{},{}) trace={:?} adv=({},{})\n\
              [bandit] ucb_c={} temp={} eps={} gain_ema={} ctx_weight={}\n\
@@ -729,7 +748,7 @@ impl Config {
             s.alpha, s.cycles_per_sample, s.energy_budget_j, s.model_bits, s.downlink_bps,
             s.hardware_spread,
             c.mu, c.nu, c.lambda_explicit, c.v_explicit, c.eps_outer, c.eps_inner,
-            c.max_outer_iters, c.max_inner_iters, c.q_min,
+            c.max_outer_iters, c.max_inner_iters, c.q_min, c.warm_start,
             t.dataset, t.rounds, t.lr0, t.lr_decay_at.0, t.lr_decay_at.1,
             t.samples_per_device.0, t.samples_per_device.1, t.test_samples, t.eval_every,
             t.seed, t.policy, t.data_snr, t.train_threads,
@@ -1006,5 +1025,16 @@ mod tests {
         let mut g = f.clone();
         g.env.ge_p_good = 0.9; // live once GE is selected
         assert_ne!(f.hash_hex(), g.hash_hex());
+        // warm_start is live under the (default) LROA policy, inert for
+        // policies that never run the iterative Algorithm-2 solve.
+        assert_eq!(a.train.policy, Policy::Lroa);
+        let mut w = a.clone();
+        w.control.warm_start = false;
+        assert_ne!(a.hash_hex(), w.hash_hex());
+        let mut ws = a.clone();
+        ws.train.policy = Policy::UniformStatic;
+        let mut wt = ws.clone();
+        wt.control.warm_start = false; // inert: Uni-S never iterates
+        assert_eq!(ws.hash_hex(), wt.hash_hex());
     }
 }

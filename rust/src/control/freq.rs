@@ -6,7 +6,7 @@
 //! `f' = (Ω₁ / 2Ω₂)^{1/3} = (V q / (Q s α))^{1/3}`, clipped to
 //! `[f_min, f_max]`.
 
-use crate::system::{selection_probability, Device};
+use crate::system::{selection_probability, Device, FleetSoA};
 
 /// The unclipped stationary point `(V q / (Q s α))^{1/3}`; `+inf` when the
 /// energy price `Q s` vanishes (empty queue ⇒ run flat out).
@@ -35,6 +35,29 @@ pub fn solve_freqs(devices: &[Device], v: f64, q: &[f64], queues: &[f64], k: usi
             .zip(q.iter().zip(queues))
             .map(|(dev, (&qn, &queue))| optimal_freq(dev, v, qn, queue, k)),
     );
+}
+
+/// Theorem 2 over the SoA fleet view — the solver hot-loop variant.
+/// Same per-device arithmetic as [`solve_freqs`] (pinned bitwise by
+/// `soa_solve_matches_aos`), but reads the contiguous `alpha`/bounds
+/// slices instead of striding over `Device` structs.
+pub fn solve_freqs_soa(
+    soa: &FleetSoA,
+    v: f64,
+    q: &[f64],
+    queues: &[f64],
+    k: usize,
+    out: &mut Vec<f64>,
+) {
+    let n = soa.len();
+    assert!(q.len() == n && queues.len() == n);
+    out.clear();
+    for i in 0..n {
+        out.push(
+            stationary_freq(v, q[i], queues[i], k, soa.alpha[i])
+                .clamp(soa.f_min_hz[i], soa.f_max_hz[i]),
+        );
+    }
 }
 
 /// The per-device P2.1.1 objective (used by tests and the alternating
@@ -148,5 +171,25 @@ mod tests {
         for i in 0..5 {
             assert_eq!(out[i], optimal_freq(&devs[i], 1e5, q[i], queues[i], 2));
         }
+    }
+
+    #[test]
+    fn soa_solve_matches_aos() {
+        let devs: Vec<Device> = (0..5)
+            .map(|id| Device {
+                id,
+                alpha: 2e-28 * (1.0 + id as f64 * 0.2),
+                ..dev()
+            })
+            .collect();
+        let weights = [0.2; 5];
+        let q = [0.1, 0.2, 0.3, 0.2, 0.2];
+        let queues = [0.0, 1.0, 5.0, 10.0, 0.5];
+        let mut soa = FleetSoA::new();
+        soa.fill(&devs, &weights, 2, 1e5, 1.0);
+        let (mut aos, mut via_soa) = (Vec::new(), Vec::new());
+        solve_freqs(&devs, 1e5, &q, &queues, 2, &mut aos);
+        solve_freqs_soa(&soa, 1e5, &q, &queues, 2, &mut via_soa);
+        assert_eq!(aos, via_soa, "Theorem 2 SoA port must be bitwise identical");
     }
 }

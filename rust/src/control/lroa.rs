@@ -3,13 +3,22 @@
 //! Outer loop alternates the closed-form `f` block (Theorem 2), the
 //! root-found `p` block (Theorem 3) and the SUM `q` block (P2.2) until the
 //! joint iterate stabilizes within `ε₀`.  Initialization follows the
-//! paper: `f⁰ = (f_min+f_max)/2`, `p⁰ = (p_min+p_max)/2`, `q⁰ = 1/N`.
+//! paper: `f⁰ = (f_min+f_max)/2`, `p⁰ = (p_min+p_max)/2`, `q⁰ = 1/N` —
+//! unless `[control] warm_start` (default on) lets the solver resume
+//! from the previous round's fixed point, which typically converges in
+//! 1–2 outer iterations instead of re-deriving the same point from the
+//! midpoint every round.
+//!
+//! The hot path is allocation-free: the fleet is mirrored once per round
+//! into a [`FleetSoA`] view and every outer iteration runs the Theorem
+//! 2/3 kernels, the cost model and the SUM loop over slices backed by
+//! solver-owned scratch.
 
 use std::time::Instant;
 
 use super::{freq, power, sum};
 use crate::config::{ControlConfig, SystemConfig};
-use crate::system::{selection_probability, Device, RoundCosts};
+use crate::system::{round_costs_into, selection_probability, Device, FleetSoA, RoundCosts};
 
 /// Per-round control decisions for the whole fleet.
 #[derive(Clone, Debug)]
@@ -24,7 +33,14 @@ pub struct Controls {
 
 impl Controls {
     /// Midpoint/uniform initialization (Algorithm 2 line 1).
+    ///
+    /// Panics on an empty candidate set: `1/N` with `N = 0` would
+    /// silently seed the solver with NaN probabilities.
     pub fn midpoint(devices: &[Device]) -> Controls {
+        assert!(
+            !devices.is_empty(),
+            "Controls::midpoint: empty candidate set (q = 1/N is undefined for N = 0)"
+        );
         let n = devices.len();
         Controls {
             f_hz: devices.iter().map(|d| 0.5 * (d.f_min_hz + d.f_max_hz)).collect(),
@@ -55,10 +71,27 @@ pub struct LroaSolver {
     pub v: f64,
     /// Model size in bits.
     pub model_bits: f64,
-    // Reusable scratch (hot path: one solve per round).
+    // Reusable state (hot path: one solve per round; zero heap
+    // allocation per outer iteration once at high-water capacity).
+    soa: FleetSoA,
+    scratch_time: Vec<f64>,
+    scratch_energy: Vec<f64>,
     scratch_a2: Vec<f64>,
-    scratch_a3: Vec<f64>,
     scratch_e: Vec<f64>,
+    prev_f: Vec<f64>,
+    prev_p: Vec<f64>,
+    prev_q: Vec<f64>,
+    sum_scratch: sum::SumScratch,
+    // Warm-start store, keyed by *global* device id (via
+    // `solve_round_on`) so carried iterates survive candidate-set churn;
+    // devices that drop out keep their last fixed point for re-entry.
+    warm_f: Vec<f64>,
+    warm_p: Vec<f64>,
+    warm_q: Vec<f64>,
+    warm_valid: Vec<bool>,
+    last_ids: Vec<usize>,
+    cur_ids: Vec<usize>,
+    has_warm: bool,
 }
 
 impl LroaSolver {
@@ -69,9 +102,22 @@ impl LroaSolver {
             lambda,
             v,
             model_bits,
+            soa: FleetSoA::new(),
+            scratch_time: Vec::new(),
+            scratch_energy: Vec::new(),
             scratch_a2: Vec::new(),
-            scratch_a3: Vec::new(),
             scratch_e: Vec::new(),
+            prev_f: Vec::new(),
+            prev_p: Vec::new(),
+            prev_q: Vec::new(),
+            sum_scratch: sum::SumScratch::default(),
+            warm_f: Vec::new(),
+            warm_p: Vec::new(),
+            warm_q: Vec::new(),
+            warm_valid: Vec::new(),
+            last_ids: Vec::new(),
+            cur_ids: Vec::new(),
+            has_warm: false,
         }
     }
 
@@ -80,6 +126,10 @@ impl LroaSolver {
     /// * `devices` / `weights` — the fleet and its data weights `w_n`;
     /// * `h` — this round's channel gains;
     /// * `queues` — virtual queue backlogs `Q_n^t`.
+    ///
+    /// Warm state is keyed by position (`0..N`); a caller whose
+    /// candidate set changes between rounds should use
+    /// [`Self::solve_round_on`] so the carry follows the devices.
     pub fn solve_round(
         &mut self,
         devices: &[Device],
@@ -87,28 +137,73 @@ impl LroaSolver {
         h: &[f64],
         queues: &[f64],
     ) -> (Controls, SolverStats) {
+        self.solve_round_impl(None, devices, weights, h, queues)
+    }
+
+    /// [`Self::solve_round`] over a compacted candidate set: `ids[j]` is
+    /// the global device id behind position `j` of every input slice.
+    /// With `warm_start` on, the previous fixed point is gathered through
+    /// those ids (newcomers seed at the midpoint, `q` is renormalized
+    /// onto the simplex), so availability churn doesn't scramble the
+    /// carry.  With identity ids this is exactly `solve_round`.
+    pub fn solve_round_on(
+        &mut self,
+        ids: &[usize],
+        devices: &[Device],
+        weights: &[f64],
+        h: &[f64],
+        queues: &[f64],
+    ) -> (Controls, SolverStats) {
+        self.solve_round_impl(Some(ids), devices, weights, h, queues)
+    }
+
+    fn solve_round_impl(
+        &mut self,
+        ids: Option<&[usize]>,
+        devices: &[Device],
+        weights: &[f64],
+        h: &[f64],
+        queues: &[f64],
+    ) -> (Controls, SolverStats) {
         let t0 = Instant::now();
+        assert!(
+            !devices.is_empty(),
+            "LroaSolver::solve_round: empty candidate set (no devices to schedule)"
+        );
         let n = devices.len();
+        assert!(weights.len() == n && h.len() == n && queues.len() == n);
+        if let Some(ids) = ids {
+            assert_eq!(ids.len(), n, "LroaSolver: ids/devices length mismatch");
+        }
         let k = self.sys.k;
-        let mut ctrl = Controls::midpoint(devices);
+
+        // Mirror the candidate set into the SoA view; `soa.vlw2` is the
+        // round-constant A3 = V·λ·w² vector.
+        self.soa
+            .fill(devices, weights, self.sys.local_epochs, self.v, self.lambda);
+        self.cur_ids.clear();
+        match ids {
+            Some(ids) => self.cur_ids.extend_from_slice(ids),
+            None => self.cur_ids.extend(0..n),
+        }
+
+        let mut ctrl = self.initial_iterate(devices);
         let mut stats = SolverStats::default();
 
-        // A3 never changes across the outer loop.
-        self.scratch_a3.clear();
-        self.scratch_a3
-            .extend(weights.iter().map(|w| self.v * self.lambda * w * w));
-
-        let mut prev_f = ctrl.f_hz.clone();
-        let mut prev_p = ctrl.p_w.clone();
-        let mut prev_q = ctrl.q.clone();
+        self.prev_f.clear();
+        self.prev_f.extend_from_slice(&ctrl.f_hz);
+        self.prev_p.clear();
+        self.prev_p.extend_from_slice(&ctrl.p_w);
+        self.prev_q.clear();
+        self.prev_q.extend_from_slice(&ctrl.q);
 
         for _ in 0..self.ctl.max_outer_iters {
             stats.outer_iters += 1;
 
             // f and p blocks (Theorems 2-3) under fixed q.
-            freq::solve_freqs(devices, self.v, &ctrl.q, queues, k, &mut ctrl.f_hz);
-            power::solve_powers(
-                devices,
+            freq::solve_freqs_soa(&self.soa, self.v, &ctrl.q, queues, k, &mut ctrl.f_hz);
+            power::solve_powers_soa(
+                &self.soa,
                 self.v,
                 &ctrl.q,
                 h,
@@ -118,54 +213,140 @@ impl LroaSolver {
                 &mut ctrl.p_w,
             );
 
-            // Refresh T_n and E_n under the new (f, p).
-            let costs = RoundCosts::evaluate(
+            // Refresh T_n and E_n under the new (f, p), into scratch.
+            round_costs_into(
                 &self.sys,
-                devices,
+                &self.soa,
                 self.model_bits,
                 h,
                 &ctrl.f_hz,
                 &ctrl.p_w,
+                &mut self.scratch_time,
+                &mut self.scratch_energy,
             );
 
             // q block: SUM on P2.2 with A2 = V·T_n, e = Q_n·E_n.
+            let v = self.v;
             self.scratch_a2.clear();
-            self.scratch_a2
-                .extend(costs.time_s.iter().map(|t| self.v * t));
+            self.scratch_a2.extend(self.scratch_time.iter().map(|t| v * t));
             self.scratch_e.clear();
             self.scratch_e
-                .extend(queues.iter().zip(&costs.energy_j).map(|(qu, e)| qu * e));
+                .extend(queues.iter().zip(&self.scratch_energy).map(|(qu, e)| qu * e));
 
-            let res = sum::solve(
-                &ctrl.q,
+            let (inner, _) = sum::solve_in_place(
+                &mut ctrl.q,
                 &self.scratch_a2,
-                &self.scratch_a3,
+                &self.soa.vlw2,
                 &self.scratch_e,
                 k,
                 self.ctl.q_min,
                 self.ctl.eps_inner,
                 self.ctl.max_inner_iters,
+                &mut self.sum_scratch,
             );
-            stats.inner_iters += res.iters;
-            ctrl.q = res.q;
+            stats.inner_iters += inner;
 
             // Joint convergence: relative change per block (the blocks
             // live on wildly different scales: Hz, W, probabilities).
-            let delta = rel_change(&prev_f, &ctrl.f_hz)
-                + rel_change(&prev_p, &ctrl.p_w)
-                + rel_change(&prev_q, &ctrl.q);
-            prev_f.clone_from(&ctrl.f_hz);
-            prev_p.clone_from(&ctrl.p_w);
-            prev_q.clone_from(&ctrl.q);
+            let delta = rel_change(&self.prev_f, &ctrl.f_hz)
+                + rel_change(&self.prev_p, &ctrl.p_w)
+                + rel_change(&self.prev_q, &ctrl.q);
+            self.prev_f.clone_from(&ctrl.f_hz);
+            self.prev_p.clone_from(&ctrl.p_w);
+            self.prev_q.clone_from(&ctrl.q);
             if delta <= self.ctl.eps_outer {
                 break;
             }
         }
 
-        stats.objective = self.p2_objective(devices, weights, h, queues, &ctrl);
+        stats.objective = if stats.outer_iters > 0 {
+            // `scratch_time`/`scratch_energy` already hold T_n/E_n under
+            // the final (f, p) — same accumulation as `p2_objective`
+            // without its re-evaluation of the cost model.
+            let mut acc = 0.0;
+            for i in 0..n {
+                let sel = selection_probability(ctrl.q[i], k);
+                acc += self.v
+                    * (ctrl.q[i] * self.scratch_time[i]
+                        + self.lambda * weights[i] * weights[i] / ctrl.q[i]);
+                acc += queues[i] * (sel * self.scratch_energy[i] - self.soa.energy_budget_j[i]);
+            }
+            acc
+        } else {
+            self.p2_objective(devices, weights, h, queues, &ctrl)
+        };
+
+        if self.ctl.warm_start {
+            let max_id = self.cur_ids.iter().copied().max().unwrap_or(0);
+            if self.warm_f.len() <= max_id {
+                self.warm_f.resize(max_id + 1, 0.0);
+                self.warm_p.resize(max_id + 1, 0.0);
+                self.warm_q.resize(max_id + 1, 0.0);
+                self.warm_valid.resize(max_id + 1, false);
+            }
+            for (j, &id) in self.cur_ids.iter().enumerate() {
+                self.warm_f[id] = ctrl.f_hz[j];
+                self.warm_p[id] = ctrl.p_w[j];
+                self.warm_q[id] = ctrl.q[j];
+                self.warm_valid[id] = true;
+            }
+            std::mem::swap(&mut self.last_ids, &mut self.cur_ids);
+            self.has_warm = true;
+        }
+
         stats.solve_time_s = t0.elapsed().as_secs_f64();
-        let _ = n;
         (ctrl, stats)
+    }
+
+    /// The initial iterate for this round's outer loop: the paper's cold
+    /// midpoint, or — with `warm_start` on and a stored fixed point —
+    /// the previous round's `(f, p, q)` gathered through `cur_ids`.
+    fn initial_iterate(&self, devices: &[Device]) -> Controls {
+        if !(self.ctl.warm_start && self.has_warm) {
+            return Controls::midpoint(devices);
+        }
+        let m = devices.len();
+        let mut ctrl = Controls {
+            f_hz: Vec::with_capacity(m),
+            p_w: Vec::with_capacity(m),
+            q: Vec::with_capacity(m),
+        };
+        if self.last_ids == self.cur_ids {
+            // Unchanged candidate set: resume verbatim from the stored
+            // fixed point (already feasible and on the simplex).
+            for &id in &self.cur_ids {
+                ctrl.f_hz.push(self.warm_f[id]);
+                ctrl.p_w.push(self.warm_p[id]);
+                ctrl.q.push(self.warm_q[id]);
+            }
+            return ctrl;
+        }
+        // Candidate set changed: gather known devices (clamped to the
+        // possibly-drifted boxes), seed newcomers at the midpoint, and
+        // renormalize q onto the truncated simplex.
+        for (j, &id) in self.cur_ids.iter().enumerate() {
+            let d = &devices[j];
+            if id < self.warm_valid.len() && self.warm_valid[id] {
+                ctrl.f_hz.push(self.warm_f[id].clamp(d.f_min_hz, d.f_max_hz));
+                ctrl.p_w.push(self.warm_p[id].clamp(d.p_min_w, d.p_max_w));
+                ctrl.q.push(self.warm_q[id]);
+            } else {
+                ctrl.f_hz.push(0.5 * (d.f_min_hz + d.f_max_hz));
+                ctrl.p_w.push(0.5 * (d.p_min_w + d.p_max_w));
+                ctrl.q.push(1.0 / m as f64);
+            }
+        }
+        let s: f64 = ctrl.q.iter().sum();
+        if s.is_finite() && s > 0.0 {
+            for q in ctrl.q.iter_mut() {
+                *q = (*q / s).clamp(self.ctl.q_min, 1.0);
+            }
+        } else {
+            for q in ctrl.q.iter_mut() {
+                *q = 1.0 / m as f64;
+            }
+        }
+        ctrl
     }
 
     /// Uni-D baseline: uniform `q = 1/N`, dynamic `f`/`p`.  With `q`
@@ -258,6 +439,19 @@ mod tests {
             ControlConfig::default(),
             10.0,  // lambda
             1e4,   // V
+            32.0 * 140_000.0,
+        )
+    }
+
+    fn cold_solver(sys: &SystemConfig) -> LroaSolver {
+        LroaSolver::new(
+            sys.clone(),
+            ControlConfig {
+                warm_start: false,
+                ..ControlConfig::default()
+            },
+            10.0,
+            1e4,
             32.0 * 140_000.0,
         )
     }
@@ -373,5 +567,137 @@ mod tests {
         assert_eq!(c1.q, c2.q);
         assert_eq!(c1.f_hz, c2.f_hz);
         assert_eq!(c1.p_w, c2.p_w);
+    }
+
+    #[test]
+    fn warm_start_resumes_from_the_stored_fixed_point() {
+        let (sys, fleet, h, queues) = setup(50);
+        let mut s = solver(&sys);
+        let (c1, st1) = s.solve_round(&fleet.devices, fleet.weights(), &h, &queues);
+        // Second solve on identical inputs starts at the fixed point:
+        // it must agree with the cold answer and converge immediately.
+        let (c2, st2) = s.solve_round(&fleet.devices, fleet.weights(), &h, &queues);
+        assert!(
+            st2.outer_iters <= 2 && st2.outer_iters < st1.outer_iters,
+            "warm restart did not cut outer iters: {} -> {}",
+            st1.outer_iters,
+            st2.outer_iters
+        );
+        let drift = rel_change(&c1.f_hz, &c2.f_hz)
+            + rel_change(&c1.p_w, &c2.p_w)
+            + rel_change(&c1.q, &c2.q);
+        assert!(
+            drift <= 100.0 * s.ctl.eps_outer,
+            "warm and cold fixed points diverged: rel drift {drift}"
+        );
+        let sum_q: f64 = c2.q.iter().sum();
+        assert!((sum_q - 1.0).abs() < 1e-6, "warm q left the simplex: {sum_q}");
+    }
+
+    #[test]
+    fn cold_solver_is_stateless() {
+        let (sys, fleet, h, queues) = setup(35);
+        let mut s = cold_solver(&sys);
+        let (c1, st1) = s.solve_round(&fleet.devices, fleet.weights(), &h, &queues);
+        let (c2, st2) = s.solve_round(&fleet.devices, fleet.weights(), &h, &queues);
+        assert_eq!(c1.f_hz, c2.f_hz);
+        assert_eq!(c1.p_w, c2.p_w);
+        assert_eq!(c1.q, c2.q);
+        assert_eq!(st1.outer_iters, st2.outer_iters);
+        // ... and matches a fresh solver bit-for-bit.
+        let mut fresh = cold_solver(&sys);
+        let (c3, _) = fresh.solve_round(&fleet.devices, fleet.weights(), &h, &queues);
+        assert_eq!(c1.q, c3.q);
+        assert_eq!(c1.f_hz, c3.f_hz);
+        assert_eq!(c1.p_w, c3.p_w);
+    }
+
+    #[test]
+    fn identity_ids_match_the_plain_entry_point() {
+        let (sys, fleet, h, queues) = setup(30);
+        let ids: Vec<usize> = (0..30).collect();
+        let queues2: Vec<f64> = queues.iter().map(|q| q * 1.7 + 0.3).collect();
+        let mut s1 = solver(&sys);
+        let mut s2 = solver(&sys);
+        for qs in [&queues, &queues2] {
+            let (c1, st1) = s1.solve_round(&fleet.devices, fleet.weights(), &h, qs);
+            let (c2, st2) = s2.solve_round_on(&ids, &fleet.devices, fleet.weights(), &h, qs);
+            assert_eq!(c1.f_hz, c2.f_hz);
+            assert_eq!(c1.p_w, c2.p_w);
+            assert_eq!(c1.q, c2.q);
+            assert_eq!(st1.outer_iters, st2.outer_iters);
+        }
+    }
+
+    #[test]
+    fn warm_start_renormalizes_q_when_the_candidate_set_changes() {
+        let (sys, fleet, h, queues) = setup(12);
+        let mut s = solver(&sys);
+        let ids: Vec<usize> = (0..12).collect();
+        s.solve_round_on(&ids, &fleet.devices, fleet.weights(), &h, &queues);
+        // Shrink to the odd devices: the warm carry must gather through
+        // ids and put q back on the simplex.
+        let sub: Vec<usize> = (0..12).filter(|i| i % 2 == 1).collect();
+        let devs: Vec<Device> = sub.iter().map(|&i| fleet.devices[i].clone()).collect();
+        let wsum: f64 = sub.iter().map(|&i| fleet.weights()[i]).sum();
+        let w: Vec<f64> = sub.iter().map(|&i| fleet.weights()[i] / wsum).collect();
+        let hh: Vec<f64> = sub.iter().map(|&i| h[i]).collect();
+        let qq: Vec<f64> = sub.iter().map(|&i| queues[i]).collect();
+        let (ctrl, stats) = s.solve_round_on(&sub, &devs, &w, &hh, &qq);
+        assert!(stats.outer_iters >= 1);
+        let sum_q: f64 = ctrl.q.iter().sum();
+        assert!((sum_q - 1.0).abs() < 1e-6, "sum q = {sum_q}");
+        for (i, d) in devs.iter().enumerate() {
+            assert!(ctrl.f_hz[i] >= d.f_min_hz && ctrl.f_hz[i] <= d.f_max_hz);
+            assert!(ctrl.p_w[i] >= d.p_min_w && ctrl.p_w[i] <= d.p_max_w);
+            assert!(ctrl.q[i] > 0.0 && ctrl.q[i] <= 1.0);
+        }
+        // Grow back to the full set (devices 0,2,.. re-enter from the
+        // store, everyone renormalizes): still a valid distribution.
+        let (ctrl2, _) = s.solve_round_on(&ids, &fleet.devices, fleet.weights(), &h, &queues);
+        let sum_q2: f64 = ctrl2.q.iter().sum();
+        assert!((sum_q2 - 1.0).abs() < 1e-6, "sum q = {sum_q2}");
+    }
+
+    #[test]
+    fn warm_and_cold_agree_on_the_fixed_point_across_rounds() {
+        let (sys, fleet, h, _) = setup(40);
+        let mut warm = solver(&sys);
+        let mut cold = cold_solver(&sys);
+        let mut rng = Rng::new(77);
+        let (mut warm_iters, mut cold_iters) = (0usize, 0usize);
+        for round in 0..12 {
+            let queues: Vec<f64> = (0..40).map(|_| rng.range(0.0, 30.0)).collect();
+            let hh: Vec<f64> = h.iter().map(|&x| (x * (1.0 + 0.05 * round as f64)).min(0.6)).collect();
+            let (cw, sw) = warm.solve_round(&fleet.devices, fleet.weights(), &hh, &queues);
+            let (cc, sc) = cold.solve_round(&fleet.devices, fleet.weights(), &hh, &queues);
+            warm_iters += sw.outer_iters;
+            cold_iters += sc.outer_iters;
+            let drift = rel_change(&cc.f_hz, &cw.f_hz)
+                + rel_change(&cc.p_w, &cw.p_w)
+                + rel_change(&cc.q, &cw.q);
+            assert!(
+                drift <= 100.0 * warm.ctl.eps_outer,
+                "round {round}: warm/cold fixed points diverged (rel drift {drift})"
+            );
+        }
+        assert!(
+            warm_iters < cold_iters,
+            "warm start did not reduce total outer iters: {warm_iters} vs {cold_iters}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "empty candidate set")]
+    fn midpoint_panics_on_an_empty_candidate_set() {
+        Controls::midpoint(&[]);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty candidate set")]
+    fn solve_round_panics_on_an_empty_candidate_set() {
+        let (sys, ..) = setup(4);
+        let mut s = solver(&sys);
+        s.solve_round(&[], &[], &[], &[]);
     }
 }

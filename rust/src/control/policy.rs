@@ -180,9 +180,16 @@ impl RoundPolicy for LroaPolicy {
     }
 
     fn plan(&mut self, ctx: &RoundContext<'_>, rng: &mut Rng) -> RoundPlan {
-        let (controls, stats) =
-            self.solver
-                .solve_round(ctx.devices, ctx.weights, ctx.h, ctx.backlogs);
+        // Solve on the compacted set but key warm state by the global
+        // ids, so the carried iterate follows devices through
+        // availability churn.
+        let (controls, stats) = self.solver.solve_round_on(
+            ctx.ids,
+            ctx.devices,
+            ctx.weights,
+            ctx.h,
+            ctx.backlogs,
+        );
         let selection =
             sampling::sample_by_probability(&controls.q, ctx.weights, ctx.k, rng);
         let q_eff = controls.q.clone();

@@ -10,7 +10,7 @@
 //! (`g(0) = −A₁ < 0`, `g'(x) = ln(1+x) > 0`), which we bracket and
 //! bisect to machine precision, then clip to `[p_min, p_max]`.
 
-use crate::system::{selection_probability, Device};
+use crate::system::{selection_probability, Device, FleetSoA};
 
 /// `A₁ = V q h / (Q s N₀)` — the latency/energy price ratio of Theorem 3.
 #[inline]
@@ -79,6 +79,7 @@ pub fn optimal_power(dev: &Device, v: f64, q_n: f64, h: f64, queue: f64, k: usiz
 }
 
 /// Theorem 3 for the whole fleet.
+#[allow(clippy::too_many_arguments)]
 pub fn solve_powers(
     devices: &[Device],
     v: f64,
@@ -93,6 +94,36 @@ pub fn solve_powers(
     out.extend(devices.iter().enumerate().map(|(n, dev)| {
         optimal_power(dev, v, q[n], h[n], queues[n], k, noise_w)
     }));
+}
+
+/// Theorem 3 over the SoA fleet view — the solver hot-loop variant.
+/// Same per-device arithmetic as [`solve_powers`] (pinned bitwise by
+/// `soa_solve_matches_aos`), reading contiguous power-bound slices.
+#[allow(clippy::too_many_arguments)]
+pub fn solve_powers_soa(
+    soa: &FleetSoA,
+    v: f64,
+    q: &[f64],
+    h: &[f64],
+    queues: &[f64],
+    k: usize,
+    noise_w: f64,
+    out: &mut Vec<f64>,
+) {
+    let n = soa.len();
+    assert!(q.len() == n && h.len() == n && queues.len() == n);
+    out.clear();
+    for i in 0..n {
+        let a = a1(v, q[i], h[i], queues[i], k, noise_w);
+        if !a.is_finite() {
+            // Empty queue: energy is free, minimize latency -> p_max.
+            out.push(soa.p_max_w[i]);
+        } else {
+            let x = solve_snr(a);
+            let p = x * noise_w / h[i];
+            out.push(p.clamp(soa.p_min_w[i], soa.p_max_w[i]));
+        }
+    }
 }
 
 /// Per-device P2.1.2 objective (for tests / diagnostics):
@@ -217,5 +248,20 @@ mod tests {
                 optimal_power(&devs[i], 1e4, q[i], h[i], queues[i], 2, 0.01)
             );
         }
+    }
+
+    #[test]
+    fn soa_solve_matches_aos() {
+        let devs: Vec<Device> = (0..4).map(|id| Device { id, ..dev() }).collect();
+        let weights = [0.25; 4];
+        let q = [0.1, 0.2, 0.3, 0.4];
+        let h = [0.05, 0.1, 0.2, 0.4];
+        let queues = [0.0, 2.0, 5.0, 50.0];
+        let mut soa = crate::system::FleetSoA::new();
+        soa.fill(&devs, &weights, 2, 1e4, 1.0);
+        let (mut aos, mut via_soa) = (Vec::new(), Vec::new());
+        solve_powers(&devs, 1e4, &q, &h, &queues, 2, 0.01, &mut aos);
+        solve_powers_soa(&soa, 1e4, &q, &h, &queues, 2, 0.01, &mut via_soa);
+        assert_eq!(aos, via_soa, "Theorem 3 SoA port must be bitwise identical");
     }
 }

@@ -29,6 +29,16 @@ pub struct SumResult {
     pub objective: f64,
 }
 
+/// Reusable buffers for [`solve_in_place`], so the SUM loop allocates
+/// nothing once warmed up: `c` holds the linearized costs, `next` the
+/// surrogate solution, `tmp` the dual-bisection probe.
+#[derive(Clone, Debug, Default)]
+pub struct SumScratch {
+    c: Vec<f64>,
+    next: Vec<f64>,
+    tmp: Vec<f64>,
+}
+
 /// The exact P2.2 objective.
 pub fn objective(q: &[f64], a2: &[f64], a3: &[f64], e: &[f64], k: usize) -> f64 {
     let mut acc = 0.0;
@@ -41,6 +51,19 @@ pub fn objective(q: &[f64], a2: &[f64], a3: &[f64], e: &[f64], k: usize) -> f64 
 /// Solve the linearized surrogate: minimize `Σ c_n q_n + A₃_n/q_n` on the
 /// truncated simplex by KKT + dual bisection.
 pub fn solve_surrogate(c: &[f64], a3: &[f64], q_min: f64, out: &mut Vec<f64>) {
+    let mut tmp = Vec::with_capacity(c.len());
+    solve_surrogate_into(c, a3, q_min, out, &mut tmp);
+}
+
+/// [`solve_surrogate`] with a caller-owned bisection probe buffer — the
+/// allocation-free variant the solver hot loop uses.
+pub fn solve_surrogate_into(
+    c: &[f64],
+    a3: &[f64],
+    q_min: f64,
+    out: &mut Vec<f64>,
+    tmp: &mut Vec<f64>,
+) {
     let n = c.len();
     debug_assert!(n > 0);
     debug_assert!(q_min * n as f64 <= 1.0 + 1e-12, "q_min too large for simplex");
@@ -67,14 +90,12 @@ pub fn solve_surrogate(c: &[f64], a3: &[f64], q_min: f64, out: &mut Vec<f64>) {
         tmp.iter().sum()
     };
 
-    let mut tmp = Vec::with_capacity(n);
-
     // Bracket the multiplier. Lower end: just above -min(c) where the
     // binding component saturates at 1 so Σ >= 1. Upper end: expand until
     // Σ < 1 (always reachable since q -> q_min as mu -> inf).
     let c_min = c.iter().cloned().fold(f64::INFINITY, f64::min);
     let mut lo = -c_min + 1e-18 * c_min.abs().max(1.0);
-    if sum_q(lo, &mut tmp) < 1.0 {
+    if sum_q(lo, &mut *tmp) < 1.0 {
         // Even at the lower bracket the mass is < 1 (can happen when many
         // a3 are zero): distribute the remaining mass by waterfilling the
         // largest-a3 components to 1. Fall back to proportional top-up.
@@ -92,7 +113,7 @@ pub fn solve_surrogate(c: &[f64], a3: &[f64], q_min: f64, out: &mut Vec<f64>) {
         return;
     }
     let mut hi = c.iter().cloned().fold(f64::NEG_INFINITY, f64::max).abs() + 1.0;
-    while sum_q(hi, &mut tmp) > 1.0 {
+    while sum_q(hi, &mut *tmp) > 1.0 {
         hi = hi * 4.0 + 1.0;
         if hi > 1e300 {
             break;
@@ -104,7 +125,7 @@ pub fn solve_surrogate(c: &[f64], a3: &[f64], q_min: f64, out: &mut Vec<f64>) {
         if mid <= lo || mid >= hi {
             break;
         }
-        if sum_q(mid, &mut tmp) > 1.0 {
+        if sum_q(mid, &mut *tmp) > 1.0 {
             lo = mid;
         } else {
             hi = mid;
@@ -124,36 +145,57 @@ pub fn solve(
     eps: f64,
     max_iters: usize,
 ) -> SumResult {
-    let n = q0.len();
     let mut q = q0.to_vec();
-    let mut c = vec![0.0; n];
-    let mut next = Vec::with_capacity(n);
+    let mut scratch = SumScratch::default();
+    let (iters, obj) = solve_in_place(&mut q, a2, a3, e, k, q_min, eps, max_iters, &mut scratch);
+    SumResult {
+        q,
+        iters,
+        objective: obj,
+    }
+}
+
+/// [`solve`] over a caller-owned iterate and scratch: `q` enters as the
+/// initial iterate and leaves as the SUM fixed point, and nothing is
+/// allocated once `scratch` has reached its high-water capacity.
+/// Returns `(iters, objective)`.
+#[allow(clippy::too_many_arguments)]
+pub fn solve_in_place(
+    q: &mut Vec<f64>,
+    a2: &[f64],
+    a3: &[f64],
+    e: &[f64],
+    k: usize,
+    q_min: f64,
+    eps: f64,
+    max_iters: usize,
+    scratch: &mut SumScratch,
+) -> (usize, f64) {
+    let n = q.len();
+    scratch.c.clear();
+    scratch.c.resize(n, 0.0);
     let mut iters = 0;
 
     for _ in 0..max_iters {
         iters += 1;
         // Linearize the concave part at q: slope K e (1-q)^{K-1}.
         for i in 0..n {
-            c[i] = a2[i] + k as f64 * e[i] * (1.0 - q[i]).powi(k as i32 - 1);
+            scratch.c[i] = a2[i] + k as f64 * e[i] * (1.0 - q[i]).powi(k as i32 - 1);
         }
-        solve_surrogate(&c, a3, q_min, &mut next);
+        solve_surrogate_into(&scratch.c, a3, q_min, &mut scratch.next, &mut scratch.tmp);
         let delta: f64 = q
             .iter()
-            .zip(&next)
+            .zip(&scratch.next)
             .map(|(a, b)| (a - b) * (a - b))
             .sum::<f64>()
             .sqrt();
-        std::mem::swap(&mut q, &mut next);
+        std::mem::swap(q, &mut scratch.next);
         if delta <= eps {
             break;
         }
     }
-    let obj = objective(&q, a2, a3, e, k);
-    SumResult {
-        q,
-        iters,
-        objective: obj,
-    }
+    let obj = objective(q, a2, a3, e, k);
+    (iters, obj)
 }
 
 #[cfg(test)]
@@ -285,6 +327,27 @@ mod tests {
         let e = vec![1.0, 1.0, 1.0];
         let res = solve(&uniform(3), &a2, &a3, &e, 2, 1e-6, 1e-9, 100);
         assert!(res.q[2] < res.q[0] && res.q[2] < res.q[1], "{:?}", res.q);
+    }
+
+    #[test]
+    fn in_place_solve_matches_the_allocating_wrapper() {
+        let mut rng = Rng::new(13);
+        let n = 40;
+        let a2: Vec<f64> = (0..n).map(|_| rng.range(10.0, 500.0)).collect();
+        let a3: Vec<f64> = (0..n).map(|_| rng.range(1e-4, 1e-2)).collect();
+        let e: Vec<f64> = (0..n).map(|_| rng.range(0.0, 100.0)).collect();
+        let res = solve(&uniform(n), &a2, &a3, &e, 2, 1e-6, 1e-9, 100);
+        let mut q = uniform(n);
+        let mut scratch = SumScratch::default();
+        let (iters, obj) =
+            solve_in_place(&mut q, &a2, &a3, &e, 2, 1e-6, 1e-9, 100, &mut scratch);
+        assert_eq!(q, res.q, "in-place SUM must be bitwise identical");
+        assert_eq!(iters, res.iters);
+        assert_eq!(obj, res.objective);
+        // Scratch reuse across calls must not perturb the result.
+        let mut q2 = uniform(n);
+        solve_in_place(&mut q2, &a2, &a3, &e, 2, 1e-6, 1e-9, 100, &mut scratch);
+        assert_eq!(q2, res.q);
     }
 
     #[test]

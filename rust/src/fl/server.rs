@@ -65,6 +65,18 @@ fn default_model_bits(dataset: &str) -> f64 {
     }
 }
 
+/// Persistent gather buffers for partially-available rounds: the
+/// compacted sub-problem is index-gathered into these (retained
+/// capacity) instead of allocating five fresh Vecs per round.
+#[derive(Default)]
+struct CompactScratch {
+    devices: Vec<Device>,
+    weights: Vec<f64>,
+    h: Vec<f64>,
+    backlogs: Vec<f64>,
+    next_h: Vec<f64>,
+}
+
 /// The FL server: owns every subsystem and drives the round pipeline.
 pub struct Server {
     pub cfg: Config,
@@ -77,6 +89,8 @@ pub struct Server {
     /// Identity position → id map for full-availability rounds (cached:
     /// the fast path must not allocate per round).
     identity: Vec<usize>,
+    /// Gather buffers for partially-available rounds (same rationale).
+    compact: CompactScratch,
     queues: VirtualQueues,
     policy: Box<dyn RoundPolicy>,
     sample_rng: Rng,
@@ -206,6 +220,7 @@ impl Server {
             fleet,
             env: environment,
             identity: (0..n).collect(),
+            compact: CompactScratch::default(),
             queues: VirtualQueues::new(budgets),
             policy: round_policy,
             sample_rng: Rng::new(seed ^ 0x5A3B_1E00),
@@ -310,25 +325,41 @@ impl Server {
         let k = self.cfg.system.k;
         let plan = match available.as_deref() {
             Some(avail) if avail.len() < n => {
-                let sub_devices: Vec<Device> =
-                    avail.iter().map(|&i| devices[i].clone()).collect();
+                // Index-gather the sub-problem into the persistent
+                // scratch; `Device` is flat, so the clone is a plain
+                // copy into retained capacity.
+                let scratch = &mut self.compact;
+                scratch.devices.clear();
+                scratch
+                    .devices
+                    .extend(avail.iter().map(|&i| devices[i].clone()));
                 let w = self.fleet.weights();
                 let wsum: f64 = avail.iter().map(|&i| w[i]).sum();
-                let sub_weights: Vec<f64> = avail.iter().map(|&i| w[i] / wsum).collect();
-                let sub_h: Vec<f64> = avail.iter().map(|&i| h[i]).collect();
+                scratch.weights.clear();
+                scratch.weights.extend(avail.iter().map(|&i| w[i] / wsum));
+                scratch.h.clear();
+                scratch.h.extend(avail.iter().map(|&i| h[i]));
                 let backlogs = self.queues.backlogs();
-                let sub_backlogs: Vec<f64> = avail.iter().map(|&i| backlogs[i]).collect();
-                let sub_next_h: Option<Vec<f64>> =
-                    next_h.map(|nh| avail.iter().map(|&i| nh[i]).collect());
+                scratch.backlogs.clear();
+                scratch.backlogs.extend(avail.iter().map(|&i| backlogs[i]));
+                let has_next = next_h.is_some();
+                scratch.next_h.clear();
+                if let Some(nh) = next_h {
+                    scratch.next_h.extend(avail.iter().map(|&i| nh[i]));
+                }
                 let ctx = RoundContext {
                     t,
                     k,
-                    devices: &sub_devices,
-                    weights: &sub_weights,
+                    devices: &scratch.devices,
+                    weights: &scratch.weights,
                     ids: avail,
-                    h: &sub_h,
-                    backlogs: &sub_backlogs,
-                    next_h: sub_next_h.as_deref(),
+                    h: &scratch.h,
+                    backlogs: &scratch.backlogs,
+                    next_h: if has_next {
+                        Some(scratch.next_h.as_slice())
+                    } else {
+                        None
+                    },
                 };
                 let sub_plan = self.policy.plan(&ctx, &mut self.sample_rng);
                 scatter_plan(sub_plan, avail, &self.fleet.devices)
@@ -483,6 +514,8 @@ impl Server {
             test_accuracy: f64::NAN,
             test_loss: f64::NAN,
             solver_time_s: plan.stats.solve_time_s,
+            outer_iters: plan.stats.outer_iters,
+            inner_iters: plan.stats.inner_iters,
             // Populated post-hoc by the regret runner (crate::exp).
             regret: f64::NAN,
             regret_online: f64::NAN,

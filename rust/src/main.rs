@@ -51,10 +51,12 @@ SUBCOMMANDS:
             columns with regret_online + regret_budget == regret bitwise,
             and manifest cells link to their anchors via `regret_vs` /
             `regret_vs_e`
-    bench   time the round path (control-plane rounds per policy); --json
-            emits a machine-readable report, --out writes it to a file,
-            --baseline gates against a committed report (fails when
-            round_total regresses more than --max-regress, default 0.25)
+    bench   time the round path (control-plane rounds per policy, plus a
+            warm-vs-cold round/LROA pair and kernel/lroa-solve rows at
+            N=120/10k/100k); --json emits a machine-readable report,
+            --out writes it to a file, --baseline gates against a
+            committed report (fails when round_total regresses more
+            than --max-regress, default 0.25)
     info    print artifact manifest, fleet summary, λ/V estimates
 
 SWEEP / REGRET FLAGS (all --key=value unless noted):
@@ -97,6 +99,9 @@ POLICIES: lroa uni-d uni-s divfl greedy rr p2c bandit oracle oracle-e
 COMMON OVERRIDES:
     --train.dataset=cifar|femnist   --train.rounds=N     --train.policy=lroa|...|bandit
     --system.k=K                    --control.mu=F       --control.nu=F
+    --control.warm_start=true|false (default true: Algorithm 2 resumes from
+                                     the previous round's fixed point; false
+                                     restores the paper's cold midpoint init)
     --train.seed=N                  --env.kind=static|ge|avail|drift|trace|adv
     --env.ge_p_bad=F --env.avail_p_drop=F --env.drift_sigma=F   (see config.rs)
     --env.trace_path=FILE --env.adv_degrade=F --env.adv_targets=N
@@ -407,6 +412,49 @@ fn bench_cmd(args: &[String]) -> lroa::Result<()> {
         b.bench(&format!("round/{policy}"), || {
             server.round(t).unwrap();
             t += 1;
+        });
+    }
+
+    // The same LROA round path with warm starts disabled: the report
+    // carries both sides of the warm-vs-cold comparison so the win is
+    // measured per commit, not asserted once.
+    {
+        let mut cfg = Config::for_dataset("cifar")?;
+        cfg.train.policy = Policy::Lroa;
+        cfg.train.rounds = 1_000_000;
+        cfg.control.warm_start = false;
+        let mut server = Server::new(cfg, SimMode::ControlPlaneOnly)?;
+        let mut t = 0usize;
+        b.bench("round/LROA-cold", || {
+            server.round(t).unwrap();
+            t += 1;
+        });
+    }
+
+    // The Algorithm 2 solve isolated from the round loop, at three
+    // fleet scales — the allocation-free SoA port's hot kernel.  Warm
+    // starts engage after the first call, so these rows time the
+    // steady-state per-round cost.  Not part of the gated round_total.
+    for n in [120usize, 10_000, 100_000] {
+        use lroa::config::{ControlConfig, SystemConfig};
+        use lroa::system::Fleet;
+        let sys = SystemConfig {
+            num_devices: n,
+            ..SystemConfig::default()
+        };
+        let mut rng = lroa::rng::Rng::new(13);
+        let fleet = Fleet::generate(&sys, (50, 400), &mut rng);
+        let h: Vec<f64> = (0..n).map(|_| rng.range(0.01, 0.5)).collect();
+        let queues: Vec<f64> = (0..n).map(|_| rng.range(0.0, 20.0)).collect();
+        let mut solver = lroa::control::LroaSolver::new(
+            sys,
+            ControlConfig::default(),
+            10.0,          // lambda
+            1e4,           // V
+            32.0 * 140_000.0,
+        );
+        b.bench(&format!("kernel/lroa-solve/N={n}"), || {
+            solver.solve_round(&fleet.devices, fleet.weights(), &h, &queues)
         });
     }
 

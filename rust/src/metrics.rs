@@ -28,6 +28,8 @@ pub const CSV_COLUMNS: &[&str] = &[
     "test_accuracy",
     "test_loss",
     "solver_time_s",
+    "outer_iters",
+    "inner_iters",
     "regret",
     "regret_online",
     "regret_budget",
@@ -59,6 +61,11 @@ pub struct RoundRecord {
     pub test_loss: f64,
     /// Algorithm 2 solve time [s] (control-plane overhead).
     pub solver_time_s: f64,
+    /// Algorithm 2 outer iterations this round (0 for non-iterative
+    /// policies) — makes warm-start savings visible in sweep output.
+    pub outer_iters: usize,
+    /// Total SUM inner iterations across the round's outer loop.
+    pub inner_iters: usize,
     /// Cumulative latency gap vs the oracle anchor on the same
     /// environment stream: `total_time_s − total_time_s(oracle)` up to
     /// this round.  In `lroa regret` runs it is derived as
@@ -93,6 +100,8 @@ impl Default for RoundRecord {
             test_accuracy: 0.0,
             test_loss: 0.0,
             solver_time_s: 0.0,
+            outer_iters: 0,
+            inner_iters: 0,
             // "Not a regret run", not "zero regret".
             regret: f64::NAN,
             regret_online: f64::NAN,
@@ -164,7 +173,7 @@ impl Recorder {
         for r in &self.rounds {
             writeln!(
                 f,
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
                 r.round,
                 r.round_time_s,
                 r.total_time_s,
@@ -177,6 +186,8 @@ impl Recorder {
                 csv_f64(r.test_accuracy),
                 csv_f64(r.test_loss),
                 r.solver_time_s,
+                r.outer_iters,
+                r.inner_iters,
                 csv_f64(r.regret),
                 csv_f64(r.regret_online),
                 csv_f64(r.regret_budget),
@@ -216,6 +227,15 @@ impl Recorder {
                 _ => f64::NAN,
             }
         };
+        // Iteration counters came later than the f64 columns: CSVs
+        // written before them load 0 ("not recorded"), keeping legacy
+        // cells resumable.
+        let int_col = |r: &[&str], name: &str| -> usize {
+            col(name)
+                .and_then(|i| r.get(i))
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(0)
+        };
         let mut rec = Recorder::new(
             path.file_stem()
                 .map(|s| s.to_string_lossy().into_owned())
@@ -247,6 +267,8 @@ impl Recorder {
                 test_accuracy: f64_col(&fields, "test_accuracy"),
                 test_loss: f64_col(&fields, "test_loss"),
                 solver_time_s: f64_col(&fields, "solver_time_s"),
+                outer_iters: int_col(&fields, "outer_iters"),
+                inner_iters: int_col(&fields, "inner_iters"),
                 regret: f64_col(&fields, "regret"),
                 regret_online: f64_col(&fields, "regret_online"),
                 regret_budget: f64_col(&fields, "regret_budget"),
@@ -441,6 +463,8 @@ mod tests {
                 test_accuracy: if i == 3 { 0.75 } else { f64::NAN },
                 test_loss: f64::NAN,
                 solver_time_s: 1e-4,
+                outer_iters: 3 + i,
+                inner_iters: 40 + i,
                 regret: if i % 2 == 0 { i as f64 } else { f64::NAN },
                 regret_online: if i % 2 == 0 { 0.25 * i as f64 } else { f64::NAN },
                 regret_budget: if i % 2 == 0 { 0.75 * i as f64 } else { f64::NAN },
@@ -455,6 +479,8 @@ mod tests {
             assert_eq!(a.round_time_s, b.round_time_s);
             assert_eq!(a.total_time_s, b.total_time_s);
             assert_eq!(a.selected, b.selected);
+            assert_eq!(a.outer_iters, b.outer_iters);
+            assert_eq!(a.inner_iters, b.inner_iters);
             assert_eq!(a.test_accuracy.is_nan(), b.test_accuracy.is_nan());
             assert_eq!(a.regret.is_nan(), b.regret.is_nan());
             if !a.regret.is_nan() {
@@ -479,6 +505,9 @@ mod tests {
         assert!(r.rounds[0].regret.is_nan());
         assert!(r.rounds[0].regret_online.is_nan());
         assert!(r.rounds[0].regret_budget.is_nan());
+        // Pre-iteration-counter CSVs load those as 0 ("not recorded").
+        assert_eq!(r.rounds[0].outer_iters, 0);
+        assert_eq!(r.rounds[0].inner_iters, 0);
         // Garbage is rejected, not silently zeroed.
         let bad = dir.join("bad.csv");
         std::fs::write(&bad, "nope,cols\n1,2\n").unwrap();

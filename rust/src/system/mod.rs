@@ -8,11 +8,13 @@
 mod channel;
 mod device;
 mod model;
+mod soa;
 
 pub use channel::{draw_clipped_exponential, ChannelProcess};
 pub use device::{Device, Fleet};
 pub use model::{
     comm_energy_j, comp_energy_j, comp_time_s, download_time_s, expected_round_time_s,
-    round_time_s, selection_probability, total_energy_j, uplink_rate_bps, upload_time_s,
-    RoundCosts,
+    round_costs_into, round_time_s, selection_probability, total_energy_j, uplink_rate_bps,
+    upload_time_s, RoundCosts,
 };
+pub use soa::FleetSoA;

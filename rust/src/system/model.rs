@@ -139,10 +139,42 @@ impl RoundCosts {
     }
 }
 
+/// Slice-oriented port of [`RoundCosts::evaluate`] for the solver hot
+/// loop: only the `time_s`/`energy_j` aggregates (all Algorithm 2
+/// needs), written into caller-owned scratch so an outer iteration
+/// allocates nothing.  The arithmetic — expression order included — is
+/// identical to `evaluate`, which the `soa_port_is_bitwise_identical`
+/// test pins.
+#[allow(clippy::too_many_arguments)]
+pub fn round_costs_into(
+    cfg: &SystemConfig,
+    soa: &super::FleetSoA,
+    model_bits: f64,
+    h: &[f64],
+    f_hz: &[f64],
+    p_w: &[f64],
+    time_s: &mut Vec<f64>,
+    energy_j: &mut Vec<f64>,
+) {
+    let n = soa.len();
+    assert!(h.len() == n && f_hz.len() == n && p_w.len() == n);
+    time_s.clear();
+    energy_j.clear();
+    for i in 0..n {
+        let tcmp = soa.ecd[i] / f_hz[i];
+        let tup = upload_time_s(cfg, model_bits, h[i], p_w[i]);
+        let ecmp = soa.alpha[i] * soa.ecd[i] * f_hz[i] * f_hz[i] / 2.0;
+        let ecom = p_w[i] * tup;
+        time_s.push(tcmp + tup + download_time_s(cfg, model_bits));
+        energy_j.push(ecmp + ecom);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::SystemConfig;
+    use crate::system::FleetSoA;
 
     fn dev() -> Device {
         Device {
@@ -251,6 +283,31 @@ mod tests {
         // Makespan = max over the selected subset.
         let ms = rc.makespan_s(&[0, 2]);
         assert!((ms - rc.time_s[0].max(rc.time_s[2])).abs() < 1e-15);
+    }
+
+    #[test]
+    fn soa_port_is_bitwise_identical() {
+        let c = cfg();
+        let devs: Vec<Device> = (0..4)
+            .map(|id| Device {
+                id,
+                data_size: 120 * (id + 1),
+                alpha: 2e-28 * (1.0 + id as f64 * 0.1),
+                ..dev()
+            })
+            .collect();
+        let weights = [0.1, 0.2, 0.3, 0.4];
+        let h = [0.1, 0.05, 0.3, 0.02];
+        let f = [1e9, 1.5e9, 2e9, 1.2e9];
+        let p = [0.01, 0.05, 0.1, 0.003];
+        let m = 3.58e6;
+        let mut soa = FleetSoA::new();
+        soa.fill(&devs, &weights, c.local_epochs, 1e4, 10.0);
+        let rc = RoundCosts::evaluate(&c, &devs, m, &h, &f, &p);
+        let (mut t, mut e) = (Vec::new(), Vec::new());
+        round_costs_into(&c, &soa, m, &h, &f, &p, &mut t, &mut e);
+        assert_eq!(t, rc.time_s, "time_s must match the AoS path bit-for-bit");
+        assert_eq!(e, rc.energy_j, "energy_j must match the AoS path bit-for-bit");
     }
 
     #[test]

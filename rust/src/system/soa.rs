@@ -1,0 +1,148 @@
+//! Struct-of-arrays fleet state for the allocation-free control plane.
+//!
+//! The Algorithm-2 hot loop touches every device's box bounds, effective
+//! capacitance, per-round cycle count and data weight on every outer
+//! iteration.  Walking a `&[Device]` for that means strided loads over
+//! 9-field structs; at the ROADMAP's 100k–1M device scale the solve is
+//! memory-bound, so the solver kernels (`control::freq`,
+//! `control::power`, `control::sum`, [`super::round_costs_into`]) instead
+//! operate over the contiguous per-field slices gathered here.
+//!
+//! [`FleetSoA::fill`] is a gather, not an owner: it mirrors whatever
+//! (possibly compacted, possibly drifted) device slice the caller hands
+//! it, reusing its buffers so a per-round refill allocates nothing once
+//! the capacity high-water mark is reached.
+
+use super::Device;
+
+/// Contiguous per-field views of a device slice, plus the solver's
+/// round-invariant precomputations (`w²` and `V·λ·w²` — the P2.2 `A₃`
+/// coefficients).
+#[derive(Clone, Debug, Default)]
+pub struct FleetSoA {
+    /// CPU frequency bounds [Hz].
+    pub f_min_hz: Vec<f64>,
+    pub f_max_hz: Vec<f64>,
+    /// Transmit power bounds [W].
+    pub p_min_w: Vec<f64>,
+    pub p_max_w: Vec<f64>,
+    /// Effective capacitance `α_n`.
+    pub alpha: Vec<f64>,
+    /// Cycles per round `E·c_n·D_n` (eq. 8 numerator).
+    pub ecd: Vec<f64>,
+    /// Per-round energy budget `Ē_n` [J].
+    pub energy_budget_j: Vec<f64>,
+    /// Data weights squared `w_n²`.
+    pub w2: Vec<f64>,
+    /// `V·λ·w_n²` — the P2.2 `A₃_n` coefficients, fixed across the
+    /// outer loop.
+    pub vlw2: Vec<f64>,
+}
+
+impl FleetSoA {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.alpha.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.alpha.is_empty()
+    }
+
+    /// Mirror `devices`/`weights` into the per-field slices.  Buffers are
+    /// cleared and re-extended, so repeated fills at a stable fleet size
+    /// never touch the allocator.
+    pub fn fill(
+        &mut self,
+        devices: &[Device],
+        weights: &[f64],
+        local_epochs: usize,
+        v: f64,
+        lambda: f64,
+    ) {
+        assert_eq!(devices.len(), weights.len(), "FleetSoA: devices/weights length mismatch");
+        self.f_min_hz.clear();
+        self.f_max_hz.clear();
+        self.p_min_w.clear();
+        self.p_max_w.clear();
+        self.alpha.clear();
+        self.ecd.clear();
+        self.energy_budget_j.clear();
+        self.w2.clear();
+        self.vlw2.clear();
+        for d in devices {
+            self.f_min_hz.push(d.f_min_hz);
+            self.f_max_hz.push(d.f_max_hz);
+            self.p_min_w.push(d.p_min_w);
+            self.p_max_w.push(d.p_max_w);
+            self.alpha.push(d.alpha);
+            self.ecd.push(d.cycles_per_round(local_epochs));
+            self.energy_budget_j.push(d.energy_budget_j);
+        }
+        for &w in weights {
+            self.w2.push(w * w);
+            // Same association order as the AoS solver's A3 scratch
+            // (`v * lambda * w * w`) so the port is bitwise-neutral.
+            self.vlw2.push(v * lambda * w * w);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::rng::Rng;
+    use crate::system::Fleet;
+
+    #[test]
+    fn fill_mirrors_the_device_slice() {
+        let sys = SystemConfig {
+            num_devices: 12,
+            hardware_spread: 0.3,
+            ..SystemConfig::default()
+        };
+        let mut rng = Rng::new(3);
+        let fleet = Fleet::generate(&sys, (50, 400), &mut rng);
+        let (v, lambda) = (1e4, 10.0);
+        let mut soa = FleetSoA::new();
+        soa.fill(&fleet.devices, fleet.weights(), sys.local_epochs, v, lambda);
+        assert_eq!(soa.len(), 12);
+        for (i, d) in fleet.devices.iter().enumerate() {
+            assert_eq!(soa.f_min_hz[i], d.f_min_hz);
+            assert_eq!(soa.f_max_hz[i], d.f_max_hz);
+            assert_eq!(soa.p_min_w[i], d.p_min_w);
+            assert_eq!(soa.p_max_w[i], d.p_max_w);
+            assert_eq!(soa.alpha[i], d.alpha);
+            assert_eq!(soa.ecd[i], d.cycles_per_round(sys.local_epochs));
+            assert_eq!(soa.energy_budget_j[i], d.energy_budget_j);
+            let w = fleet.weights()[i];
+            assert_eq!(soa.w2[i], w * w);
+            assert_eq!(soa.vlw2[i], v * lambda * w * w);
+        }
+    }
+
+    #[test]
+    fn refill_reuses_buffers_and_tracks_the_new_set() {
+        let sys = SystemConfig {
+            num_devices: 8,
+            ..SystemConfig::default()
+        };
+        let mut rng = Rng::new(4);
+        let fleet = Fleet::generate(&sys, (50, 400), &mut rng);
+        let mut soa = FleetSoA::new();
+        soa.fill(&fleet.devices, fleet.weights(), sys.local_epochs, 1e4, 1.0);
+        let cap = soa.alpha.capacity();
+        // A compacted refill (fewer devices) must shrink the view without
+        // reallocating.
+        let sub = &fleet.devices[..3];
+        let w = &fleet.weights()[..3];
+        soa.fill(sub, w, sys.local_epochs, 1e4, 1.0);
+        assert_eq!(soa.len(), 3);
+        assert_eq!(soa.alpha.capacity(), cap);
+        assert_eq!(soa.alpha[2], fleet.devices[2].alpha);
+    }
+}

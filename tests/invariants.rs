@@ -25,12 +25,13 @@
 //! `(policy, env, seed, round)` tuple.  Conventions for extending this
 //! suite live in `tests/README.md`.
 
-use lroa::config::{Config, EnvKind, Policy};
+use lroa::config::{Config, ControlConfig, EnvKind, Policy};
 use lroa::control::policy::{self, PolicyInit, RoundContext};
-use lroa::control::VirtualQueues;
+use lroa::control::{LroaSolver, VirtualQueues};
 use lroa::env::{self, EnvInit};
+use lroa::fl::{Server, SimMode};
 use lroa::rng::Rng;
-use lroa::system::{Device, Fleet, RoundCosts};
+use lroa::system::{selection_probability, Device, Fleet, RoundCosts};
 
 mod common;
 
@@ -62,17 +63,24 @@ fn registries_cover_every_enum_variant() {
 
 #[test]
 fn every_policy_env_pair_upholds_the_round_invariants() {
+    // Both solver initializations — the warm-started default and the
+    // paper's cold restart — must uphold the invariants on every pair.
     for pspec in policy::REGISTRY {
         for espec in env::REGISTRY {
             for &seed in &SEEDS {
-                check_pair(pspec, espec, seed);
+                for warm in [false, true] {
+                    check_pair(pspec, espec, seed, warm);
+                }
             }
         }
     }
 }
 
-fn check_pair(pspec: &policy::PolicySpec, espec: &env::EnvSpec, seed: u64) {
-    let tag = format!("(policy={}, env={}, seed={seed})", pspec.name, espec.name);
+fn check_pair(pspec: &policy::PolicySpec, espec: &env::EnvSpec, seed: u64, warm: bool) {
+    let tag = format!(
+        "(policy={}, env={}, seed={seed}, warm_start={warm})",
+        pspec.name, espec.name
+    );
 
     // Scenario generator: the seed perturbs the problem geometry.
     let mut cfg = Config::for_dataset("cifar").unwrap();
@@ -84,6 +92,7 @@ fn check_pair(pspec: &policy::PolicySpec, espec: &env::EnvSpec, seed: u64) {
     cfg.env.trace_path = common::campus_fixture();
     cfg.env.avail_p_drop = 0.35; // make the candidate set actually move
     cfg.env.avail_p_join = 0.3;
+    cfg.control.warm_start = warm;
     cfg.validate().unwrap_or_else(|e| panic!("{tag}: bad scenario config: {e:#}"));
 
     let n = cfg.system.num_devices;
@@ -258,4 +267,138 @@ fn check_pair(pspec: &policy::PolicySpec, espec: &env::EnvSpec, seed: u64) {
             );
         }
     }
+}
+
+/// Golden warm-vs-cold agreement with real queue feedback: a warm and a
+/// cold solver walk the same 30-round trajectory (queues advanced by the
+/// *cold* controls so both always see identical inputs) and must land on
+/// the same per-round fixed point within the outer tolerance, while the
+/// warm path stays feasible and spends strictly fewer outer iterations.
+#[test]
+fn warm_and_cold_lroa_reach_the_same_fixed_point_with_queue_feedback() {
+    let mut cfg = Config::for_dataset("cifar").unwrap();
+    cfg.system.num_devices = 40;
+    let n = cfg.system.num_devices;
+    let k = cfg.system.k;
+    let model_bits = 32.0 * 136_874.0;
+    let mut rng = Rng::new(0xA11CE);
+    let fleet = Fleet::generate(&cfg.system, (40, 120), &mut rng);
+
+    let warm_ctl = ControlConfig::default();
+    assert!(warm_ctl.warm_start, "warm start must be the default");
+    let cold_ctl = ControlConfig {
+        warm_start: false,
+        ..ControlConfig::default()
+    };
+    // An outer-loop stop at `eps_outer` bounds the iterate *change*, not
+    // the distance to the fixed point — allow a generous multiple.
+    let tol = 100.0 * warm_ctl.eps_outer;
+
+    let mut warm = LroaSolver::new(cfg.system.clone(), warm_ctl, 1.0, 1e4, model_bits);
+    let mut cold = LroaSolver::new(cfg.system.clone(), cold_ctl, 1.0, 1e4, model_bits);
+
+    let mut queues =
+        VirtualQueues::new(fleet.devices.iter().map(|d| d.energy_budget_j).collect());
+    let (mut warm_iters, mut cold_iters) = (0usize, 0usize);
+    for t in 0..30 {
+        let h: Vec<f64> = (0..n).map(|_| rng.range(0.01, 0.5)).collect();
+        let backlogs = queues.backlogs().to_vec();
+        let (cw, sw) = warm.solve_round(&fleet.devices, fleet.weights(), &h, &backlogs);
+        let (cc, sc) = cold.solve_round(&fleet.devices, fleet.weights(), &h, &backlogs);
+        warm_iters += sw.outer_iters;
+        cold_iters += sc.outer_iters;
+
+        for i in 0..n {
+            assert!(
+                (cw.q[i] - cc.q[i]).abs() <= tol,
+                "round {t}: q[{i}] warm {} vs cold {}",
+                cw.q[i],
+                cc.q[i]
+            );
+            assert!(
+                ((cw.f_hz[i] - cc.f_hz[i]) / cc.f_hz[i]).abs() <= tol,
+                "round {t}: f[{i}] warm {} vs cold {}",
+                cw.f_hz[i],
+                cc.f_hz[i]
+            );
+            assert!(
+                ((cw.p_w[i] - cc.p_w[i]) / cc.p_w[i]).abs() <= tol,
+                "round {t}: p[{i}] warm {} vs cold {}",
+                cw.p_w[i],
+                cc.p_w[i]
+            );
+        }
+
+        // The warm path must be feasible on its own terms, not merely
+        // close to a feasible cold solution.
+        let qsum: f64 = cw.q.iter().sum();
+        assert!((qsum - 1.0).abs() < 1e-6, "round {t}: warm q sums to {qsum}");
+        for (i, d) in fleet.devices.iter().enumerate() {
+            assert!(
+                cw.f_hz[i] >= d.f_min_hz && cw.f_hz[i] <= d.f_max_hz,
+                "round {t}: warm f[{i}] outside the box"
+            );
+            assert!(
+                cw.p_w[i] >= d.p_min_w && cw.p_w[i] <= d.p_max_w,
+                "round {t}: warm p[{i}] outside the box"
+            );
+        }
+
+        // Advance the queues with the COLD controls so the two solvers
+        // keep seeing identical inputs.
+        let costs =
+            RoundCosts::evaluate(&cfg.system, &fleet.devices, model_bits, &h, &cc.f_hz, &cc.p_w);
+        let q_eff: Vec<f64> = cc.q.iter().map(|&q| selection_probability(q, k)).collect();
+        queues.update(&q_eff, k, &costs.energy_j);
+    }
+    assert!(
+        warm_iters < cold_iters,
+        "warm start should cut outer iterations: warm {warm_iters} vs cold {cold_iters}"
+    );
+}
+
+/// The warm-started round path is bitwise deterministic: same config →
+/// same recorded trajectory, across reruns *and* across worker thread
+/// counts (the warm store lives in the single-threaded control plane and
+/// must never observe scheduling order).  `solver_time_s` is wall-clock
+/// and excluded.
+#[test]
+fn the_warm_lroa_round_path_is_bitwise_deterministic() {
+    let run = |threads: usize| {
+        let mut cfg = Config::for_dataset("cifar").unwrap();
+        cfg.system.num_devices = 14;
+        cfg.system.k = 2;
+        cfg.train.rounds = 20;
+        cfg.train.seed = 5;
+        cfg.train.policy = Policy::Lroa;
+        cfg.train.train_threads = threads;
+        cfg.env.kind = EnvKind::Availability;
+        cfg.env.avail_p_drop = 0.3; // exercise warm-store renormalization
+        cfg.env.avail_p_join = 0.3;
+        assert!(cfg.control.warm_start, "warm start must be the default");
+        let mut server = Server::new(cfg, SimMode::ControlPlaneOnly).unwrap();
+        server.run().unwrap();
+        server
+            .recorder
+            .rounds
+            .iter()
+            .map(|r| {
+                format!(
+                    "{:?}|{:?}|{:?}|{:?}|{:?}|{:?}|{}|{}|{}",
+                    r.round_time_s,
+                    r.total_time_s,
+                    r.objective,
+                    r.mean_energy_j,
+                    r.mean_queue,
+                    r.max_queue,
+                    r.selected,
+                    r.outer_iters,
+                    r.inner_iters
+                )
+            })
+            .collect::<Vec<_>>()
+    };
+    let a = run(1);
+    assert_eq!(a, run(1), "rerun with the same thread count diverged");
+    assert_eq!(a, run(4), "thread count leaked into the warm control plane");
 }
