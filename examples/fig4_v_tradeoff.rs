@@ -13,9 +13,8 @@
 //! ```
 
 use lroa::config::Policy;
-use lroa::exp::SweepSpec;
+use lroa::exp::{mean_series_over, SweepSpec};
 use lroa::harness::Args;
-use lroa::metrics::mean_series;
 
 fn main() -> lroa::Result<()> {
     let args = Args::parse();
@@ -52,21 +51,20 @@ fn main() -> lroa::Result<()> {
             .run()?
             .results;
 
-        // Seed-average the two series per ν.
+        // Seed-average the two series per ν; a mismatched repeat (e.g.
+        // a truncated resumed cell) errors with the cell label attached.
         let mut rows: Vec<(f64, Vec<f64>, Vec<f64>)> = Vec::new();
         for &nu in &nus {
-            let energy: Vec<Vec<f64>> = results
-                .iter()
-                .filter(|r| r.scenario.cfg.control.nu == nu)
-                .map(|r| r.recorder.time_avg_energy())
-                .collect();
-            let objective: Vec<Vec<f64>> = results
-                .iter()
-                .filter(|r| r.scenario.cfg.control.nu == nu)
-                .map(|r| r.recorder.time_avg_objective())
-                .collect();
-            assert_eq!(energy.len(), args.repeats, "missing repeats for nu={nu}");
-            rows.push((nu, mean_series(&energy), mean_series(&objective)));
+            let of_nu = |r: &&lroa::exp::ScenarioResult| r.scenario.cfg.control.nu == nu;
+            let repeats = results.iter().filter(of_nu).count();
+            assert_eq!(repeats, args.repeats, "missing repeats for nu={nu}");
+            let energy = mean_series_over(results.iter().filter(of_nu), |rec| {
+                rec.time_avg_energy()
+            })?;
+            let objective = mean_series_over(results.iter().filter(of_nu), |rec| {
+                rec.time_avg_objective()
+            })?;
+            rows.push((nu, energy, objective));
             let (e, o) = (
                 rows.last().unwrap().1.last().unwrap(),
                 rows.last().unwrap().2.last().unwrap(),

@@ -151,6 +151,12 @@ pub fn fmt_duration(d: Duration) -> String {
     }
 }
 
+/// Human duration from raw nanoseconds — the shape trace summaries and
+/// bench JSON reports carry ([`fmt_duration`] over `Duration` values).
+pub fn fmt_ns(ns: f64) -> String {
+    fmt_duration(Duration::from_nanos(ns.max(0.0) as u64))
+}
+
 /// `--quick` flag helper shared by the bench binaries.
 pub fn bencher_from_args() -> Bencher {
     if std::env::args().any(|a| a == "--quick") || std::env::var("LROA_BENCH_QUICK").is_ok() {
@@ -190,5 +196,8 @@ mod tests {
         assert_eq!(fmt_duration(Duration::from_micros(1500)), "1.50ms");
         assert_eq!(fmt_duration(Duration::from_secs(2)), "2.00s");
         assert!(fmt_duration(Duration::from_micros(12)).ends_with("µs"));
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(-3.0), "0ns");
+        assert_eq!(fmt_ns(2e9), "2.00s");
     }
 }

@@ -58,6 +58,9 @@ pub struct SolverStats {
     /// Final P2 objective (drift-plus-penalty surrogate value).
     pub objective: f64,
     pub solve_time_s: f64,
+    /// Whether this round's outer loop started from the previous
+    /// round's stored fixed point (vs the paper's cold midpoint).
+    pub warm_start_hit: bool,
 }
 
 /// The online controller: holds the static problem data and solves P2
@@ -188,7 +191,10 @@ impl LroaSolver {
         }
 
         let mut ctrl = self.initial_iterate(devices);
-        let mut stats = SolverStats::default();
+        let mut stats = SolverStats {
+            warm_start_hit: self.ctl.warm_start && self.has_warm,
+            ..SolverStats::default()
+        };
 
         self.prev_f.clear();
         self.prev_f.extend_from_slice(&ctrl.f_hz);
@@ -376,6 +382,7 @@ impl LroaSolver {
             inner_iters: 0,
             objective: 0.0,
             solve_time_s: t0.elapsed().as_secs_f64(),
+            warm_start_hit: false,
         };
         (ctrl, stats)
     }

@@ -38,8 +38,10 @@ pub mod spec;
 
 pub use observer::{
     CellResult, CellStart, CsvObserver, GridSummary, JsonObserver, ManifestObserver, Observer,
-    ProgressObserver, RoundEvent, SummaryObserver,
+    ProgressObserver, RoundEvent, SummaryObserver, TraceObserver,
 };
-pub use runner::{run_scenarios, summarize_groups, GroupSummary, ScenarioResult, Stat};
+pub use runner::{
+    mean_series_over, run_scenarios, summarize_groups, GroupSummary, ScenarioResult, Stat,
+};
 pub use session::{Anchors, Experiment, Session, SessionReport};
 pub use spec::{manifest_json, EnvSel, Scenario, SweepSpec};

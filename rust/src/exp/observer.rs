@@ -30,11 +30,14 @@
 //! `on_grid_start`, `on_grid_done`) fail the session loudly.
 
 use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
 
 use super::runner::{GroupSummary, ScenarioResult};
 use super::spec::{manifest_json, Scenario};
 use crate::json::{obj, Json};
 use crate::metrics::{num_or_null, Recorder, RoundRecord};
+use crate::trace::TraceHub;
 use crate::Result;
 
 /// A cell is about to execute.
@@ -280,10 +283,18 @@ impl Observer for SummaryObserver {
 }
 
 /// Human progress, exactly where the pre-session CLI printed it: the
-/// resume partition on stdout, one line per completed cell on stderr.
+/// resume partition on stdout, one line per completed cell on stderr —
+/// now with measured throughput (rounds/s) and a grid ETA extrapolated
+/// from elapsed wall-clock over completed cells.  Every line goes to
+/// stderr, so `--json` runs keep a pure-JSON stdout.
 #[derive(Debug, Default)]
 pub struct ProgressObserver {
     quiet: bool,
+    /// Grid start, anchoring the ETA extrapolation.
+    started: Option<Instant>,
+    /// Cells this run will execute (resume partition applied).
+    total: usize,
+    done: usize,
 }
 
 impl ProgressObserver {
@@ -300,7 +311,15 @@ impl ProgressObserver {
 }
 
 impl Observer for ProgressObserver {
+    fn on_grid_start(&mut self, cells: &[Scenario]) -> Result<()> {
+        self.started = Some(Instant::now());
+        self.total = cells.len();
+        self.done = 0;
+        Ok(())
+    }
+
     fn on_resume(&mut self, skipped: usize, to_run: usize) {
+        self.total = to_run;
         let line = format!(
             "resume: skipping {skipped} cells with existing CSVs (re-read for the \
              aggregate), running {to_run}"
@@ -319,13 +338,28 @@ impl Observer for ProgressObserver {
     }
 
     fn on_cell_done(&mut self, ev: &CellResult<'_>) -> Result<()> {
+        self.done += 1;
+        let throughput = ev.recorder.rounds.len() as f64 / ev.wall_s.max(1e-9);
+        // Extrapolate the remaining cells from elapsed-per-completed-cell
+        // (concurrency-aware: elapsed is shared wall-clock, not cell sum).
+        let eta = match (self.started, self.total.checked_sub(self.done)) {
+            (Some(t0), Some(left)) if left > 0 && self.done > 0 => {
+                let per_cell = t0.elapsed().as_secs_f64() / self.done as f64;
+                format!(", ETA {:.0}s", per_cell * left as f64)
+            }
+            _ => String::new(),
+        };
         eprintln!(
-            "[exp] {}: {} rounds, modeled {:.1}s, final acc {:.4}, wall {:.1}s",
+            "[exp] {}: {} rounds, modeled {:.1}s, final acc {:.4}, wall {:.1}s, \
+             {:.0} rounds/s ({}/{} cells{eta})",
             ev.recorder.label,
             ev.recorder.rounds.len(),
             ev.recorder.total_time_s(),
             ev.recorder.final_accuracy(),
-            ev.wall_s
+            ev.wall_s,
+            throughput,
+            self.done,
+            self.total.max(self.done),
         );
         Ok(())
     }
@@ -359,6 +393,33 @@ impl Observer for JsonObserver {
                 ("groups", Json::Arr(groups_json(summary.groups))),
                 ("resumed_cells", Json::Num(summary.resumed_cells as f64)),
             ])
+        );
+        Ok(())
+    }
+}
+
+/// Exports the session's trace (`trace.json` + `trace_summary.json`)
+/// when the grid completes.  Attached automatically by
+/// [`crate::exp::Experiment::trace`]; span *recording* never goes
+/// through the observer hub — the workers fill the shared
+/// [`TraceHub`] directly, and this observer only triggers the export
+/// after every cell has submitted.
+pub struct TraceObserver {
+    hub: Arc<TraceHub>,
+}
+
+impl TraceObserver {
+    pub fn new(hub: Arc<TraceHub>) -> Self {
+        Self { hub }
+    }
+}
+
+impl Observer for TraceObserver {
+    fn on_grid_done(&mut self, _summary: &GridSummary<'_>) -> Result<()> {
+        self.hub.export()?;
+        eprintln!(
+            "[trace] wrote {} (+ trace_summary.json)",
+            self.hub.dir().join("trace.json").display()
         );
         Ok(())
     }

@@ -30,6 +30,32 @@ pub fn run_scenarios(scenarios: Vec<Scenario>, threads: usize) -> Result<Vec<Sce
     Ok(Session::from_cells(scenarios, threads).run()?.results)
 }
 
+/// [`crate::metrics::mean_series`] over one derived series per cell,
+/// e.g. seed-averaging `time_avg_energy` across a group's repeats.  On
+/// a length mismatch (a truncated legacy cell CSV re-read by a resumed
+/// grid) the error names every cell label with its series length, so
+/// the broken cell is identifiable instead of aborting anonymously.
+pub fn mean_series_over<'a, I, F>(results: I, derive: F) -> Result<Vec<f64>>
+where
+    I: IntoIterator<Item = &'a ScenarioResult>,
+    F: Fn(&Recorder) -> Vec<f64>,
+{
+    let mut labels: Vec<&str> = Vec::new();
+    let mut series: Vec<Vec<f64>> = Vec::new();
+    for r in results {
+        labels.push(r.recorder.label.as_str());
+        series.push(derive(&r.recorder));
+    }
+    crate::metrics::mean_series(&series).map_err(|e| {
+        let lens: Vec<String> = labels
+            .iter()
+            .zip(&series)
+            .map(|(l, s)| format!("{l}:{}", s.len()))
+            .collect();
+        anyhow::anyhow!("{e} (cells: {})", lens.join(", "))
+    })
+}
+
 /// Mean ± population std over the finite entries of a sample.
 #[derive(Clone, Copy, Debug)]
 pub struct Stat {
@@ -169,6 +195,24 @@ mod tests {
         }
         assert_eq!(groups[0].group, "LROA-cifar");
         assert_eq!(groups[1].group, "Uni-S-cifar");
+    }
+
+    #[test]
+    fn mean_series_over_names_offending_cells() {
+        let results = run_scenarios(small_spec().expand().unwrap(), 2).unwrap();
+        let ok = mean_series_over(results.iter(), |r| r.time_avg_energy()).unwrap();
+        assert_eq!(ok.len(), 15);
+        let first = results[0].recorder.label.clone();
+        let err = mean_series_over(results.iter(), |r| {
+            let mut s = r.time_avg_energy();
+            if r.label == first {
+                s.truncate(3);
+            }
+            s
+        })
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains(&first), "error names the cell: {msg}");
     }
 
     #[test]

@@ -40,11 +40,12 @@
 //! `tests/session_parity.rs`).
 
 use std::collections::BTreeSet;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use super::observer::{CellResult, CellStart, GridSummary, Observer, RoundEvent};
+use super::observer::{CellResult, CellStart, GridSummary, Observer, RoundEvent, TraceObserver};
 use super::regret;
 use super::runner::{summarize_groups, GroupSummary, ScenarioResult};
 use super::spec::{manifest_json, EnvSel, Scenario, SweepSpec};
@@ -53,6 +54,7 @@ use crate::fl::{Server, SimMode};
 use crate::json::Json;
 use crate::metrics::Recorder;
 use crate::par;
+use crate::trace::{TraceConfig, TraceHub};
 use crate::Result;
 
 /// Which clairvoyant anchors shadow the grid's online cells.
@@ -88,6 +90,7 @@ pub struct Experiment<'a> {
     anchors: Anchors,
     out_dir: Option<PathBuf>,
     observers: Vec<Box<dyn Observer>>,
+    trace: Option<TraceConfig>,
 }
 
 impl<'a> Experiment<'a> {
@@ -105,6 +108,7 @@ impl<'a> Experiment<'a> {
             anchors: Anchors::None,
             out_dir: None,
             observers: Vec::new(),
+            trace: None,
         }
     }
 
@@ -118,12 +122,14 @@ impl<'a> Experiment<'a> {
     /// front-end's choice of observers, not the grid's.
     pub fn from_spec(spec: SweepSpec) -> Experiment<'a> {
         let out_dir = Some(PathBuf::from(&spec.out_dir));
+        let trace = spec.trace_out.clone().map(TraceConfig::new);
         Experiment {
             spec,
             base: Base::Defaults,
             anchors: Anchors::None,
             out_dir,
             observers: Vec::new(),
+            trace,
         }
     }
 
@@ -234,6 +240,17 @@ impl<'a> Experiment<'a> {
         self
     }
 
+    /// Record a structured trace of the session (see [`crate::trace`]):
+    /// hierarchical spans for every cell/round/phase, exported as Chrome
+    /// trace-event JSON plus `trace_summary.json` under the trace dir,
+    /// and a per-cell flight recorder on failure.  Tracing is
+    /// determinism-neutral: every CSV/summary/manifest byte is identical
+    /// with it on or off (pinned by `tests/trace_parity.rs`).
+    pub fn trace(mut self, cfg: TraceConfig) -> Self {
+        self.trace = Some(cfg);
+        self
+    }
+
     /// Expand, anchor, and validate the grid: the planned [`Session`].
     pub fn build(self) -> Result<Session> {
         let Experiment {
@@ -241,7 +258,8 @@ impl<'a> Experiment<'a> {
             base,
             anchors,
             out_dir,
-            observers,
+            mut observers,
+            trace,
         } = self;
         anyhow::ensure!(
             !(anchors == Anchors::Both && spec.resume),
@@ -279,6 +297,13 @@ impl<'a> Experiment<'a> {
                 );
             }
         }
+        // The trace hub is shared by every worker; its exporter runs as
+        // the *last* observer so `trace.json` lands after the file sinks
+        // attached before it (CSVs, summary) have flushed.
+        let trace = trace.map(|cfg| Arc::new(TraceHub::new(cfg)));
+        if let Some(hub) = &trace {
+            observers.push(Box::new(TraceObserver::new(hub.clone())));
+        }
         Ok(Session {
             cells,
             threads: spec.threads,
@@ -286,6 +311,7 @@ impl<'a> Experiment<'a> {
             resume: spec.resume,
             out_dir,
             observers,
+            trace,
         })
     }
 
@@ -312,6 +338,7 @@ pub struct Session {
     resume: bool,
     out_dir: Option<PathBuf>,
     observers: Vec<Box<dyn Observer>>,
+    trace: Option<Arc<TraceHub>>,
 }
 
 impl Session {
@@ -326,6 +353,7 @@ impl Session {
             resume: false,
             out_dir: None,
             observers: Vec::new(),
+            trace: None,
         }
     }
 
@@ -352,6 +380,7 @@ impl Session {
             resume,
             out_dir,
             observers,
+            trace,
         } = self;
         let hub = Hub::new(observers);
         hub.grid_start(&cells)?;
@@ -408,9 +437,14 @@ impl Session {
                 }
             }
         }
-        let fresh = par::fan_out(to_run, width, || (), |_, (idx, sc)| {
-            run_cell(idx, sc, total, &hub).map(|r| (idx, r))
-        })?;
+        // Each worker claims one Chrome `tid` up front, so its cells all
+        // land on that worker's track in the exported trace.
+        let fresh = par::fan_out(
+            to_run,
+            width,
+            || trace.as_ref().map_or(0, |h| h.register_thread()),
+            |tid, (idx, sc)| run_cell(idx, sc, total, &hub, trace.as_deref(), *tid).map(|r| (idx, r)),
+        )?;
 
         // Stitch resumed + fresh results back into grid order.
         let mut combined = resumed;
@@ -440,7 +474,21 @@ impl Session {
 
 /// Execute one cell through the step-wise [`crate::fl::RoundDriver`],
 /// streaming events to the hub.
-fn run_cell(index: usize, scenario: Scenario, total: usize, hub: &Hub) -> Result<ScenarioResult> {
+///
+/// With tracing on, the server records phase/round spans into a
+/// [`crate::trace::CellTrace`] it owns exclusively, and the buffer is
+/// submitted to the `trace` hub on success.  On a cell error (e.g. the
+/// wall-clock timeout) or a panic inside the drive loop, the flight
+/// recorder dumps the last rounds to `<label>.crash-trace.json` before
+/// the error/panic propagates.
+fn run_cell(
+    index: usize,
+    scenario: Scenario,
+    total: usize,
+    hub: &Hub,
+    trace: Option<&TraceHub>,
+    tid: u64,
+) -> Result<ScenarioResult> {
     let t0 = Instant::now();
     hub.cell_start(&CellStart {
         cell: index,
@@ -449,7 +497,10 @@ fn run_cell(index: usize, scenario: Scenario, total: usize, hub: &Hub) -> Result
         cells_total: total,
     });
     let mut server = Server::new(scenario.cfg.clone(), scenario.mode)?;
-    {
+    if let Some(h) = trace {
+        server.trace = Some(h.cell(index, &scenario.label, tid));
+    }
+    let drive = catch_unwind(AssertUnwindSafe(|| -> Result<()> {
         let mut driver = server.driver_with_timeout(scenario.timeout_s);
         loop {
             let report = driver
@@ -457,17 +508,52 @@ fn run_cell(index: usize, scenario: Scenario, total: usize, hub: &Hub) -> Result
                 .map_err(|e| anyhow::anyhow!("cell {}: {e:#}", scenario.label))?;
             let Some(report) = report else { break };
             if hub.wants_rounds {
+                let observe_t0 = trace.map(|_| Instant::now());
                 hub.round(&RoundEvent {
                     cell: index,
                     label: &scenario.label,
                     round: report.round,
                     record: &report.record,
                 });
+                if let Some(from) = observe_t0 {
+                    driver.note_observe(report.round, from);
+                }
             }
         }
+        Ok(())
+    }));
+    let mut cell_trace = server.trace.take();
+    if let Some(ct) = cell_trace.as_mut() {
+        ct.finish();
+    }
+    let flight_dump = |reason: &str| {
+        if let (Some(h), Some(ct)) = (trace, cell_trace.as_ref()) {
+            match h.crash_dump(ct, reason) {
+                Ok(path) => eprintln!("[trace] flight recorder: {}", path.display()),
+                Err(e) => eprintln!("[trace] flight-recorder dump failed: {e:#}"),
+            }
+        }
+    };
+    match drive {
+        Err(payload) => {
+            flight_dump("panic during round execution");
+            resume_unwind(payload);
+        }
+        Ok(Err(e)) => {
+            flight_dump(&format!("{e:#}"));
+            return Err(e);
+        }
+        Ok(Ok(())) => {}
     }
     let mut recorder = std::mem::take(&mut server.recorder);
     recorder.label = scenario.label.clone();
+    if let (Some(h), Some(mut ct)) = (trace, cell_trace) {
+        // Attribute the cell's metric-CSV size whether or not a
+        // CsvObserver is attached (same bytes either way — the CSV body
+        // is a pure function of the recorder).
+        ct.set_bytes_written(recorder.csv_string().len() as u64);
+        h.submit(ct);
+    }
     let wall_s = t0.elapsed().as_secs_f64();
     let result = ScenarioResult {
         scenario,
@@ -483,67 +569,84 @@ fn run_cell(index: usize, scenario: Scenario, total: usize, hub: &Hub) -> Result
     Ok(result)
 }
 
-/// The session's event fan-in: observers run under one lock, so worker
-/// threads can emit concurrently while each observer sees a serialized,
-/// per-cell-ordered event stream.
+/// The session's event fan-in, sharded **per observer**: each observer
+/// sits behind its own mutex, so two workers emitting to *different*
+/// observers never contend, and a slow sink (a CSV flush, a terminal
+/// write) only stalls workers queued on that one observer — not the
+/// whole hub.  Each observer still sees a serialized event stream
+/// (its own lock), which is all the [`Observer`] contract promises;
+/// there is deliberately no cross-observer ordering.
 ///
-/// One lock is a deliberate simplicity/throughput trade: per-round
-/// events fire only when an observer opts in (`wants_rounds`, checked
-/// lock-free), and the default sinks lock once per *cell* — but a
-/// round-hungry observer on a wide pool serializes there, and CSV
-/// writes happen under the lock.  Sharded per-observer dispatch is a
-/// ROADMAP item for the pipelined/service modes.
+/// Per-round events fire only when some observer opts in
+/// (`wants_rounds`, checked lock-free), and round events skip the
+/// observers that didn't opt in without ever taking their locks.
 struct Hub {
-    observers: Mutex<Vec<Box<dyn Observer>>>,
+    shards: Vec<ObserverShard>,
     /// Any observer opted into per-round events (checked lock-free on
     /// the per-round fast path).
     wants_rounds: bool,
 }
 
+/// One observer and its private lock, plus its cached round opt-in so
+/// the per-round path can skip it lock-free.
+struct ObserverShard {
+    observer: Mutex<Box<dyn Observer>>,
+    wants_rounds: bool,
+}
+
 impl Hub {
     fn new(observers: Vec<Box<dyn Observer>>) -> Hub {
-        let wants_rounds = observers.iter().any(|o| o.wants_rounds());
+        let shards: Vec<ObserverShard> = observers
+            .into_iter()
+            .map(|o| ObserverShard {
+                wants_rounds: o.wants_rounds(),
+                observer: Mutex::new(o),
+            })
+            .collect();
+        let wants_rounds = shards.iter().any(|s| s.wants_rounds);
         Hub {
-            observers: Mutex::new(observers),
+            shards,
             wants_rounds,
         }
     }
 
     fn grid_start(&self, cells: &[Scenario]) -> Result<()> {
-        for o in self.observers.lock().unwrap().iter_mut() {
-            o.on_grid_start(cells)?;
+        for s in &self.shards {
+            s.observer.lock().unwrap().on_grid_start(cells)?;
         }
         Ok(())
     }
 
     fn resume_note(&self, skipped: usize, to_run: usize) {
-        for o in self.observers.lock().unwrap().iter_mut() {
-            o.on_resume(skipped, to_run);
+        for s in &self.shards {
+            s.observer.lock().unwrap().on_resume(skipped, to_run);
         }
     }
 
     fn cell_start(&self, ev: &CellStart<'_>) {
-        for o in self.observers.lock().unwrap().iter_mut() {
-            o.on_cell_start(ev);
+        for s in &self.shards {
+            s.observer.lock().unwrap().on_cell_start(ev);
         }
     }
 
     fn round(&self, ev: &RoundEvent<'_>) {
-        for o in self.observers.lock().unwrap().iter_mut() {
-            o.on_round(ev);
+        for s in &self.shards {
+            if s.wants_rounds {
+                s.observer.lock().unwrap().on_round(ev);
+            }
         }
     }
 
     fn cell_done(&self, ev: &CellResult<'_>) -> Result<()> {
-        for o in self.observers.lock().unwrap().iter_mut() {
-            o.on_cell_done(ev)?;
+        for s in &self.shards {
+            s.observer.lock().unwrap().on_cell_done(ev)?;
         }
         Ok(())
     }
 
     fn grid_done(&self, summary: &GridSummary<'_>) -> Result<()> {
-        for o in self.observers.lock().unwrap().iter_mut() {
-            o.on_grid_done(summary)?;
+        for s in &self.shards {
+            s.observer.lock().unwrap().on_grid_done(summary)?;
         }
         Ok(())
     }

@@ -142,6 +142,12 @@ pub struct SweepSpec {
     /// Per-cell wall-clock timeout [s] (`--cell_timeout_s`); None = no
     /// budget.
     pub cell_timeout_s: Option<f64>,
+    /// Structured-trace output directory (`--trace-out`); None = tracing
+    /// off.  Deliberately **not** part of any cell's [`Config`] (and so
+    /// never hashed into resume fingerprints): tracing is determinism-
+    /// neutral observability, and toggling it must not invalidate or
+    /// alter a single result byte.
+    pub trace_out: Option<String>,
     /// Extra `--section.key=value` overrides applied to every cell.
     pub overrides: Vec<String>,
 }
@@ -163,6 +169,7 @@ impl Default for SweepSpec {
             resume: false,
             json: false,
             cell_timeout_s: None,
+            trace_out: None,
             overrides: Vec::new(),
         }
     }
@@ -296,7 +303,8 @@ impl SweepSpec {
     /// entries, or `all`), `--ks`, `--mus`, `--nus`, `--seeds` (comma
     /// list or `a..b` inclusive), `--rounds`, `--threads`,
     /// `--cell_timeout_s` (per-cell wall-clock budget),
-    /// `--mode=sim|train`, `--out`, plus the bare flags `--resume` (skip
+    /// `--mode=sim|train`, `--out`, `--trace-out` (structured-trace
+    /// directory; see [`crate::trace`]), plus the bare flags `--resume` (skip
     /// cells whose CSV already exists) and `--json` (grid summary as
     /// JSON on stdout instead of the table).  Dotted
     /// `--section.key=value` config overrides pass through to every
@@ -352,6 +360,7 @@ impl SweepSpec {
                     spec.cell_timeout_s = Some(t);
                 }
                 "out" => spec.out_dir = val.to_string(),
+                "trace-out" => spec.trace_out = Some(val.to_string()),
                 "mode" => {
                     spec.mode = match val {
                         "sim" => SimMode::ControlPlaneOnly,
@@ -530,6 +539,7 @@ mod tests {
             "--datasets=femnist",
             "--mode=sim",
             "--out=runs/mysweep",
+            "--trace-out=runs/mysweep/trace",
             "--resume",
             "--json",
             "--system.num_devices=32",
@@ -550,6 +560,7 @@ mod tests {
         assert_eq!(spec.threads, 4);
         assert_eq!(spec.cell_timeout_s, Some(30.0));
         assert_eq!(spec.out_dir, "runs/mysweep");
+        assert_eq!(spec.trace_out.as_deref(), Some("runs/mysweep/trace"));
         assert!(spec.resume);
         assert!(spec.json);
         assert_eq!(spec.overrides, vec!["--system.num_devices=32".to_string()]);

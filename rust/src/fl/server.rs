@@ -31,6 +31,7 @@
 //! identical** for any `train.train_threads` value, including sequential.
 
 use std::path::Path;
+use std::time::Instant;
 
 use super::trainer::{Evaluator, LocalTrainer};
 use crate::config::Config;
@@ -44,6 +45,7 @@ use crate::rng::Rng;
 use crate::runtime::{Engine, Manifest};
 use crate::sampling::Selection;
 use crate::system::{selection_probability, Device, Fleet, RoundCosts};
+use crate::trace::{CellTrace, Counters, Phase};
 use crate::Result;
 
 /// Whether the server actually trains a model or only exercises the
@@ -100,6 +102,29 @@ pub struct Server {
     model_bits: f64,
     theta: Vec<f32>,
     pub recorder: Recorder,
+    /// Attached span recorder (`--trace-out`); `None` costs the round
+    /// pipeline nothing.  Timestamps never reach the recorder/CSVs, so
+    /// tracing cannot perturb any deterministic output.
+    pub trace: Option<CellTrace>,
+}
+
+/// Close one pipeline phase: record `[mark, now)` against `phase` and
+/// advance the mark, so consecutive phases partition the round's
+/// wall-clock contiguously.  A free function over the two fields (not a
+/// `&mut self` method) so it can run while `round()` still holds shared
+/// borrows of other `Server` fields.
+fn phase_mark(
+    trace: &mut Option<CellTrace>,
+    mark: &mut Option<Instant>,
+    t: usize,
+    phase: Phase,
+    counters: Counters,
+) {
+    if let (Some(tr), Some(m)) = (trace.as_mut(), mark.as_mut()) {
+        let now = Instant::now();
+        tr.phase(t, phase, *m, now, counters);
+        *m = now;
+    }
 }
 
 impl Server {
@@ -229,6 +254,7 @@ impl Server {
             model_bits,
             theta,
             recorder: Recorder::new(label),
+            trace: None,
             cfg,
         })
     }
@@ -301,7 +327,13 @@ impl Server {
     }
 
     /// Execute one communication round: the eight-stage pipeline.
+    ///
+    /// With tracing attached, the pipeline is measured as four phase
+    /// spans that partition the call contiguously: `env_step` (stage 1),
+    /// `solve` (stages 2–4: plan, sample, scatter, cost model), `train`
+    /// (stage 5), and `aggregate` (stages 6–8).
     pub fn round(&mut self, t: usize) -> Result<()> {
+        let mut mark = self.trace.as_ref().map(|_| Instant::now());
         // (1) The environment realizes this round's randomness: channel
         // gains, the reachable candidate set N^t, and parameter drift.
         let RoundEnv {
@@ -319,6 +351,7 @@ impl Server {
         let next_h = peeked.as_ref().map(|p| p.gains.as_slice());
         let n = self.fleet.len();
         let devices: &[Device] = drifted.as_deref().unwrap_or(&self.fleet.devices);
+        phase_mark(&mut self.trace, &mut mark, t, Phase::EnvStep, Counters::default());
 
         // (2)+(3) The policy solves for controls and samples K^t over the
         // reachable sub-problem (the full fleet on the fast path).
@@ -398,9 +431,22 @@ impl Server {
         // the round's realized per-device costs.  Fires in every sim
         // mode, unlike observe_update, which needs local training.
         self.policy.observe_round(&unique, &costs);
+        phase_mark(
+            &mut self.trace,
+            &mut mark,
+            t,
+            Phase::Solve,
+            Counters {
+                outer_iters: plan.stats.outer_iters as u64,
+                inner_iters: plan.stats.inner_iters as u64,
+                warm_start_hits: plan.stats.warm_start_hit as u64,
+                bytes_written: 0,
+            },
+        );
 
         // (5) Local updates + eq. (4) aggregation (Full mode).
         let train_loss = self.train_round(t, &plan, &unique)?;
+        phase_mark(&mut self.trace, &mut mark, t, Phase::Train, Counters::default());
 
         // (6) Advance the virtual queues with this round's expected draws
         // (unreachable devices have q_eff = 0: no expected energy drawn).
@@ -408,7 +454,9 @@ impl Server {
             .update(&plan.q_eff, self.cfg.system.k, &costs.energy_j);
 
         // (7)+(8) Record the ledger entry; evaluate when due.
-        self.record_round(t, &plan, &costs, unique.len(), round_time, train_loss)
+        self.record_round(t, &plan, &costs, unique.len(), round_time, train_loss)?;
+        phase_mark(&mut self.trace, &mut mark, t, Phase::Aggregate, Counters::default());
+        Ok(())
     }
 
     /// Stage 5: parallel local training + aggregation.  Returns the mean
@@ -582,6 +630,7 @@ impl RoundDriver<'_> {
             }
         }
         let t = self.next;
+        let span_t0 = self.server.trace.is_some().then(Instant::now);
         self.server.round(t)?;
         self.next += 1;
         let record = self
@@ -591,7 +640,20 @@ impl RoundDriver<'_> {
             .last()
             .expect("round() pushes a record")
             .clone();
+        if let (Some(tr), Some(t0)) = (self.server.trace.as_mut(), span_t0) {
+            tr.round_span(t, t0, Instant::now());
+        }
         Ok(Some(RoundReport { round: t, record }))
+    }
+
+    /// Record an `observe` phase span for round `round` covering
+    /// `[from, now)` — the caller's observer dispatch of that round's
+    /// event, which happens between `step` calls and therefore outside
+    /// [`Server::round`]'s own phases.  No-op without tracing.
+    pub fn note_observe(&mut self, round: usize, from: Instant) {
+        if let Some(tr) = self.server.trace.as_mut() {
+            tr.phase(round, Phase::Observe, from, Instant::now(), Counters::default());
+        }
     }
 
     /// Drive the remaining rounds to completion.

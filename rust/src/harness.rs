@@ -3,7 +3,7 @@
 //! Each `examples/fig*.rs` binary reproduces one figure of the paper's
 //! evaluation section.  This module holds the common machinery on top of
 //! the [`crate::exp`] engine: CLI parsing (`--quick`, `--rounds`,
-//! `--dataset`, `--repeats`, `--threads`, `--envs`, any
+//! `--dataset`, `--repeats`, `--threads`, `--envs`, `--trace-out`, any
 //! `--section.key=value` config override — including `--env.kind=...`
 //! and the other `[env]` knobs), quick-mode config scaling, CSV emission
 //! under `runs/<figure>/`, and the comparison tables the paper reports.
@@ -44,6 +44,10 @@ pub struct Args {
     /// Parse error from `--envs`, surfaced by [`Args::validated_envs`] /
     /// [`Args::reject_envs`] — a typo must never silently shrink a grid.
     envs_err: Option<String>,
+    /// Structured-trace output directory (`--trace-out DIR`); wired into
+    /// [`Args::experiment`].  Determinism-neutral: figure CSVs are
+    /// byte-identical with tracing on or off.
+    pub trace_out: Option<String>,
     /// Args not consumed above, forwarded into `Config::apply_cli`
     /// (and inspectable via [`Args::flag`]).
     raw: Vec<String>,
@@ -67,6 +71,7 @@ impl Args {
             threads: 0,
             envs: Vec::new(),
             envs_err: None,
+            trace_out: None,
             raw: Vec::new(),
         };
         let mut envs_seen = false;
@@ -82,7 +87,7 @@ impl Args {
             };
             if !matches!(
                 key.as_str(),
-                "--rounds" | "--dataset" | "--repeats" | "--threads" | "--envs"
+                "--rounds" | "--dataset" | "--repeats" | "--threads" | "--envs" | "--trace-out"
             ) {
                 a.raw.push(arg);
                 continue;
@@ -108,6 +113,7 @@ impl Args {
                 "--dataset" => a.dataset = Some(value),
                 "--repeats" => a.repeats = value.parse().unwrap_or(1),
                 "--threads" => a.threads = value.parse().unwrap_or(0),
+                "--trace-out" => a.trace_out = Some(value),
                 "--envs" => {
                     // Repeats must error loudly, never last-one-wins: a
                     // second --envs silently shrinking the grid to its
@@ -202,10 +208,14 @@ impl Args {
     /// either `.run()` it directly or layer `.base_with(..)` /
     /// `.observe(..)` on top first.
     pub fn experiment(&self, spec: SweepSpec) -> Experiment<'_> {
-        Experiment::from_spec(spec)
+        let mut e = Experiment::from_spec(spec)
             .base_with(move |ds| self.config(ds))
             .threads(self.threads)
-            .observe(exp::ProgressObserver::new())
+            .observe(exp::ProgressObserver::new());
+        if let Some(dir) = &self.trace_out {
+            e = e.trace(crate::trace::TraceConfig::new(dir.clone()));
+        }
+        e
     }
 }
 
@@ -370,6 +380,16 @@ mod tests {
         assert!(a.envs.is_empty(), "typo must not half-populate the axis");
         assert!(a.validated_envs().is_err());
         assert!(a.reject_envs("fig3").is_err());
+    }
+
+    #[test]
+    fn trace_out_flag_parses_both_forms() {
+        let a = Args::from_vec(argv(&["--trace-out=runs/t", "--rounds=5"]));
+        assert_eq!(a.trace_out.as_deref(), Some("runs/t"));
+        let a = Args::from_vec(argv(&["--trace-out", "runs/t2"]));
+        assert_eq!(a.trace_out.as_deref(), Some("runs/t2"));
+        assert!(a.raw.is_empty(), "raw leaked: {:?}", a.raw);
+        assert!(Args::from_vec(vec![]).trace_out.is_none());
     }
 
     #[test]

@@ -40,6 +40,10 @@
 //! | [`harness`] | figure-example CLI + reporting glue on top of `exp` |
 //! | [`metrics`] | run recorder, CSV emission, summaries |
 //! | [`bench`] | self-contained timing harness used by `cargo bench` |
+//! | [`trace`] | zero-dependency structured tracing: session → cell → round → phase spans, determinism-safe (`--trace-out`) |
+//! | [`trace::hub`] | per-cell lock-free span recording ([`trace::CellTrace`]) merged through the sharded [`trace::TraceHub`]; flight-recorder crash dumps |
+//! | [`trace::chrome`] | Chrome trace-event JSON exporter (Perfetto / `chrome://tracing` loadable `trace.json`) |
+//! | [`trace::summary`] | per-phase min/p50/p95/max + counter aggregation (`trace_summary.json`, `lroa trace summarize`) |
 
 pub mod bench;
 pub mod config;
@@ -56,6 +60,7 @@ pub mod rng;
 pub mod runtime;
 pub mod sampling;
 pub mod system;
+pub mod trace;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

@@ -9,6 +9,8 @@
 //!   oracle on the same environment stream (populates the `regret` column);
 //! * `bench`  — the criterion-free round-path benchmark with a JSON
 //!   emitter and a regression gate (CI's perf trajectory);
+//! * `trace`  — summarize structured traces written by `--trace-out`
+//!   (see [`lroa::trace`]);
 //! * `info`   — inspect artifacts, fleet, and the λ/V estimates;
 //! * `help`   — this text.
 //!
@@ -38,6 +40,7 @@ USAGE:
     lroa <train|sim|info> [--config FILE] [--section.key=value ...]
     lroa <sweep|regret> [--key=value ...] [--section.key=value ...]
     lroa bench [--json] [--quick] [--out=FILE] [--baseline=FILE] [--max-regress=F]
+    lroa trace summarize [DIR | --dir=DIR]
 
 SUBCOMMANDS:
     train   full federated training through the AOT artifacts
@@ -57,6 +60,11 @@ SUBCOMMANDS:
             --out writes it to a file, --baseline gates against a
             committed report (fails when round_total regresses more
             than --max-regress, default 0.25)
+    trace   inspect structured traces: `trace summarize [--dir=DIR]`
+            prints the per-cell phase-timing table (env_step/solve/train/
+            aggregate/observe min/p50/p95/max plus solver counters) from a
+            --trace-out run's trace_summary.json; load the sibling
+            trace.json in Perfetto or chrome://tracing for the timeline
     info    print artifact manifest, fleet summary, λ/V estimates
 
 SWEEP / REGRET FLAGS (all --key=value unless noted):
@@ -66,6 +74,12 @@ SWEEP / REGRET FLAGS (all --key=value unless noted):
     --seeds=1..30    --rounds=N              --threads=T (0 = cores)
     --cell_timeout_s=F (per-cell wall-clock budget; exceeding fails loudly)
     --mode=sim|train                         --out=DIR
+    --trace-out=DIR  (record a structured trace: trace.json — Chrome
+                      trace-event JSON, loadable in Perfetto — plus
+                      trace_summary.json per-cell phase timings, and a
+                      <cell>.crash-trace.json flight-recorder dump if a
+                      cell fails; CSV/summary/manifest bytes are identical
+                      with tracing on or off)
     --resume         (sweep only, bare flag: skip cells whose CSV already
                       exists in --out; skipped cells are re-read so
                       summary.json still aggregates the full grid)
@@ -477,6 +491,22 @@ fn bench_cmd(args: &[String]) -> lroa::Result<()> {
         });
     }
 
+    // The trace-recording fast path: one phase span into an owned
+    // CellTrace ring — the per-phase overhead `--trace-out` adds to a
+    // cell (two clock reads + a VecDeque push; no locks, no I/O).
+    {
+        use lroa::trace::{Counters, Phase, TraceConfig, TraceHub};
+        let hub = TraceHub::new(TraceConfig::new(std::env::temp_dir().join("lroa-bench-trace")));
+        let tid = hub.register_thread();
+        let mut ct = hub.cell(0, "bench", tid);
+        let mut round = 0usize;
+        b.bench("kernel/trace-phase-record", || {
+            let now = std::time::Instant::now();
+            ct.phase(round, Phase::Solve, now, now, Counters::default());
+            round += 1;
+        });
+    }
+
     let samples: Vec<(&str, Json)> = b
         .results()
         .iter()
@@ -554,6 +584,103 @@ fn bench_cmd(args: &[String]) -> lroa::Result<()> {
     Ok(())
 }
 
+/// `lroa trace summarize`: the per-cell phase-timing table from a
+/// `trace_summary.json` written by a `--trace-out` run.
+fn trace_cmd(args: &[String]) -> lroa::Result<()> {
+    use lroa::bench::fmt_ns;
+
+    let Some((op, rest)) = args.split_first() else {
+        anyhow::bail!("trace: expected a subcommand — `lroa trace summarize [DIR | --dir=DIR]`");
+    };
+    anyhow::ensure!(
+        op == "summarize",
+        "trace: unknown subcommand {op:?} (expected `summarize`)"
+    );
+    let mut dir = "runs/sweep/trace".to_string();
+    for a in rest {
+        if let Some(v) = a.strip_prefix("--dir=") {
+            dir = v.to_string();
+        } else if !a.starts_with("--") {
+            dir = a.clone();
+        } else {
+            anyhow::bail!("trace summarize: unknown argument {a:?} (DIR or --dir=DIR)");
+        }
+    }
+    let path = Path::new(&dir).join("trace_summary.json");
+    let text = std::fs::read_to_string(&path).map_err(|e| {
+        anyhow::anyhow!(
+            "{}: {e} (point --dir at a directory a --trace-out run wrote)",
+            path.display()
+        )
+    })?;
+    let summary = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    anyhow::ensure!(
+        summary.get("schema").and_then(|s| s.as_str()) == Some("lroa-trace-v1"),
+        "{}: unexpected schema (want lroa-trace-v1)",
+        path.display()
+    );
+    let cells = summary
+        .get("cells")
+        .and_then(|c| c.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("{}: missing cells array", path.display()))?;
+    let session_ns = summary
+        .get("session_dur_ns")
+        .and_then(|j| j.as_f64())
+        .unwrap_or(0.0);
+    println!(
+        "trace: {} cell(s), session wall {} ({})",
+        cells.len(),
+        fmt_ns(session_ns),
+        path.display()
+    );
+    for cell in cells {
+        let f = |p: &[&str]| cell.path(p).and_then(|j| j.as_f64()).unwrap_or(0.0);
+        println!(
+            "\n{} (cell {}, tid {}): {} rounds, wall {}, solve {}/{} outer/inner iters, \
+             {} warm-start hits, {} CSV bytes",
+            cell.get("label").and_then(|s| s.as_str()).unwrap_or("?"),
+            f(&["cell"]) as u64,
+            f(&["tid"]) as u64,
+            f(&["rounds"]) as u64,
+            fmt_ns(f(&["dur_ns"])),
+            f(&["counters", "outer_iters"]) as u64,
+            f(&["counters", "inner_iters"]) as u64,
+            f(&["counters", "warm_start_hits"]) as u64,
+            f(&["counters", "bytes_written"]) as u64,
+        );
+        println!(
+            "  {:<10} {:>8} {:>10} {:>10} {:>10} {:>10}",
+            "phase", "count", "total", "p50", "p95", "max"
+        );
+        for phase in ["env_step", "solve", "train", "aggregate", "observe", "round"] {
+            let stats = |key: &str| {
+                if phase == "round" {
+                    f(&["round", key])
+                } else {
+                    f(&["phases", phase, key])
+                }
+            };
+            println!(
+                "  {:<10} {:>8} {:>10} {:>10} {:>10} {:>10}",
+                phase,
+                stats("count") as u64,
+                fmt_ns(stats("total_ns")),
+                fmt_ns(stats("p50_ns")),
+                fmt_ns(stats("p95_ns")),
+                fmt_ns(stats("max_ns")),
+            );
+        }
+        let evicted = f(&["spans_evicted"]) as u64;
+        if evicted > 0 {
+            println!(
+                "  note: ring evicted {evicted} spans — phase stats cover the \
+                 surviving (most recent) spans; counters stay exact"
+            );
+        }
+    }
+    Ok(())
+}
+
 fn info(args: &[String]) -> lroa::Result<()> {
     let cfg = build_config(args)?;
     println!("{}", cfg.dump());
@@ -599,6 +726,7 @@ fn main() {
         "sweep" => sweep(&rest),
         "regret" => regret(&rest),
         "bench" => bench_cmd(&rest),
+        "trace" => trace_cmd(&rest),
         "info" => info(&rest),
         "help" | "--help" | "-h" => {
             print!("{HELP}");

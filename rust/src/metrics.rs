@@ -5,7 +5,6 @@
 //! objective value, queue backlogs, accuracy when evaluated) and emits
 //! them as CSV series shaped like the paper's plots.
 
-use std::io::Write;
 use std::path::Path;
 
 use crate::json::{arr_f64, obj, Json};
@@ -163,16 +162,16 @@ impl Recorder {
         running_average(self.rounds.iter().map(|r| r.objective))
     }
 
-    /// Write the full per-round table as CSV.
-    pub fn write_csv(&self, path: &Path) -> Result<()> {
-        if let Some(parent) = path.parent() {
-            std::fs::create_dir_all(parent)?;
-        }
-        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        writeln!(f, "{}", CSV_COLUMNS.join(","))?;
+    /// The full per-round table as CSV bytes — the single source of the
+    /// on-disk format ([`Recorder::write_csv`] writes exactly this
+    /// string, and the trace counters size cell output with it).
+    pub fn csv_string(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::with_capacity(64 * (self.rounds.len() + 1));
+        let _ = writeln!(out, "{}", CSV_COLUMNS.join(","));
         for r in &self.rounds {
-            writeln!(
-                f,
+            let _ = writeln!(
+                out,
                 "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
                 r.round,
                 r.round_time_s,
@@ -191,8 +190,17 @@ impl Recorder {
                 csv_f64(r.regret),
                 csv_f64(r.regret_online),
                 csv_f64(r.regret_budget),
-            )?;
+            );
         }
+        out
+    }
+
+    /// Write the full per-round table as CSV.
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.csv_string())?;
         Ok(())
     }
 
@@ -369,17 +377,27 @@ pub fn running_average<I: IntoIterator<Item = f64>>(xs: I) -> Vec<f64> {
     out
 }
 
-/// Aggregate several repeats of the same series (mean per index; series
-/// may have equal length only — asserted).
-pub fn mean_series(series: &[Vec<f64>]) -> Vec<f64> {
+/// Aggregate several repeats of the same series (mean per index).
+///
+/// Series must share one length; a mismatch — e.g. a truncated legacy
+/// cell CSV re-read by a `--resume`d grid — is a recoverable `Err`
+/// naming the offending index and lengths, not a panic that aborts the
+/// whole summary ([`crate::exp::mean_series_over`] adds cell labels).
+pub fn mean_series(series: &[Vec<f64>]) -> Result<Vec<f64>> {
     if series.is_empty() {
-        return Vec::new();
+        return Ok(Vec::new());
     }
     let len = series[0].len();
-    assert!(series.iter().all(|s| s.len() == len), "unequal series lengths");
-    (0..len)
+    if let Some((i, bad)) = series.iter().enumerate().find(|(_, s)| s.len() != len) {
+        anyhow::bail!(
+            "mean_series: series 0 has {len} entries but series {i} has {} — \
+             refusing to aggregate repeats of unequal length",
+            bad.len()
+        );
+    }
+    Ok((0..len)
         .map(|i| series.iter().map(|s| s[i]).sum::<f64>() / series.len() as f64)
-        .collect()
+        .collect())
 }
 
 #[cfg(test)]
@@ -404,8 +422,29 @@ mod tests {
 
     #[test]
     fn mean_series_basic() {
-        let out = mean_series(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let out = mean_series(&[vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
         assert_eq!(out, vec![2.0, 3.0]);
+        assert!(mean_series(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn mean_series_rejects_unequal_lengths() {
+        let err = mean_series(&[vec![1.0, 2.0], vec![3.0]]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("series 1"), "error names the series: {msg}");
+        assert!(msg.contains("2 entries"), "error names the lengths: {msg}");
+    }
+
+    #[test]
+    fn csv_string_matches_written_file() {
+        let mut r = Recorder::new("csv-string");
+        r.push(rec(0, 1.5, f64::NAN));
+        r.push(rec(1, 2.5, 0.25));
+        let dir = std::env::temp_dir().join(format!("lroa-metrics-{}", std::process::id()));
+        let path = dir.join("csv-string.csv");
+        r.write_csv(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), r.csv_string());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,113 @@
+//! Chrome trace-event exporter.
+//!
+//! Emits `"X"` (complete) events in the trace-event JSON format that
+//! Perfetto and `chrome://tracing` load directly.  Internal times are
+//! nanoseconds; the format wants microseconds, so `ts`/`dur` are f64 µs
+//! and sub-microsecond precision survives as fractional digits.
+//! Events are sorted by `(tid, ts, dur desc)`: timestamps are monotone
+//! per thread and an enclosing span always precedes its children.
+
+use super::hub::CellTrace;
+use super::span::{Phase, Span, SpanKind};
+use crate::json::{obj, Json};
+
+fn us(ns: u64) -> Json {
+    Json::Num(ns as f64 / 1000.0)
+}
+
+fn num(x: u64) -> Json {
+    Json::Num(x as f64)
+}
+
+fn event(
+    name: &str,
+    cat: &str,
+    tid: u64,
+    ts_ns: u64,
+    dur_ns: u64,
+    args: Vec<(&str, Json)>,
+) -> Json {
+    obj(vec![
+        ("args", obj(args)),
+        ("cat", Json::Str(cat.into())),
+        ("dur", us(dur_ns)),
+        ("name", Json::Str(name.into())),
+        ("ph", Json::Str("X".into())),
+        ("pid", Json::Num(1.0)),
+        ("tid", num(tid)),
+        ("ts", us(ts_ns)),
+    ])
+}
+
+/// One ring-buffered span as a Chrome event (also used verbatim by the
+/// flight recorder's crash dumps).
+pub(super) fn span_event(tid: u64, s: &Span) -> Json {
+    match s.kind {
+        SpanKind::Round => event(
+            "round",
+            "round",
+            tid,
+            s.ts_ns,
+            s.dur_ns,
+            vec![("round", num(s.round as u64))],
+        ),
+        SpanKind::Phase(p) => {
+            let mut args = vec![("round", num(s.round as u64))];
+            if p == Phase::Solve {
+                args.push(("inner_iters", num(s.counters.inner_iters)));
+                args.push(("outer_iters", num(s.counters.outer_iters)));
+                args.push(("warm_start", Json::Bool(s.counters.warm_start_hits > 0)));
+            }
+            event(p.name(), "phase", tid, s.ts_ns, s.dur_ns, args)
+        }
+    }
+}
+
+/// The full session as one trace-event document.
+pub(super) fn trace_json(session_dur_ns: u64, cells: &[CellTrace]) -> Json {
+    // (tid, ts, dur) sort keys ride alongside each rendered event.
+    let mut events: Vec<(u64, u64, u64, Json)> = Vec::new();
+    events.push((
+        0,
+        0,
+        session_dur_ns,
+        event(
+            "session",
+            "session",
+            0,
+            0,
+            session_dur_ns,
+            vec![("cells", num(cells.len() as u64))],
+        ),
+    ));
+    for c in cells {
+        events.push((
+            c.tid(),
+            c.start_ns(),
+            c.dur_ns(),
+            event(
+                c.label(),
+                "cell",
+                c.tid(),
+                c.start_ns(),
+                c.dur_ns(),
+                vec![
+                    ("cell", num(c.cell() as u64)),
+                    ("rounds", num(c.rounds_done() as u64)),
+                    ("spans_evicted", num(c.spans_evicted())),
+                ],
+            ),
+        ));
+        for s in c.spans() {
+            events.push((c.tid(), s.ts_ns, s.dur_ns, span_event(c.tid(), s)));
+        }
+    }
+    events.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)).then(b.2.cmp(&a.2)));
+    obj(vec![
+        ("displayTimeUnit", Json::Str("ms".into())),
+        (
+            "traceEvents",
+            Json::Arr(events.into_iter().map(|e| e.3).collect()),
+        ),
+    ])
+}

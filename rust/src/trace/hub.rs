@@ -1,0 +1,323 @@
+//! Trace collection: the per-cell recorder and the sharded session hub.
+//!
+//! A worker thread records into a [`CellTrace`] it owns exclusively —
+//! no locking per span — and hands the whole buffer to the
+//! [`TraceHub`] once, when the cell finishes.  Submission is sharded
+//! over a small set of mutexes so concurrent cell completions don't
+//! serialize on one lock; the shards are only merged at export time.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::ring::Ring;
+use super::span::{Counters, Phase, Span, SpanKind};
+use super::{chrome, summary, TraceConfig};
+use crate::json::{obj, Json};
+use crate::Result;
+
+const SHARDS: usize = 8;
+
+/// Session-wide trace state shared (via `Arc`) by every worker.
+pub struct TraceHub {
+    cfg: TraceConfig,
+    /// Session epoch: `t = 0` of every exported timestamp.
+    epoch: Instant,
+    next_tid: AtomicU64,
+    shards: Vec<Mutex<Vec<CellTrace>>>,
+}
+
+impl TraceHub {
+    pub fn new(cfg: TraceConfig) -> TraceHub {
+        TraceHub {
+            cfg,
+            epoch: Instant::now(),
+            next_tid: AtomicU64::new(0),
+            shards: (0..SHARDS).map(|_| Mutex::new(Vec::new())).collect(),
+        }
+    }
+
+    /// Trace output directory.
+    pub fn dir(&self) -> &Path {
+        &self.cfg.dir
+    }
+
+    /// Claim a Chrome `tid` for one worker thread (tid 0 is the
+    /// synthesized session track).
+    pub fn register_thread(&self) -> u64 {
+        self.next_tid.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Open a cell recorder; the cell span starts now.
+    pub fn cell(&self, cell: usize, label: &str, tid: u64) -> CellTrace {
+        let mut ct = CellTrace {
+            cell,
+            label: label.to_string(),
+            tid,
+            epoch: self.epoch,
+            start_ns: 0,
+            end_ns: 0,
+            rounds_done: 0,
+            ring: Ring::new(self.cfg.ring_spans),
+            counters: Counters::default(),
+        };
+        ct.start_ns = ct.ns(Instant::now());
+        ct.end_ns = ct.start_ns;
+        ct
+    }
+
+    /// Park a finished cell's buffer for export.
+    pub fn submit(&self, trace: CellTrace) {
+        let shard = trace.cell % self.shards.len();
+        self.shards[shard].lock().unwrap().push(trace);
+    }
+
+    /// Flight recorder: dump the last [`TraceConfig::flight_rounds`]
+    /// rounds of a failed cell to `<label>.crash-trace.json`.  The dump
+    /// is itself a loadable Chrome trace with `label`/`reason`/
+    /// `rounds_done` metadata at the top level (viewers ignore the
+    /// extra keys).
+    pub fn crash_dump(&self, trace: &CellTrace, reason: &str) -> Result<PathBuf> {
+        std::fs::create_dir_all(&self.cfg.dir)?;
+        let cutoff = trace.rounds_done.saturating_sub(self.cfg.flight_rounds);
+        let events: Vec<Json> = trace
+            .spans()
+            .filter(|s| s.round >= cutoff)
+            .map(|s| chrome::span_event(trace.tid, s))
+            .collect();
+        let dump = obj(vec![
+            ("displayTimeUnit", Json::Str("ms".into())),
+            ("first_round", Json::Num(cutoff as f64)),
+            ("label", Json::Str(trace.label.clone())),
+            ("reason", Json::Str(reason.to_string())),
+            ("rounds_done", Json::Num(trace.rounds_done as f64)),
+            ("schema", Json::Str("lroa-crash-trace-v1".into())),
+            ("traceEvents", Json::Arr(events)),
+        ]);
+        let path = self.cfg.dir.join(format!("{}.crash-trace.json", trace.label));
+        std::fs::write(&path, dump.to_string())?;
+        Ok(path)
+    }
+
+    /// Drain every shard and write `trace.json` (Chrome trace-event
+    /// JSON) plus `trace_summary.json` to the configured directory.
+    pub fn export(&self) -> Result<()> {
+        let mut cells: Vec<CellTrace> = Vec::new();
+        for shard in &self.shards {
+            cells.append(&mut shard.lock().unwrap());
+        }
+        cells.sort_by_key(|c| c.cell);
+        let session_dur_ns = cells
+            .iter()
+            .map(|c| c.end_ns)
+            .max()
+            .unwrap_or_else(|| self.epoch.elapsed().as_nanos() as u64);
+        std::fs::create_dir_all(&self.cfg.dir)?;
+        std::fs::write(
+            self.cfg.dir.join("trace.json"),
+            chrome::trace_json(session_dur_ns, &cells).to_string(),
+        )?;
+        std::fs::write(
+            self.cfg.dir.join("trace_summary.json"),
+            summary::summary_json(session_dur_ns, &cells).to_string(),
+        )?;
+        Ok(())
+    }
+}
+
+/// One cell's span recorder, owned by its worker thread for the cell's
+/// whole lifetime — recording never locks.
+#[derive(Clone, Debug)]
+pub struct CellTrace {
+    cell: usize,
+    label: String,
+    tid: u64,
+    epoch: Instant,
+    start_ns: u64,
+    end_ns: u64,
+    rounds_done: usize,
+    ring: Ring<Span>,
+    counters: Counters,
+}
+
+impl CellTrace {
+    fn ns(&self, at: Instant) -> u64 {
+        // `duration_since` saturates to zero for pre-epoch instants.
+        at.duration_since(self.epoch).as_nanos() as u64
+    }
+
+    /// Record one phase interval `[from, to)` and fold its counters
+    /// into the cell totals.
+    pub fn phase(&mut self, round: usize, phase: Phase, from: Instant, to: Instant, counters: Counters) {
+        self.counters.add(&counters);
+        let ts_ns = self.ns(from);
+        self.ring.push(Span {
+            kind: SpanKind::Phase(phase),
+            round,
+            ts_ns,
+            dur_ns: self.ns(to).saturating_sub(ts_ns),
+            counters,
+        });
+    }
+
+    /// Record one full `Server::round` interval.
+    pub fn round_span(&mut self, round: usize, from: Instant, to: Instant) {
+        self.rounds_done = self.rounds_done.max(round + 1);
+        let ts_ns = self.ns(from);
+        self.ring.push(Span {
+            kind: SpanKind::Round,
+            round,
+            ts_ns,
+            dur_ns: self.ns(to).saturating_sub(ts_ns),
+            counters: Counters::default(),
+        });
+    }
+
+    /// Close the cell span (call once, after the drive loop).
+    pub fn finish(&mut self) {
+        self.end_ns = self.ns(Instant::now());
+    }
+
+    /// Attribute the cell's metric-CSV output size.
+    pub fn set_bytes_written(&mut self, bytes: u64) {
+        self.counters.bytes_written += bytes;
+    }
+
+    pub fn cell(&self) -> usize {
+        self.cell
+    }
+
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    pub fn tid(&self) -> u64 {
+        self.tid
+    }
+
+    pub fn start_ns(&self) -> u64 {
+        self.start_ns
+    }
+
+    pub fn end_ns(&self) -> u64 {
+        self.end_ns
+    }
+
+    pub fn dur_ns(&self) -> u64 {
+        self.end_ns.saturating_sub(self.start_ns)
+    }
+
+    pub fn rounds_done(&self) -> usize {
+        self.rounds_done
+    }
+
+    pub fn counters(&self) -> &Counters {
+        &self.counters
+    }
+
+    pub fn spans_evicted(&self) -> u64 {
+        self.ring.evicted()
+    }
+
+    /// Surviving spans, in recording order.
+    pub fn spans(&self) -> impl Iterator<Item = &Span> {
+        self.ring.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("lroa-trace-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn record_cell(hub: &TraceHub, cell: usize, label: &str, rounds: usize) -> CellTrace {
+        let tid = hub.register_thread();
+        let mut ct = hub.cell(cell, label, tid);
+        for round in 0..rounds {
+            let t0 = Instant::now();
+            let mid = Instant::now();
+            ct.phase(
+                round,
+                Phase::Solve,
+                t0,
+                mid,
+                Counters {
+                    outer_iters: 2,
+                    inner_iters: 5,
+                    warm_start_hits: 1,
+                    bytes_written: 0,
+                },
+            );
+            ct.phase(round, Phase::Train, mid, Instant::now(), Counters::default());
+            ct.round_span(round, t0, Instant::now());
+        }
+        ct.finish();
+        ct
+    }
+
+    #[test]
+    fn record_export_parse_roundtrip() {
+        let dir = scratch_dir("roundtrip");
+        let hub = TraceHub::new(TraceConfig::new(&dir));
+        let ct = record_cell(&hub, 0, "cell-a", 3);
+        assert_eq!(ct.rounds_done(), 3);
+        assert_eq!(ct.counters().outer_iters, 6);
+        assert_eq!(ct.counters().warm_start_hits, 3);
+        hub.submit(ct);
+        hub.export().unwrap();
+
+        let trace =
+            Json::parse(&std::fs::read_to_string(dir.join("trace.json")).unwrap()).unwrap();
+        let events = trace.get("traceEvents").unwrap().as_arr().unwrap();
+        let cats: std::collections::BTreeSet<&str> = events
+            .iter()
+            .map(|e| e.get("cat").unwrap().as_str().unwrap())
+            .collect();
+        for cat in ["session", "cell", "round", "phase"] {
+            assert!(cats.contains(cat), "missing {cat} events");
+        }
+
+        let summary =
+            Json::parse(&std::fs::read_to_string(dir.join("trace_summary.json")).unwrap())
+                .unwrap();
+        assert_eq!(summary.get("schema").unwrap().as_str(), Some("lroa-trace-v1"));
+        let cell = &summary.get("cells").unwrap().as_arr().unwrap()[0];
+        assert_eq!(cell.get("label").unwrap().as_str(), Some("cell-a"));
+        assert_eq!(cell.path(&["counters", "outer_iters"]).unwrap().as_usize(), Some(6));
+        assert_eq!(cell.path(&["phases", "solve", "count"]).unwrap().as_usize(), Some(3));
+        assert_eq!(cell.path(&["phases", "observe", "count"]).unwrap().as_usize(), Some(0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn crash_dump_keeps_last_n_rounds() {
+        let dir = scratch_dir("crash");
+        let hub = TraceHub::new(TraceConfig::new(&dir).flight_rounds(2));
+        let ct = record_cell(&hub, 4, "doomed", 5);
+        let path = hub.crash_dump(&ct, "synthetic failure").unwrap();
+        let dump = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(dump.get("reason").unwrap().as_str(), Some("synthetic failure"));
+        assert_eq!(dump.get("first_round").unwrap().as_usize(), Some(3));
+        let events = dump.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!events.is_empty());
+        for ev in events {
+            let round = ev.path(&["args", "round"]).unwrap().as_usize().unwrap();
+            assert!(round >= 3, "round {round} survived a 2-round flight window");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn registered_tids_are_unique_and_nonzero() {
+        let hub = TraceHub::new(TraceConfig::new("/tmp/unused"));
+        let a = hub.register_thread();
+        let b = hub.register_thread();
+        assert!(a >= 1 && b >= 1 && a != b);
+    }
+}

@@ -1,0 +1,80 @@
+//! Zero-dependency structured tracing: where a session's wall-clock goes.
+//!
+//! The metrics pipeline reports *modeled* time (the paper's objective);
+//! this module reports *measured* time, so perf work on the solver, the
+//! env step, or observer dispatch is gated by data instead of guesses.
+//! Spans nest through four hierarchical scopes:
+//!
+//! ```text
+//! session                      one per exported trace
+//! └─ cell                      one per scenario (grid cell)
+//!    └─ round                  one per RoundDriver::step
+//!       └─ phase               env_step | solve | train | aggregate
+//!    └─ observe                round-event observer dispatch (per round)
+//! ```
+//!
+//! The four in-round phases partition `Server::round`'s wall-clock
+//! contiguously (each starts where the previous ended), so per-phase
+//! totals sum to the round span up to a few function-call nanoseconds —
+//! the property the CI trace-validation step asserts.
+//!
+//! Recording is lock-free on the hot path: each cell owns a
+//! [`CellTrace`] ring buffer on its worker thread and only touches the
+//! sharded [`TraceHub`] once, at submit time.  Two exporters run at
+//! grid end: Chrome trace-event JSON (`trace.json`, loadable in
+//! Perfetto or `chrome://tracing`) and the compact per-cell
+//! `trace_summary.json` (`lroa trace summarize` pretty-prints it).  On
+//! a cell timeout or panic the flight recorder dumps the last
+//! [`TraceConfig::flight_rounds`] rounds of spans to
+//! `<label>.crash-trace.json` — itself a loadable Chrome trace.
+//!
+//! Tracing is determinism-safe by construction: timestamps exist only
+//! in trace output, never in CSV/summary/manifest bytes, and the trace
+//! directory is not part of any cell fingerprint
+//! (`tests/trace_parity.rs` pins byte identity with tracing on vs off).
+
+use std::path::PathBuf;
+
+pub mod chrome;
+pub mod hub;
+pub mod ring;
+pub mod span;
+pub mod summary;
+
+pub use hub::{CellTrace, TraceHub};
+pub use ring::Ring;
+pub use span::{Counters, Phase, Span, SpanKind};
+pub use summary::PhaseStats;
+
+/// How a session records and exports its trace.
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    /// Directory receiving `trace.json`, `trace_summary.json`, and any
+    /// `<label>.crash-trace.json` flight-recorder dumps.
+    pub dir: PathBuf,
+    /// Per-cell span-ring capacity; on overflow the **oldest** spans are
+    /// evicted (the eviction count is exported, never hidden).
+    pub ring_spans: usize,
+    /// How many trailing rounds a crash dump keeps.
+    pub flight_rounds: usize,
+}
+
+impl TraceConfig {
+    pub fn new(dir: impl Into<PathBuf>) -> TraceConfig {
+        TraceConfig {
+            dir: dir.into(),
+            ring_spans: 1 << 16,
+            flight_rounds: 64,
+        }
+    }
+
+    pub fn ring_spans(mut self, n: usize) -> TraceConfig {
+        self.ring_spans = n;
+        self
+    }
+
+    pub fn flight_rounds(mut self, n: usize) -> TraceConfig {
+        self.flight_rounds = n;
+        self
+    }
+}

@@ -1,0 +1,77 @@
+//! Fixed-capacity ring: the per-cell span buffer.
+
+use std::collections::VecDeque;
+
+/// Bounded FIFO that drops the **oldest** entries on overflow, counting
+/// evictions so exports can report what was lost instead of silently
+/// truncating.
+#[derive(Clone, Debug)]
+pub struct Ring<T> {
+    buf: VecDeque<T>,
+    cap: usize,
+    evicted: u64,
+}
+
+impl<T> Ring<T> {
+    /// `cap` is clamped to at least 1; storage grows lazily, so a large
+    /// capacity costs nothing for short cells.
+    pub fn new(cap: usize) -> Ring<T> {
+        let cap = cap.max(1);
+        Ring {
+            buf: VecDeque::with_capacity(cap.min(1024)),
+            cap,
+            evicted: 0,
+        }
+    }
+
+    pub fn push(&mut self, item: T) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.evicted += 1;
+        }
+        self.buf.push_back(item);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Entries dropped to stay within capacity.
+    pub fn evicted(&self) -> u64 {
+        self.evicted
+    }
+
+    /// Surviving entries, oldest first.
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.buf.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_newest_and_counts_evictions() {
+        let mut r = Ring::new(3);
+        for i in 0..7 {
+            r.push(i);
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.evicted(), 4);
+        assert_eq!(r.iter().copied().collect::<Vec<i32>>(), vec![4, 5, 6]);
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let mut r = Ring::new(0);
+        r.push('a');
+        r.push('b');
+        assert_eq!(r.iter().copied().collect::<Vec<char>>(), vec!['b']);
+        assert_eq!(r.evicted(), 1);
+    }
+}

@@ -1,0 +1,97 @@
+//! Span model: the intervals a cell records.
+//!
+//! Only round and phase spans live in the per-cell ring — session and
+//! cell spans are synthesized at export from [`super::CellTrace`]
+//! bookkeeping — so the hot path stores one fixed-size `Copy` record
+//! per measured interval and never allocates.
+
+use std::fmt;
+
+/// One phase of the server's round pipeline (plus the observer dispatch
+/// that happens between rounds).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Phase {
+    /// Environment step: channel draw, availability, parameter drift.
+    EnvStep,
+    /// Scheduling + resource allocation: the policy's plan (Algorithm 2
+    /// for LROA), client sampling, plan scatter, and the cost model.
+    Solve,
+    /// Local training (or modeled compute) for the selected clients.
+    Train,
+    /// Post-train bookkeeping: virtual-queue update and metric record.
+    Aggregate,
+    /// Observer dispatch of the round's streamed `RoundEvent`.
+    Observe,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 5] = [
+        Phase::EnvStep,
+        Phase::Solve,
+        Phase::Train,
+        Phase::Aggregate,
+        Phase::Observe,
+    ];
+
+    /// Snake-case name used in Chrome `name` fields and summary keys.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::EnvStep => "env_step",
+            Phase::Solve => "solve",
+            Phase::Train => "train",
+            Phase::Aggregate => "aggregate",
+            Phase::Observe => "observe",
+        }
+    }
+}
+
+impl fmt::Display for Phase {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// What kind of interval a ring-buffered span covers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// One full `Server::round` call (emitted by `RoundDriver::step`).
+    Round,
+    /// One pipeline phase inside (or, for observe, right after) a round.
+    Phase(Phase),
+}
+
+/// Monotonic counters: attached to solve spans, summed per cell.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Counters {
+    /// Algorithm 2 outer (alternating-minimization) iterations.
+    pub outer_iters: u64,
+    /// SUM inner iterations across all outer passes.
+    pub inner_iters: u64,
+    /// Rounds whose solve started from the previous round's fixed point
+    /// (`SolverStats::warm_start_hit`).
+    pub warm_start_hits: u64,
+    /// Bytes of metric CSV the cell produced (counted once, at submit).
+    pub bytes_written: u64,
+}
+
+impl Counters {
+    pub fn add(&mut self, other: &Counters) {
+        self.outer_iters += other.outer_iters;
+        self.inner_iters += other.inner_iters;
+        self.warm_start_hits += other.warm_start_hits;
+        self.bytes_written += other.bytes_written;
+    }
+}
+
+/// One recorded interval, relative to the session epoch.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    pub kind: SpanKind,
+    /// Round index the interval belongs to.
+    pub round: usize,
+    /// Start, nanoseconds since the session epoch.
+    pub ts_ns: u64,
+    pub dur_ns: u64,
+    /// Solve spans carry the round's solver counters; zeroed elsewhere.
+    pub counters: Counters,
+}

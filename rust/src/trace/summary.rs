@@ -1,0 +1,124 @@
+//! Compact per-cell aggregation: `trace_summary.json`.
+//!
+//! One object per cell with order statistics (min/p50/p95/max, count,
+//! total) for every phase and for whole rounds, plus the cell's summed
+//! counters.  This is the machine-readable companion to the Chrome
+//! trace — `lroa trace summarize` pretty-prints it, and CI asserts its
+//! solve-phase totals against the metric CSV's `solver_time_s`.
+
+use super::hub::CellTrace;
+use super::span::{Phase, SpanKind};
+use crate::json::{obj, Json};
+
+pub const SCHEMA: &str = "lroa-trace-v1";
+
+/// Order statistics over one span population's durations [ns].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseStats {
+    pub count: u64,
+    pub total_ns: u64,
+    pub min_ns: u64,
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+    pub max_ns: u64,
+}
+
+impl PhaseStats {
+    /// Sorts `durs` in place; all-zero stats for an empty population.
+    pub fn from_durations(durs: &mut [u64]) -> PhaseStats {
+        if durs.is_empty() {
+            return PhaseStats::default();
+        }
+        durs.sort_unstable();
+        let pct = |q: f64| durs[((durs.len() - 1) as f64 * q).round() as usize];
+        PhaseStats {
+            count: durs.len() as u64,
+            total_ns: durs.iter().sum(),
+            min_ns: durs[0],
+            p50_ns: pct(0.5),
+            p95_ns: pct(0.95),
+            max_ns: durs[durs.len() - 1],
+        }
+    }
+
+    fn json(&self) -> Json {
+        obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("max_ns", Json::Num(self.max_ns as f64)),
+            ("min_ns", Json::Num(self.min_ns as f64)),
+            ("p50_ns", Json::Num(self.p50_ns as f64)),
+            ("p95_ns", Json::Num(self.p95_ns as f64)),
+            ("total_ns", Json::Num(self.total_ns as f64)),
+        ])
+    }
+}
+
+fn stats_for(cell: &CellTrace, kind: SpanKind) -> PhaseStats {
+    let mut durs: Vec<u64> = cell
+        .spans()
+        .filter(|s| s.kind == kind)
+        .map(|s| s.dur_ns)
+        .collect();
+    PhaseStats::from_durations(&mut durs)
+}
+
+fn cell_json(cell: &CellTrace) -> Json {
+    let phases: Vec<(&str, Json)> = Phase::ALL
+        .iter()
+        .map(|&p| (p.name(), stats_for(cell, SpanKind::Phase(p)).json()))
+        .collect();
+    let c = cell.counters();
+    obj(vec![
+        ("cell", Json::Num(cell.cell() as f64)),
+        (
+            "counters",
+            obj(vec![
+                ("bytes_written", Json::Num(c.bytes_written as f64)),
+                ("inner_iters", Json::Num(c.inner_iters as f64)),
+                ("outer_iters", Json::Num(c.outer_iters as f64)),
+                ("warm_start_hits", Json::Num(c.warm_start_hits as f64)),
+            ]),
+        ),
+        ("dur_ns", Json::Num(cell.dur_ns() as f64)),
+        ("label", Json::Str(cell.label().to_string())),
+        ("phases", obj(phases)),
+        ("round", stats_for(cell, SpanKind::Round).json()),
+        ("rounds", Json::Num(cell.rounds_done() as f64)),
+        ("spans_evicted", Json::Num(cell.spans_evicted() as f64)),
+        ("tid", Json::Num(cell.tid() as f64)),
+    ])
+}
+
+/// The whole session's summary document.
+pub(super) fn summary_json(session_dur_ns: u64, cells: &[CellTrace]) -> Json {
+    obj(vec![
+        ("cells", Json::Arr(cells.iter().map(cell_json).collect())),
+        ("schema", Json::Str(SCHEMA.into())),
+        ("session_dur_ns", Json::Num(session_dur_ns as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_order_statistics() {
+        let mut durs = vec![50, 10, 30, 20, 40];
+        let s = PhaseStats::from_durations(&mut durs);
+        assert_eq!(s.count, 5);
+        assert_eq!(s.total_ns, 150);
+        assert_eq!(s.min_ns, 10);
+        assert_eq!(s.p50_ns, 30);
+        assert_eq!(s.max_ns, 50);
+        assert_eq!(s.p95_ns, 50);
+    }
+
+    #[test]
+    fn empty_population_is_all_zero() {
+        let s = PhaseStats::from_durations(&mut []);
+        assert_eq!(s.count, 0);
+        assert_eq!(s.total_ns, 0);
+        assert_eq!(s.max_ns, 0);
+    }
+}

@@ -140,7 +140,10 @@ fn recorder_series_are_consistent() {
     for (a, b) in series.iter().zip(&direct) {
         assert!((a - b).abs() < 1e-12);
     }
-    let _ = mean_series(&[series.clone(), series]);
+    let mean = mean_series(&[series.clone(), series.clone()]).unwrap();
+    assert_eq!(mean, series);
+    // Unequal repeat lengths are a recoverable error, not a panic.
+    assert!(mean_series(&[series.clone(), series[..1].to_vec()]).is_err());
 }
 
 #[test]

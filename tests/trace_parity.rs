@@ -1,0 +1,341 @@
+//! Parity and validity tests for the structured tracing subsystem
+//! (`lroa::trace`):
+//!
+//! * **Determinism**: with `--trace-out` on, every result byte a sweep or
+//!   regret grid writes (cell CSVs, `.hash` sidecars, `summary.json`,
+//!   `manifest.json`) is identical to the same grid with tracing off, at
+//!   ≥ 2 scenario-pool widths — tracing is pure observability;
+//! * **Chrome-trace validity**: `trace.json` parses, every event carries
+//!   the trace-event keys with `ph == "X"`, timestamps are monotone per
+//!   `tid`, spans are well-nested (phase ⊆ round ⊆ cell), and per-phase
+//!   durations sum to the measured round time;
+//! * **Summary consistency**: `trace_summary.json` phase totals cover the
+//!   recorder's own `solver_time_s` accounting;
+//! * **Flight recorder**: a failing cell (injected wall-clock timeout)
+//!   leaves a `<label>.crash-trace.json` dump behind.
+
+use std::path::{Path, PathBuf};
+
+use lroa::config::Policy;
+use lroa::exp::{self, Anchors, Experiment, SweepSpec};
+use lroa::json::Json;
+use lroa::trace::TraceConfig;
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("lroa_trace_parity_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn sweep_spec() -> SweepSpec {
+    SweepSpec {
+        datasets: vec!["cifar".into()],
+        policies: vec![Policy::Lroa, Policy::UniformStatic],
+        seeds: vec![1, 2],
+        rounds: Some(12),
+        overrides: vec!["--system.num_devices=12".into()],
+        ..SweepSpec::default()
+    }
+}
+
+/// The `lroa sweep`/`lroa regret` file-observer stack, optionally traced.
+fn run_grid(
+    dir: &Path,
+    spec: SweepSpec,
+    trace_dir: Option<&Path>,
+    anchors: Anchors,
+    rewrite_final: bool,
+) -> exp::SessionReport {
+    let csv = if rewrite_final {
+        exp::CsvObserver::new(dir).rewrite_final()
+    } else {
+        exp::CsvObserver::new(dir)
+    };
+    let mut e = Experiment::from_spec(spec)
+        .anchors(anchors)
+        .out_dir(dir)
+        .observe(exp::ManifestObserver::new(dir).quiet())
+        .observe(csv)
+        .observe(exp::SummaryObserver::new(dir));
+    if let Some(t) = trace_dir {
+        e = e.trace(TraceConfig::new(t));
+    }
+    e.run().unwrap()
+}
+
+fn bytes(dir: &Path, name: &str) -> Vec<u8> {
+    std::fs::read(dir.join(name)).unwrap_or_else(|e| panic!("{}/{name}: {e}", dir.display()))
+}
+
+fn assert_outputs_identical(plain: &Path, traced: &Path, labels: &[&str]) {
+    for label in labels {
+        assert_eq!(
+            bytes(plain, &format!("{label}.csv")),
+            bytes(traced, &format!("{label}.csv")),
+            "{label}: CSV bytes changed under tracing"
+        );
+        assert_eq!(
+            bytes(plain, &format!("{label}.hash")),
+            bytes(traced, &format!("{label}.hash")),
+            "{label}: .hash sidecar changed under tracing"
+        );
+    }
+    assert_eq!(
+        bytes(plain, "summary.json"),
+        bytes(traced, "summary.json"),
+        "summary.json changed under tracing"
+    );
+    assert_eq!(
+        bytes(plain, "manifest.json"),
+        bytes(traced, "manifest.json"),
+        "manifest.json changed under tracing"
+    );
+}
+
+#[test]
+fn sweep_outputs_are_byte_identical_with_tracing_on() {
+    for threads in [1usize, 4] {
+        let plain = fresh_dir(&format!("sweep_plain_t{threads}"));
+        let traced = fresh_dir(&format!("sweep_traced_t{threads}"));
+        let tdir = traced.join("trace");
+        let mut spec = sweep_spec();
+        spec.threads = threads;
+        let r1 = run_grid(&plain, spec.clone(), None, Anchors::None, false);
+        let r2 = run_grid(&traced, spec, Some(&tdir), Anchors::None, false);
+        assert_eq!(r1.results.len(), r2.results.len());
+
+        let labels: Vec<&str> = r1.results.iter().map(|r| r.recorder.label.as_str()).collect();
+        assert_outputs_identical(&plain, &traced, &labels);
+
+        // The trace itself landed, and covers every cell.
+        let summary =
+            Json::parse(&std::fs::read_to_string(tdir.join("trace_summary.json")).unwrap())
+                .unwrap();
+        assert_eq!(summary.get("schema").unwrap().as_str(), Some("lroa-trace-v1"));
+        let cells = summary.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), labels.len(), "threads={threads}");
+        assert!(tdir.join("trace.json").exists());
+
+        let _ = std::fs::remove_dir_all(&plain);
+        let _ = std::fs::remove_dir_all(&traced);
+    }
+}
+
+#[test]
+fn regret_outputs_are_byte_identical_with_tracing_on() {
+    for threads in [1usize, 2] {
+        let plain = fresh_dir(&format!("regret_plain_t{threads}"));
+        let traced = fresh_dir(&format!("regret_traced_t{threads}"));
+        let mut spec = SweepSpec {
+            datasets: vec!["cifar".into()],
+            policies: vec![Policy::Lroa, Policy::GreedyChannel],
+            seeds: vec![1],
+            rounds: Some(10),
+            overrides: vec!["--system.num_devices=12".into()],
+            ..SweepSpec::default()
+        };
+        spec.threads = threads;
+        let r1 = run_grid(&plain, spec.clone(), None, Anchors::Both, true);
+        let r2 = run_grid(&traced, spec, Some(&traced.join("trace")), Anchors::Both, true);
+        assert_eq!(r1.results.len(), 4, "2 online cells + 2 anchors");
+        assert_eq!(r2.results.len(), 4);
+
+        let labels: Vec<&str> = r1.results.iter().map(|r| r.recorder.label.as_str()).collect();
+        assert_outputs_identical(&plain, &traced, &labels);
+
+        let _ = std::fs::remove_dir_all(&plain);
+        let _ = std::fs::remove_dir_all(&traced);
+    }
+}
+
+#[test]
+fn chrome_trace_is_valid_nested_and_phases_cover_rounds() {
+    let dir = fresh_dir("chrome");
+    let tdir = dir.join("trace");
+    let spec = SweepSpec {
+        datasets: vec!["cifar".into()],
+        policies: vec![Policy::Lroa],
+        seeds: vec![1],
+        rounds: Some(80),
+        overrides: vec!["--system.num_devices=16".into()],
+        ..SweepSpec::default()
+    };
+    let report = Experiment::from_spec(spec)
+        .out_dir(&dir)
+        .trace(TraceConfig::new(&tdir))
+        .run()
+        .unwrap();
+    assert_eq!(report.results.len(), 1);
+
+    let trace = Json::parse(&std::fs::read_to_string(tdir.join("trace.json")).unwrap()).unwrap();
+    assert_eq!(trace.get("displayTimeUnit").unwrap().as_str(), Some("ms"));
+    let events = trace.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+
+    // Every event is a complete ("X") trace event with the required keys,
+    // and timestamps are monotone non-decreasing per tid (the exporter's
+    // sort contract, which Perfetto's nesting relies on).
+    let f = |e: &Json, k: &str| e.get(k).and_then(|j| j.as_f64()).unwrap();
+    let mut last_ts: std::collections::BTreeMap<u64, f64> = std::collections::BTreeMap::new();
+    for e in events {
+        assert_eq!(e.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(f(e, "pid") as u64, 1);
+        assert!(f(e, "dur") >= 0.0);
+        assert!(!e.get("name").unwrap().as_str().unwrap().is_empty());
+        let cat = e.get("cat").unwrap().as_str().unwrap();
+        assert!(
+            ["session", "cell", "round", "phase"].contains(&cat),
+            "unexpected cat {cat:?}"
+        );
+        let (tid, ts) = (f(e, "tid") as u64, f(e, "ts"));
+        if let Some(prev) = last_ts.get(&tid) {
+            assert!(ts >= *prev, "ts regressed on tid {tid}: {ts} < {prev}");
+        }
+        last_ts.insert(tid, ts);
+    }
+
+    // Well-nesting: phase ⊆ its round ⊆ the cell ⊆ the session.  EPS
+    // absorbs the ns→µs float conversion, nothing more.
+    const EPS: f64 = 0.01;
+    let span = |e: &Json| (f(e, "ts"), f(e, "ts") + f(e, "dur"));
+    let of_cat = |cat: &str| -> Vec<&Json> {
+        events
+            .iter()
+            .filter(|e| e.get("cat").unwrap().as_str() == Some(cat))
+            .collect()
+    };
+    let (sessions, cells) = (of_cat("session"), of_cat("cell"));
+    assert_eq!(sessions.len(), 1);
+    assert_eq!(cells.len(), 1);
+    assert_eq!(cells[0].get("name").unwrap().as_str(), Some("LROA-cifar"));
+    let (cell_lo, cell_hi) = span(cells[0]);
+    let (sess_lo, sess_hi) = span(sessions[0]);
+    assert!(sess_lo <= cell_lo + EPS && cell_hi <= sess_hi + EPS);
+
+    let rounds = of_cat("round");
+    assert_eq!(rounds.len(), 80);
+    let mut round_span: std::collections::BTreeMap<u64, (f64, f64)> =
+        std::collections::BTreeMap::new();
+    let mut round_total = 0.0;
+    for r in rounds {
+        let (lo, hi) = span(r);
+        assert!(cell_lo <= lo + EPS && hi <= cell_hi + EPS, "round outside its cell");
+        let round = r.path(&["args", "round"]).unwrap().as_usize().unwrap() as u64;
+        round_span.insert(round, (lo, hi));
+        round_total += hi - lo;
+    }
+    let mut phase_total = 0.0;
+    for p in of_cat("phase") {
+        let (lo, hi) = span(p);
+        let round = p.path(&["args", "round"]).unwrap().as_usize().unwrap() as u64;
+        let (rlo, rhi) = round_span[&round];
+        assert!(rlo <= lo + EPS && hi <= rhi + EPS, "phase outside round {round}");
+        phase_total += hi - lo;
+    }
+    // The four phases partition each round contiguously (the only gap is
+    // a clock read between the round-span start and the first mark), so
+    // their durations must essentially sum to the measured round time.
+    assert!(
+        phase_total >= 0.90 * round_total && phase_total <= round_total + EPS * 80.0,
+        "phase sum {phase_total}µs vs round sum {round_total}µs"
+    );
+
+    // Summary side: the solve phase strictly encloses the solver's own
+    // timer, so its total must cover the recorder's solver_time_s.
+    let summary =
+        Json::parse(&std::fs::read_to_string(tdir.join("trace_summary.json")).unwrap()).unwrap();
+    let cell = &summary.get("cells").unwrap().as_arr().unwrap()[0];
+    let solve_ns = cell.path(&["phases", "solve", "total_ns"]).unwrap().as_f64().unwrap();
+    let solver_s: f64 = report.results[0]
+        .recorder
+        .rounds
+        .iter()
+        .map(|r| r.solver_time_s)
+        .sum();
+    assert!(
+        solve_ns >= 0.9 * solver_s * 1e9,
+        "solve phase {solve_ns}ns cannot cover recorded solver time {solver_s}s"
+    );
+    assert_eq!(cell.path(&["round", "count"]).unwrap().as_usize(), Some(80));
+    // No round-hungry observers attached => no observe spans.
+    assert_eq!(cell.path(&["phases", "observe", "count"]).unwrap().as_usize(), Some(0));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Minimal round-hungry observer: opting in is all it takes for every
+/// round to gain an `observe` span covering the hub dispatch.
+struct RoundCounter(std::sync::Arc<std::sync::atomic::AtomicUsize>);
+
+impl exp::Observer for RoundCounter {
+    fn wants_rounds(&self) -> bool {
+        true
+    }
+
+    fn on_round(&mut self, _ev: &exp::RoundEvent<'_>) {
+        self.0.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+}
+
+#[test]
+fn observe_spans_appear_when_an_observer_streams_rounds() {
+    let dir = fresh_dir("observe");
+    let tdir = dir.join("trace");
+    let spec = SweepSpec {
+        datasets: vec!["cifar".into()],
+        policies: vec![Policy::Lroa],
+        seeds: vec![1],
+        rounds: Some(6),
+        overrides: vec!["--system.num_devices=10".into()],
+        ..SweepSpec::default()
+    };
+    let seen = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
+    Experiment::from_spec(spec)
+        .out_dir(&dir)
+        .observe(RoundCounter(seen.clone()))
+        .trace(TraceConfig::new(&tdir))
+        .run()
+        .unwrap();
+    assert_eq!(seen.load(std::sync::atomic::Ordering::Relaxed), 6);
+    let summary =
+        Json::parse(&std::fs::read_to_string(tdir.join("trace_summary.json")).unwrap()).unwrap();
+    let cell = &summary.get("cells").unwrap().as_arr().unwrap()[0];
+    assert_eq!(cell.path(&["phases", "observe", "count"]).unwrap().as_usize(), Some(6));
+    assert!(
+        cell.path(&["counters", "bytes_written"]).unwrap().as_f64().unwrap() > 0.0,
+        "cell CSV size not attributed"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn flight_recorder_dumps_on_cell_timeout() {
+    let dir = fresh_dir("flight");
+    let tdir = dir.join("trace");
+    let spec = SweepSpec {
+        datasets: vec!["cifar".into()],
+        policies: vec![Policy::Lroa],
+        seeds: vec![1],
+        rounds: Some(50),
+        cell_timeout_s: Some(1e-9),
+        overrides: vec!["--system.num_devices=12".into()],
+        ..SweepSpec::default()
+    };
+    let err = Experiment::from_spec(spec)
+        .out_dir(&dir)
+        .trace(TraceConfig::new(&tdir))
+        .run();
+    assert!(err.is_err(), "a 1ns cell budget must fail the cell");
+
+    let dump_path = tdir.join("LROA-cifar.crash-trace.json");
+    assert!(dump_path.exists(), "flight-recorder dump missing");
+    let dump = Json::parse(&std::fs::read_to_string(&dump_path).unwrap()).unwrap();
+    assert_eq!(dump.get("schema").unwrap().as_str(), Some("lroa-crash-trace-v1"));
+    assert_eq!(dump.get("label").unwrap().as_str(), Some("LROA-cifar"));
+    assert_eq!(dump.get("displayTimeUnit").unwrap().as_str(), Some("ms"));
+    assert!(
+        !dump.get("reason").unwrap().as_str().unwrap().is_empty(),
+        "dump must carry the failure reason"
+    );
+    assert!(dump.get("traceEvents").unwrap().as_arr().is_some());
+    let _ = std::fs::remove_dir_all(&dir);
+}
