@@ -353,15 +353,16 @@ impl RoundPolicy for GreedyChannelPolicy {
             static_alloc::solve_static(&self.sys, ctx.devices, self.model_bits, ctx.h);
         let n = ctx.devices.len();
         let k = ctx.k.min(n);
-        let mut order: Vec<usize> = (0..n).collect();
-        // Best h first; ties broken by position for determinism.
-        order.sort_by(|&a, &b| {
+        // Best h first; ties broken by position for determinism — a
+        // total order, so the bounded-heap top-K returns exactly what
+        // the old "sort the whole pool, truncate" produced, in O(n log k)
+        // (the fleet-scale path: no full sort over 1M candidates).
+        let order = sampling::top_k_by(n, k, |a, b| {
             ctx.h[b]
                 .partial_cmp(&ctx.h[a])
                 .unwrap_or(std::cmp::Ordering::Equal)
                 .then(a.cmp(&b))
         });
-        order.truncate(k);
         let selection = sampling::fedavg_selection(order, ctx.weights);
         // Greedy's selection is deterministic and concentrated, so its
         // participation marginals are a 0/1 indicator — not uniform —
@@ -418,11 +419,12 @@ impl RoundPolicy for RoundRobinPolicy {
             static_alloc::solve_static(&self.sys, ctx.devices, self.model_bits, ctx.h);
         let n = ctx.devices.len();
         let k = ctx.k.min(n);
-        // Cyclic distance of each candidate's global id from the cursor.
-        let mut order: Vec<usize> = (0..n).collect();
+        // Cyclic distance of each candidate's global id from the cursor:
+        // distinct ids make the key injective, so this is a total order
+        // and the bounded-heap top-K equals the old full sort+truncate.
         let (cursor, n_total) = (self.cursor, self.n_total);
-        order.sort_by_key(|&pos| (ctx.ids[pos] + n_total - cursor) % n_total);
-        order.truncate(k);
+        let key = |pos: usize| (ctx.ids[pos] + n_total - cursor) % n_total;
+        let order = sampling::top_k_by(n, k, |a, b| key(a).cmp(&key(b)));
         self.cursor = (ctx.ids[order[k - 1]] + 1) % n_total;
         let selection = sampling::fedavg_selection(order, ctx.weights);
         RoundPlan {

@@ -1,6 +1,6 @@
 //! Markov device availability: the candidate set `N^t` varies per round.
 
-use super::{EnvInit, Environment, RoundEnv};
+use super::{EnvInit, EnvSoA, Environment, RoundEnv};
 use crate::rng::Rng;
 use crate::system::{ChannelProcess, Device};
 
@@ -41,17 +41,12 @@ impl AvailabilityEnv {
             min_online: init.sys.k.max(1),
         }
     }
-}
 
-impl Environment for AvailabilityEnv {
-    fn name(&self) -> &'static str {
-        "avail"
-    }
-
-    fn next_round(&mut self, _base: &[Device]) -> RoundEnv {
-        // Gains are drawn for every device (also offline ones) so the
-        // channel stream never depends on the availability trajectory.
-        let gains = self.channel.next_round();
+    /// Advance every on/off chain one round, then apply the K-repair
+    /// (force offline devices back on in ascending id order).  The one
+    /// implementation both `next_round` and `step_into` step through,
+    /// so the transition/repair semantics can never diverge.
+    fn advance_online(&mut self) {
         let (p_drop, p_join) = (self.p_drop, self.p_join);
         for (rng, on) in self.streams.iter_mut().zip(self.online.iter_mut()) {
             *on = super::step_two_state(rng, *on, p_drop, p_join);
@@ -67,12 +62,39 @@ impl Environment for AvailabilityEnv {
                 count += 1;
             }
         }
+    }
+}
+
+impl Environment for AvailabilityEnv {
+    fn name(&self) -> &'static str {
+        "avail"
+    }
+
+    fn next_round(&mut self, _base: &[Device]) -> RoundEnv {
+        // Gains are drawn for every device (also offline ones) so the
+        // channel stream never depends on the availability trajectory.
+        let gains = self.channel.next_round();
+        self.advance_online();
         let available = (0..self.online.len()).filter(|&i| self.online[i]).collect();
         RoundEnv {
             gains,
             available: Some(available),
             devices: None,
         }
+    }
+
+    fn step_into(&mut self, _base: &[Device], out: &mut EnvSoA) {
+        // Same order as next_round: all gains first, then the chains.
+        self.channel.next_round_into(&mut out.gains);
+        self.advance_online();
+        out.available.clear();
+        out.available
+            .extend((0..self.online.len()).filter(|&i| self.online[i]));
+        // Like next_round, N^t is reported explicitly even when every
+        // device happens to be online — the server's compaction decision
+        // keys on the count, not the flag.
+        out.all_available = false;
+        out.set_undrifted();
     }
 
     fn peek(&self, base: &[Device]) -> Option<RoundEnv> {

@@ -1,6 +1,6 @@
 //! Slow random-walk drift on per-device compute/energy parameters.
 
-use super::{EnvInit, Environment, RoundEnv};
+use super::{EnvInit, EnvSoA, Environment, RoundEnv};
 use crate::rng::Rng;
 use crate::system::{ChannelProcess, Device};
 
@@ -49,6 +49,19 @@ impl DriftEnv {
     pub fn freq_multipliers(&self) -> &[f64] {
         &self.m_f
     }
+
+    /// Advance both per-device walks one round — the single stepping
+    /// implementation `next_round` and `step_into` share, so the RNG
+    /// consumption order can never diverge between the two paths.
+    fn advance_walks(&mut self) {
+        let (lo, hi) = self.clip;
+        for i in 0..self.streams.len() {
+            let zf = self.streams[i].normal();
+            let za = self.streams[i].normal();
+            self.m_f[i] = (self.m_f[i] * (self.sigma * zf).exp()).clamp(lo, hi);
+            self.m_a[i] = (self.m_a[i] * (self.sigma * za).exp()).clamp(lo, hi);
+        }
+    }
 }
 
 impl Environment for DriftEnv {
@@ -58,13 +71,7 @@ impl Environment for DriftEnv {
 
     fn next_round(&mut self, base: &[Device]) -> RoundEnv {
         let gains = self.channel.next_round();
-        let (lo, hi) = self.clip;
-        for i in 0..self.streams.len() {
-            let zf = self.streams[i].normal();
-            let za = self.streams[i].normal();
-            self.m_f[i] = (self.m_f[i] * (self.sigma * zf).exp()).clamp(lo, hi);
-            self.m_a[i] = (self.m_a[i] * (self.sigma * za).exp()).clamp(lo, hi);
-        }
+        self.advance_walks();
         let devices = base
             .iter()
             .enumerate()
@@ -80,6 +87,24 @@ impl Environment for DriftEnv {
             available: None,
             devices: Some(devices),
         }
+    }
+
+    fn step_into(&mut self, base: &[Device], out: &mut EnvSoA) {
+        self.channel.next_round_into(&mut out.gains);
+        self.advance_walks();
+        // Same expressions as the per-Device path — only the two
+        // parameters the walk actually moves are materialized.
+        out.f_max_hz.clear();
+        out.f_max_hz.extend(
+            base.iter()
+                .enumerate()
+                .map(|(i, d)| (d.f_max_hz * self.m_f[i]).max(d.f_min_hz)),
+        );
+        out.alpha.clear();
+        out.alpha
+            .extend(base.iter().enumerate().map(|(i, d)| d.alpha * self.m_a[i]));
+        out.drifted = true;
+        out.set_all_available();
     }
 
     fn peek(&self, base: &[Device]) -> Option<RoundEnv> {

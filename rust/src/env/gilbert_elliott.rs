@@ -1,6 +1,6 @@
 //! Gilbert–Elliott two-state Markov fading.
 
-use super::{EnvInit, Environment, RoundEnv};
+use super::{EnvInit, EnvSoA, Environment, RoundEnv};
 use crate::rng::Rng;
 use crate::system::{draw_clipped_exponential, Device};
 
@@ -59,6 +59,26 @@ impl GilbertElliottEnv {
     pub fn states(&self) -> &[bool] {
         &self.good
     }
+
+    /// One round of the fading process into `out` (clear + extend): the
+    /// per-device interleaving — transition draw, then gain draw, on one
+    /// stream — is the single implementation both `next_round` and
+    /// `step_into` consume, so the two paths cannot drift apart.
+    fn draw_gains_into(&mut self, out: &mut Vec<f64>) {
+        let (p_bad, p_good) = (self.p_bad, self.p_good);
+        let (good_mean, bad_mean, clip) = (self.good_mean, self.bad_mean, self.clip);
+        out.clear();
+        out.extend(
+            self.streams
+                .iter_mut()
+                .zip(self.good.iter_mut())
+                .map(|(rng, good)| {
+                    *good = super::step_two_state(rng, *good, p_bad, p_good);
+                    let mean = if *good { good_mean } else { bad_mean };
+                    draw_clipped_exponential(rng, mean, clip)
+                }),
+        );
+    }
 }
 
 impl Environment for GilbertElliottEnv {
@@ -67,23 +87,19 @@ impl Environment for GilbertElliottEnv {
     }
 
     fn next_round(&mut self, _base: &[Device]) -> RoundEnv {
-        let (p_bad, p_good) = (self.p_bad, self.p_good);
-        let (good_mean, bad_mean, clip) = (self.good_mean, self.bad_mean, self.clip);
-        let gains = self
-            .streams
-            .iter_mut()
-            .zip(self.good.iter_mut())
-            .map(|(rng, good)| {
-                *good = super::step_two_state(rng, *good, p_bad, p_good);
-                let mean = if *good { good_mean } else { bad_mean };
-                draw_clipped_exponential(rng, mean, clip)
-            })
-            .collect();
+        let mut gains = Vec::with_capacity(self.streams.len());
+        self.draw_gains_into(&mut gains);
         RoundEnv {
             gains,
             available: None,
             devices: None,
         }
+    }
+
+    fn step_into(&mut self, _base: &[Device], out: &mut EnvSoA) {
+        self.draw_gains_into(&mut out.gains);
+        out.set_all_available();
+        out.set_undrifted();
     }
 
     fn peek(&self, base: &[Device]) -> Option<RoundEnv> {

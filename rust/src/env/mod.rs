@@ -96,6 +96,91 @@ pub struct RoundEnv {
     pub devices: Option<Vec<Device>>,
 }
 
+/// Struct-of-arrays view of one round's environment realization — the
+/// fleet-scale sibling of [`RoundEnv`], mirroring
+/// [`crate::system::FleetSoA`]'s clear + push refill idiom: the server
+/// owns one and every [`Environment::step_into`] call refills it in
+/// place, so a steady-state round draws a 1M-device environment without
+/// touching the heap.
+///
+/// Only `f_max_hz` and `alpha` appear as drift channels because those
+/// are the only per-device parameters any registered environment moves
+/// ([`DriftEnv`]); growing the drift surface means adding an array here
+/// and a line to the parity tests.
+#[derive(Clone, Debug, Default)]
+pub struct EnvSoA {
+    /// Channel gains `h_n^t`, one per device.
+    pub gains: Vec<f64>,
+    /// Sorted global ids of the reachable devices; meaningful only when
+    /// `all_available` is false (the flag plays [`RoundEnv::available`]'s
+    /// `None` role without an allocation).
+    pub available: Vec<usize>,
+    /// Whole fleet reachable this round (always-on environments).
+    pub all_available: bool,
+    /// Drifted `f_max_hz` per device; meaningful only when `drifted`.
+    pub f_max_hz: Vec<f64>,
+    /// Drifted `alpha` per device; meaningful only when `drifted`.
+    pub alpha: Vec<f64>,
+    /// The environment moved per-device parameters this round.
+    pub drifted: bool,
+}
+
+impl EnvSoA {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Mark the whole fleet reachable (clears any stale id list).
+    pub fn set_all_available(&mut self) {
+        self.available.clear();
+        self.all_available = true;
+    }
+
+    /// Mark parameters undrifted (clears any stale overlays).
+    pub fn set_undrifted(&mut self) {
+        self.f_max_hz.clear();
+        self.alpha.clear();
+        self.drifted = false;
+    }
+
+    /// Number of reachable devices, given the fleet size `n`.
+    pub fn num_available(&self, n: usize) -> usize {
+        if self.all_available {
+            n
+        } else {
+            self.available.len()
+        }
+    }
+
+    /// Refill from a per-`Device` [`RoundEnv`] — the compatibility
+    /// adapter behind the default [`Environment::step_into`], used by
+    /// environments without a specialized slice path (`trace`, `adv`).
+    /// Clear + extend, so capacity is retained across rounds even
+    /// through the adapter.
+    pub fn set_from_round(&mut self, round: &RoundEnv) {
+        self.gains.clear();
+        self.gains.extend_from_slice(&round.gains);
+        match &round.available {
+            Some(av) => {
+                self.available.clear();
+                self.available.extend_from_slice(av);
+                self.all_available = false;
+            }
+            None => self.set_all_available(),
+        }
+        match &round.devices {
+            Some(devs) => {
+                self.f_max_hz.clear();
+                self.f_max_hz.extend(devs.iter().map(|d| d.f_max_hz));
+                self.alpha.clear();
+                self.alpha.extend(devs.iter().map(|d| d.alpha));
+                self.drifted = true;
+            }
+            None => self.set_undrifted(),
+        }
+    }
+}
+
 /// One dynamic-environment model's behaviour across rounds.
 ///
 /// Environments are stateful (Markov chains, random walks) and own their
@@ -109,6 +194,23 @@ pub trait Environment: Send {
     /// Realize the next round: gains, candidate set, parameter drift.
     /// `base` is the fleet's static parameter set (drift applies on top).
     fn next_round(&mut self, base: &[Device]) -> RoundEnv;
+
+    /// Realize the next round straight into a caller-owned [`EnvSoA`]
+    /// (clear + extend refill — alloc-free at stable capacity): the
+    /// fleet-scale sibling of [`Environment::next_round`].  Both paths
+    /// consume the *same* RNG stream in the *same* order, so one
+    /// environment instance stepped through `step_into` is bitwise
+    /// identical to a same-seed twin stepped through `next_round` —
+    /// `tests/env_determinism.rs` pins this for every registry entry.
+    ///
+    /// The default adapter delegates to `next_round` (paying its
+    /// allocations), which keeps environments without a hot slice path
+    /// (`trace`, `adv`) correct by construction; the four synthetic
+    /// environments override it with specialized alloc-free impls.
+    fn step_into(&mut self, base: &[Device], out: &mut EnvSoA) {
+        let round = self.next_round(base);
+        out.set_from_round(&round);
+    }
 
     /// Preview the round that the *next* [`Environment::next_round`] call
     /// will realize, without advancing the stream.  Default `None`: the
@@ -329,6 +431,73 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn step_into_is_bitwise_identical_to_next_round_for_every_env() {
+        // Two same-seed instances of every registered environment, one
+        // stepped through the per-`Device` path and one through the SoA
+        // path, must realize identical trajectories — gains, candidate
+        // set, and drift overlays all bitwise.
+        let (sys, env) = setup();
+        let init = EnvInit {
+            sys: &sys,
+            env: &env,
+            seed: 23,
+        };
+        let mut rng = crate::rng::Rng::new(9);
+        let fleet = crate::system::Fleet::generate(&sys, (50, 100), &mut rng);
+        for spec in REGISTRY {
+            let mut aos = (spec.build)(&init).unwrap();
+            let mut soa_env = (spec.build)(&init).unwrap();
+            let mut soa = EnvSoA::new();
+            for t in 0..50 {
+                let re = aos.next_round(&fleet.devices);
+                soa_env.step_into(&fleet.devices, &mut soa);
+                assert_eq!(re.gains, soa.gains, "{} round {t}: gains", spec.name);
+                match &re.available {
+                    None => assert!(soa.all_available, "{} round {t}", spec.name),
+                    Some(av) => {
+                        assert!(!soa.all_available, "{} round {t}", spec.name);
+                        assert_eq!(av, &soa.available, "{} round {t}: N^t", spec.name);
+                    }
+                }
+                match &re.devices {
+                    None => assert!(!soa.drifted, "{} round {t}", spec.name),
+                    Some(devs) => {
+                        assert!(soa.drifted, "{} round {t}", spec.name);
+                        let f: Vec<f64> = devs.iter().map(|d| d.f_max_hz).collect();
+                        let a: Vec<f64> = devs.iter().map(|d| d.alpha).collect();
+                        assert_eq!(f, soa.f_max_hz, "{} round {t}: f_max", spec.name);
+                        assert_eq!(a, soa.alpha, "{} round {t}: alpha", spec.name);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn env_soa_retains_capacity_across_refills() {
+        let (sys, env) = setup();
+        let init = EnvInit {
+            sys: &sys,
+            env: &env,
+            seed: 3,
+        };
+        let mut rng = crate::rng::Rng::new(1);
+        let fleet = crate::system::Fleet::generate(&sys, (50, 100), &mut rng);
+        let mut e = from_name("avail", &init).unwrap();
+        let mut soa = EnvSoA::new();
+        e.step_into(&fleet.devices, &mut soa);
+        let caps = (soa.gains.capacity(), soa.available.capacity());
+        for _ in 0..30 {
+            e.step_into(&fleet.devices, &mut soa);
+        }
+        assert_eq!(
+            (soa.gains.capacity(), soa.available.capacity()),
+            caps,
+            "per-round refill must reuse the buffers"
+        );
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! The paper's environment: IID exponential fading, always-on fleet.
 
-use super::{EnvInit, Environment, RoundEnv};
+use super::{EnvInit, EnvSoA, Environment, RoundEnv};
 use crate::system::{ChannelProcess, Device};
 
 /// IID exponential channel (mean `channel_mean`, clipped), every device
@@ -33,6 +33,13 @@ impl Environment for StaticEnv {
             available: None,
             devices: None,
         }
+    }
+
+    fn step_into(&mut self, _base: &[Device], out: &mut EnvSoA) {
+        // Same streams, same draw order as next_round — alloc-free.
+        self.channel.next_round_into(&mut out.gains);
+        out.set_all_available();
+        out.set_undrifted();
     }
 
     fn peek(&self, base: &[Device]) -> Option<RoundEnv> {

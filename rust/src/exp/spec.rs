@@ -314,7 +314,9 @@ impl SweepSpec {
         let mut seen = std::collections::BTreeSet::new();
         for arg in args {
             let Some(rest) = arg.strip_prefix("--") else {
-                anyhow::bail!("sweep: unexpected argument {arg:?}");
+                return Err(crate::usage_error(format!(
+                    "sweep: unexpected argument {arg:?}"
+                )));
             };
             if rest == "resume" {
                 spec.resume = true;
@@ -325,17 +327,20 @@ impl SweepSpec {
                 continue;
             }
             let Some((key, val)) = rest.split_once('=') else {
-                anyhow::bail!("sweep: expected --key=value, got {arg:?}");
+                return Err(crate::usage_error(format!(
+                    "sweep: expected --key=value, got {arg:?}"
+                )));
             };
             // A repeated axis flag must error loudly, never last-one-wins:
             // a second --envs (or --seeds, ...) silently replacing the
             // first would hand the figure pipeline a half-grid it cannot
             // detect.  Dotted config overrides are exempt (each names its
             // own key; Config::set already owns that semantics).
-            anyhow::ensure!(
-                key.contains('.') || seen.insert(key.to_string()),
-                "sweep: --{key} given more than once; pass one combined value list"
-            );
+            if !(key.contains('.') || seen.insert(key.to_string())) {
+                return Err(crate::usage_error(format!(
+                    "sweep: --{key} given more than once; pass one combined value list"
+                )));
+            }
             match key {
                 "datasets" => spec.datasets = val.split(',').map(str::to_string).collect(),
                 "policies" => {
@@ -365,11 +370,17 @@ impl SweepSpec {
                     spec.mode = match val {
                         "sim" => SimMode::ControlPlaneOnly,
                         "train" => SimMode::Full,
-                        other => anyhow::bail!("sweep: --mode must be sim|train, got {other:?}"),
+                        other => {
+                            return Err(crate::usage_error(format!(
+                                "sweep: --mode must be sim|train, got {other:?}"
+                            )))
+                        }
                     }
                 }
                 _ if key.contains('.') => spec.overrides.push(arg.clone()),
-                other => anyhow::bail!("sweep: unknown flag --{other}"),
+                other => {
+                    return Err(crate::usage_error(format!("sweep: unknown flag --{other}")))
+                }
             }
         }
         Ok(spec)
@@ -438,7 +449,7 @@ pub fn manifest_json(scenarios: &[Scenario]) -> Json {
 
 fn parse_one<T: std::str::FromStr>(val: &str, what: &str) -> Result<T> {
     val.parse::<T>()
-        .map_err(|_| anyhow::anyhow!("sweep: bad {what} value {val:?}"))
+        .map_err(|_| crate::usage_error(format!("sweep: bad {what} value {val:?}")))
 }
 
 fn parse_list<T: std::str::FromStr>(val: &str, what: &str) -> Result<Vec<T>> {

@@ -38,7 +38,7 @@ use crate::config::Config;
 use crate::control::{self, policy, Controls, PolicyInit, RoundContext, RoundPlan, RoundPolicy};
 use crate::control::{hyper, VirtualQueues};
 use crate::data::SyntheticTask;
-use crate::env::{self, Environment, RoundEnv};
+use crate::env::{self, EnvSoA, Environment};
 use crate::metrics::{Recorder, RoundRecord};
 use crate::par;
 use crate::rng::Rng;
@@ -91,6 +91,17 @@ pub struct Server {
     /// Identity position → id map for full-availability rounds (cached:
     /// the fast path must not allocate per round).
     identity: Vec<usize>,
+    /// Per-round environment realization, refilled in place by
+    /// [`Environment::step_into`] — stage 1 allocates nothing at steady
+    /// state, which is what makes 1M-device rounds tractable.
+    env_soa: EnvSoA,
+    /// Persistent overlay buffer for drifted rounds: cloned from the
+    /// fleet once, then only the drifting columns (`f_max_hz`, `alpha`)
+    /// are rewritten per round, so the cost model still sees a plain
+    /// `&[Device]` without a per-round fleet clone.
+    drift_devices: Vec<Device>,
+    /// Persistent cost columns (stage 4 refills them in place).
+    costs: RoundCosts,
     /// Gather buffers for partially-available rounds (same rationale).
     compact: CompactScratch,
     queues: VirtualQueues,
@@ -245,6 +256,9 @@ impl Server {
             fleet,
             env: environment,
             identity: (0..n).collect(),
+            env_soa: EnvSoA::new(),
+            drift_devices: Vec::new(),
+            costs: RoundCosts::default(),
             compact: CompactScratch::default(),
             queues: VirtualQueues::new(budgets),
             policy: round_policy,
@@ -334,13 +348,13 @@ impl Server {
     /// (stage 5), and `aggregate` (stages 6–8).
     pub fn round(&mut self, t: usize) -> Result<()> {
         let mut mark = self.trace.as_ref().map(|_| Instant::now());
-        // (1) The environment realizes this round's randomness: channel
-        // gains, the reachable candidate set N^t, and parameter drift.
-        let RoundEnv {
-            gains: h,
-            available,
-            devices: drifted,
-        } = self.env.next_round(&self.fleet.devices);
+        // (1) The environment realizes this round's randomness straight
+        // into the persistent SoA buffers (clear + refill into retained
+        // capacity): channel gains, the reachable candidate set N^t, and
+        // parameter drift.  Bitwise-identical to the per-`Device`
+        // `next_round` path — pinned per env in `env::tests` and end to
+        // end in `tests/env_determinism.rs`.
+        self.env.step_into(&self.fleet.devices, &mut self.env_soa);
         // Foresight, only when the scheme asks (the oracle anchor) and
         // the environment is previewable — online policies never see it.
         let peeked = if self.policy.wants_peek() {
@@ -350,87 +364,101 @@ impl Server {
         };
         let next_h = peeked.as_ref().map(|p| p.gains.as_slice());
         let n = self.fleet.len();
-        let devices: &[Device] = drifted.as_deref().unwrap_or(&self.fleet.devices);
+        if self.env_soa.drifted {
+            if self.drift_devices.len() != n {
+                self.drift_devices = self.fleet.devices.clone();
+            }
+            for (i, d) in self.drift_devices.iter_mut().enumerate() {
+                d.f_max_hz = self.env_soa.f_max_hz[i];
+                d.alpha = self.env_soa.alpha[i];
+            }
+        }
+        let devices: &[Device] = if self.env_soa.drifted {
+            &self.drift_devices
+        } else {
+            &self.fleet.devices
+        };
+        let h: &[f64] = &self.env_soa.gains;
         phase_mark(&mut self.trace, &mut mark, t, Phase::EnvStep, Counters::default());
 
         // (2)+(3) The policy solves for controls and samples K^t over the
         // reachable sub-problem (the full fleet on the fast path).
         let k = self.cfg.system.k;
-        let plan = match available.as_deref() {
-            Some(avail) if avail.len() < n => {
-                // Index-gather the sub-problem into the persistent
-                // scratch; `Device` is flat, so the clone is a plain
-                // copy into retained capacity.
-                let scratch = &mut self.compact;
-                scratch.devices.clear();
-                scratch
-                    .devices
-                    .extend(avail.iter().map(|&i| devices[i].clone()));
-                let w = self.fleet.weights();
-                let wsum: f64 = avail.iter().map(|&i| w[i]).sum();
-                scratch.weights.clear();
-                scratch.weights.extend(avail.iter().map(|&i| w[i] / wsum));
-                scratch.h.clear();
-                scratch.h.extend(avail.iter().map(|&i| h[i]));
-                let backlogs = self.queues.backlogs();
-                scratch.backlogs.clear();
-                scratch.backlogs.extend(avail.iter().map(|&i| backlogs[i]));
-                let has_next = next_h.is_some();
-                scratch.next_h.clear();
-                if let Some(nh) = next_h {
-                    scratch.next_h.extend(avail.iter().map(|&i| nh[i]));
-                }
-                let ctx = RoundContext {
-                    t,
-                    k,
-                    devices: &scratch.devices,
-                    weights: &scratch.weights,
-                    ids: avail,
-                    h: &scratch.h,
-                    backlogs: &scratch.backlogs,
-                    next_h: if has_next {
-                        Some(scratch.next_h.as_slice())
-                    } else {
-                        None
-                    },
-                };
-                let sub_plan = self.policy.plan(&ctx, &mut self.sample_rng);
-                scatter_plan(sub_plan, avail, &self.fleet.devices)
+        let compacted = !self.env_soa.all_available && self.env_soa.available.len() < n;
+        let plan = if compacted {
+            // Index-gather the sub-problem straight from the env SoA
+            // into the persistent scratch; `Device` is flat, so the
+            // clone is a plain copy into retained capacity.
+            let avail: &[usize] = &self.env_soa.available;
+            let scratch = &mut self.compact;
+            scratch.devices.clear();
+            scratch
+                .devices
+                .extend(avail.iter().map(|&i| devices[i].clone()));
+            let w = self.fleet.weights();
+            let wsum: f64 = avail.iter().map(|&i| w[i]).sum();
+            scratch.weights.clear();
+            scratch.weights.extend(avail.iter().map(|&i| w[i] / wsum));
+            scratch.h.clear();
+            scratch.h.extend(avail.iter().map(|&i| h[i]));
+            let backlogs = self.queues.backlogs();
+            scratch.backlogs.clear();
+            scratch.backlogs.extend(avail.iter().map(|&i| backlogs[i]));
+            let has_next = next_h.is_some();
+            scratch.next_h.clear();
+            if let Some(nh) = next_h {
+                scratch.next_h.extend(avail.iter().map(|&i| nh[i]));
             }
-            _ => {
-                // Full fleet reachable (None, or an explicit full set).
-                let ctx = RoundContext {
-                    t,
-                    k,
-                    devices,
-                    weights: self.fleet.weights(),
-                    ids: &self.identity,
-                    h: &h,
-                    backlogs: self.queues.backlogs(),
-                    next_h,
-                };
-                self.policy.plan(&ctx, &mut self.sample_rng)
-            }
+            let ctx = RoundContext {
+                t,
+                k,
+                devices: &scratch.devices,
+                weights: &scratch.weights,
+                ids: avail,
+                h: &scratch.h,
+                backlogs: &scratch.backlogs,
+                next_h: if has_next {
+                    Some(scratch.next_h.as_slice())
+                } else {
+                    None
+                },
+            };
+            let sub_plan = self.policy.plan(&ctx, &mut self.sample_rng);
+            scatter_plan(sub_plan, avail, &self.fleet.devices)
+        } else {
+            // Full fleet reachable (no mask, or an explicit full set).
+            let ctx = RoundContext {
+                t,
+                k,
+                devices,
+                weights: self.fleet.weights(),
+                ids: &self.identity,
+                h,
+                backlogs: self.queues.backlogs(),
+                next_h,
+            };
+            self.policy.plan(&ctx, &mut self.sample_rng)
         };
         let unique = plan.selection.unique_members();
         // Reactive environments (adv) observe what was actually used.
         self.env.observe_selection(&unique);
 
         // (4) Latency/energy bookkeeping (eqs. 6-15), under the possibly
-        // drifted device parameters.
-        let costs = RoundCosts::evaluate(
+        // drifted device parameters, refilled into the persistent cost
+        // columns (no per-round allocation).
+        self.costs.evaluate_into(
             &self.cfg.system,
             devices,
             self.model_bits,
-            &h,
+            h,
             &plan.controls.f_hz,
             &plan.controls.p_w,
         );
-        let round_time = costs.makespan_s(&unique);
+        let round_time = self.costs.makespan_s(&unique);
         // Context feed: learning policies (the contextual bandit) see
         // the round's realized per-device costs.  Fires in every sim
         // mode, unlike observe_update, which needs local training.
-        self.policy.observe_round(&unique, &costs);
+        self.policy.observe_round(&unique, &self.costs);
         phase_mark(
             &mut self.trace,
             &mut mark,
@@ -451,10 +479,10 @@ impl Server {
         // (6) Advance the virtual queues with this round's expected draws
         // (unreachable devices have q_eff = 0: no expected energy drawn).
         self.queues
-            .update(&plan.q_eff, self.cfg.system.k, &costs.energy_j);
+            .update(&plan.q_eff, self.cfg.system.k, &self.costs.energy_j);
 
         // (7)+(8) Record the ledger entry; evaluate when due.
-        self.record_round(t, &plan, &costs, unique.len(), round_time, train_loss)?;
+        self.record_round(t, &plan, unique.len(), round_time, train_loss)?;
         phase_mark(&mut self.trace, &mut mark, t, Phase::Aggregate, Counters::default());
         Ok(())
     }
@@ -516,17 +544,19 @@ impl Server {
         Ok((losses / unique.len() as f64) as f32 as f64)
     }
 
-    /// Stages 7–8: push the round record; evaluate when the schedule says so.
+    /// Stages 7–8: push the round record; evaluate when the schedule says
+    /// so.  Reads the round's costs from the persistent `self.costs`
+    /// columns stage 4 just refilled.
     fn record_round(
         &mut self,
         t: usize,
         plan: &RoundPlan,
-        costs: &RoundCosts,
         selected: usize,
         round_time: f64,
         train_loss: f64,
     ) -> Result<()> {
         let n = self.fleet.len();
+        let costs = &self.costs;
         let mean_energy = (0..n)
             .map(|i| selection_probability(plan.q_eff[i], self.cfg.system.k) * costs.energy_j[i])
             .sum::<f64>()

@@ -65,6 +65,37 @@ pub mod trace;
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;
 
+/// Marker for *usage* errors — malformed flags, unknown subcommands,
+/// unparseable values — as opposed to runtime/config failures.
+///
+/// The CLI's exit-code contract (documented under `lroa help`, pinned by
+/// `tests/cli_exit_codes.rs`): `0` success, `1` runtime or configuration
+/// error (e.g. a missing trace file, a config that fails validation),
+/// `2` usage error.  `main` downcasts the error chain for this type to
+/// pick the exit code, so any layer can classify an error as misuse by
+/// constructing it through [`usage_error`].
+#[derive(Debug)]
+pub struct UsageError(pub String);
+
+impl std::fmt::Display for UsageError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for UsageError {}
+
+/// Build a usage error (CLI exit code 2); interchangeable with
+/// `anyhow::anyhow!` at every call site that reports misuse.
+pub fn usage_error(msg: impl Into<String>) -> anyhow::Error {
+    anyhow::Error::new(UsageError(msg.into()))
+}
+
+/// Whether any link of `err`'s chain is a [`UsageError`].
+pub fn is_usage_error(err: &anyhow::Error) -> bool {
+    err.chain().any(|e| e.is::<UsageError>())
+}
+
 /// Shared helpers for in-crate unit tests.  The single source of truth
 /// is `tests/common.rs` — the integration-test targets pull it in as
 /// `mod common;` and the library includes the same file here (they

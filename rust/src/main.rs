@@ -9,10 +9,17 @@
 //!   oracle on the same environment stream (populates the `regret` column);
 //! * `bench`  — the criterion-free round-path benchmark with a JSON
 //!   emitter and a regression gate (CI's perf trajectory);
+//! * `scale`  — the fleet-scale harness: one LROA cell per fleet size
+//!   through the full sweep pipeline, emitting the N-vs-round-time
+//!   scaling curve (`scaling.json`) plus peak-RSS evidence;
 //! * `trace`  — summarize structured traces written by `--trace-out`
 //!   (see [`lroa::trace`]);
 //! * `info`   — inspect artifacts, fleet, and the λ/V estimates;
 //! * `help`   — this text.
+//!
+//! Exit codes: `0` success, `1` runtime/configuration error, `2` usage
+//! error (unknown subcommand or malformed flags) — pinned by
+//! `tests/cli_exit_codes.rs`.
 //!
 //! Every config knob is overridable as `--section.key=value` (see
 //! `config.rs`), e.g.:
@@ -40,6 +47,7 @@ USAGE:
     lroa <train|sim|info> [--config FILE] [--section.key=value ...]
     lroa <sweep|regret> [--key=value ...] [--section.key=value ...]
     lroa bench [--json] [--quick] [--out=FILE] [--baseline=FILE] [--max-regress=F]
+    lroa scale [--ns=N1,N2,...] [--rounds=R] [--out=DIR] [--json]
     lroa trace summarize [DIR | --dir=DIR]
 
 SUBCOMMANDS:
@@ -55,11 +63,22 @@ SUBCOMMANDS:
             and manifest cells link to their anchors via `regret_vs` /
             `regret_vs_e`
     bench   time the round path (control-plane rounds per policy, plus a
-            warm-vs-cold round/LROA pair and kernel/lroa-solve rows at
-            N=120/10k/100k); --json emits a machine-readable report,
-            --out writes it to a file, --baseline gates against a
-            committed report (fails when round_total regresses more
+            warm-vs-cold round/LROA pair, kernel/lroa-solve rows at
+            N=120/10k/100k, alloc-free kernel/env-step rows at
+            N=10k/100k/1M, and the 1M-device round/LROA@1M fleet-scale
+            row); --json emits a machine-readable report, --out writes
+            it to a file, --baseline gates against a committed report
+            (fails when round_total — the sum of the paper-scale
+            round/* medians, '@'-scale rows excluded — regresses more
             than --max-regress, default 0.25)
+    scale   fleet-scale harness: one LROA control-plane cell per fleet
+            size (--ns=10000,100000,1000000 default, --rounds=3 default)
+            through the same Experiment pipeline as `sweep` (per-N
+            manifest.json + cell CSV under --out/n<N>/), then writes the
+            N-vs-round-time curve with peak-RSS evidence to
+            --out/scaling.json (schema lroa-scale-v1); --json mirrors
+            that object to stdout; at N >= 1e6 the q_min floor is
+            auto-lowered to stay inside the q_min < 1/N validation bound
     trace   inspect structured traces: `trace summarize [--dir=DIR]`
             prints the per-cell phase-timing table (env_step/solve/train/
             aggregate/observe min/p50/p95/max plus solver counters) from a
@@ -121,6 +140,12 @@ COMMON OVERRIDES:
     --env.trace_path=FILE --env.adv_degrade=F --env.adv_targets=N
     --bandit.ucb_c=F --bandit.temp=F --bandit.eps=F     (bandit policy only)
     --run.out_dir=DIR               --run.artifacts_dir=DIR
+
+EXIT CODES:
+    0  success
+    1  runtime or configuration error (missing trace file, failed
+       validation such as --system.num_devices=0, cell timeout, ...)
+    2  usage error (unknown subcommand, malformed or unknown flags)
 ";
 
 fn build_config(args: &[String]) -> lroa::Result<Config> {
@@ -390,15 +415,17 @@ fn bench_cmd(args: &[String]) -> lroa::Result<()> {
                 } else if let Some(v) = a.strip_prefix("--baseline=") {
                     baseline = Some(v.to_string());
                 } else if let Some(v) = a.strip_prefix("--max-regress=") {
-                    max_regress = v
-                        .parse()
-                        .map_err(|e| anyhow::anyhow!("bad --max-regress value {v:?}: {e}"))?;
-                    anyhow::ensure!(max_regress > 0.0, "--max-regress must be > 0");
+                    max_regress = v.parse().map_err(|e| {
+                        lroa::usage_error(format!("bad --max-regress value {v:?}: {e}"))
+                    })?;
+                    if max_regress <= 0.0 {
+                        return Err(lroa::usage_error("--max-regress must be > 0"));
+                    }
                 } else {
-                    anyhow::bail!(
+                    return Err(lroa::usage_error(format!(
                         "bench: unknown argument {a:?} \
                          (--json --quick --out=FILE --baseline=FILE --max-regress=F)"
-                    );
+                    )));
                 }
             }
         }
@@ -442,6 +469,52 @@ fn bench_cmd(args: &[String]) -> lroa::Result<()> {
         b.bench("round/LROA-cold", || {
             server.round(t).unwrap();
             t += 1;
+        });
+    }
+
+    // The fleet-scale headline: a full 1M-device LROA control-plane
+    // round (SoA env step, incremental top-K-free solver path, in-place
+    // cost columns).  The default q_min floor sits exactly at 1/N for
+    // N = 1e6, so it is lowered to stay inside the q_min < 1/N
+    // validation bound.  Reported, but excluded from the gated
+    // round_total (the '@' in the name marks off-paper-scale rows).
+    {
+        let mut cfg = Config::for_dataset("cifar")?;
+        cfg.train.policy = Policy::Lroa;
+        cfg.train.rounds = 1_000_000;
+        cfg.system.num_devices = 1_000_000;
+        cfg.control.q_min = 1e-9;
+        let mut server = Server::new(cfg, SimMode::ControlPlaneOnly)?;
+        let mut t = 0usize;
+        b.bench("round/LROA@1M", || {
+            server.round(t).unwrap();
+            t += 1;
+        });
+    }
+
+    // The SoA environment step isolated from the round loop: refill the
+    // persistent EnvSoA from the static channel at three fleet scales —
+    // the alloc-free stage-1 kernel.  Not part of the gated round_total.
+    for n in [10_000usize, 100_000, 1_000_000] {
+        use lroa::config::{EnvConfig, EnvKind, SystemConfig};
+        use lroa::env::{self, EnvSoA};
+        let sys = SystemConfig {
+            num_devices: n,
+            ..SystemConfig::default()
+        };
+        let env_cfg = EnvConfig::default();
+        let mut env = env::build(
+            EnvKind::Static,
+            &env::EnvInit {
+                sys: &sys,
+                env: &env_cfg,
+                seed: 13,
+            },
+        )?;
+        let base: Vec<lroa::system::Device> = Vec::new();
+        let mut soa = EnvSoA::new();
+        b.bench(&format!("kernel/env-step/N={n}"), || {
+            env.step_into(&base, &mut soa);
         });
     }
 
@@ -522,12 +595,15 @@ fn bench_cmd(args: &[String]) -> lroa::Result<()> {
             )
         })
         .collect();
-    // The gated headline sums only the whole-round cases: kernel rows
-    // inform the report without moving the regression gate.
+    // The gated headline sums only the paper-scale whole-round cases:
+    // kernel rows inform the report without moving the regression gate,
+    // and '@'-marked fleet-scale rows (round/LROA@1M is ~3 orders of
+    // magnitude above the N=120 rounds) stay out so they cannot swamp
+    // the paper-scale signal.
     let round_total_ns: f64 = b
         .results()
         .iter()
-        .filter(|s| s.name.starts_with("round/"))
+        .filter(|s| s.name.starts_with("round/") && !s.name.contains('@'))
         .map(|s| s.median.as_nanos() as f64)
         .sum();
     let report = obj(vec![
@@ -584,18 +660,156 @@ fn bench_cmd(args: &[String]) -> lroa::Result<()> {
     Ok(())
 }
 
+/// Peak resident-set size of this process [bytes], from the kernel's
+/// `VmHWM` high-water mark (Linux; `None` elsewhere).  Monotone over the
+/// process lifetime, so per-N readings in `lroa scale` are "peak so
+/// far" — exactly the ceiling the CI scale job budgets against.
+fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: u64 = line
+        .strip_prefix("VmHWM:")?
+        .trim()
+        .trim_end_matches("kB")
+        .trim()
+        .parse()
+        .ok()?;
+    Some(kb * 1024)
+}
+
+/// `lroa scale`: the fleet-scale harness — one LROA control-plane cell
+/// per fleet size, run through the same `Experiment` pipeline as `lroa
+/// sweep` (so each N lands its own manifest.json + cell CSV under
+/// `--out/n<N>/`), aggregated into the N-vs-round-time scaling curve at
+/// `--out/scaling.json` with peak-RSS evidence per point.  This is what
+/// the CI `scale` job runs under an explicit wall-clock budget.
+fn scale_cmd(args: &[String]) -> lroa::Result<()> {
+    use lroa::config::Policy;
+
+    let mut ns: Vec<usize> = vec![10_000, 100_000, 1_000_000];
+    let mut rounds = 3usize;
+    let mut out_dir = "runs/scale".to_string();
+    let mut json_out = false;
+    for a in args {
+        if a == "--json" {
+            json_out = true;
+        } else if let Some(v) = a.strip_prefix("--ns=") {
+            ns = v
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse::<usize>()
+                        .map_err(|_| lroa::usage_error(format!("scale: bad --ns value {x:?}")))
+                })
+                .collect::<lroa::Result<_>>()?;
+        } else if let Some(v) = a.strip_prefix("--rounds=") {
+            rounds = v
+                .parse()
+                .map_err(|_| lroa::usage_error(format!("scale: bad --rounds value {v:?}")))?;
+            if rounds == 0 {
+                return Err(lroa::usage_error("scale: --rounds must be >= 1"));
+            }
+        } else if let Some(v) = a.strip_prefix("--out=") {
+            out_dir = v.to_string();
+        } else {
+            return Err(lroa::usage_error(format!(
+                "scale: unknown argument {a:?} (--ns=N1,N2,... --rounds=R --out=DIR --json)"
+            )));
+        }
+    }
+
+    let out = std::path::PathBuf::from(&out_dir);
+    let mut points: Vec<Json> = Vec::with_capacity(ns.len());
+    for &n in &ns {
+        let mut cfg = Config::for_dataset("cifar")?;
+        cfg.train.policy = Policy::Lroa;
+        cfg.train.rounds = rounds;
+        cfg.system.num_devices = n;
+        // validate() requires q_min < 1/N; the paper-scale default
+        // (1e-6) sits exactly at the bound for N = 1e6, so shrink the
+        // floor once fleets outgrow it (matches `round/LROA@1M`).
+        if cfg.control.q_min >= 1.0 / n as f64 {
+            cfg.control.q_min = 0.1 / n as f64;
+        }
+        cfg.validate()?;
+
+        let dir = out.join(format!("n{n}"));
+        say(json_out, &format!("scale: N={n}, {rounds} round(s) ..."));
+        // The sweep file pipeline (cell CSV + summary.json +
+        // manifest.json per N) minus the stdout observers: scale's own
+        // stdout carries at most the scaling JSON (`--json` purity).
+        let report = Experiment::new(cfg)
+            .mode(SimMode::ControlPlaneOnly)
+            .threads(1)
+            .out_dir(&dir)
+            .observe(exp::CsvObserver::new(&dir))
+            .observe(exp::SummaryObserver::new(&dir))
+            .observe(exp::ManifestObserver::new(&dir).quiet())
+            .observe(exp::ProgressObserver::new().quiet())
+            .build()?
+            .run()?;
+        let cell = report
+            .results
+            .first()
+            .ok_or_else(|| anyhow::anyhow!("scale: N={n} produced no cell result"))?;
+        let wall_s = cell.wall_s;
+        let s_per_round = wall_s / rounds as f64;
+        let rss = peak_rss_bytes();
+        say(
+            json_out,
+            &format!(
+                "scale: N={n}: {wall_s:.3}s wall ({s_per_round:.3}s/round), peak RSS {}",
+                match rss {
+                    Some(b) => format!("{:.1} MiB", b as f64 / (1024.0 * 1024.0)),
+                    None => "unavailable".to_string(),
+                }
+            ),
+        );
+        points.push(obj(vec![
+            ("num_devices", Json::Num(n as f64)),
+            ("rounds", Json::Num(rounds as f64)),
+            ("wall_s", Json::Num(wall_s)),
+            ("s_per_round", Json::Num(s_per_round)),
+            (
+                "rss_peak_bytes",
+                match rss {
+                    Some(b) => Json::Num(b as f64),
+                    None => Json::Null,
+                },
+            ),
+        ]));
+    }
+
+    let curve = obj(vec![
+        ("schema", Json::Str("lroa-scale-v1".into())),
+        ("policy", Json::Str("LROA".into())),
+        ("points", Json::Arr(points)),
+    ]);
+    std::fs::create_dir_all(&out)?;
+    let path = out.join("scaling.json");
+    std::fs::write(&path, curve.to_string())?;
+    say(json_out, &format!("wrote {}", path.display()));
+    if json_out {
+        println!("{curve}");
+    }
+    Ok(())
+}
+
 /// `lroa trace summarize`: the per-cell phase-timing table from a
 /// `trace_summary.json` written by a `--trace-out` run.
 fn trace_cmd(args: &[String]) -> lroa::Result<()> {
     use lroa::bench::fmt_ns;
 
     let Some((op, rest)) = args.split_first() else {
-        anyhow::bail!("trace: expected a subcommand — `lroa trace summarize [DIR | --dir=DIR]`");
+        return Err(lroa::usage_error(
+            "trace: expected a subcommand — `lroa trace summarize [DIR | --dir=DIR]`",
+        ));
     };
-    anyhow::ensure!(
-        op == "summarize",
-        "trace: unknown subcommand {op:?} (expected `summarize`)"
-    );
+    if op != "summarize" {
+        return Err(lroa::usage_error(format!(
+            "trace: unknown subcommand {op:?} (expected `summarize`)"
+        )));
+    }
     let mut dir = "runs/sweep/trace".to_string();
     for a in rest {
         if let Some(v) = a.strip_prefix("--dir=") {
@@ -603,7 +817,9 @@ fn trace_cmd(args: &[String]) -> lroa::Result<()> {
         } else if !a.starts_with("--") {
             dir = a.clone();
         } else {
-            anyhow::bail!("trace summarize: unknown argument {a:?} (DIR or --dir=DIR)");
+            return Err(lroa::usage_error(format!(
+                "trace summarize: unknown argument {a:?} (DIR or --dir=DIR)"
+            )));
         }
     }
     let path = Path::new(&dir).join("trace_summary.json");
@@ -726,6 +942,7 @@ fn main() {
         "sweep" => sweep(&rest),
         "regret" => regret(&rest),
         "bench" => bench_cmd(&rest),
+        "scale" => scale_cmd(&rest),
         "trace" => trace_cmd(&rest),
         "info" => info(&rest),
         "help" | "--help" | "-h" => {
@@ -739,6 +956,8 @@ fn main() {
     };
     if let Err(e) = result {
         eprintln!("error: {e:#}");
-        std::process::exit(1);
+        // The documented exit-code contract (see HELP and
+        // tests/cli_exit_codes.rs): misuse exits 2, everything else 1.
+        std::process::exit(if lroa::is_usage_error(&e) { 2 } else { 1 });
     }
 }

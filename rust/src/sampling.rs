@@ -9,6 +9,68 @@
 
 use crate::rng::Rng;
 
+/// The first `k` positions of `sort_by(cmp)` over `0..n`, found with a
+/// bounded heap in `O(n log k)` instead of a full `O(n log n)` sort —
+/// the fleet-scale replacement for "sort the whole pool, truncate to K"
+/// in the deterministic selectors (at 1M devices and K=10 the full sort
+/// dominates the round).
+///
+/// `cmp` must be a **total order** over positions (every comparator in
+/// this crate breaks score ties by position precisely so this holds).
+/// Under that contract the returned vector is *identical* — same ids,
+/// same order — to `(0..n).collect::<Vec<_>>()` sorted by `cmp` and
+/// truncated to `k`, pinned by the equality tests below.
+pub fn top_k_by<F>(n: usize, k: usize, mut cmp: F) -> Vec<usize>
+where
+    F: FnMut(usize, usize) -> std::cmp::Ordering,
+{
+    use std::cmp::Ordering;
+    let k = k.min(n);
+    if k == 0 {
+        return Vec::new();
+    }
+    // Seed the heap with the first k positions, root = the worst kept
+    // candidate (greatest under `cmp`), via Floyd heapify.
+    let mut heap: Vec<usize> = (0..k).collect();
+    for pos in (0..k / 2).rev() {
+        sift_down(&mut heap, pos, &mut cmp);
+    }
+    for i in k..n {
+        if cmp(i, heap[0]) == Ordering::Less {
+            heap[0] = i;
+            sift_down(&mut heap, 0, &mut cmp);
+        }
+    }
+    heap.sort_unstable_by(|&a, &b| cmp(a, b));
+    heap
+}
+
+/// Restore the max-heap property (w.r.t. `cmp`) below `pos`.
+fn sift_down<F>(heap: &mut [usize], mut pos: usize, cmp: &mut F)
+where
+    F: FnMut(usize, usize) -> std::cmp::Ordering,
+{
+    use std::cmp::Ordering;
+    let len = heap.len();
+    loop {
+        let left = 2 * pos + 1;
+        if left >= len {
+            break;
+        }
+        let mut worst = left;
+        let right = left + 1;
+        if right < len && cmp(heap[right], heap[left]) == Ordering::Greater {
+            worst = right;
+        }
+        if cmp(heap[worst], heap[pos]) == Ordering::Greater {
+            heap.swap(pos, worst);
+            pos = worst;
+        } else {
+            break;
+        }
+    }
+}
+
 /// One round's selection: the sampled multiset and eq. (4) coefficients.
 #[derive(Clone, Debug)]
 pub struct Selection {
@@ -55,8 +117,11 @@ pub fn p2c_marginals(scores: &[f64]) -> Vec<f64> {
     let n = scores.len();
     // Ascending in the "beats" total order: worse scores first; among
     // equals the larger position first (the lower position wins ties).
+    // The position tie-break makes this a total order, so the unstable
+    // sort is deterministic (and avoids the stable sort's scratch
+    // allocation).
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&a, &b| {
+    order.sort_unstable_by(|&a, &b| {
         scores[a]
             .partial_cmp(&scores[b])
             .unwrap_or(std::cmp::Ordering::Equal)
@@ -299,6 +364,60 @@ impl Projector {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// The greedy-channel comparator shape: descending score, ascending
+    /// position among ties — a total order.
+    fn desc_score_cmp(scores: &[f64]) -> impl FnMut(usize, usize) -> std::cmp::Ordering + '_ {
+        |a, b| {
+            scores[b]
+                .partial_cmp(&scores[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        }
+    }
+
+    #[test]
+    fn top_k_matches_full_sort_truncate_under_ties() {
+        // Deterministic pseudo-random scores with deliberate heavy ties:
+        // quantizing to a handful of levels forces the position
+        // tie-break to decide most comparisons.
+        let mut rng = Rng::new(77);
+        for n in [1usize, 2, 3, 7, 17, 64, 257] {
+            let scores: Vec<f64> = (0..n).map(|_| (rng.f64() * 4.0).floor() / 4.0).collect();
+            for k in [0usize, 1, 2, 3, n / 2, n.saturating_sub(1), n, n + 5] {
+                let mut cmp = desc_score_cmp(&scores);
+                let mut full: Vec<usize> = (0..n).collect();
+                full.sort_by(|&a, &b| cmp(a, b));
+                full.truncate(k.min(n));
+                let fast = top_k_by(n, k, desc_score_cmp(&scores));
+                assert_eq!(fast, full, "n={n} k={k} scores={scores:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn top_k_matches_full_sort_on_ascending_keys() {
+        // The round-robin comparator shape: ascending wrap-distance keys
+        // (all distinct).
+        for cursor in 0..10usize {
+            let n = 10;
+            let key = |pos: usize| (pos + n - cursor) % n;
+            let mut full: Vec<usize> = (0..n).collect();
+            full.sort_by_key(|&pos| key(pos));
+            full.truncate(3);
+            let fast = top_k_by(n, 3, |a, b| key(a).cmp(&key(b)));
+            assert_eq!(fast, full, "cursor={cursor}");
+        }
+    }
+
+    #[test]
+    fn top_k_all_equal_scores_resolve_by_position() {
+        // Fully tied scores: the position tie-break alone must order the
+        // result 0..k, exactly like the full sort.
+        let scores = vec![0.5; 20];
+        let fast = top_k_by(20, 6, desc_score_cmp(&scores));
+        assert_eq!(fast, (0..6).collect::<Vec<_>>());
+    }
 
     #[test]
     fn selection_has_k_members_and_correct_coefs() {

@@ -53,12 +53,25 @@ impl ChannelProcess {
 
     /// Draw the round-`t` gain for every device.
     pub fn next_round(&mut self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.streams.len());
+        self.next_round_into(&mut out);
+        out
+    }
+
+    /// [`ChannelProcess::next_round`] into a caller-owned buffer
+    /// (clear + extend into retained capacity): the fleet-scale env-step
+    /// path draws a million gains per round without touching the heap.
+    /// Same streams, same draw order — the returned values are bitwise
+    /// identical to `next_round`.
+    pub fn next_round_into(&mut self, out: &mut Vec<f64>) {
         let clip = self.clip;
         let mean = self.mean;
-        self.streams
-            .iter_mut()
-            .map(|rng| draw_clipped_exponential(rng, mean, clip))
-            .collect()
+        out.clear();
+        out.extend(
+            self.streams
+                .iter_mut()
+                .map(|rng| draw_clipped_exponential(rng, mean, clip)),
+        );
     }
 
     pub fn num_devices(&self) -> usize {

@@ -77,7 +77,7 @@ pub fn selection_probability(q: f64, k: usize) -> f64 {
 
 /// All per-device costs of one round under given controls — what the
 /// server records and what the queues consume.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct RoundCosts {
     /// `T_n^t` per device [s] (eq. 9).
     pub time_s: Vec<f64>,
@@ -104,30 +104,46 @@ impl RoundCosts {
         f_hz: &[f64],
         p_w: &[f64],
     ) -> RoundCosts {
+        let mut out = RoundCosts::default();
+        out.evaluate_into(cfg, devices, model_bits, h, f_hz, p_w);
+        out
+    }
+
+    /// In-place [`RoundCosts::evaluate`]: refill every column via
+    /// clear + push into retained capacity, so the server's per-round
+    /// cost pass allocates nothing at steady state (the fleet-scale
+    /// sibling of [`round_costs_into`], keeping all six columns).  Same
+    /// arithmetic, same expression order — bitwise identical results.
+    pub fn evaluate_into(
+        &mut self,
+        cfg: &SystemConfig,
+        devices: &[Device],
+        model_bits: f64,
+        h: &[f64],
+        f_hz: &[f64],
+        p_w: &[f64],
+    ) {
         let n = devices.len();
         assert!(h.len() == n && f_hz.len() == n && p_w.len() == n);
-        let mut out = RoundCosts {
-            time_s: Vec::with_capacity(n),
-            energy_j: Vec::with_capacity(n),
-            comp_time_s: Vec::with_capacity(n),
-            upload_time_s: Vec::with_capacity(n),
-            comp_energy_j: Vec::with_capacity(n),
-            comm_energy_j: Vec::with_capacity(n),
-        };
+        self.time_s.clear();
+        self.energy_j.clear();
+        self.comp_time_s.clear();
+        self.upload_time_s.clear();
+        self.comp_energy_j.clear();
+        self.comm_energy_j.clear();
         for i in 0..n {
             let dev = &devices[i];
             let tcmp = comp_time_s(cfg, dev, f_hz[i]);
             let tup = upload_time_s(cfg, model_bits, h[i], p_w[i]);
             let ecmp = comp_energy_j(cfg, dev, f_hz[i]);
             let ecom = p_w[i] * tup;
-            out.comp_time_s.push(tcmp);
-            out.upload_time_s.push(tup);
-            out.comp_energy_j.push(ecmp);
-            out.comm_energy_j.push(ecom);
-            out.time_s.push(tcmp + tup + download_time_s(cfg, model_bits));
-            out.energy_j.push(ecmp + ecom);
+            self.comp_time_s.push(tcmp);
+            self.upload_time_s.push(tup);
+            self.comp_energy_j.push(ecmp);
+            self.comm_energy_j.push(ecom);
+            self.time_s.push(tcmp + tup + download_time_s(cfg, model_bits));
+            self.energy_j.push(ecmp + ecom);
         }
-        out
     }
 
     /// Eq. (10): makespan over the selected set.

@@ -1,0 +1,167 @@
+//! Steady-state allocation audit for the fleet-scale hot path.
+//!
+//! The 1M-device round is only tractable because stage 1 (environment
+//! step) and stage 4 (cost evaluation) refill persistent buffers
+//! instead of allocating per round.  This target installs a counting
+//! `#[global_allocator]` (per-thread counter, `System` underneath) and
+//! pins **zero** heap allocations at steady state — after a short
+//! warmup that grows every buffer to capacity — for:
+//!
+//! * `Environment::step_into` of all four ported synthetic envs
+//!   (`static`, `ge`, `avail`, `drift`),
+//! * `ChannelProcess::next_round_into`,
+//! * `RoundCosts::evaluate_into`.
+//!
+//! A separate `[[test]]` target so the counting allocator never leaks
+//! into the other suites.  The counter is thread-local and `Cell<u64>`
+//! is `const`-initialized (no lazy init, no destructor), so counting
+//! itself cannot recurse into the allocator.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use lroa::config::{EnvConfig, EnvKind, SystemConfig};
+use lroa::env::{self, EnvSoA};
+use lroa::rng::Rng;
+use lroa::system::{ChannelProcess, Device, Fleet, RoundCosts};
+
+struct CountingAlloc;
+
+thread_local! {
+    static ALLOC_CALLS: Cell<u64> = const { Cell::new(0) };
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn alloc_calls() -> u64 {
+    ALLOC_CALLS.with(|c| c.get())
+}
+
+fn sys(n: usize) -> SystemConfig {
+    SystemConfig {
+        num_devices: n,
+        ..SystemConfig::default()
+    }
+}
+
+/// Dynamics cranked up so every env's buffers actually churn (gain
+/// redraws, availability transitions, drift walks) while we count.
+fn env_cfg() -> EnvConfig {
+    EnvConfig {
+        ge_p_bad: 0.3,
+        ge_p_good: 0.4,
+        avail_p_drop: 0.3,
+        avail_p_join: 0.3,
+        drift_sigma: 0.05,
+        ..EnvConfig::default()
+    }
+}
+
+#[test]
+fn env_step_into_is_alloc_free_at_steady_state() {
+    let sys = sys(64);
+    let ecfg = env_cfg();
+    let mut rng = Rng::new(3);
+    let fleet = Fleet::generate(&sys, (50, 100), &mut rng);
+    for kind in [
+        EnvKind::Static,
+        EnvKind::GilbertElliott,
+        EnvKind::Availability,
+        EnvKind::Drift,
+    ] {
+        let mut env = env::build(
+            kind,
+            &env::EnvInit {
+                sys: &sys,
+                env: &ecfg,
+                seed: 11,
+            },
+        )
+        .unwrap();
+        let mut soa = EnvSoA::new();
+        // Warmup: grow every buffer (gains, availability, drift
+        // columns) to steady-state capacity.
+        for _ in 0..3 {
+            env.step_into(&fleet.devices, &mut soa);
+        }
+        let before = alloc_calls();
+        for _ in 0..50 {
+            env.step_into(&fleet.devices, &mut soa);
+        }
+        let after = alloc_calls();
+        assert_eq!(
+            after - before,
+            0,
+            "{kind}: step_into allocated {} time(s) over 50 steady-state rounds",
+            after - before
+        );
+    }
+}
+
+#[test]
+fn channel_next_round_into_is_alloc_free_at_steady_state() {
+    let sys = sys(128);
+    let mut channel = ChannelProcess::new(&sys, 29);
+    let mut gains: Vec<f64> = Vec::new();
+    channel.next_round_into(&mut gains);
+    assert_eq!(gains.len(), 128);
+    let before = alloc_calls();
+    for _ in 0..100 {
+        channel.next_round_into(&mut gains);
+    }
+    assert_eq!(alloc_calls() - before, 0, "next_round_into allocated");
+}
+
+#[test]
+fn evaluate_into_is_alloc_free_at_steady_state() {
+    let sys = sys(64);
+    let mut rng = Rng::new(7);
+    let fleet = Fleet::generate(&sys, (50, 100), &mut rng);
+    let model_bits = 32.0 * 136_874.0;
+    let h: Vec<f64> = (0..64).map(|_| rng.range(0.01, 0.5)).collect();
+    let f_hz: Vec<f64> = fleet.devices.iter().map(|d| d.f_max_hz).collect();
+    let p_w: Vec<f64> = fleet.devices.iter().map(|d| d.p_max_w).collect();
+    let mut costs = RoundCosts::default();
+    costs.evaluate_into(&sys, &fleet.devices, model_bits, &h, &f_hz, &p_w);
+    let before = alloc_calls();
+    for _ in 0..100 {
+        costs.evaluate_into(&sys, &fleet.devices, model_bits, &h, &f_hz, &p_w);
+    }
+    assert_eq!(alloc_calls() - before, 0, "evaluate_into allocated");
+    // And the refill really recomputed: same inputs, same outputs as a
+    // fresh evaluation.
+    let fresh = RoundCosts::evaluate(&sys, &fleet.devices, model_bits, &h, &f_hz, &p_w);
+    assert_eq!(costs.time_s, fresh.time_s);
+    assert_eq!(costs.energy_j, fresh.energy_j);
+}
+
+#[test]
+fn counting_allocator_actually_counts() {
+    // Sanity: the audit above is meaningless if the counter is dead.
+    let before = alloc_calls();
+    let v: Vec<Device> = Vec::with_capacity(16);
+    assert!(alloc_calls() > before, "allocator counter never fired");
+    drop(v);
+}

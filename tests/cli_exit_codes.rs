@@ -1,0 +1,109 @@
+//! Black-box CLI contract tests: the `lroa` binary's documented exit
+//! codes (`0` success, `1` runtime/config error, `2` usage error) and
+//! the `--json` stdout-purity guarantee, pinned by driving the real
+//! executable via `CARGO_BIN_EXE_lroa`.
+//!
+//! These are the codes scripts and CI steps branch on; a silent change
+//! (e.g. a usage error collapsing into the generic `1`) must fail here,
+//! not in a downstream pipeline.
+
+use std::process::{Command, Output};
+
+fn lroa(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_lroa"))
+        .args(args)
+        .output()
+        .expect("spawn lroa")
+}
+
+fn exit_code(out: &Output) -> i32 {
+    out.status.code().expect("lroa terminated by signal")
+}
+
+#[test]
+fn help_exits_zero() {
+    let out = lroa(&["help"]);
+    assert_eq!(exit_code(&out), 0);
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("EXIT CODES"), "help must document exit codes");
+    assert!(text.contains("scale"), "help must document the scale subcommand");
+}
+
+#[test]
+fn unknown_subcommand_is_a_usage_error() {
+    let out = lroa(&["frobnicate"]);
+    assert_eq!(exit_code(&out), 2);
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown subcommand"), "stderr: {err}");
+}
+
+#[test]
+fn bad_sweep_flag_is_a_usage_error() {
+    let out = lroa(&["sweep", "--bogus=1"]);
+    assert_eq!(exit_code(&out), 2);
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown flag"), "stderr: {err}");
+
+    // Same contract for the non-sweep arg parsers.
+    assert_eq!(exit_code(&lroa(&["bench", "--nope"])), 2);
+    assert_eq!(exit_code(&lroa(&["scale", "--nope=1"])), 2);
+    assert_eq!(exit_code(&lroa(&["scale", "--ns=abc"])), 2);
+    assert_eq!(exit_code(&lroa(&["trace", "mangle"])), 2);
+}
+
+#[test]
+fn missing_trace_file_is_a_runtime_error() {
+    // `trace summarize` on a directory that was never written: a
+    // runtime failure (the invocation itself is well-formed), so 1.
+    let out = lroa(&["trace", "summarize", "/definitely/not/a/trace/dir"]);
+    assert_eq!(exit_code(&out), 1);
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("trace_summary.json"), "stderr: {err}");
+
+    // Likewise a trace *environment* pointed at a missing replay log.
+    let out = lroa(&[
+        "sim",
+        "--env.kind=trace",
+        "--env.trace_path=/definitely/not/a/trace.csv",
+        "--train.rounds=1",
+        "--system.num_devices=8",
+    ]);
+    assert_eq!(exit_code(&out), 1);
+}
+
+#[test]
+fn invalid_config_is_a_runtime_error() {
+    // Well-formed flag, invalid value: config validation fails, exit 1
+    // (not 2 — the command line itself parsed fine).
+    let out = lroa(&["sim", "--system.num_devices=0"]);
+    assert_eq!(exit_code(&out), 1);
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("num_devices"), "stderr: {err}");
+}
+
+#[test]
+fn sweep_json_stdout_is_exactly_one_json_object() {
+    let dir = std::env::temp_dir().join(format!("lroa-exit-codes-{}", std::process::id()));
+    let out_flag = format!("--out={}", dir.display());
+    let out = lroa(&[
+        "sweep",
+        "--json",
+        "--policies=uni-s",
+        "--seeds=1",
+        "--rounds=2",
+        "--system.num_devices=8",
+        &out_flag,
+    ]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(exit_code(&out), 0, "stdout: {stdout}\nstderr: {stderr}");
+    // Exactly one JSON value on stdout, nothing else: the whole stream
+    // must parse in one shot.
+    let parsed = lroa::json::Json::parse(stdout.trim())
+        .unwrap_or_else(|e| panic!("stdout is not one JSON object: {e}\n---\n{stdout}"));
+    assert!(
+        parsed.get("groups").is_some(),
+        "grid summary JSON missing groups: {stdout}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -77,6 +77,39 @@ fn trajectory(kind: EnvKind, seed: u64, rounds: usize) -> Vec<Trace> {
         .collect()
 }
 
+/// Same trajectory shape as [`trajectory`], realized through the
+/// fleet-scale [`env::EnvSoA`] path instead of the per-[`Device`] one.
+/// Identical construction (fleet seed, sizes) so the two are directly
+/// comparable.
+///
+/// [`Device`]: lroa::system::Device
+fn soa_trajectory(kind: EnvKind, seed: u64, rounds: usize) -> Vec<Trace> {
+    let sys = sys(14);
+    let ecfg = env_cfg();
+    let mut rng = Rng::new(4);
+    let fleet = Fleet::generate(&sys, (50, 150), &mut rng);
+    let mut e = build(kind, &sys, &ecfg, seed);
+    let mut soa = env::EnvSoA::new();
+    (0..rounds)
+        .map(|_| {
+            e.step_into(&fleet.devices, &mut soa);
+            Trace {
+                gains: soa.gains.clone(),
+                available: if soa.all_available {
+                    None
+                } else {
+                    Some(soa.available.clone())
+                },
+                f_max: if soa.drifted {
+                    Some(soa.f_max_hz.clone())
+                } else {
+                    None
+                },
+            }
+        })
+        .collect()
+}
+
 #[test]
 fn every_environment_is_a_pure_function_of_its_seed() {
     for kind in EnvKind::ALL {
@@ -107,6 +140,49 @@ fn static_env_reproduces_the_pre_env_channel_stream_bitwise() {
         assert!(re.available.is_none(), "static = whole fleet reachable");
         assert!(re.devices.is_none());
     }
+}
+
+#[test]
+fn soa_stepping_matches_the_per_device_path_for_every_registry_env() {
+    // The fleet-scale `step_into` path is the parity anchor's sibling:
+    // same seed, same rounds, bitwise-identical trajectory for every
+    // registered environment — including `trace` and `adv`, which ride
+    // the default `set_from_round` adapter.
+    for kind in EnvKind::ALL {
+        let aos = trajectory(kind, 31, 60);
+        let soa = soa_trajectory(kind, 31, 60);
+        assert_eq!(aos, soa, "{kind}: SoA stepping diverged from per-Device path");
+    }
+}
+
+#[test]
+fn soa_stepping_is_thread_count_invariant() {
+    // Trajectories realized on worker threads (2-wide pool) must match
+    // the main-thread realization bitwise — environments own their RNG
+    // streams, so nothing about the executing thread may leak in.
+    let reference: Vec<(EnvKind, Vec<Trace>)> = EnvKind::ALL
+        .into_iter()
+        .map(|kind| (kind, soa_trajectory(kind, 17, 40)))
+        .collect();
+    let mid = reference.len() / 2;
+    let (left, right) = reference.split_at(mid);
+    std::thread::scope(|scope| {
+        let workers = [
+            scope.spawn(|| {
+                for (kind, expected) in left {
+                    assert_eq!(&soa_trajectory(*kind, 17, 40), expected, "{kind}");
+                }
+            }),
+            scope.spawn(|| {
+                for (kind, expected) in right {
+                    assert_eq!(&soa_trajectory(*kind, 17, 40), expected, "{kind}");
+                }
+            }),
+        ];
+        for w in workers {
+            w.join().expect("worker trajectory diverged");
+        }
+    });
 }
 
 #[test]
@@ -155,7 +231,9 @@ fn grid_spec() -> SweepSpec {
 #[test]
 fn policy_by_env_grid_is_thread_count_invariant() {
     // The full policy × environment grid must produce bitwise-identical
-    // trajectories at any scenario-pool width.
+    // trajectories at any scenario-pool width.  Since the server rounds
+    // here run entirely through `step_into` + SoA compaction, this also
+    // pins the fleet-scale stepping path at two pool widths end to end.
     let seq = exp::run_scenarios(grid_spec().expand().unwrap(), 1).unwrap();
     let par = exp::run_scenarios(grid_spec().expand().unwrap(), 4).unwrap();
     assert_eq!(seq.len(), 2 * 6);
