@@ -37,6 +37,18 @@ pub enum Policy {
     /// virtual energy-queue backlog), with exact selection marginals so
     /// eq. (4) aggregation stays unbiased (knobs: `[bandit]`).
     Bandit,
+    /// Thompson sampling over the bandit's context vector: one Gaussian
+    /// posterior draw per device, mapped through the same exact softmax
+    /// marginals so eq. (4) stays unbiased (knobs: `[thompson]`).
+    Thompson,
+    /// LinUCB: ridge-regression contextual UCB sharing one d×d design
+    /// matrix across devices, Sherman–Morrison rank-1 updates (knobs:
+    /// `[linucb]`).
+    LinUcb,
+    /// Convergence-aware scheduling in the spirit of Shi et al.: selection
+    /// weighted by staleness × last observed update norm (softmax knobs
+    /// shared with `[bandit]`).
+    ConvAware,
     /// Oracle: clairvoyant latency lower bound (best reachable device at
     /// `f_max`/`p_max`, foresight tie-breaking via `Environment::peek`) —
     /// the regret anchor of `lroa regret`.
@@ -50,7 +62,7 @@ pub enum Policy {
 
 impl Policy {
     /// Every scheme, registry order (LROA first — the comparison anchor).
-    pub const ALL: [Policy; 10] = [
+    pub const ALL: [Policy; 13] = [
         Policy::Lroa,
         Policy::UniformDynamic,
         Policy::UniformStatic,
@@ -59,6 +71,9 @@ impl Policy {
         Policy::RoundRobin,
         Policy::PowerOfTwoChoices,
         Policy::Bandit,
+        Policy::Thompson,
+        Policy::LinUcb,
+        Policy::ConvAware,
         Policy::Oracle,
         Policy::OracleEnergy,
     ];
@@ -73,11 +88,14 @@ impl Policy {
             "rr" | "round-robin" | "roundrobin" => Policy::RoundRobin,
             "p2c" | "power-of-two" | "power-of-two-choices" => Policy::PowerOfTwoChoices,
             "bandit" | "ucb" | "contextual-bandit" => Policy::Bandit,
+            "thompson" | "ts" | "thompson-sampling" => Policy::Thompson,
+            "linucb" | "lin-ucb" => Policy::LinUcb,
+            "conv-aware" | "convaware" | "conv" => Policy::ConvAware,
             "oracle" => Policy::Oracle,
             "oracle-e" | "oraclee" | "oracle-energy" => Policy::OracleEnergy,
             other => anyhow::bail!(
                 "unknown policy {other:?} \
-                 (lroa|uni-d|uni-s|divfl|greedy|rr|p2c|bandit|oracle|oracle-e)"
+                 (lroa|uni-d|uni-s|divfl|greedy|rr|p2c|bandit|thompson|linucb|conv-aware|oracle|oracle-e)"
             ),
         })
     }
@@ -92,6 +110,9 @@ impl Policy {
             Policy::RoundRobin => "RR",
             Policy::PowerOfTwoChoices => "P2C",
             Policy::Bandit => "Bandit",
+            Policy::Thompson => "Thompson",
+            Policy::LinUcb => "LinUCB",
+            Policy::ConvAware => "Conv-Aware",
             Policy::Oracle => "Oracle",
             Policy::OracleEnergy => "Oracle-E",
         }
@@ -269,6 +290,64 @@ impl Default for BanditConfig {
     }
 }
 
+/// Thompson-sampling scheduler knobs (`[thompson]` section).  Inert
+/// unless `train.policy = thompson`.  The posterior draws come from a
+/// policy-owned RNG stream, so the exact softmax marginals are a pure
+/// function of the observed history (see [`crate::control::policy`]).
+#[derive(Clone, Debug)]
+pub struct ThompsonConfig {
+    /// Posterior standard deviation of an unpulled arm; shrinks as
+    /// `prior_std / sqrt(1 + pulls)`.
+    pub prior_std: f64,
+    /// Softmax temperature mapping posterior draws to marginals.
+    pub temp: f64,
+    /// Uniform exploration floor ε mixed into the softmax.
+    pub eps: f64,
+    /// EMA factor for the recent-observed-gain context feature.
+    pub gain_ema: f64,
+}
+
+impl Default for ThompsonConfig {
+    fn default() -> Self {
+        Self {
+            prior_std: 0.3,
+            temp: 0.25,
+            eps: 0.05,
+            gain_ema: 0.3,
+        }
+    }
+}
+
+/// LinUCB scheduler knobs (`[linucb]` section).  Inert unless
+/// `train.policy = linucb`.  One shared ridge design matrix over the
+/// bandit's d=3 context features (gain EMA, availability streak, queue
+/// headroom), maintained by Sherman–Morrison rank-1 updates.
+#[derive(Clone, Debug)]
+pub struct LinUcbConfig {
+    /// Confidence-width multiplier α on `sqrt(xᵀ A⁻¹ x)`.
+    pub alpha: f64,
+    /// Ridge regularizer: the design matrix starts at `ridge · I`.
+    pub ridge: f64,
+    /// Softmax temperature mapping UCB scores to marginals.
+    pub temp: f64,
+    /// Uniform exploration floor ε mixed into the softmax.
+    pub eps: f64,
+    /// EMA factor for the recent-observed-gain context feature.
+    pub gain_ema: f64,
+}
+
+impl Default for LinUcbConfig {
+    fn default() -> Self {
+        Self {
+            alpha: 0.5,
+            ridge: 1.0,
+            temp: 0.25,
+            eps: 0.05,
+            gain_ema: 0.3,
+        }
+    }
+}
+
 /// Mobile-edge system parameters (paper §III + §VII-A defaults).
 #[derive(Clone, Debug)]
 pub struct SystemConfig {
@@ -309,6 +388,13 @@ pub struct SystemConfig {
     /// paper's homogeneous default ("all devices ... same communication
     /// and computation resources, except for different channels").
     pub hardware_spread: f64,
+    /// Extra per-device energy-budget heterogeneity on top of
+    /// `hardware_spread`: `Ē_n` is scaled by Uniform[1-s, 1+s] with
+    /// `s = hardware_spread + budget_spread` (same single jitter draw,
+    /// so 0 is bitwise-identical to the old behavior).  A first-class
+    /// sweep axis (`--budget_spreads`) for evaluating the learned
+    /// schedulers under budget heterogeneity.
+    pub budget_spread: f64,
 }
 
 impl Default for SystemConfig {
@@ -332,6 +418,7 @@ impl Default for SystemConfig {
             model_bits: 0.0,
             downlink_bps: 0.0,
             hardware_spread: 0.0,
+            budget_spread: 0.0,
         }
     }
 }
@@ -371,6 +458,19 @@ pub struct ControlConfig {
     /// (default).  `false` restores the paper's cold midpoint/uniform
     /// initialization every round — the parity anchor.
     pub warm_start: bool,
+    /// Gate virtual-queue arrivals on round candidacy (default): a
+    /// device outside `N^t` is frozen — it neither accrues the
+    /// `(1-(1-q)^K)E` charge nor the `-Ē_n` budget credit, so its
+    /// backlog is flat across an outage.  `false` restores the old
+    /// advance-everyone semantics — the bitwise parity anchor.
+    pub queue_gate_offline: bool,
+    /// Cost-objective weight `c ≥ 0` (Luo-et-al.-style cost-effective
+    /// FL): the drift-plus-penalty trade-off becomes
+    /// `V·(T + c·E) + queue drift`, i.e. every queue price is shifted to
+    /// `Q_n + V·c`, so the existing virtual-queue machinery prices total
+    /// energy against latency.  0 (default) is the paper's pure-latency
+    /// objective, bitwise-identical to pre-knob behavior.
+    pub cost_weight: f64,
 }
 
 impl Default for ControlConfig {
@@ -386,6 +486,8 @@ impl Default for ControlConfig {
             max_inner_iters: 200,
             q_min: 1e-6,
             warm_start: true,
+            queue_gate_offline: true,
+            cost_weight: 0.0,
         }
     }
 }
@@ -445,6 +547,8 @@ pub struct Config {
     pub train: TrainConfig,
     pub env: EnvConfig,
     pub bandit: BanditConfig,
+    pub thompson: ThompsonConfig,
+    pub linucb: LinUcbConfig,
     /// Where AOT artifacts live.
     pub artifacts_dir: String,
     /// Where run outputs (CSV/JSON) go.
@@ -544,6 +648,7 @@ impl Config {
             "system.model_bits" => self.system.model_bits = f()?,
             "system.downlink_bps" => self.system.downlink_bps = f()?,
             "system.hardware_spread" => self.system.hardware_spread = f()?,
+            "system.budget_spread" => self.system.budget_spread = f()?,
             "control.mu" => self.control.mu = f()?,
             "control.nu" => self.control.nu = f()?,
             "control.lambda" => self.control.lambda_explicit = f()?,
@@ -554,6 +659,8 @@ impl Config {
             "control.max_inner_iters" => self.control.max_inner_iters = u()?,
             "control.q_min" => self.control.q_min = f()?,
             "control.warm_start" => self.control.warm_start = b()?,
+            "control.queue_gate_offline" => self.control.queue_gate_offline = b()?,
+            "control.cost_weight" => self.control.cost_weight = f()?,
             "train.dataset" => self.train.dataset = val.into(),
             "train.rounds" => self.train.rounds = u()?,
             "train.lr0" => self.train.lr0 = f()?,
@@ -584,6 +691,15 @@ impl Config {
             "bandit.eps" => self.bandit.eps = f()?,
             "bandit.gain_ema" => self.bandit.gain_ema = f()?,
             "bandit.ctx_weight" => self.bandit.ctx_weight = f()?,
+            "thompson.prior_std" => self.thompson.prior_std = f()?,
+            "thompson.temp" => self.thompson.temp = f()?,
+            "thompson.eps" => self.thompson.eps = f()?,
+            "thompson.gain_ema" => self.thompson.gain_ema = f()?,
+            "linucb.alpha" => self.linucb.alpha = f()?,
+            "linucb.ridge" => self.linucb.ridge = f()?,
+            "linucb.temp" => self.linucb.temp = f()?,
+            "linucb.eps" => self.linucb.eps = f()?,
+            "linucb.gain_ema" => self.linucb.gain_ema = f()?,
             "run.artifacts_dir" => self.artifacts_dir = val.into(),
             "run.out_dir" => self.out_dir = val.into(),
             other => anyhow::bail!("unknown config key {other:?}"),
@@ -604,9 +720,17 @@ impl Config {
         );
         anyhow::ensure!(s.bandwidth_hz > 0.0 && s.noise_w > 0.0, "bad B/N0");
         anyhow::ensure!(s.energy_budget_j > 0.0, "bad energy budget");
+        anyhow::ensure!(
+            (0.0..1.0).contains(&s.budget_spread),
+            "system.budget_spread must be in [0, 1)"
+        );
         let c = &self.control;
         anyhow::ensure!(c.q_min > 0.0 && c.q_min < 1.0 / s.num_devices as f64, "bad q_min");
         anyhow::ensure!(c.eps_outer > 0.0 && c.eps_inner > 0.0, "bad tolerances");
+        anyhow::ensure!(
+            c.cost_weight >= 0.0 && c.cost_weight.is_finite(),
+            "control.cost_weight must be finite and >= 0"
+        );
         let t = &self.train;
         anyhow::ensure!(t.rounds > 0 && t.lr0 > 0.0, "bad train params");
         anyhow::ensure!(
@@ -666,6 +790,29 @@ impl Config {
             (0.0..=1.0).contains(&b.ctx_weight),
             "bandit.ctx_weight must be in [0, 1]"
         );
+        let ts = &self.thompson;
+        anyhow::ensure!(ts.prior_std >= 0.0, "thompson.prior_std must be >= 0");
+        anyhow::ensure!(ts.temp > 0.0, "thompson.temp must be > 0");
+        anyhow::ensure!(
+            (0.0..1.0).contains(&ts.eps),
+            "thompson.eps must be in [0, 1)"
+        );
+        anyhow::ensure!(
+            ts.gain_ema > 0.0 && ts.gain_ema <= 1.0,
+            "thompson.gain_ema must be in (0, 1]"
+        );
+        let lu = &self.linucb;
+        anyhow::ensure!(lu.alpha >= 0.0, "linucb.alpha must be >= 0");
+        anyhow::ensure!(lu.ridge > 0.0, "linucb.ridge must be > 0");
+        anyhow::ensure!(lu.temp > 0.0, "linucb.temp must be > 0");
+        anyhow::ensure!(
+            (0.0..1.0).contains(&lu.eps),
+            "linucb.eps must be in [0, 1)"
+        );
+        anyhow::ensure!(
+            lu.gain_ema > 0.0 && lu.gain_ema <= 1.0,
+            "linucb.gain_ema must be in (0, 1]"
+        );
         Ok(())
     }
 
@@ -709,16 +856,37 @@ impl Config {
             c.env.adv_degrade = d.adv_degrade;
             c.env.adv_targets = d.adv_targets;
         }
-        // Bandit knobs are only read by the bandit policy — inert (and
-        // resume-neutral) everywhere else, like unselected env knobs.
-        if c.train.policy != Policy::Bandit {
+        // Bandit knobs are only read by the bandit policy (and the
+        // conv-aware scheduler, which shares the softmax knobs) — inert
+        // (and resume-neutral) everywhere else, like unselected env knobs.
+        if !matches!(c.train.policy, Policy::Bandit | Policy::ConvAware) {
             c.bandit = BanditConfig::default();
+        }
+        if c.train.policy != Policy::Thompson {
+            c.thompson = ThompsonConfig::default();
+        }
+        if c.train.policy != Policy::LinUcb {
+            c.linucb = LinUcbConfig::default();
         }
         // Warm start only affects the iterative Algorithm-2 solve, which
         // only the LROA policy runs (`solve_uniform_dynamic` is a single
         // exact pass).
         if c.train.policy != Policy::Lroa {
             c.control.warm_start = ControlConfig::default().warm_start;
+        }
+        // The cost-objective weight shifts queue prices, which only the
+        // solver-backed policies consume.
+        if !matches!(
+            c.train.policy,
+            Policy::Lroa | Policy::UniformDynamic | Policy::OracleEnergy
+        ) {
+            c.control.cost_weight = ControlConfig::default().cost_weight;
+        }
+        // Queue gating can only bite when the environment can take a
+        // device offline; every other env has a full candidate set each
+        // round, where gated and ungated updates are identical.
+        if !matches!(c.env.kind, EnvKind::Availability | EnvKind::Trace) {
+            c.control.queue_gate_offline = ControlConfig::default().queue_gate_offline;
         }
         let repr = format!("{c:?}");
         let mut h: u64 = 0xcbf2_9ce4_8422_2325;
@@ -736,19 +904,24 @@ impl Config {
         let t = &self.train;
         let e = &self.env;
         let b = &self.bandit;
+        let ts = &self.thompson;
+        let lu = &self.linucb;
         format!(
-            "[system] N={} K={} E={} B={:.3e} N0={} h_mean={} clip=({},{}) p=({},{}) f=({:.2e},{:.2e}) alpha={:.2e} c_n={:.2e} Ebar={} M_bits={} dl_bps={} spread={}\n\
-             [control] mu={} nu={} lambda*={} V*={} eps=({},{}) iters=({},{}) q_min={} warm_start={}\n\
+            "[system] N={} K={} E={} B={:.3e} N0={} h_mean={} clip=({},{}) p=({},{}) f=({:.2e},{:.2e}) alpha={:.2e} c_n={:.2e} Ebar={} M_bits={} dl_bps={} spread={} budget_spread={}\n\
+             [control] mu={} nu={} lambda*={} V*={} eps=({},{}) iters=({},{}) q_min={} warm_start={} queue_gate_offline={} cost_weight={}\n\
              [train] dataset={} rounds={} lr0={} decay=({},{}) samples=({},{}) test={} eval_every={} seed={} policy={} snr={} threads={}\n\
              [env] kind={} ge=({},{},{}) avail=({},{}) drift=({},{},{}) trace={:?} adv=({},{})\n\
              [bandit] ucb_c={} temp={} eps={} gain_ema={} ctx_weight={}\n\
+             [thompson] prior_std={} temp={} eps={} gain_ema={}\n\
+             [linucb] alpha={} ridge={} temp={} eps={} gain_ema={}\n\
              [run] artifacts_dir={}",
             s.num_devices, s.k, s.local_epochs, s.bandwidth_hz, s.noise_w, s.channel_mean,
             s.channel_clip.0, s.channel_clip.1, s.p_min_w, s.p_max_w, s.f_min_hz, s.f_max_hz,
             s.alpha, s.cycles_per_sample, s.energy_budget_j, s.model_bits, s.downlink_bps,
-            s.hardware_spread,
+            s.hardware_spread, s.budget_spread,
             c.mu, c.nu, c.lambda_explicit, c.v_explicit, c.eps_outer, c.eps_inner,
-            c.max_outer_iters, c.max_inner_iters, c.q_min, c.warm_start,
+            c.max_outer_iters, c.max_inner_iters, c.q_min, c.warm_start, c.queue_gate_offline,
+            c.cost_weight,
             t.dataset, t.rounds, t.lr0, t.lr_decay_at.0, t.lr_decay_at.1,
             t.samples_per_device.0, t.samples_per_device.1, t.test_samples, t.eval_every,
             t.seed, t.policy, t.data_snr, t.train_threads,
@@ -756,6 +929,8 @@ impl Config {
             e.drift_sigma, e.drift_clip.0, e.drift_clip.1, e.trace_path, e.adv_degrade,
             e.adv_targets,
             b.ucb_c, b.temp, b.eps, b.gain_ema, b.ctx_weight,
+            ts.prior_std, ts.temp, ts.eps, ts.gain_ema,
+            lu.alpha, lu.ridge, lu.temp, lu.eps, lu.gain_ema,
             self.artifacts_dir,
         )
     }
@@ -876,6 +1051,12 @@ mod tests {
         );
         assert_eq!(Policy::parse("bandit").unwrap(), Policy::Bandit);
         assert_eq!(Policy::parse("contextual-bandit").unwrap(), Policy::Bandit);
+        assert_eq!(Policy::parse("thompson").unwrap(), Policy::Thompson);
+        assert_eq!(Policy::parse("ts").unwrap(), Policy::Thompson);
+        assert_eq!(Policy::parse("linucb").unwrap(), Policy::LinUcb);
+        assert_eq!(Policy::parse("lin-ucb").unwrap(), Policy::LinUcb);
+        assert_eq!(Policy::parse("conv-aware").unwrap(), Policy::ConvAware);
+        assert_eq!(Policy::parse("conv").unwrap(), Policy::ConvAware);
         assert_eq!(Policy::parse("oracle").unwrap(), Policy::Oracle);
         assert_eq!(Policy::parse("oracle-e").unwrap(), Policy::OracleEnergy);
         assert_eq!(Policy::parse("oracle-energy").unwrap(), Policy::OracleEnergy);
@@ -911,6 +1092,97 @@ mod tests {
         let mut d = c.clone();
         d.bandit.ucb_c = 9.0;
         assert_ne!(c.hash_hex(), d.hash_hex());
+    }
+
+    #[test]
+    fn thompson_and_linucb_knobs_override_validate_and_stay_inert_off_policy() {
+        let mut cfg = Config::for_dataset("cifar").unwrap();
+        cfg.apply_cli(&[
+            "--thompson.prior_std=0.7",
+            "--thompson.temp=0.1",
+            "--linucb.alpha=1.5",
+            "--linucb.ridge=2.0",
+        ])
+        .unwrap();
+        assert_eq!(cfg.thompson.prior_std, 0.7);
+        assert_eq!(cfg.thompson.temp, 0.1);
+        assert_eq!(cfg.linucb.alpha, 1.5);
+        assert_eq!(cfg.linucb.ridge, 2.0);
+        assert!(cfg.validate().is_ok());
+        cfg.thompson.temp = 0.0;
+        assert!(cfg.validate().is_err());
+        cfg.thompson.temp = 0.25;
+        cfg.linucb.ridge = 0.0;
+        assert!(cfg.validate().is_err());
+
+        // Inert unless the matching policy is selected (resume-neutral).
+        let a = Config::for_dataset("cifar").unwrap();
+        let mut b = a.clone();
+        b.thompson.prior_std = 9.0;
+        b.linucb.alpha = 9.0;
+        assert_eq!(a.hash_hex(), b.hash_hex());
+        for (policy, knob) in [
+            (Policy::Thompson, "thompson.prior_std"),
+            (Policy::LinUcb, "linucb.alpha"),
+        ] {
+            let mut c = a.clone();
+            c.train.policy = policy;
+            let mut d = c.clone();
+            d.set(knob, "9.0").unwrap();
+            assert_ne!(c.hash_hex(), d.hash_hex(), "{knob} must be live");
+        }
+        // Conv-aware shares the bandit softmax knobs, so they are live
+        // under it too.
+        let mut c = a.clone();
+        c.train.policy = Policy::ConvAware;
+        let mut d = c.clone();
+        d.bandit.temp = 0.9;
+        assert_ne!(c.hash_hex(), d.hash_hex());
+    }
+
+    #[test]
+    fn queue_gate_and_cost_weight_hash_only_where_live() {
+        let a = Config::for_dataset("cifar").unwrap();
+        // Static env: gating can never bite, so the knob is resume-neutral.
+        let mut b = a.clone();
+        b.control.queue_gate_offline = false;
+        assert_eq!(a.hash_hex(), b.hash_hex());
+        // Availability env: candidacy varies, the knob is live.
+        let mut c = a.clone();
+        c.env.kind = EnvKind::Availability;
+        let mut d = c.clone();
+        d.control.queue_gate_offline = false;
+        assert_ne!(c.hash_hex(), d.hash_hex());
+
+        // cost_weight is live for the solver-backed policies only.
+        assert_eq!(a.train.policy, Policy::Lroa);
+        let mut e = a.clone();
+        e.control.cost_weight = 0.3;
+        assert_ne!(a.hash_hex(), e.hash_hex());
+        let mut f = a.clone();
+        f.train.policy = Policy::GreedyChannel;
+        let mut g = f.clone();
+        g.control.cost_weight = 0.3;
+        assert_eq!(f.hash_hex(), g.hash_hex());
+        // Negative or non-finite weights are rejected.
+        let mut h = a.clone();
+        h.control.cost_weight = -0.1;
+        assert!(h.validate().is_err());
+    }
+
+    #[test]
+    fn budget_spread_overrides_and_validates() {
+        let mut cfg = Config::for_dataset("cifar").unwrap();
+        cfg.apply_cli(&["--system.budget_spread=0.4"]).unwrap();
+        assert_eq!(cfg.system.budget_spread, 0.4);
+        assert!(cfg.validate().is_ok());
+        cfg.system.budget_spread = 1.0;
+        assert!(cfg.validate().is_err());
+        // Always live: it shapes the fleet itself.
+        let a = Config::for_dataset("cifar").unwrap();
+        let mut b = a.clone();
+        b.system.budget_spread = 0.4;
+        assert_ne!(a.hash_hex(), b.hash_hex());
     }
 
     #[test]

@@ -81,6 +81,7 @@ pub struct LroaSolver {
     scratch_energy: Vec<f64>,
     scratch_a2: Vec<f64>,
     scratch_e: Vec<f64>,
+    scratch_price: Vec<f64>,
     prev_f: Vec<f64>,
     prev_p: Vec<f64>,
     prev_q: Vec<f64>,
@@ -110,6 +111,7 @@ impl LroaSolver {
             scratch_energy: Vec::new(),
             scratch_a2: Vec::new(),
             scratch_e: Vec::new(),
+            scratch_price: Vec::new(),
             prev_f: Vec::new(),
             prev_p: Vec::new(),
             prev_q: Vec::new(),
@@ -196,6 +198,29 @@ impl LroaSolver {
             ..SolverStats::default()
         };
 
+        // Cost-objective mode (`[control] cost_weight`): the effective
+        // per-device energy price handed to the Theorem 2/3 kernels and
+        // the SUM e-coefficient is `Q_n + V·w_E` — the queues keep
+        // enforcing the budgets while the flat `V·w_E` term makes the
+        // drift-plus-penalty trade *total* energy against latency.  The
+        // scratch is taken out of `self` for the borrow checker; with
+        // `cost_weight = 0` the prices alias `queues` directly, so the
+        // default is bitwise the plain Algorithm 2.
+        let price_store = {
+            let mut store = std::mem::take(&mut self.scratch_price);
+            if self.ctl.cost_weight != 0.0 {
+                let vw = self.v * self.ctl.cost_weight;
+                store.clear();
+                store.extend(queues.iter().map(|qu| qu + vw));
+            }
+            store
+        };
+        let prices: &[f64] = if self.ctl.cost_weight != 0.0 {
+            &price_store
+        } else {
+            queues
+        };
+
         self.prev_f.clear();
         self.prev_f.extend_from_slice(&ctrl.f_hz);
         self.prev_p.clear();
@@ -206,14 +231,15 @@ impl LroaSolver {
         for _ in 0..self.ctl.max_outer_iters {
             stats.outer_iters += 1;
 
-            // f and p blocks (Theorems 2-3) under fixed q.
-            freq::solve_freqs_soa(&self.soa, self.v, &ctrl.q, queues, k, &mut ctrl.f_hz);
+            // f and p blocks (Theorems 2-3) under fixed q, at the
+            // effective energy prices.
+            freq::solve_freqs_soa(&self.soa, self.v, &ctrl.q, prices, k, &mut ctrl.f_hz);
             power::solve_powers_soa(
                 &self.soa,
                 self.v,
                 &ctrl.q,
                 h,
-                queues,
+                prices,
                 k,
                 self.sys.noise_w,
                 &mut ctrl.p_w,
@@ -231,13 +257,13 @@ impl LroaSolver {
                 &mut self.scratch_energy,
             );
 
-            // q block: SUM on P2.2 with A2 = V·T_n, e = Q_n·E_n.
+            // q block: SUM on P2.2 with A2 = V·T_n, e = price_n·E_n.
             let v = self.v;
             self.scratch_a2.clear();
             self.scratch_a2.extend(self.scratch_time.iter().map(|t| v * t));
             self.scratch_e.clear();
             self.scratch_e
-                .extend(queues.iter().zip(&self.scratch_energy).map(|(qu, e)| qu * e));
+                .extend(prices.iter().zip(&self.scratch_energy).map(|(qu, e)| qu * e));
 
             let (inner, _) = sum::solve_in_place(
                 &mut ctrl.q,
@@ -277,10 +303,19 @@ impl LroaSolver {
                         + self.lambda * weights[i] * weights[i] / ctrl.q[i]);
                 acc += queues[i] * (sel * self.scratch_energy[i] - self.soa.energy_budget_j[i]);
             }
+            // The cost-mode energy penalty (gated so the default
+            // accumulation stays bitwise untouched).
+            if self.ctl.cost_weight != 0.0 {
+                let vw = self.v * self.ctl.cost_weight;
+                for i in 0..n {
+                    acc += vw * selection_probability(ctrl.q[i], k) * self.scratch_energy[i];
+                }
+            }
             acc
         } else {
             self.p2_objective(devices, weights, h, queues, &ctrl)
         };
+        self.scratch_price = price_store;
 
         if self.ctl.warm_start {
             let max_id = self.cur_ids.iter().copied().max().unwrap_or(0);
@@ -366,17 +401,33 @@ impl LroaSolver {
         let t0 = Instant::now();
         let k = self.sys.k;
         let mut ctrl = Controls::midpoint(devices);
-        freq::solve_freqs(devices, self.v, &ctrl.q, queues, k, &mut ctrl.f_hz);
+        // Same effective energy prices as `solve_round` (cost mode).
+        let price_store = {
+            let mut store = std::mem::take(&mut self.scratch_price);
+            if self.ctl.cost_weight != 0.0 {
+                let vw = self.v * self.ctl.cost_weight;
+                store.clear();
+                store.extend(queues.iter().map(|qu| qu + vw));
+            }
+            store
+        };
+        let prices: &[f64] = if self.ctl.cost_weight != 0.0 {
+            &price_store
+        } else {
+            queues
+        };
+        freq::solve_freqs(devices, self.v, &ctrl.q, prices, k, &mut ctrl.f_hz);
         power::solve_powers(
             devices,
             self.v,
             &ctrl.q,
             h,
-            queues,
+            prices,
             k,
             self.sys.noise_w,
             &mut ctrl.p_w,
         );
+        self.scratch_price = price_store;
         let stats = SolverStats {
             outer_iters: 1,
             inner_iters: 0,
@@ -405,6 +456,9 @@ impl LroaSolver {
                 * (ctrl.q[i] * costs.time_s[i]
                     + self.lambda * weights[i] * weights[i] / ctrl.q[i]);
             acc += queues[i] * (sel * costs.energy_j[i] - devices[i].energy_budget_j);
+            if self.ctl.cost_weight != 0.0 {
+                acc += self.v * self.ctl.cost_weight * sel * costs.energy_j[i];
+            }
         }
         acc
     }
@@ -692,6 +746,76 @@ mod tests {
             warm_iters < cold_iters,
             "warm start did not reduce total outer iters: {warm_iters} vs {cold_iters}"
         );
+    }
+
+    fn cost_solver(sys: &SystemConfig, cost_weight: f64) -> LroaSolver {
+        LroaSolver::new(
+            sys.clone(),
+            ControlConfig {
+                cost_weight,
+                ..ControlConfig::default()
+            },
+            10.0,
+            1e4,
+            32.0 * 140_000.0,
+        )
+    }
+
+    #[test]
+    fn cost_weight_zero_is_bitwise_the_baseline() {
+        let (sys, fleet, h, queues) = setup(40);
+        let mut base = solver(&sys);
+        let mut zero = cost_solver(&sys, 0.0);
+        let (c1, s1) = base.solve_round(&fleet.devices, fleet.weights(), &h, &queues);
+        let (c2, s2) = zero.solve_round(&fleet.devices, fleet.weights(), &h, &queues);
+        assert_eq!(c1.f_hz, c2.f_hz);
+        assert_eq!(c1.p_w, c2.p_w);
+        assert_eq!(c1.q, c2.q);
+        assert_eq!(s1.objective, s2.objective);
+        let (u1, _) = base.solve_uniform_dynamic(&fleet.devices, &h, &queues);
+        let (u2, _) = zero.solve_uniform_dynamic(&fleet.devices, &h, &queues);
+        assert_eq!(u1.f_hz, u2.f_hz);
+        assert_eq!(u1.p_w, u2.p_w);
+    }
+
+    #[test]
+    fn cost_weight_prices_total_energy() {
+        // With empty queues the plain solver runs flat out (energy is
+        // free); the cost objective keeps pricing it, so the controls
+        // back off and the round energy drops.
+        let (sys, fleet, h, _) = setup(30);
+        let queues = vec![0.0; 30];
+        let mut base = solver(&sys);
+        let mut cost = cost_solver(&sys, 1.0);
+        let model_bits = base.model_bits;
+        let (c_free, _) = base.solve_round(&fleet.devices, fleet.weights(), &h, &queues);
+        let (c_cost, _) = cost.solve_round(&fleet.devices, fleet.weights(), &h, &queues);
+        let energy = |c: &Controls| -> f64 {
+            let costs =
+                RoundCosts::evaluate(&sys, &fleet.devices, model_bits, &h, &c.f_hz, &c.p_w);
+            costs.energy_j.iter().sum()
+        };
+        let (e_free, e_cost) = (energy(&c_free), energy(&c_cost));
+        assert!(
+            e_cost < e_free,
+            "cost mode should cut round energy: {e_cost} vs {e_free}"
+        );
+        assert!(
+            fleet
+                .devices
+                .iter()
+                .enumerate()
+                .any(|(i, d)| c_cost.f_hz[i] < d.f_max_hz || c_cost.p_w[i] < d.p_max_w),
+            "cost mode left every device at full resources"
+        );
+        // The uniform-dynamic baseline throttles the same way.
+        let (u_free, _) = base.solve_uniform_dynamic(&fleet.devices, &h, &queues);
+        let (u_cost, _) = cost.solve_uniform_dynamic(&fleet.devices, &h, &queues);
+        assert!(energy(&u_cost) < energy(&u_free));
+        // And the recorded objective prices the energy term.
+        let obj_base = base.p2_objective(&fleet.devices, fleet.weights(), &h, &queues, &c_free);
+        let obj_cost = cost.p2_objective(&fleet.devices, fleet.weights(), &h, &queues, &c_free);
+        assert!(obj_cost > obj_base, "same controls must cost more under cost mode");
     }
 
     #[test]

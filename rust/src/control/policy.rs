@@ -22,6 +22,9 @@
 //! | RR       | static energy balance     | round-robin over global ids   |
 //! | P2C      | static energy balance     | power-of-two-choices draws    |
 //! | Bandit   | static energy balance     | UCB-scored softmax marginals  |
+//! | Thompson | static energy balance     | posterior-draw softmax        |
+//! | LinUCB   | static energy balance     | ridge-UCB softmax marginals   |
+//! | Conv-Aware | static energy balance   | staleness×update-norm softmax |
 //! | Oracle   | `f_max` / `p_max`         | the min-latency device        |
 //! | Oracle-E | Theorem 2/3 at `q = 1`    | the min-latency device        |
 //!
@@ -69,7 +72,9 @@
 //! key on global identity (DivFL's embeddings, RR's cursor) must go
 //! through `ids`.
 
-use crate::config::{BanditConfig, ControlConfig, Policy, SystemConfig};
+use crate::config::{
+    BanditConfig, ControlConfig, LinUcbConfig, Policy, SystemConfig, ThompsonConfig,
+};
 use crate::control::{freq, power, static_alloc, Controls, LroaSolver, SolverStats};
 use crate::rng::Rng;
 use crate::sampling::{self, DivFlState, Projector, Selection};
@@ -623,17 +628,421 @@ impl RoundPolicy for ContextualBanditPolicy {
         // candidate this round, in (0, 1] — computable online (the
         // scheduler saw every candidate's gain at decision time), no
         // foresight involved.
-        let t_best = self
-            .last_candidates
-            .iter()
-            .map(|&g| costs.time_s[g])
-            .fold(f64::INFINITY, f64::min);
-        if !t_best.is_finite() || t_best <= 0.0 {
+        let Some(t_best) = reward_baseline(&self.last_candidates, costs) else {
             return;
-        }
+        };
         for &g in selected {
             self.pulls[g] += 1;
-            self.reward_sum[g] += t_best / costs.time_s[g];
+            self.reward_sum[g] += relative_speed(t_best, costs.time_s[g]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The learned-scheduler shelf — Thompson sampling, LinUCB, and the
+// convergence-aware scheme share the bandit's observable context (gain
+// EMA, availability streak, queue headroom) and its exact-softmax
+// marginal mapping, so every member keeps eq. (4) unbiased.
+// ---------------------------------------------------------------------------
+
+/// Latency floor for the relative-speed reward.  An adversarially
+/// degraded channel can drive a modeled latency to zero, a denormal, or
+/// NaN; flooring both sides of the ratio keeps every reward finite and
+/// in `[0, 1]` instead of dividing by zero or poisoning `reward_sum`
+/// with NaN forever.  Real latencies are ≫ this, so the floor is
+/// value-neutral for any non-degenerate round.
+const LATENCY_FLOOR_S: f64 = 1e-30;
+
+/// The shared reward baseline: best floored *finite* candidate latency
+/// this round, or `None` when no candidate latency is finite (nothing
+/// to learn from — skip the update rather than ingest garbage).
+fn reward_baseline(candidates: &[usize], costs: &RoundCosts) -> Option<f64> {
+    let t_best = candidates
+        .iter()
+        .map(|&g| costs.time_s[g])
+        .filter(|t| t.is_finite())
+        .fold(f64::INFINITY, f64::min);
+    (t_best.is_finite() && t_best > 0.0).then(|| t_best.max(LATENCY_FLOOR_S))
+}
+
+/// Clamped relative speed `t_best / T_g ∈ [0, 1]`: 0 for an unreachable
+/// (infinite or NaN latency) device, never NaN or ∞ itself.
+fn relative_speed(t_best: f64, t_g: f64) -> f64 {
+    if !t_g.is_finite() {
+        return 0.0;
+    }
+    (t_best / t_g.max(LATENCY_FLOOR_S)).min(1.0)
+}
+
+/// Per-device context state shared by the learned schedulers, keyed by
+/// **global** id so learning survives candidate-set churn: the gain EMA,
+/// the availability streak, and the candidate set of the most recently
+/// planned round (the reward baseline in `observe_round`).
+struct ContextTracker {
+    /// EMA factor for the gain feature.
+    gain_ema: f64,
+    /// Rounds planned so far (drives the streak bookkeeping).
+    t: usize,
+    ema_h: Vec<f64>,
+    seen: Vec<bool>,
+    last_seen: Vec<usize>,
+    streak: Vec<u32>,
+    last_candidates: Vec<usize>,
+}
+
+impl ContextTracker {
+    fn new(n: usize, gain_ema: f64) -> Self {
+        Self {
+            gain_ema,
+            t: 0,
+            ema_h: vec![0.0; n],
+            seen: vec![false; n],
+            last_seen: vec![0; n],
+            streak: vec![0; n],
+            last_candidates: Vec::new(),
+        }
+    }
+
+    /// Advance one round: update gain EMAs and availability streaks over
+    /// this round's candidates (absence resets a streak to 1 on return)
+    /// and remember the candidate set for the reward baseline.
+    fn begin_round(&mut self, ctx: &RoundContext<'_>) {
+        self.t += 1;
+        let a = self.gain_ema;
+        for (pos, &g) in ctx.ids.iter().enumerate() {
+            self.ema_h[g] = if self.seen[g] {
+                (1.0 - a) * self.ema_h[g] + a * ctx.h[pos]
+            } else {
+                ctx.h[pos]
+            };
+            self.seen[g] = true;
+            self.streak[g] = if self.last_seen[g] + 1 == self.t {
+                self.streak[g] + 1
+            } else {
+                1
+            };
+            self.last_seen[g] = self.t;
+        }
+        self.last_candidates.clear();
+        self.last_candidates.extend_from_slice(ctx.ids);
+    }
+
+    /// The bandit's three context features for candidate `pos`, each in
+    /// `[0, 1]`: normalized gain EMA, streak saturation, queue headroom.
+    fn features(&self, sys: &SystemConfig, ctx: &RoundContext<'_>, pos: usize) -> [f64; 3] {
+        let g = ctx.ids[pos];
+        let (clip_lo, clip_hi) = sys.channel_clip;
+        let span = (clip_hi - clip_lo).max(f64::MIN_POSITIVE);
+        let gain = ((self.ema_h[g] - clip_lo) / span).clamp(0.0, 1.0);
+        let streak = self.streak[g] as f64;
+        let avail = streak / (streak + BANDIT_STREAK_HALF);
+        let budget = ctx.devices[pos].energy_budget_j.max(f64::MIN_POSITIVE);
+        let headroom = 1.0 / (1.0 + ctx.backlogs[pos] / budget);
+        [gain, avail, headroom]
+    }
+}
+
+/// Thompson sampling over the shared context — one Gaussian posterior
+/// draw per reachable device, mapped through the same exact softmax
+/// marginals as the bandit so the eq. (4) coefficients stay unbiased.
+///
+/// Arm `g` keeps `(pulls, reward_sum)`; its posterior mean is the
+/// empirical reward (the context prior, the mean of the three features,
+/// for unpulled arms) and its posterior std shrinks as
+/// `prior_std / sqrt(1 + pulls)`.  Draws come from a policy-owned RNG
+/// forked off the master seed, so the planned marginals are a pure
+/// function of the observed history — the server's shared sampling
+/// stream is consumed only by the final K selection draws, keeping
+/// cross-policy comparisons on shared seeds honest.
+pub struct ThompsonPolicy {
+    sys: SystemConfig,
+    model_bits: f64,
+    knobs: ThompsonConfig,
+    ctx_state: ContextTracker,
+    pulls: Vec<u64>,
+    reward_sum: Vec<f64>,
+    posterior_rng: Rng,
+}
+
+impl ThompsonPolicy {
+    pub fn new(init: &PolicyInit<'_>) -> Self {
+        let n = init.sys.num_devices;
+        Self {
+            sys: init.sys.clone(),
+            model_bits: init.model_bits,
+            knobs: init.thompson.clone(),
+            ctx_state: ContextTracker::new(n, init.thompson.gain_ema),
+            pulls: vec![0; n],
+            reward_sum: vec![0.0; n],
+            posterior_rng: Rng::new(init.seed ^ 0x7503_0A11),
+        }
+    }
+}
+
+impl RoundPolicy for ThompsonPolicy {
+    fn name(&self) -> &'static str {
+        "Thompson"
+    }
+
+    fn plan(&mut self, ctx: &RoundContext<'_>, rng: &mut Rng) -> RoundPlan {
+        self.ctx_state.begin_round(ctx);
+        let n = ctx.devices.len();
+        let scores: Vec<f64> = (0..n)
+            .map(|pos| {
+                let g = ctx.ids[pos];
+                let f = self.ctx_state.features(&self.sys, ctx, pos);
+                let prior = (f[0] + f[1] + f[2]) / 3.0;
+                let mean = if self.pulls[g] > 0 {
+                    self.reward_sum[g] / self.pulls[g] as f64
+                } else {
+                    prior
+                };
+                let std = self.knobs.prior_std / (1.0 + self.pulls[g] as f64).sqrt();
+                mean + std * self.posterior_rng.normal()
+            })
+            .collect();
+        let q = sampling::softmax_distribution(&scores, self.knobs.temp, self.knobs.eps);
+        let mut controls =
+            static_alloc::solve_static(&self.sys, ctx.devices, self.model_bits, ctx.h);
+        controls.q = q.clone();
+        let selection = sampling::sample_by_probability(&q, ctx.weights, ctx.k, rng);
+        RoundPlan {
+            controls,
+            stats: SolverStats::default(),
+            selection,
+            q_eff: q,
+        }
+    }
+
+    fn observe_round(&mut self, selected: &[usize], costs: &RoundCosts) {
+        let Some(t_best) = reward_baseline(&self.ctx_state.last_candidates, costs) else {
+            return;
+        };
+        for &g in selected {
+            self.pulls[g] += 1;
+            self.reward_sum[g] += relative_speed(t_best, costs.time_s[g]);
+        }
+    }
+}
+
+/// Context dimensionality of [`LinUcbPolicy`] — the tracker's features.
+const LINUCB_DIM: usize = 3;
+
+/// LinUCB — ridge-regression contextual UCB over the shared features.
+///
+/// One `d×d` design matrix is shared across all devices (the reward
+/// model is a single linear map from context to relative speed, not one
+/// per arm), held directly in inverse form and maintained by
+/// Sherman–Morrison rank-1 updates, so a round costs `O(N·d²)` with no
+/// per-round allocation.  Score = `θᵀx + α·sqrt(xᵀ A⁻¹ x)` with
+/// `θ = A⁻¹ b`; scores map to exact softmax marginals like every other
+/// shelf member.
+pub struct LinUcbPolicy {
+    sys: SystemConfig,
+    model_bits: f64,
+    knobs: LinUcbConfig,
+    ctx_state: ContextTracker,
+    /// Inverse design matrix `A⁻¹` (row-major `d×d`), initialized to
+    /// `I/ridge` and kept exact under rank-1 reward updates.
+    a_inv: [f64; LINUCB_DIM * LINUCB_DIM],
+    /// Reward-weighted context sum `b = Σ r·x`.
+    b: [f64; LINUCB_DIM],
+    /// Each device's last planned context row (flat `n×d`), read back by
+    /// `observe_round` when the device's reward arrives.
+    last_x: Vec<f64>,
+    /// Score scratch, reused across rounds.
+    scores: Vec<f64>,
+}
+
+impl LinUcbPolicy {
+    pub fn new(init: &PolicyInit<'_>) -> Self {
+        let n = init.sys.num_devices;
+        let mut a_inv = [0.0; LINUCB_DIM * LINUCB_DIM];
+        for i in 0..LINUCB_DIM {
+            a_inv[i * LINUCB_DIM + i] = 1.0 / init.linucb.ridge;
+        }
+        Self {
+            sys: init.sys.clone(),
+            model_bits: init.model_bits,
+            knobs: init.linucb.clone(),
+            ctx_state: ContextTracker::new(n, init.linucb.gain_ema),
+            a_inv,
+            b: [0.0; LINUCB_DIM],
+            last_x: vec![0.0; n * LINUCB_DIM],
+            scores: Vec::new(),
+        }
+    }
+
+    /// `A⁻¹ x` (the matrix is symmetric — `A = ridge·I + Σ xxᵀ`).
+    fn a_inv_mul(&self, x: &[f64; LINUCB_DIM]) -> [f64; LINUCB_DIM] {
+        let mut out = [0.0; LINUCB_DIM];
+        for i in 0..LINUCB_DIM {
+            for j in 0..LINUCB_DIM {
+                out[i] += self.a_inv[i * LINUCB_DIM + j] * x[j];
+            }
+        }
+        out
+    }
+}
+
+impl RoundPolicy for LinUcbPolicy {
+    fn name(&self) -> &'static str {
+        "LinUCB"
+    }
+
+    fn plan(&mut self, ctx: &RoundContext<'_>, rng: &mut Rng) -> RoundPlan {
+        self.ctx_state.begin_round(ctx);
+        let n = ctx.devices.len();
+        let theta = self.a_inv_mul(&self.b);
+        self.scores.clear();
+        for pos in 0..n {
+            let g = ctx.ids[pos];
+            let x = self.ctx_state.features(&self.sys, ctx, pos);
+            self.last_x[g * LINUCB_DIM..(g + 1) * LINUCB_DIM].copy_from_slice(&x);
+            let ax = self.a_inv_mul(&x);
+            let mut fit = 0.0;
+            let mut var = 0.0;
+            for i in 0..LINUCB_DIM {
+                fit += theta[i] * x[i];
+                var += x[i] * ax[i];
+            }
+            self.scores.push(fit + self.knobs.alpha * var.max(0.0).sqrt());
+        }
+        let q = sampling::softmax_distribution(&self.scores, self.knobs.temp, self.knobs.eps);
+        let mut controls =
+            static_alloc::solve_static(&self.sys, ctx.devices, self.model_bits, ctx.h);
+        controls.q = q.clone();
+        let selection = sampling::sample_by_probability(&q, ctx.weights, ctx.k, rng);
+        RoundPlan {
+            controls,
+            stats: SolverStats::default(),
+            selection,
+            q_eff: q,
+        }
+    }
+
+    fn observe_round(&mut self, selected: &[usize], costs: &RoundCosts) {
+        let Some(t_best) = reward_baseline(&self.ctx_state.last_candidates, costs) else {
+            return;
+        };
+        for &g in selected {
+            let r = relative_speed(t_best, costs.time_s[g]);
+            let mut x = [0.0; LINUCB_DIM];
+            x.copy_from_slice(&self.last_x[g * LINUCB_DIM..(g + 1) * LINUCB_DIM]);
+            // Sherman–Morrison: A⁻¹ ← A⁻¹ − (A⁻¹x)(A⁻¹x)ᵀ / (1 + xᵀA⁻¹x).
+            // `denom ≥ 1` always (A⁻¹ is positive definite), so the
+            // update is unconditionally stable.
+            let ax = self.a_inv_mul(&x);
+            let denom = 1.0 + ax.iter().zip(&x).map(|(a, b)| a * b).sum::<f64>();
+            for i in 0..LINUCB_DIM {
+                for j in 0..LINUCB_DIM {
+                    self.a_inv[i * LINUCB_DIM + j] -= ax[i] * ax[j] / denom;
+                }
+            }
+            for i in 0..LINUCB_DIM {
+                self.b[i] += r * x[i];
+            }
+        }
+    }
+}
+
+/// EMA factor of the convergence-aware scheme's update-norm signal.
+const CONV_NORM_EMA: f64 = 0.3;
+
+/// Convergence-aware scheduling: selection weighted by
+/// `staleness × last observed update norm` (the gradient-information
+/// heuristic of Shi et al., arXiv 1911.00856) — a client that has not
+/// contributed recently *and* whose updates were large when it did is
+/// the one most likely to move the global model.
+///
+/// Scores are `ln(staleness · norm_ema)`, so the softmax marginals obey
+/// a power law in the priority (temperature sets the exponent; the
+/// scheme shares the `[bandit]` softmax knobs).  Update norms only flow
+/// in Full simulation mode via [`RoundPolicy::observe_update`]; cold
+/// devices carry a norm of 1, so in ControlPlaneOnly mode the scheme
+/// degrades gracefully to pure staleness (age-based) weighting.
+pub struct ConvAwarePolicy {
+    sys: SystemConfig,
+    model_bits: f64,
+    temp: f64,
+    eps: f64,
+    /// Rounds planned so far (the staleness clock).
+    t: usize,
+    /// Round stamp of each device's last selection (0 = never picked,
+    /// maximal staleness).
+    last_picked: Vec<usize>,
+    /// EMA of observed per-client update L2 norms.
+    norm_ema: Vec<f64>,
+    has_norm: Vec<bool>,
+}
+
+impl ConvAwarePolicy {
+    pub fn new(init: &PolicyInit<'_>) -> Self {
+        let n = init.sys.num_devices;
+        Self {
+            sys: init.sys.clone(),
+            model_bits: init.model_bits,
+            temp: init.bandit.temp,
+            eps: init.bandit.eps,
+            t: 0,
+            last_picked: vec![0; n],
+            norm_ema: vec![1.0; n],
+            has_norm: vec![false; n],
+        }
+    }
+}
+
+impl RoundPolicy for ConvAwarePolicy {
+    fn name(&self) -> &'static str {
+        "Conv-Aware"
+    }
+
+    fn plan(&mut self, ctx: &RoundContext<'_>, rng: &mut Rng) -> RoundPlan {
+        self.t += 1;
+        let n = ctx.devices.len();
+        let scores: Vec<f64> = (0..n)
+            .map(|pos| {
+                let g = ctx.ids[pos];
+                let staleness = (self.t - self.last_picked[g]) as f64;
+                (staleness * self.norm_ema[g]).max(f64::MIN_POSITIVE).ln()
+            })
+            .collect();
+        let q = sampling::softmax_distribution(&scores, self.temp, self.eps);
+        let mut controls =
+            static_alloc::solve_static(&self.sys, ctx.devices, self.model_bits, ctx.h);
+        controls.q = q.clone();
+        let selection = sampling::sample_by_probability(&q, ctx.weights, ctx.k, rng);
+        RoundPlan {
+            controls,
+            stats: SolverStats::default(),
+            selection,
+            q_eff: q,
+        }
+    }
+
+    fn observe_update(&mut self, client: usize, delta: &[f32]) {
+        let norm = delta
+            .iter()
+            .map(|&d| {
+                let d = d as f64;
+                d * d
+            })
+            .sum::<f64>()
+            .sqrt();
+        if !norm.is_finite() {
+            return;
+        }
+        self.norm_ema[client] = if self.has_norm[client] {
+            (1.0 - CONV_NORM_EMA) * self.norm_ema[client] + CONV_NORM_EMA * norm
+        } else {
+            norm
+        };
+        self.has_norm[client] = true;
+    }
+
+    fn observe_round(&mut self, selected: &[usize], _costs: &RoundCosts) {
+        for &g in selected {
+            self.last_picked[g] = self.t;
         }
     }
 }
@@ -772,6 +1181,10 @@ pub struct OracleEnergyPolicy {
     /// V — the latency price the kernels trade against queue-priced
     /// energy (the cell's scaled value, shared with its LROA run).
     v: f64,
+    /// The cost-mode flat energy price `V·cost_weight` (0 by default),
+    /// added to every backlog so the anchor faces the same effective
+    /// prices as the cost-objective LROA run it bounds.
+    cost_vw: f64,
 }
 
 impl OracleEnergyPolicy {
@@ -780,6 +1193,7 @@ impl OracleEnergyPolicy {
             sys: init.sys.clone(),
             model_bits: init.model_bits,
             v: init.v,
+            cost_vw: init.v * init.ctl.cost_weight,
         }
     }
 }
@@ -800,13 +1214,16 @@ impl RoundPolicy for OracleEnergyPolicy {
         let mut times = Vec::with_capacity(n);
         for i in 0..n {
             let d = &ctx.devices[i];
-            let f = freq::optimal_freq(d, self.v, 1.0, ctx.backlogs[i], ctx.k);
+            // Backlogs are non-negative, so adding a zero cost_vw is
+            // value-exact — the default plan is bitwise the old one.
+            let price = ctx.backlogs[i] + self.cost_vw;
+            let f = freq::optimal_freq(d, self.v, 1.0, price, ctx.k);
             let p = power::optimal_power(
                 d,
                 self.v,
                 1.0,
                 ctx.h[i],
-                ctx.backlogs[i],
+                price,
                 ctx.k,
                 self.sys.noise_w,
             );
@@ -848,9 +1265,14 @@ impl RoundPolicy for OracleEnergyPolicy {
 pub struct PolicyInit<'a> {
     pub sys: &'a SystemConfig,
     pub ctl: &'a ControlConfig,
-    /// Contextual-bandit knobs (`[bandit]`; only the bandit reads them —
-    /// by value, the struct is five floats).
+    /// Contextual-bandit knobs (`[bandit]`; read by the bandit and, for
+    /// the shared softmax temperature/floor, by Conv-Aware — by value,
+    /// the struct is five floats).
     pub bandit: BanditConfig,
+    /// Thompson-sampling knobs (`[thompson]`; only Thompson reads them).
+    pub thompson: ThompsonConfig,
+    /// LinUCB knobs (`[linucb]`; only LinUCB reads them).
+    pub linucb: LinUcbConfig,
     /// λ, already scaled (µ·λ₀ or explicit override).
     pub lambda: f64,
     /// V, already scaled (ν·V₀ or explicit override).
@@ -915,6 +1337,18 @@ fn build_bandit(init: &PolicyInit<'_>) -> Box<dyn RoundPolicy> {
     Box::new(ContextualBanditPolicy::new(init))
 }
 
+fn build_thompson(init: &PolicyInit<'_>) -> Box<dyn RoundPolicy> {
+    Box::new(ThompsonPolicy::new(init))
+}
+
+fn build_linucb(init: &PolicyInit<'_>) -> Box<dyn RoundPolicy> {
+    Box::new(LinUcbPolicy::new(init))
+}
+
+fn build_conv_aware(init: &PolicyInit<'_>) -> Box<dyn RoundPolicy> {
+    Box::new(ConvAwarePolicy::new(init))
+}
+
 fn build_oracle(init: &PolicyInit<'_>) -> Box<dyn RoundPolicy> {
     Box::new(OraclePolicy::new(init))
 }
@@ -964,6 +1398,21 @@ pub const REGISTRY: &[PolicySpec] = &[
         id: Policy::Bandit,
         name: "Bandit",
         build: build_bandit,
+    },
+    PolicySpec {
+        id: Policy::Thompson,
+        name: "Thompson",
+        build: build_thompson,
+    },
+    PolicySpec {
+        id: Policy::LinUcb,
+        name: "LinUCB",
+        build: build_linucb,
+    },
+    PolicySpec {
+        id: Policy::ConvAware,
+        name: "Conv-Aware",
+        build: build_conv_aware,
     },
     PolicySpec {
         id: Policy::Oracle,
@@ -1029,7 +1478,7 @@ mod tests {
             names(),
             vec![
                 "LROA", "Uni-D", "Uni-S", "DivFL", "Greedy", "RR", "P2C", "Bandit",
-                "Oracle", "Oracle-E"
+                "Thompson", "LinUCB", "Conv-Aware", "Oracle", "Oracle-E"
             ]
         );
     }
@@ -1041,6 +1490,8 @@ mod tests {
             sys: &sys,
             ctl: &ctl,
             bandit: BanditConfig::default(),
+            thompson: ThompsonConfig::default(),
+            linucb: LinUcbConfig::default(),
             lambda: 1.0,
             v: 1e4,
             model_bits: 3.2e6,
@@ -1059,6 +1510,14 @@ mod tests {
             "power-of-two-choices",
             "bandit",
             "contextual-bandit",
+            "thompson",
+            "ts",
+            "thompson-sampling",
+            "linucb",
+            "lin-ucb",
+            "conv-aware",
+            "convaware",
+            "conv",
             "oracle",
             "oracle-e",
             "oracle-energy",
@@ -1075,6 +1534,8 @@ mod tests {
             sys: &sys,
             ctl: &ctl,
             bandit: BanditConfig::default(),
+            thompson: ThompsonConfig::default(),
+            linucb: LinUcbConfig::default(),
             lambda: 1.0,
             v: 1e4,
             model_bits: 3.2e6,
@@ -1125,6 +1586,8 @@ mod tests {
             sys: &sys,
             ctl: &ctl,
             bandit: BanditConfig::default(),
+            thompson: ThompsonConfig::default(),
+            linucb: LinUcbConfig::default(),
             lambda: 1.0,
             v: 1e4,
             model_bits: 3.2e6,
@@ -1164,6 +1627,8 @@ mod tests {
             sys: &sys,
             ctl: &ctl,
             bandit: BanditConfig::default(),
+            thompson: ThompsonConfig::default(),
+            linucb: LinUcbConfig::default(),
             lambda: 1.0,
             v: 1e4,
             model_bits: 3.2e6,
@@ -1194,6 +1659,8 @@ mod tests {
             sys: &sys,
             ctl: &ctl,
             bandit: BanditConfig::default(),
+            thompson: ThompsonConfig::default(),
+            linucb: LinUcbConfig::default(),
             lambda: 1.0,
             v: 1e4,
             model_bits: 3.2e6,
@@ -1228,6 +1695,8 @@ mod tests {
             sys: &sys,
             ctl: &ctl,
             bandit: BanditConfig::default(),
+            thompson: ThompsonConfig::default(),
+            linucb: LinUcbConfig::default(),
             lambda: 1.0,
             v: 1e4,
             model_bits: 3.2e6,
@@ -1290,6 +1759,8 @@ mod tests {
             sys: &sys,
             ctl: &ctl,
             bandit: BanditConfig::default(),
+            thompson: ThompsonConfig::default(),
+            linucb: LinUcbConfig::default(),
             lambda: 1.0,
             v: 1e4,
             model_bits: 3.2e6,
@@ -1334,6 +1805,8 @@ mod tests {
             sys: &sys,
             ctl: &ctl,
             bandit: BanditConfig::default(),
+            thompson: ThompsonConfig::default(),
+            linucb: LinUcbConfig::default(),
             lambda: 1.0,
             v: 1e4,
             model_bits: 3.2e6,
@@ -1372,6 +1845,8 @@ mod tests {
             sys: &sys,
             ctl: &ctl,
             bandit: BanditConfig::default(),
+            thompson: ThompsonConfig::default(),
+            linucb: LinUcbConfig::default(),
             lambda: 1.0,
             v: 1e4,
             model_bits: 3.2e6,
@@ -1410,6 +1885,8 @@ mod tests {
             sys: &sys,
             ctl: &ctl,
             bandit: BanditConfig::default(),
+            thompson: ThompsonConfig::default(),
+            linucb: LinUcbConfig::default(),
             lambda: 1.0,
             v: 1e4,
             model_bits: 3.2e6,
@@ -1476,6 +1953,8 @@ mod tests {
                 temp: 0.1,
                 ..BanditConfig::default()
             },
+            thompson: ThompsonConfig::default(),
+            linucb: LinUcbConfig::default(),
             lambda: 1.0,
             v: 1e4,
             model_bits: 3.2e6,
@@ -1529,6 +2008,8 @@ mod tests {
             sys: &sys,
             ctl: &ctl,
             bandit: BanditConfig::default(),
+            thompson: ThompsonConfig::default(),
+            linucb: LinUcbConfig::default(),
             lambda: 1.0,
             v: 1e4,
             model_bits: 3.2e6,
@@ -1592,6 +2073,8 @@ mod tests {
             sys: &sys,
             ctl: &ctl,
             bandit: BanditConfig::default(),
+            thompson: ThompsonConfig::default(),
+            linucb: LinUcbConfig::default(),
             lambda: 1.0,
             v: 1e4,
             model_bits: 3.2e6,
@@ -1638,5 +2121,304 @@ mod tests {
                 "trial {trial}: oracle-e {t_oe} beat the latency floor {t_o}"
             );
         }
+    }
+
+    #[test]
+    fn bandit_reward_survives_an_adversarially_degraded_channel() {
+        // A zero, denormal, infinite, or NaN modeled latency must never
+        // poison the reward statistics: every reward stays finite and in
+        // [0, 1], and the next plan still emits a valid distribution.
+        let (sys, ctl, fleet, h, backlogs) = setup();
+        let init = PolicyInit {
+            sys: &sys,
+            ctl: &ctl,
+            bandit: BanditConfig::default(),
+            thompson: ThompsonConfig::default(),
+            linucb: LinUcbConfig::default(),
+            lambda: 1.0,
+            v: 1e4,
+            model_bits: 3.2e6,
+            seed: 7,
+        };
+        let ids: Vec<usize> = (0..12).collect();
+        let ctx = RoundContext {
+            t: 0,
+            k: 2,
+            devices: &fleet.devices,
+            weights: fleet.weights(),
+            ids: &ids,
+            h: &h,
+            backlogs: &backlogs,
+            next_h: None,
+        };
+        for policy_id in [Policy::Bandit, Policy::Thompson, Policy::LinUcb] {
+            let mut policy = build(policy_id, &init);
+            let mut rng = Rng::new(3);
+            policy.plan(&ctx, &mut rng);
+            // Degenerate round: device 0 collapsed to zero latency,
+            // device 1 is NaN, device 2 unreachable, device 3 normal.
+            let mut time_s = vec![1.0; 12];
+            time_s[0] = 0.0;
+            time_s[1] = f64::NAN;
+            time_s[2] = f64::INFINITY;
+            let costs = RoundCosts {
+                time_s,
+                energy_j: vec![0.1; 12],
+                ..RoundCosts::default()
+            };
+            policy.observe_round(&[0, 1, 2, 3], &costs);
+            // An all-garbage round (nothing finite) is skipped outright.
+            let garbage = RoundCosts {
+                time_s: vec![f64::NAN; 12],
+                energy_j: vec![0.1; 12],
+                ..RoundCosts::default()
+            };
+            policy.observe_round(&[0, 1], &garbage);
+            let plan = policy.plan(&ctx, &mut rng);
+            assert!(
+                plan.q_eff.iter().all(|q| q.is_finite() && *q > 0.0),
+                "{policy_id}: degenerate costs leaked into the marginals: {:?}",
+                plan.q_eff
+            );
+            assert!((plan.q_eff.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        }
+        // The helper contracts directly.
+        assert_eq!(relative_speed(1.0, f64::NAN), 0.0);
+        assert_eq!(relative_speed(1.0, f64::INFINITY), 0.0);
+        assert_eq!(relative_speed(LATENCY_FLOOR_S, 0.0), 1.0);
+        assert!(reward_baseline(&[0], &RoundCosts {
+            time_s: vec![f64::NAN],
+            ..RoundCosts::default()
+        })
+        .is_none());
+    }
+
+    #[test]
+    fn thompson_marginals_match_empirical_frequencies() {
+        // Thompson's q_eff are exact selection marginals too: the
+        // posterior draws come from the policy-owned rng (a pure function
+        // of seed + history), so fresh policies at the same context plan
+        // identical marginals, and 1e5 shared-stream draws must reproduce
+        // them within 1% — the bandit contract, mirrored.
+        let (sys, ctl, fleet, h, backlogs) = setup();
+        let init = PolicyInit {
+            sys: &sys,
+            ctl: &ctl,
+            bandit: BanditConfig::default(),
+            thompson: ThompsonConfig::default(),
+            linucb: LinUcbConfig::default(),
+            lambda: 1.0,
+            v: 1e4,
+            model_bits: 3.2e6,
+            seed: 7,
+        };
+        let ids: Vec<usize> = (0..12).collect();
+        let ctx = RoundContext {
+            t: 0,
+            k: 1,
+            devices: &fleet.devices,
+            weights: fleet.weights(),
+            ids: &ids,
+            h: &h,
+            backlogs: &backlogs,
+            next_h: None,
+        };
+        let reference = build(Policy::Thompson, &init).plan(&ctx, &mut Rng::new(1));
+        let q = reference.q_eff.clone();
+        assert_eq!(reference.controls.q, q, "marginals must drive the objective");
+        assert!((q.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(q.iter().all(|&v| v > 0.0), "eps floor keeps marginals positive");
+        let w = fleet.weights();
+        for (slot, &m) in reference.selection.members.iter().enumerate() {
+            let expect = w[m] / (ctx.k as f64 * q[m]);
+            assert!((reference.selection.coefs[slot] - expect).abs() < 1e-12);
+        }
+
+        let trials = 100_000;
+        let mut counts = vec![0usize; 12];
+        let mut rng = Rng::new(33);
+        for _ in 0..trials {
+            let plan = build(Policy::Thompson, &init).plan(&ctx, &mut rng);
+            assert_eq!(plan.q_eff, q, "fresh policy, same seed, same posterior draws");
+            counts[plan.selection.members[0]] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let emp = c as f64 / trials as f64;
+            assert!(
+                (emp - q[i]).abs() < 0.01,
+                "device {i}: empirical {emp} vs marginal {}",
+                q[i]
+            );
+        }
+    }
+
+    #[test]
+    fn linucb_sherman_morrison_matches_direct_solve() {
+        // Drive the rank-1 update path with a known (x, r) sequence and
+        // check A⁻¹ and θ against the directly accumulated design matrix
+        // solved by Gaussian elimination.
+        let (sys, ctl, ..) = setup();
+        let init = PolicyInit {
+            sys: &sys,
+            ctl: &ctl,
+            bandit: BanditConfig::default(),
+            thompson: ThompsonConfig::default(),
+            linucb: LinUcbConfig::default(),
+            lambda: 1.0,
+            v: 1e4,
+            model_bits: 3.2e6,
+            seed: 7,
+        };
+        let mut policy = LinUcbPolicy::new(&init);
+        let ridge = init.linucb.ridge;
+        let xs: [[f64; 3]; 6] = [
+            [0.2, 0.7, 0.5],
+            [0.9, 0.1, 0.3],
+            [0.4, 0.4, 0.8],
+            [0.6, 0.2, 0.1],
+            [0.3, 0.9, 0.9],
+            [0.8, 0.5, 0.2],
+        ];
+        let rewards = [0.8, 0.3, 0.6, 0.9, 0.2, 0.7];
+        let mut a = [[0.0f64; 3]; 3];
+        for i in 0..3 {
+            a[i][i] = ridge;
+        }
+        let mut b = [0.0f64; 3];
+        for (x, &r) in xs.iter().zip(&rewards) {
+            // Route the update through observe_round: device 0 selected
+            // with context x; device 1 is the baseline (time 1.0), and
+            // device 0's latency 1/r makes the realized reward exactly r.
+            policy.last_x[..3].copy_from_slice(x);
+            policy.ctx_state.last_candidates = vec![0, 1];
+            let costs = RoundCosts {
+                time_s: vec![1.0 / r, 1.0],
+                ..RoundCosts::default()
+            };
+            policy.observe_round(&[0], &costs);
+            for i in 0..3 {
+                for j in 0..3 {
+                    a[i][j] += x[i] * x[j];
+                }
+            }
+            for i in 0..3 {
+                b[i] += r * x[i];
+            }
+        }
+        // A · A⁻¹ ≈ I.
+        for i in 0..3 {
+            for j in 0..3 {
+                let mut v = 0.0;
+                for l in 0..3 {
+                    v += a[i][l] * policy.a_inv[l * 3 + j];
+                }
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (v - expect).abs() < 1e-9,
+                    "(A·A⁻¹)[{i}][{j}] = {v}, expected {expect}"
+                );
+            }
+        }
+        // θ from Sherman–Morrison state vs direct Gaussian elimination.
+        let theta_sm = policy.a_inv_mul(&policy.b.clone());
+        let mut m = [[0.0f64; 4]; 3];
+        for i in 0..3 {
+            for j in 0..3 {
+                m[i][j] = a[i][j];
+            }
+            m[i][3] = b[i];
+        }
+        for col in 0..3 {
+            let piv = (col..3)
+                .max_by(|&x, &y| m[x][col].abs().partial_cmp(&m[y][col].abs()).unwrap())
+                .unwrap();
+            m.swap(col, piv);
+            for row in 0..3 {
+                if row != col {
+                    let f = m[row][col] / m[col][col];
+                    for j in col..4 {
+                        m[row][j] -= f * m[col][j];
+                    }
+                }
+            }
+        }
+        for i in 0..3 {
+            let direct = m[i][3] / m[i][i];
+            assert!(
+                (theta_sm[i] - direct).abs() < 1e-9,
+                "theta[{i}]: Sherman–Morrison {} vs direct {direct}",
+                theta_sm[i]
+            );
+        }
+        // The policy's own b must match the direct accumulation.
+        for i in 0..3 {
+            assert!((policy.b[i] - b[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn conv_aware_prefers_stale_high_norm_clients() {
+        let (sys, ctl, fleet, h, backlogs) = setup();
+        let init = PolicyInit {
+            sys: &sys,
+            ctl: &ctl,
+            bandit: BanditConfig::default(),
+            thompson: ThompsonConfig::default(),
+            linucb: LinUcbConfig::default(),
+            lambda: 1.0,
+            v: 1e4,
+            model_bits: 3.2e6,
+            seed: 7,
+        };
+        let ids: Vec<usize> = (0..12).collect();
+        let ctx = RoundContext {
+            t: 0,
+            k: 2,
+            devices: &fleet.devices,
+            weights: fleet.weights(),
+            ids: &ids,
+            h: &h,
+            backlogs: &backlogs,
+            next_h: None,
+        };
+        let mut policy = build(Policy::ConvAware, &init);
+        let mut rng = Rng::new(11);
+        // Cold start: no norms, no history — pure uniform.
+        let plan = policy.plan(&ctx, &mut rng);
+        for &q in &plan.q_eff {
+            assert!((q - 1.0 / 12.0).abs() < 1e-12, "cold start is uniform: {q}");
+        }
+        // Everyone but device 5 participated this round; device 5 also
+        // showed the largest update when it last ran.
+        let picked: Vec<usize> = (0..12).filter(|&g| g != 5).collect();
+        let costs = RoundCosts {
+            time_s: vec![1.0; 12],
+            ..RoundCosts::default()
+        };
+        policy.observe_round(&picked, &costs);
+        for &g in &picked {
+            policy.observe_update(g, &[0.1, 0.1]);
+        }
+        policy.observe_update(5, &[5.0, 5.0]);
+        let plan = policy.plan(&ctx, &mut rng);
+        let best = plan
+            .q_eff
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(best, 5, "stale + high-norm device must dominate: {:?}", plan.q_eff);
+        // Staleness alone also separates: device 5 never selected, so
+        // even with equal norms its priority is double the others'.
+        let mut age_only = build(Policy::ConvAware, &init);
+        age_only.plan(&ctx, &mut rng);
+        age_only.observe_round(&picked, &costs);
+        let plan = age_only.plan(&ctx, &mut rng);
+        assert!(
+            plan.q_eff[5] > plan.q_eff[0],
+            "pure staleness must favor the unpicked device: {:?}",
+            plan.q_eff
+        );
     }
 }

@@ -60,6 +60,28 @@ impl VirtualQueues {
         }
     }
 
+    /// Eq. (19) restricted to this round's candidate set `N^t`
+    /// (`candidates`: sorted global ids): a device outside `N^t` is
+    /// frozen — it neither accrues the `(1-(1-q)^K)E` charge (it cannot
+    /// be selected) nor the `-Ē_n` budget credit (its budget must not
+    /// replenish while it is offline).  [`VirtualQueues::update`] is the
+    /// degenerate full-candidacy case, and stays as the
+    /// `queue_gate_offline = false` parity anchor.
+    pub fn update_candidates(
+        &mut self,
+        candidates: &[usize],
+        q_probs: &[f64],
+        k: usize,
+        energy_j: &[f64],
+    ) {
+        debug_assert_eq!(q_probs.len(), self.q.len());
+        debug_assert_eq!(energy_j.len(), self.q.len());
+        for &n in candidates {
+            let a = self.arrival(n, q_probs[n], k, energy_j[n]);
+            self.q[n] = (self.q[n] + a).max(0.0);
+        }
+    }
+
     /// Quadratic Lyapunov function (21): `L = ½ Σ Q_n²`.
     pub fn lyapunov(&self) -> f64 {
         0.5 * self.q.iter().map(|x| x * x).sum::<f64>()
@@ -119,6 +141,44 @@ mod tests {
         assert!(q.lyapunov() > 0.0);
         assert!((q.mean_backlog() - 44.5).abs() < 1e-9);
         assert!((q.max_backlog() - 44.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gated_update_freezes_non_candidates() {
+        // Device 1 is offline: gated, its backlog is flat — no charge,
+        // no budget credit.  Ungated (the old semantics), it would drain
+        // by Ē every round.
+        let mut gated = VirtualQueues::new(vec![1.0; 2]);
+        let mut ungated = VirtualQueues::new(vec![1.0; 2]);
+        // Build up backlog on both devices first (full candidacy).
+        for _ in 0..3 {
+            gated.update_candidates(&[0, 1], &[0.9, 0.9], 2, &[10.0, 10.0]);
+            ungated.update(&[0.9, 0.9], 2, &[10.0, 10.0]);
+        }
+        assert_eq!(gated.backlogs(), ungated.backlogs());
+        let frozen = gated.backlogs()[1];
+        // Device 1 leaves the candidate set (q_prob 0 — cannot be drawn).
+        for _ in 0..4 {
+            gated.update_candidates(&[0], &[0.9, 0.0], 2, &[10.0, 10.0]);
+            ungated.update(&[0.9, 0.0], 2, &[10.0, 10.0]);
+        }
+        assert_eq!(gated.backlogs()[1], frozen, "offline backlog must be flat");
+        // Old semantics: -Ē per offline round.
+        assert!((ungated.backlogs()[1] - (frozen - 4.0)).abs() < 1e-9);
+        // The online device advances identically under both.
+        assert_eq!(gated.backlogs()[0], ungated.backlogs()[0]);
+    }
+
+    #[test]
+    fn gated_update_with_full_candidacy_matches_update() {
+        let mut a = VirtualQueues::new(vec![1.0; 3]);
+        let mut b = VirtualQueues::new(vec![1.0; 3]);
+        for t in 0..10 {
+            let q = [0.2 + 0.05 * t as f64, 0.3, 0.1];
+            a.update_candidates(&[0, 1, 2], &q, 2, &[5.0, 6.0, 7.0]);
+            b.update(&q, 2, &[5.0, 6.0, 7.0]);
+        }
+        assert_eq!(a.backlogs(), b.backlogs());
     }
 
     #[test]

@@ -121,6 +121,10 @@ pub struct SweepSpec {
     pub mus: Vec<f64>,
     /// V scale factors ν.
     pub nus: Vec<f64>,
+    /// Per-device energy-budget heterogeneity (`system.budget_spread`)
+    /// values — first-class axis so budget-heterogeneous fleets can be
+    /// swept against the homogeneous paper default in one grid.
+    pub budget_spreads: Vec<f64>,
     /// Seed repeats (the paper averages 30).
     pub seeds: Vec<u64>,
     /// Horizon override applied to every cell.
@@ -161,6 +165,7 @@ impl Default for SweepSpec {
             ks: Vec::new(),
             mus: Vec::new(),
             nus: Vec::new(),
+            budget_spreads: Vec::new(),
             seeds: Vec::new(),
             rounds: None,
             mode: SimMode::ControlPlaneOnly,
@@ -207,6 +212,7 @@ impl SweepSpec {
                     for &k in &axis(&self.ks) {
                         for &mu in &axis(&self.mus) {
                             for &nu in &axis(&self.nus) {
+                                for &bs in &axis(&self.budget_spreads) {
                                 for &seed in &axis(&self.seeds) {
                                     let mut cfg = base(dataset)?;
                                     if let Some(p) = p {
@@ -223,6 +229,9 @@ impl SweepSpec {
                                     }
                                     if let Some(nu) = nu {
                                         cfg.control.nu = nu;
+                                    }
+                                    if let Some(bs) = bs {
+                                        cfg.system.budget_spread = bs;
                                     }
                                     if let Some(seed) = seed {
                                         cfg.train.seed = seed;
@@ -254,6 +263,7 @@ impl SweepSpec {
                                         regret_vs: None,
                                         regret_vs_e: None,
                                     });
+                                }
                                 }
                             }
                         }
@@ -293,6 +303,9 @@ impl SweepSpec {
         if self.nus.len() > 1 {
             s.push_str(&format!("-nu{:e}", cfg.control.nu));
         }
+        if self.budget_spreads.len() > 1 {
+            s.push_str(&format!("-bs{}", cfg.system.budget_spread));
+        }
         s
     }
 
@@ -300,7 +313,8 @@ impl SweepSpec {
     ///
     /// Recognized (all `--key=value`): `--datasets`, `--policies`,
     /// `--envs` (comma list of environment names, `trace:<path>`
-    /// entries, or `all`), `--ks`, `--mus`, `--nus`, `--seeds` (comma
+    /// entries, or `all`), `--ks`, `--mus`, `--nus`, `--budget_spreads`
+    /// (energy-budget heterogeneity values), `--seeds` (comma
     /// list or `a..b` inclusive), `--rounds`, `--threads`,
     /// `--cell_timeout_s` (per-cell wall-clock budget),
     /// `--mode=sim|train`, `--out`, `--trace-out` (structured-trace
@@ -356,6 +370,9 @@ impl SweepSpec {
                 "ks" => spec.ks = parse_list(val, "ks")?,
                 "mus" => spec.mus = parse_list(val, "mus")?,
                 "nus" => spec.nus = parse_list(val, "nus")?,
+                "budget_spreads" => {
+                    spec.budget_spreads = parse_list(val, "budget_spreads")?
+                }
                 "seeds" => spec.seeds = parse_seeds(val)?,
                 "rounds" => spec.rounds = Some(parse_one(val, "rounds")?),
                 "threads" => spec.threads = parse_one(val, "threads")?,
@@ -775,5 +792,54 @@ mod tests {
             parsed.get("cells").and_then(|c| c.as_arr()).unwrap().len(),
             cells.len()
         );
+    }
+
+    #[test]
+    fn budget_spread_is_a_sweep_axis_with_resume_safe_fingerprints() {
+        let args: Vec<String> = ["--datasets=cifar", "--budget_spreads=0,0.5"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let spec = SweepSpec::from_cli(&args).unwrap();
+        assert_eq!(spec.budget_spreads, vec![0.0, 0.5]);
+        let cells = spec.expand().unwrap();
+        assert_eq!(cells.len(), 2);
+        // The axis value lands in the config and the label carries it.
+        assert_eq!(cells[0].cfg.system.budget_spread, 0.0);
+        assert_eq!(cells[1].cfg.system.budget_spread, 0.5);
+        assert_eq!(cells[0].label, "LROA-cifar-bs0");
+        assert_eq!(cells[1].label, "LROA-cifar-bs0.5");
+        assert_ne!(cells[0].group, cells[1].group);
+        // budget_spread is config-hashed, so the two cells have distinct
+        // fingerprints: a --resume after editing the axis re-runs the
+        // changed cell instead of trusting a stale CSV.
+        assert_ne!(cells[0].fingerprint(), cells[1].fingerprint());
+        // The manifest documents each heterogeneity cell separately.
+        let manifest = manifest_json(&cells);
+        let arr = manifest.get("cells").and_then(|c| c.as_arr()).unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(
+            arr[0].get("label").unwrap().as_str().unwrap(),
+            "LROA-cifar-bs0"
+        );
+        assert_eq!(
+            arr[1].get("label").unwrap().as_str().unwrap(),
+            "LROA-cifar-bs0.5"
+        );
+        assert_ne!(
+            arr[0].get("config_hash").unwrap().as_str().unwrap(),
+            arr[1].get("config_hash").unwrap().as_str().unwrap()
+        );
+
+        // A single-entry axis pins the value without a label segment.
+        let pinned = SweepSpec {
+            datasets: vec!["cifar".into()],
+            budget_spreads: vec![0.25],
+            ..SweepSpec::default()
+        };
+        let cells = pinned.expand().unwrap();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].cfg.system.budget_spread, 0.25);
+        assert_eq!(cells[0].label, "LROA-cifar");
     }
 }

@@ -221,6 +221,8 @@ impl Server {
             sys: &cfg.system,
             ctl: &cfg.control,
             bandit: cfg.bandit.clone(),
+            thompson: cfg.thompson.clone(),
+            linucb: cfg.linucb.clone(),
             lambda,
             v,
             model_bits,
@@ -476,10 +478,27 @@ impl Server {
         let train_loss = self.train_round(t, &plan, &unique)?;
         phase_mark(&mut self.trace, &mut mark, t, Phase::Train, Counters::default());
 
-        // (6) Advance the virtual queues with this round's expected draws
-        // (unreachable devices have q_eff = 0: no expected energy drawn).
-        self.queues
-            .update(&plan.q_eff, self.cfg.system.k, &self.costs.energy_j);
+        // (6) Advance the virtual queues with this round's expected draws.
+        // With the gate on (default), eq. (19) runs only over the round's
+        // candidate set: an offline device's backlog is frozen — it draws
+        // no energy (q_eff = 0 anyway) but must not bank the `-Ē_n`
+        // budget credit either, which would let a long outage launder an
+        // earlier overdraw.  `queue_gate_offline = false` restores the
+        // old all-devices semantics bitwise.
+        let gated = self.cfg.control.queue_gate_offline
+            && !self.env_soa.all_available
+            && self.env_soa.available.len() < n;
+        if gated {
+            self.queues.update_candidates(
+                &self.env_soa.available,
+                &plan.q_eff,
+                self.cfg.system.k,
+                &self.costs.energy_j,
+            );
+        } else {
+            self.queues
+                .update(&plan.q_eff, self.cfg.system.k, &self.costs.energy_j);
+        }
 
         // (7)+(8) Record the ledger entry; evaluate when due.
         self.record_round(t, &plan, unique.len(), round_time, train_loss)?;

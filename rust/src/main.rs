@@ -87,7 +87,9 @@ SUBCOMMANDS:
     info    print artifact manifest, fleet summary, λ/V estimates
 
 SWEEP / REGRET FLAGS (all --key=value unless noted):
-    --policies=lroa,uni-d,uni-s,divfl,greedy,rr,p2c,bandit|all  --datasets=cifar,femnist
+    --policies=lroa,uni-d,uni-s,divfl,greedy,rr,p2c,bandit,thompson,linucb,conv-aware|all
+    --datasets=cifar,femnist
+    --budget_spreads=0,0.3,0.6  (system.budget_spread heterogeneity axis)
     --envs=static,ge,avail,drift,adv,trace:<log.csv>|all  (see below)
     --ks=2,4,6       --mus=0.1,1,10          --nus=1e4,1e5,1e6
     --seeds=1..30    --rounds=N              --threads=T (0 = cores)
@@ -119,13 +121,25 @@ ENVIRONMENTS (the --envs axis / --env.kind override):
             gains a greedy scheduler would chase (--env.adv_degrade,
             --env.adv_targets); `all` expands to every env except trace
 
-POLICIES: lroa uni-d uni-s divfl greedy rr p2c bandit oracle oracle-e
-    bandit   = contextual UCB scheduler: per-device context (gain EMA,
-               availability streak, queue backlog) -> exact softmax
-               sampling marginals, so eq. (4) stays unbiased
-               (knobs: --bandit.ucb_c/temp/eps/gain_ema/ctx_weight)
-    oracle   = clairvoyant latency lower bound (budget-blind)
-    oracle-e = clairvoyant AND energy-budget-feasible anchor
+POLICIES: lroa uni-d uni-s divfl greedy rr p2c bandit thompson linucb
+          conv-aware oracle oracle-e
+    bandit     = contextual UCB scheduler: per-device context (gain EMA,
+                 availability streak, queue backlog) -> exact softmax
+                 sampling marginals, so eq. (4) stays unbiased
+                 (knobs: --bandit.ucb_c/temp/eps/gain_ema/ctx_weight)
+    thompson   = Gaussian Thompson sampling over the same context:
+                 per-device posterior draws -> exact softmax marginals,
+                 deterministic given the seed (policy-owned posterior RNG)
+                 (knobs: --thompson.prior_std/temp/eps/gain_ema)
+    linucb     = ridge-regression contextual UCB over the shared context
+                 vector; one d x d design matrix in inverse form with
+                 Sherman-Morrison rank-1 updates — O(N d^2) per round, no
+                 per-round allocation
+                 (knobs: --linucb.alpha/ridge/temp/eps/gain_ema)
+    conv-aware = convergence-aware selection (staleness x last-update-norm
+                 EMA, Full mode feeds update norms; cold start is uniform)
+    oracle     = clairvoyant latency lower bound (budget-blind)
+    oracle-e   = clairvoyant AND energy-budget-feasible anchor
     (`regret` adds both anchors automatically — do not list them
      under --policies there)
 
@@ -139,6 +153,20 @@ COMMON OVERRIDES:
     --env.ge_p_bad=F --env.avail_p_drop=F --env.drift_sigma=F   (see config.rs)
     --env.trace_path=FILE --env.adv_degrade=F --env.adv_targets=N
     --bandit.ucb_c=F --bandit.temp=F --bandit.eps=F     (bandit policy only)
+    --thompson.prior_std=F --thompson.temp=F --thompson.eps=F  (thompson only)
+    --linucb.alpha=F --linucb.ridge=F --linucb.temp=F   (linucb only)
+    --system.budget_spread=F  (per-device energy-budget jitter in [0,1):
+                               budget_i = Ē·(1 ± spread·U); 0 restores the
+                               paper's homogeneous fleet bitwise)
+    --control.cost_weight=F   (drift-plus-penalty reprice: queues charge
+                               V·w·E_total on top of latency — 0 restores
+                               the paper objective bitwise; lroa/uni-d/
+                               oracle-e only)
+    --control.queue_gate_offline=true|false (default true: virtual queues
+                               advance only over the round's candidate set,
+                               so offline devices cannot launder budget
+                               debt during outages; false restores the
+                               pre-fix semantics bitwise)
     --run.out_dir=DIR               --run.artifacts_dir=DIR
 
 EXIT CODES:
@@ -561,6 +589,61 @@ fn bench_cmd(args: &[String]) -> lroa::Result<()> {
         });
         b.bench("kernel/bandit-distribution/N=120", || {
             lroa::sampling::softmax_distribution(&scores, 0.25, 0.05)
+        });
+    }
+
+    // The learned-scheduler kernels, through the registry-built policies
+    // so the rows time what the server actually dispatches: one Thompson
+    // posterior draw + marginal computation over the fleet, and one
+    // LinUCB Sherman–Morrison design-matrix update for a K-selection.
+    // Not part of the gated round_total.
+    {
+        use lroa::control::{policy, PolicyInit, RoundContext};
+        use lroa::system::{Fleet, RoundCosts};
+        let cfg = Config::for_dataset("cifar")?;
+        let mut rng = lroa::rng::Rng::new(21);
+        let fleet = Fleet::generate(&cfg.system, (50, 400), &mut rng);
+        let n = fleet.devices.len();
+        let h: Vec<f64> = (0..n).map(|_| rng.range(0.01, 0.5)).collect();
+        let backlogs: Vec<f64> = (0..n).map(|_| rng.range(0.0, 20.0)).collect();
+        let ids: Vec<usize> = (0..n).collect();
+        let init = PolicyInit {
+            sys: &cfg.system,
+            ctl: &cfg.control,
+            bandit: cfg.bandit.clone(),
+            thompson: cfg.thompson.clone(),
+            linucb: cfg.linucb.clone(),
+            lambda: 10.0,
+            v: 1e4,
+            model_bits: 32.0 * 140_000.0,
+            seed: 21,
+        };
+        let ctx = RoundContext {
+            t: 0,
+            k: cfg.system.k,
+            devices: &fleet.devices,
+            weights: fleet.weights(),
+            ids: &ids,
+            h: &h,
+            backlogs: &backlogs,
+            next_h: None,
+        };
+        let mut thompson = policy::from_name("thompson", &init)?;
+        b.bench(&format!("kernel/thompson-draw/N={n}"), || {
+            thompson.plan(&ctx, &mut rng)
+        });
+        let mut linucb = policy::from_name("linucb", &init)?;
+        // One plan to latch the round's context vectors, then the row
+        // times the pure observe path: reward + rank-1 inverse update.
+        let _ = linucb.plan(&ctx, &mut rng);
+        let selected: Vec<usize> = (0..cfg.system.k).collect();
+        let costs = RoundCosts {
+            time_s: (0..n).map(|i| 0.5 + 0.01 * i as f64).collect(),
+            energy_j: vec![0.1; n],
+            ..RoundCosts::default()
+        };
+        b.bench(&format!("kernel/linucb-update/N={n}"), || {
+            linucb.observe_round(&selected, &costs)
         });
     }
 

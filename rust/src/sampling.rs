@@ -197,11 +197,17 @@ pub fn softmax_distribution(scores: &[f64], temp: f64, eps: f64) -> Vec<f64> {
 /// coefficient `w_n / Σ_{m∈S} w_m` (the DivFL convention, shared by the
 /// deterministic greedy-channel and round-robin baselines).
 pub fn fedavg_selection(members: Vec<usize>, weights: &[f64]) -> Selection {
+    assert!(!members.is_empty(), "fedavg_selection: empty member set");
     let wsum: f64 = members.iter().map(|&m| weights[m]).sum();
-    let coefs = members
-        .iter()
-        .map(|&m| weights[m] / wsum.max(1e-300))
-        .collect();
+    // A zero/non-finite weight mass would emit coefs summing to ~0 and
+    // silently shrink the aggregate toward the origin; every caller
+    // passes strictly-positive data weights, so this is corruption, not
+    // a state to paper over.
+    assert!(
+        wsum > 0.0 && wsum.is_finite(),
+        "fedavg_selection: member weights sum to {wsum}, cannot normalize"
+    );
+    let coefs = members.iter().map(|&m| weights[m] / wsum).collect();
     Selection { members, coefs }
 }
 
@@ -660,6 +666,29 @@ mod tests {
         assert_eq!(sel.members, vec![1, 3]);
         assert!((sel.coefs[0] - 0.2 / 0.6).abs() < 1e-12);
         assert!((sel.coefs[1] - 0.4 / 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fedavg_selection_coefs_sum_to_one_for_any_nonempty_member_set() {
+        // The eq. (4) aggregation contract: for every non-empty member
+        // set the coefs must form a convex combination, including with
+        // multiplicity and tiny (but positive) weights.
+        let w = vec![1e-12, 0.2, 1e-300, 0.4, 0.1];
+        for members in [vec![0], vec![2], vec![1, 1, 3], vec![0, 2, 4], vec![3, 3, 3]] {
+            let sel = fedavg_selection(members.clone(), &w);
+            let s: f64 = sel.coefs.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9, "members {members:?}: coef sum {s}");
+            assert!(sel.coefs.iter().all(|&c| c >= 0.0 && c.is_finite()));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot normalize")]
+    fn fedavg_selection_panics_on_zero_weight_members() {
+        // Pre-fix this silently produced coefs summing to ~0 (divide by
+        // the 1e-300 floor), corrupting the aggregate.
+        let w = vec![0.0, 0.5, 0.0, 0.5];
+        fedavg_selection(vec![0, 2], &w);
     }
 
     #[test]

@@ -52,6 +52,11 @@ impl Fleet {
         let n = cfg.num_devices;
         let (lo, hi) = samples_range;
         let s = cfg.hardware_spread.clamp(0.0, 0.9);
+        // The energy budget gets its own (wider) spread so budget
+        // heterogeneity can be swept independently of hardware
+        // heterogeneity; same single uniform draw, so budget_spread = 0
+        // reproduces the old fleet bitwise.
+        let sb = (s + cfg.budget_spread.max(0.0)).clamp(0.0, 0.95);
         let devices: Vec<Device> = (0..n)
             .map(|id| {
                 let jitter = |rng: &mut Rng| 1.0 + s * (2.0 * rng.f64() - 1.0);
@@ -65,7 +70,8 @@ impl Fleet {
                     f_max_hz: cfg.f_max_hz * jitter(rng).max(cfg.f_min_hz / cfg.f_max_hz + 0.05),
                     p_min_w: cfg.p_min_w,
                     p_max_w: cfg.p_max_w * jitter(rng),
-                    energy_budget_j: cfg.energy_budget_j * jitter(rng),
+                    energy_budget_j: cfg.energy_budget_j
+                        * (1.0 + sb * (2.0 * rng.f64() - 1.0)),
                 }
             })
             .collect();
@@ -146,6 +152,34 @@ mod tests {
             assert!(d.cycles_per_sample <= cfg.cycles_per_sample * 1.3 + 1.0);
             assert!(d.f_max_hz > d.f_min_hz);
             assert!(d.p_max_w > d.p_min_w);
+        }
+    }
+
+    #[test]
+    fn budget_spread_jitters_only_the_energy_budget() {
+        let base = SystemConfig::default();
+        let cfg = SystemConfig {
+            budget_spread: 0.5,
+            ..SystemConfig::default()
+        };
+        let fleet_a = Fleet::generate(&base, (100, 100), &mut Rng::new(7));
+        let fleet_b = Fleet::generate(&cfg, (100, 100), &mut Rng::new(7));
+        // Same rng consumption: everything but the budget is untouched.
+        for (a, b) in fleet_a.devices.iter().zip(&fleet_b.devices) {
+            assert_eq!(a.cycles_per_sample, b.cycles_per_sample);
+            assert_eq!(a.alpha, b.alpha);
+            assert_eq!(a.f_max_hz, b.f_max_hz);
+        }
+        let e0 = fleet_b.devices[0].energy_budget_j;
+        assert!(fleet_b.devices.iter().any(|d| d.energy_budget_j != e0));
+        for d in &fleet_b.devices {
+            assert!(d.energy_budget_j > 0.0);
+            assert!((d.energy_budget_j - base.energy_budget_j).abs() <= base.energy_budget_j * 0.5 + 1e-9);
+        }
+        // budget_spread = 0 is bitwise the old fleet.
+        let fleet_c = Fleet::generate(&base, (100, 100), &mut Rng::new(7));
+        for (a, c) in fleet_a.devices.iter().zip(&fleet_c.devices) {
+            assert_eq!(a.energy_budget_j, c.energy_budget_j);
         }
     }
 

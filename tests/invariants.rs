@@ -105,6 +105,8 @@ fn check_pair(pspec: &policy::PolicySpec, espec: &env::EnvSpec, seed: u64, warm:
         sys: &cfg.system,
         ctl: &cfg.control,
         bandit: cfg.bandit.clone(),
+        thompson: cfg.thompson.clone(),
+        linucb: cfg.linucb.clone(),
         lambda: 1.0,
         v: 1e4,
         model_bits,
@@ -259,7 +261,13 @@ fn check_pair(pspec: &policy::PolicySpec, espec: &env::EnvSpec, seed: u64, warm:
         );
         environment.observe_selection(&unique);
         round_policy.observe_round(&unique, &costs);
-        queues.update(&q_eff_full, k, &costs.energy_j);
+        // Mirror the server's offline gating: eq. (19) only advances the
+        // round's candidates (default `queue_gate_offline = true`).
+        if cfg.control.queue_gate_offline && m < n {
+            queues.update_candidates(&avail, &q_eff_full, k, &costs.energy_j);
+        } else {
+            queues.update(&q_eff_full, k, &costs.energy_j);
+        }
         for (i, &b) in queues.backlogs().iter().enumerate() {
             assert!(
                 b >= 0.0 && b.is_finite(),
@@ -355,6 +363,171 @@ fn warm_and_cold_lroa_reach_the_same_fixed_point_with_queue_feedback() {
         warm_iters < cold_iters,
         "warm start should cut outer iterations: warm {warm_iters} vs cold {cold_iters}"
     );
+}
+
+/// Golden offline-queue semantics: across a real availability outage the
+/// gated queues freeze an offline device's backlog exactly, while the
+/// old all-devices update (`queue_gate_offline = false`, kept as the
+/// parity anchor) lets the backlog drain by `Ē_n` per offline round —
+/// the overdraw-laundering bug the gate fixes.
+#[test]
+fn offline_queue_gating_freezes_backlogs_across_outages() {
+    let mut cfg = Config::for_dataset("cifar").unwrap();
+    cfg.system.num_devices = 12;
+    cfg.system.k = 2;
+    // Tight budgets so backlogs actually build and the drain is visible.
+    cfg.system.energy_budget_j = 1e-3;
+    cfg.train.seed = 3;
+    cfg.env.kind = EnvKind::Availability;
+    cfg.env.avail_p_drop = 0.35;
+    cfg.env.avail_p_join = 0.3;
+    cfg.validate().unwrap();
+    assert!(
+        cfg.control.queue_gate_offline,
+        "offline gating must be the default"
+    );
+
+    let n = cfg.system.num_devices;
+    let k = cfg.system.k;
+    let model_bits = 32.0 * 136_874.0;
+    let mut fleet_rng = Rng::new(3 ^ 0xF1EE_7000);
+    let fleet = Fleet::generate(&cfg.system, (40, 120), &mut fleet_rng);
+    let init = PolicyInit {
+        sys: &cfg.system,
+        ctl: &cfg.control,
+        bandit: cfg.bandit.clone(),
+        thompson: cfg.thompson.clone(),
+        linucb: cfg.linucb.clone(),
+        lambda: 1.0,
+        v: 1e4,
+        model_bits,
+        seed: 3,
+    };
+    let mut round_policy = policy::build(Policy::PowerOfTwoChoices, &init);
+    let mut environment = env::build(
+        EnvKind::Availability,
+        &EnvInit {
+            sys: &cfg.system,
+            env: &cfg.env,
+            seed: 3 ^ 0xC4A1,
+        },
+    )
+    .unwrap();
+    let budgets: Vec<f64> = fleet.devices.iter().map(|d| d.energy_budget_j).collect();
+    let mut gated = VirtualQueues::new(budgets.clone());
+    let mut ungated = VirtualQueues::new(budgets.clone());
+    let mut sample_rng = Rng::new(3 ^ 0x5A3B_1E00);
+    let identity: Vec<usize> = (0..n).collect();
+
+    let mut offline_rounds = 0usize;
+    let mut drains_seen = 0usize;
+    for t in 0..40 {
+        let round = environment.next_round(&fleet.devices);
+        let h = &round.gains;
+        let avail: Vec<usize> = match &round.available {
+            Some(a) if a.len() < n => a.clone(),
+            _ => identity.clone(),
+        };
+        let sub_devices: Vec<Device> =
+            avail.iter().map(|&i| fleet.devices[i].clone()).collect();
+        let w = fleet.weights();
+        let wsum: f64 = avail.iter().map(|&i| w[i]).sum();
+        let sub_weights: Vec<f64> = avail.iter().map(|&i| w[i] / wsum).collect();
+        let sub_h: Vec<f64> = avail.iter().map(|&i| h[i]).collect();
+        let backlogs = gated.backlogs().to_vec();
+        let sub_backlogs: Vec<f64> = avail.iter().map(|&i| backlogs[i]).collect();
+        let ctx = RoundContext {
+            t,
+            k,
+            devices: &sub_devices,
+            weights: &sub_weights,
+            ids: &avail,
+            h: &sub_h,
+            backlogs: &sub_backlogs,
+            next_h: None,
+        };
+        let plan = round_policy.plan(&ctx, &mut sample_rng);
+        let mut f_full: Vec<f64> = fleet.devices.iter().map(|d| d.f_min_hz).collect();
+        let mut p_full: Vec<f64> = fleet.devices.iter().map(|d| d.p_min_w).collect();
+        let mut q_eff_full = vec![0.0; n];
+        for (pos, &g) in avail.iter().enumerate() {
+            f_full[g] = plan.controls.f_hz[pos];
+            p_full[g] = plan.controls.p_w[pos];
+            q_eff_full[g] = plan.q_eff[pos];
+        }
+        let costs =
+            RoundCosts::evaluate(&cfg.system, &fleet.devices, model_bits, h, &f_full, &p_full);
+
+        let before_gated = gated.backlogs().to_vec();
+        let before_ungated = ungated.backlogs().to_vec();
+        if avail.len() < n {
+            gated.update_candidates(&avail, &q_eff_full, k, &costs.energy_j);
+        } else {
+            gated.update(&q_eff_full, k, &costs.energy_j);
+        }
+        ungated.update(&q_eff_full, k, &costs.energy_j);
+
+        let online: std::collections::BTreeSet<usize> = avail.iter().copied().collect();
+        for g in 0..n {
+            if online.contains(&g) {
+                continue;
+            }
+            offline_rounds += 1;
+            // Gated: an offline backlog is exactly flat.
+            assert_eq!(
+                gated.backlogs()[g],
+                before_gated[g],
+                "round {t}: offline device {g} backlog moved under gating"
+            );
+            // Ungated (old semantics): a positive backlog drains by Ē.
+            if before_ungated[g] > 0.0 {
+                assert!(
+                    ungated.backlogs()[g] < before_ungated[g],
+                    "round {t}: offline device {g} failed to drain ungated"
+                );
+                drains_seen += 1;
+            }
+        }
+    }
+    assert!(
+        offline_rounds > 0,
+        "scenario produced no outages — the golden checks nothing"
+    );
+    assert!(
+        drains_seen > 0,
+        "no positive backlog was ever exposed to an outage — tighten the scenario"
+    );
+}
+
+/// With every device always reachable (`static` env) the gate can never
+/// fire: toggling `queue_gate_offline` must leave the recorded
+/// trajectory byte-identical — the knob only changes behavior where
+/// candidacy actually varies.
+#[test]
+fn queue_gate_is_inert_when_the_fleet_is_always_available() {
+    let run = |gate: bool| {
+        let mut cfg = Config::for_dataset("cifar").unwrap();
+        cfg.system.num_devices = 10;
+        cfg.system.k = 2;
+        cfg.train.rounds = 15;
+        cfg.train.seed = 4;
+        cfg.train.policy = Policy::Lroa;
+        cfg.control.queue_gate_offline = gate;
+        let mut server = Server::new(cfg, SimMode::ControlPlaneOnly).unwrap();
+        server.run().unwrap();
+        server
+            .recorder
+            .rounds
+            .iter()
+            .map(|r| {
+                format!(
+                    "{:?}|{:?}|{:?}|{}",
+                    r.round_time_s, r.mean_queue, r.max_queue, r.selected
+                )
+            })
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(run(true), run(false));
 }
 
 /// The warm-started round path is bitwise deterministic: same config →

@@ -141,6 +141,81 @@ fn regret_decomposition_is_bitwise_with_a_nonnegative_budget_component() {
 }
 
 #[test]
+fn learned_schedulers_report_through_the_regret_decomposition() {
+    // The learned-scheduler shelf (Thompson, LinUCB, Conv-Aware) plugs
+    // into the same anchors as every other online policy: cumulative
+    // regret is non-negative and non-decreasing against the shared
+    // trace stream, and the online/budget decomposition is a bitwise
+    // identity on every row.
+    let mut spec = trace_spec(vec![Policy::Thompson, Policy::LinUcb, Policy::ConvAware]);
+    spec.overrides = vec![
+        "--system.num_devices=12".into(),
+        "--system.energy_budget_j=2.0".into(),
+        "--control.v=10".into(),
+        "--train.samples_lo=40".into(),
+        "--train.samples_hi=40".into(),
+    ];
+    let cells = exp::regret::plan(&spec).unwrap();
+    assert_eq!(cells.len(), 3 + 2, "3 learned cells + 2 anchors");
+    let results = exp::regret::run(cells, 0).unwrap();
+    for r in &results {
+        if exp::regret::is_anchor(r.scenario.cfg.train.policy) {
+            continue;
+        }
+        let regs: Vec<f64> = r.recorder.rounds.iter().map(|x| x.regret).collect();
+        assert_eq!(regs.len(), 40, "{}", r.scenario.label);
+        assert!(regs[0] >= -1e-9, "{}: round-0 regret {}", r.scenario.label, regs[0]);
+        assert!(
+            regs.windows(2).all(|w| w[1] >= w[0] - 1e-9),
+            "{}: regret decreased — oracle lost a round on a shared stream",
+            r.scenario.label
+        );
+        assert!(
+            *regs.last().unwrap() > 0.0,
+            "{}: zero total regret is implausible",
+            r.scenario.label
+        );
+        for rec in &r.recorder.rounds {
+            assert_eq!(
+                rec.regret_online + rec.regret_budget,
+                rec.regret,
+                "{}: regret_online + regret_budget must equal regret bitwise",
+                r.scenario.label
+            );
+            assert!(
+                rec.regret_budget >= -1e-9,
+                "{}: negative regret_budget {}",
+                r.scenario.label,
+                rec.regret_budget
+            );
+        }
+        assert_eq!(r.recorder.rounds[0].regret_budget, 0.0, "{}", r.scenario.label);
+        assert!(
+            r.recorder.final_regret_budget() > 0.0,
+            "{}: the budget never bit (final regret_budget {})",
+            r.scenario.label,
+            r.recorder.final_regret_budget()
+        );
+    }
+
+    // The learned cells are reproducible: a second identical run of the
+    // same grid is bitwise the first — posterior draws and design-matrix
+    // updates consume only policy-owned, seed-derived randomness.
+    let cells = exp::regret::plan(&spec).unwrap();
+    let again = exp::regret::run(cells, 0).unwrap();
+    assert_eq!(results.len(), again.len());
+    for (a, b) in results.iter().zip(&again) {
+        assert_eq!(a.scenario.label, b.scenario.label);
+        for (ra, rb) in a.recorder.rounds.iter().zip(&b.recorder.rounds) {
+            assert_eq!(ra.round_time_s, rb.round_time_s, "{}", a.scenario.label);
+            assert_eq!(ra.regret, rb.regret, "{}", a.scenario.label);
+            assert_eq!(ra.regret_online, rb.regret_online, "{}", a.scenario.label);
+            assert_eq!(ra.regret_budget, rb.regret_budget, "{}", a.scenario.label);
+        }
+    }
+}
+
+#[test]
 fn oracle_e_and_decomposition_are_thread_count_invariant() {
     // The whole regret grid — anchors included — must be bitwise
     // identical no matter how wide the scenario pool runs.
