@@ -142,17 +142,23 @@ pub enum EnvKind {
     /// Adversarial worst-case channel: degrades the gains a greedy
     /// scheduler would chase, informed by the previous round's selection.
     Adversarial,
+    /// Composite: layers several mechanisms (`env.compose`, e.g.
+    /// `avail+ge+drift` or a scenario preset like `diurnal`) with
+    /// AND-availability / layered-gain merge semantics (see
+    /// [`crate::env::CompositeEnv`]).
+    Composite,
 }
 
 impl EnvKind {
     /// Every environment, registry order (static first — the paper's setting).
-    pub const ALL: [EnvKind; 6] = [
+    pub const ALL: [EnvKind; 7] = [
         EnvKind::Static,
         EnvKind::GilbertElliott,
         EnvKind::Availability,
         EnvKind::Drift,
         EnvKind::Trace,
         EnvKind::Adversarial,
+        EnvKind::Composite,
     ];
 
     /// The environments that need no external input (`all` in env lists
@@ -173,7 +179,10 @@ impl EnvKind {
             "drift" => EnvKind::Drift,
             "trace" => EnvKind::Trace,
             "adv" | "adversarial" => EnvKind::Adversarial,
-            other => anyhow::bail!("unknown env {other:?} (static|ge|avail|drift|trace|adv)"),
+            "compose" | "composite" => EnvKind::Composite,
+            other => {
+                anyhow::bail!("unknown env {other:?} (static|ge|avail|drift|trace|adv|compose)")
+            }
         })
     }
 
@@ -197,6 +206,7 @@ impl EnvKind {
             EnvKind::Drift => "drift",
             EnvKind::Trace => "trace",
             EnvKind::Adversarial => "adv",
+            EnvKind::Composite => "compose",
         }
     }
 }
@@ -236,6 +246,17 @@ pub struct EnvConfig {
     /// Adversarial: number of devices degraded per round; 0 = `2K`
     /// (the previous selection plus greedy's predicted next picks).
     pub adv_targets: usize,
+    /// Composite: `+`-separated child mechanisms (`avail+ge+drift`) or a
+    /// scenario preset name (`diurnal` | `flashcrowd` | `outage`); see
+    /// [`parse_compose_spec`].
+    pub compose: String,
+    /// Composite shadowing: fraction of the log-normal shadow-fading
+    /// variance shared across the fleet (0 = independent per device,
+    /// 1 = one common field; co-located devices fade together).
+    pub shadow_rho: f64,
+    /// Composite shadowing: log-space standard deviation of the shadow
+    /// field multiplied onto the merged gains (0 = shadowing off).
+    pub shadow_std: f64,
 }
 
 impl Default for EnvConfig {
@@ -252,7 +273,120 @@ impl Default for EnvConfig {
             trace_path: String::new(),
             adv_degrade: 0.2,
             adv_targets: 0,
+            compose: "avail+ge+drift".to_string(),
+            shadow_rho: 0.5,
+            shadow_std: 0.0,
         }
+    }
+}
+
+/// One mechanism inside a composite environment (`env.compose`, axis
+/// syntax `compose:<a>+<b>+...`).  Every registry environment except
+/// `compose` itself is admissible; the three scenario generators
+/// (`diurnal` | `flashcrowd` | `outage`, built in
+/// [`crate::env::scenario`]) are composite-only.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ComposeChild {
+    Static,
+    GilbertElliott,
+    Availability,
+    Drift,
+    Trace,
+    Adversarial,
+    Diurnal,
+    FlashCrowd,
+    Outage,
+}
+
+impl ComposeChild {
+    pub fn parse(s: &str) -> Result<ComposeChild> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "static" => ComposeChild::Static,
+            "ge" | "gilbert-elliott" | "gilbertelliott" => ComposeChild::GilbertElliott,
+            "avail" | "availability" => ComposeChild::Availability,
+            "drift" => ComposeChild::Drift,
+            "trace" => ComposeChild::Trace,
+            "adv" | "adversarial" => ComposeChild::Adversarial,
+            "diurnal" => ComposeChild::Diurnal,
+            "flashcrowd" => ComposeChild::FlashCrowd,
+            "outage" => ComposeChild::Outage,
+            other => anyhow::bail!(
+                "unknown composite child {other:?} \
+                 (static|ge|avail|drift|trace|adv|diurnal|flashcrowd|outage)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ComposeChild::Static => "static",
+            ComposeChild::GilbertElliott => "ge",
+            ComposeChild::Availability => "avail",
+            ComposeChild::Drift => "drift",
+            ComposeChild::Trace => "trace",
+            ComposeChild::Adversarial => "adv",
+            ComposeChild::Diurnal => "diurnal",
+            ComposeChild::FlashCrowd => "flashcrowd",
+            ComposeChild::Outage => "outage",
+        }
+    }
+
+    /// Whether the mechanism restricts the per-round candidate set (so a
+    /// composite containing it makes `queue_gate_offline` meaningful).
+    pub fn shapes_availability(&self) -> bool {
+        matches!(
+            self,
+            ComposeChild::Availability
+                | ComposeChild::Trace
+                | ComposeChild::Diurnal
+                | ComposeChild::FlashCrowd
+                | ComposeChild::Outage
+        )
+    }
+}
+
+/// Named composite presets: `compose:<preset>` expands to the listed
+/// child spec before parsing.  The spec string itself (not the
+/// expansion) is what `env.compose` stores and hashes.
+pub const COMPOSE_PRESETS: &[(&str, &str)] = &[
+    // Timezone-staggered daily availability cycles over fading channels.
+    ("diurnal", "diurnal+ge"),
+    // Long quiet baseline punctuated by near-total mass-join windows.
+    ("flashcrowd", "flashcrowd+ge"),
+    // Correlated regional blackouts on top of fading + compute drift.
+    ("outage", "outage+ge+drift"),
+];
+
+/// Parse a composite child spec (`a+b+c`, or a preset name from
+/// [`COMPOSE_PRESETS`]) into its mechanism list: non-empty, duplicates
+/// rejected.  Shared by config validation, fingerprint hashing, the
+/// sweep-axis parser, and the composite constructor itself.
+pub fn parse_compose_spec(spec: &str) -> Result<Vec<ComposeChild>> {
+    let spec = spec.trim();
+    let expanded = COMPOSE_PRESETS
+        .iter()
+        .find(|(name, _)| *name == spec)
+        .map(|(_, children)| *children)
+        .unwrap_or(spec);
+    anyhow::ensure!(!expanded.is_empty(), "empty composite child spec");
+    let mut out: Vec<ComposeChild> = Vec::new();
+    for part in expanded.split('+') {
+        let child = ComposeChild::parse(part.trim())?;
+        anyhow::ensure!(
+            !out.contains(&child),
+            "duplicate composite child {:?} in {spec:?}",
+            child.name()
+        );
+        out.push(child);
+    }
+    Ok(out)
+}
+
+impl EnvConfig {
+    /// The parsed child list of `env.compose` (presets expanded).
+    pub fn compose_children(&self) -> Result<Vec<ComposeChild>> {
+        parse_compose_spec(&self.compose)
+            .map_err(|e| anyhow::anyhow!("env.compose {:?}: {e}", self.compose))
     }
 }
 
@@ -686,6 +820,9 @@ impl Config {
             "env.trace_path" => self.env.trace_path = val.into(),
             "env.adv_degrade" => self.env.adv_degrade = f()?,
             "env.adv_targets" => self.env.adv_targets = u()?,
+            "env.compose" => self.env.compose = val.into(),
+            "env.shadow_rho" => self.env.shadow_rho = f()?,
+            "env.shadow_std" => self.env.shadow_std = f()?,
             "bandit.ucb_c" => self.bandit.ucb_c = f()?,
             "bandit.temp" => self.bandit.temp = f()?,
             "bandit.eps" => self.bandit.eps = f()?,
@@ -738,6 +875,14 @@ impl Config {
             "bad samples_per_device"
         );
         let e = &self.env;
+        // A composite layers child mechanisms, so the kind-gated checks
+        // below treat an included child the same as selecting that kind
+        // directly.  Parsing the spec is itself the first check.
+        let kids: Vec<ComposeChild> = if e.kind == EnvKind::Composite {
+            e.compose_children()?
+        } else {
+            Vec::new()
+        };
         for (name, p) in [
             ("env.ge_p_bad", e.ge_p_bad),
             ("env.ge_p_good", e.ge_p_good),
@@ -755,7 +900,7 @@ impl Config {
         // Only enforced when the GE environment is actually selected —
         // the other environments never touch this knob.
         anyhow::ensure!(
-            e.kind != EnvKind::GilbertElliott
+            !(e.kind == EnvKind::GilbertElliott || kids.contains(&ComposeChild::GilbertElliott))
                 || e.ge_bad_scale * s.channel_mean >= s.channel_clip.0 - 1e-12,
             "env.ge_bad_scale * channel_mean ({}) is below the channel clip floor ({}); \
              rejection sampling the bad-state gain would stall",
@@ -768,12 +913,21 @@ impl Config {
             "env.drift clamp band must straddle 1"
         );
         anyhow::ensure!(
-            e.kind != EnvKind::Trace || !e.trace_path.is_empty(),
+            !(e.kind == EnvKind::Trace || kids.contains(&ComposeChild::Trace))
+                || !e.trace_path.is_empty(),
             "env.kind=trace requires env.trace_path (the recorded channel CSV)"
         );
         anyhow::ensure!(
             e.adv_degrade > 0.0 && e.adv_degrade <= 1.0,
             "env.adv_degrade must be in (0, 1]"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&e.shadow_rho),
+            "env.shadow_rho must be in [0, 1]"
+        );
+        anyhow::ensure!(
+            e.shadow_std.is_finite() && e.shadow_std >= 0.0,
+            "env.shadow_std must be finite and >= 0"
         );
         let b = &self.bandit;
         anyhow::ensure!(b.ucb_c >= 0.0, "bandit.ucb_c must be >= 0");
@@ -836,25 +990,41 @@ impl Config {
         // if that ever changes): reset them to defaults so they can't
         // spuriously invalidate a `--resume`.
         let d = EnvConfig::default();
-        if c.env.kind != EnvKind::GilbertElliott {
+        // Under a composite kind, a child mechanism reads the same knobs
+        // it would standalone — those stay live; everything else resets.
+        let kids: Vec<ComposeChild> = if c.env.kind == EnvKind::Composite {
+            c.env.compose_children().unwrap_or_default()
+        } else {
+            Vec::new()
+        };
+        if c.env.kind != EnvKind::GilbertElliott && !kids.contains(&ComposeChild::GilbertElliott) {
             c.env.ge_p_bad = d.ge_p_bad;
             c.env.ge_p_good = d.ge_p_good;
             c.env.ge_bad_scale = d.ge_bad_scale;
         }
-        if c.env.kind != EnvKind::Availability {
+        if c.env.kind != EnvKind::Availability && !kids.contains(&ComposeChild::Availability) {
             c.env.avail_p_drop = d.avail_p_drop;
             c.env.avail_p_join = d.avail_p_join;
         }
-        if c.env.kind != EnvKind::Drift {
+        if c.env.kind != EnvKind::Drift && !kids.contains(&ComposeChild::Drift) {
             c.env.drift_sigma = d.drift_sigma;
             c.env.drift_clip = d.drift_clip;
         }
-        if c.env.kind != EnvKind::Trace {
+        if c.env.kind != EnvKind::Trace && !kids.contains(&ComposeChild::Trace) {
             c.env.trace_path = d.trace_path.clone();
         }
-        if c.env.kind != EnvKind::Adversarial {
+        if c.env.kind != EnvKind::Adversarial && !kids.contains(&ComposeChild::Adversarial) {
             c.env.adv_degrade = d.adv_degrade;
             c.env.adv_targets = d.adv_targets;
+        }
+        if c.env.kind != EnvKind::Composite {
+            c.env.compose = d.compose.clone();
+            c.env.shadow_rho = d.shadow_rho;
+            c.env.shadow_std = d.shadow_std;
+        } else if c.env.shadow_std == 0.0 {
+            // Shadowing off is bitwise inert, so the correlation knob is
+            // resume-neutral until `shadow_std` turns the field on.
+            c.env.shadow_rho = d.shadow_rho;
         }
         // Bandit knobs are only read by the bandit policy (and the
         // conv-aware scheduler, which shares the softmax knobs) — inert
@@ -884,8 +1054,12 @@ impl Config {
         }
         // Queue gating can only bite when the environment can take a
         // device offline; every other env has a full candidate set each
-        // round, where gated and ungated updates are identical.
-        if !matches!(c.env.kind, EnvKind::Availability | EnvKind::Trace) {
+        // round, where gated and ungated updates are identical.  A
+        // composite can shrink candidacy only through an
+        // availability-shaping child.
+        if !matches!(c.env.kind, EnvKind::Availability | EnvKind::Trace)
+            && !kids.iter().any(ComposeChild::shapes_availability)
+        {
             c.control.queue_gate_offline = ControlConfig::default().queue_gate_offline;
         }
         let repr = format!("{c:?}");
@@ -910,7 +1084,7 @@ impl Config {
             "[system] N={} K={} E={} B={:.3e} N0={} h_mean={} clip=({},{}) p=({},{}) f=({:.2e},{:.2e}) alpha={:.2e} c_n={:.2e} Ebar={} M_bits={} dl_bps={} spread={} budget_spread={}\n\
              [control] mu={} nu={} lambda*={} V*={} eps=({},{}) iters=({},{}) q_min={} warm_start={} queue_gate_offline={} cost_weight={}\n\
              [train] dataset={} rounds={} lr0={} decay=({},{}) samples=({},{}) test={} eval_every={} seed={} policy={} snr={} threads={}\n\
-             [env] kind={} ge=({},{},{}) avail=({},{}) drift=({},{},{}) trace={:?} adv=({},{})\n\
+             [env] kind={} ge=({},{},{}) avail=({},{}) drift=({},{},{}) trace={:?} adv=({},{}) compose={:?} shadow=({},{})\n\
              [bandit] ucb_c={} temp={} eps={} gain_ema={} ctx_weight={}\n\
              [thompson] prior_std={} temp={} eps={} gain_ema={}\n\
              [linucb] alpha={} ridge={} temp={} eps={} gain_ema={}\n\
@@ -927,7 +1101,7 @@ impl Config {
             t.seed, t.policy, t.data_snr, t.train_threads,
             e.kind, e.ge_p_bad, e.ge_p_good, e.ge_bad_scale, e.avail_p_drop, e.avail_p_join,
             e.drift_sigma, e.drift_clip.0, e.drift_clip.1, e.trace_path, e.adv_degrade,
-            e.adv_targets,
+            e.adv_targets, e.compose, e.shadow_rho, e.shadow_std,
             b.ucb_c, b.temp, b.eps, b.gain_ema, b.ctx_weight,
             ts.prior_std, ts.temp, ts.eps, ts.gain_ema,
             lu.alpha, lu.ridge, lu.temp, lu.eps, lu.gain_ema,
@@ -1308,5 +1482,139 @@ mod tests {
         let mut wt = ws.clone();
         wt.control.warm_start = false; // inert: Uni-S never iterates
         assert_eq!(ws.hash_hex(), wt.hash_hex());
+    }
+
+    #[test]
+    fn compose_kind_and_spec_parse() {
+        assert_eq!(EnvKind::parse("compose").unwrap(), EnvKind::Composite);
+        assert_eq!(EnvKind::parse("composite").unwrap(), EnvKind::Composite);
+        assert_eq!(EnvKind::Composite.name(), "compose");
+        // Composite joins the full registry set but not the `all`
+        // shorthand: a composite needs a child spec to mean anything.
+        assert!(EnvKind::ALL.contains(&EnvKind::Composite));
+        assert!(!EnvKind::SYNTHETIC.contains(&EnvKind::Composite));
+
+        let kids = parse_compose_spec("avail+ge+drift").unwrap();
+        assert_eq!(
+            kids,
+            vec![
+                ComposeChild::Availability,
+                ComposeChild::GilbertElliott,
+                ComposeChild::Drift
+            ]
+        );
+        // Aliases mirror EnvKind::parse, order is preserved.
+        assert_eq!(
+            parse_compose_spec("gilbert-elliott+adversarial").unwrap(),
+            vec![ComposeChild::GilbertElliott, ComposeChild::Adversarial]
+        );
+        // Presets expand to documented child lists.
+        assert_eq!(
+            parse_compose_spec("diurnal").unwrap(),
+            vec![ComposeChild::Diurnal, ComposeChild::GilbertElliott]
+        );
+        assert_eq!(
+            parse_compose_spec("flashcrowd").unwrap(),
+            vec![ComposeChild::FlashCrowd, ComposeChild::GilbertElliott]
+        );
+        assert_eq!(
+            parse_compose_spec("outage").unwrap(),
+            vec![
+                ComposeChild::Outage,
+                ComposeChild::GilbertElliott,
+                ComposeChild::Drift
+            ]
+        );
+        for (name, spec) in COMPOSE_PRESETS {
+            assert_eq!(
+                parse_compose_spec(name).unwrap(),
+                parse_compose_spec(spec).unwrap()
+            );
+        }
+        // Errors: empty, duplicate child, unknown mechanism.
+        assert!(parse_compose_spec("").is_err());
+        assert!(parse_compose_spec("ge+ge").is_err());
+        assert!(parse_compose_spec("avail+nope").is_err());
+    }
+
+    #[test]
+    fn compose_and_shadow_knobs_validate_and_hash_only_where_live() {
+        let mut cfg = Config::for_dataset("cifar").unwrap();
+        cfg.apply_cli(&[
+            "--env.kind=compose",
+            "--env.compose=outage",
+            "--env.shadow_rho=0.9",
+            "--env.shadow_std=0.4",
+        ])
+        .unwrap();
+        assert_eq!(cfg.env.kind, EnvKind::Composite);
+        assert_eq!(cfg.env.compose, "outage");
+        assert_eq!(cfg.env.shadow_rho, 0.9);
+        assert_eq!(cfg.env.shadow_std, 0.4);
+        assert!(cfg.validate().is_ok());
+        cfg.env.shadow_rho = 1.5;
+        assert!(cfg.validate().is_err());
+        cfg.env.shadow_rho = 0.9;
+        cfg.env.shadow_std = -0.1;
+        assert!(cfg.validate().is_err());
+        cfg.env.shadow_std = 0.4;
+        // A composite spec that fails to parse is caught at validate time.
+        cfg.env.compose = "ge+nope".into();
+        assert!(cfg.validate().is_err());
+        // Child prerequisites apply through the composite: a trace child
+        // needs a path, a ge child needs the floor headroom.
+        cfg.env.compose = "trace+ge".into();
+        cfg.env.trace_path = String::new();
+        assert!(cfg.validate().is_err());
+        cfg.env.trace_path = "somewhere.csv".into();
+        assert!(cfg.validate().is_ok());
+
+        // Inert unless the composite kind is selected (resume-neutral).
+        let a = Config::for_dataset("cifar").unwrap();
+        let mut b = a.clone();
+        b.env.compose = "outage".into();
+        b.env.shadow_rho = 0.9;
+        b.env.shadow_std = 0.4;
+        assert_eq!(a.hash_hex(), b.hash_hex());
+        // Live once composite is selected: spec and shadow knobs.
+        let mut c = a.clone();
+        c.env.kind = EnvKind::Composite;
+        let mut d = c.clone();
+        d.env.compose = "diurnal".into();
+        assert_ne!(c.hash_hex(), d.hash_hex());
+        let mut e = c.clone();
+        e.env.shadow_std = 0.4;
+        assert_ne!(c.hash_hex(), e.hash_hex());
+        // The correlation knob is resume-neutral while shadowing is off
+        // (std = 0 is bitwise inert) and live once the field is on.
+        let mut e2 = c.clone();
+        e2.env.shadow_rho = 0.9;
+        assert_eq!(c.hash_hex(), e2.hash_hex());
+        let mut e3 = e.clone();
+        e3.env.shadow_rho = 0.9;
+        assert_ne!(e.hash_hex(), e3.hash_hex());
+        // Child knobs are live exactly for the children in the spec:
+        // default spec avail+ge+drift has no adv child, so adv_degrade
+        // stays inert while ge/avail/drift knobs bite.
+        let mut f = c.clone();
+        f.env.adv_degrade = 0.5;
+        assert_eq!(c.hash_hex(), f.hash_hex());
+        let mut g = c.clone();
+        g.env.ge_p_good = 0.9;
+        assert_ne!(c.hash_hex(), g.hash_hex());
+        let mut h = c.clone();
+        h.env.avail_p_drop = 0.2;
+        assert_ne!(c.hash_hex(), h.hash_hex());
+        // The offline-queue gate is live when any child shapes
+        // availability (default spec has avail).
+        let mut q = c.clone();
+        q.control.queue_gate_offline = false;
+        assert_ne!(c.hash_hex(), q.hash_hex());
+        // ...and inert for a pure-channel composite.
+        let mut r = c.clone();
+        r.env.compose = "ge+drift".into();
+        let mut s = r.clone();
+        s.control.queue_gate_offline = false;
+        assert_eq!(r.hash_hex(), s.hash_hex());
     }
 }

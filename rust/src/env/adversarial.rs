@@ -84,6 +84,21 @@ impl AdversarialEnv {
         out.extend(order.into_iter().take(self.budget - out.len()));
         out
     }
+
+    /// Composite hook: the base (pre-degrade) channel draw, used when
+    /// this child is the composite's channel owner.
+    pub(crate) fn step_channel_into(&mut self, out: &mut Vec<f64>) {
+        self.channel.next_round_into(out);
+    }
+
+    /// Composite hook: the degrade pass over an arbitrary (merged) gain
+    /// vector — the one implementation `next_round` also applies, so the
+    /// targeting/clamp semantics cannot diverge.
+    pub(crate) fn degrade_gains(&self, gains: &mut [f64]) {
+        for t in self.targets(gains) {
+            gains[t] = (gains[t] * self.degrade).max(self.clip_lo);
+        }
+    }
 }
 
 impl Environment for AdversarialEnv {
@@ -93,9 +108,7 @@ impl Environment for AdversarialEnv {
 
     fn next_round(&mut self, _base: &[Device]) -> RoundEnv {
         let mut gains = self.channel.next_round();
-        for t in self.targets(&gains) {
-            gains[t] = (gains[t] * self.degrade).max(self.clip_lo);
-        }
+        self.degrade_gains(&mut gains);
         RoundEnv {
             gains,
             available: None,

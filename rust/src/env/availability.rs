@@ -63,6 +63,19 @@ impl AvailabilityEnv {
             }
         }
     }
+
+    /// Composite hook: advance only the on/off chains (the composite's
+    /// channel owner supplies the gains) and return the post-repair mask.
+    pub(crate) fn step_mask(&mut self) -> &[bool] {
+        self.advance_online();
+        &self.online
+    }
+
+    /// Composite hook: the shared static-stream channel draw, used when
+    /// this child is the composite's channel owner.
+    pub(crate) fn step_channel_into(&mut self, out: &mut Vec<f64>) {
+        self.channel.next_round_into(out);
+    }
 }
 
 impl Environment for AvailabilityEnv {

@@ -1,0 +1,675 @@
+//! Composite environments: layer several mechanisms into one round
+//! process.
+//!
+//! Real edge fleets stack their dynamics — diurnal availability on
+//! Gilbert–Elliott fading on drifting compute — while every other
+//! registry environment models exactly one mechanism.  `compose` takes
+//! a `+`-separated child spec (`env.compose`, axis syntax
+//! `--envs=compose:avail+ge+drift`, presets from
+//! [`crate::config::COMPOSE_PRESETS`]) and merges the children under
+//! fixed, documented semantics:
+//!
+//! * **Gains** come from the *channel owner*: `ge` if present, else
+//!   `trace`, else `adv`, else the shared static stream (every
+//!   remaining mechanism constructs the same-seed
+//!   [`crate::system::ChannelProcess`], so they all agree bitwise).
+//!   An `adv` child then applies its degrade pass *on the merged
+//!   gains* (reacting to the fades the scheduler actually sees), and
+//!   correlated shadowing (`env.shadow_std`/`env.shadow_rho`, below)
+//!   multiplies last, clamped back into the clip band.
+//! * **Availability** is the AND of every child's candidate set,
+//!   followed by one K repair (offline devices forced back on in
+//!   ascending id order) — children keep their own internal repair, so
+//!   a single-child composite is byte-identical to the child alone.
+//! * **Drift** overlays pass through from the (at most one) `drift`
+//!   child.
+//!
+//! Each child consumes exactly the RNG streams it would standalone
+//! (non-owner channel draws are skipped entirely — they own disjoint
+//! forked streams, so skipping them perturbs nothing), which makes
+//! `compose:<x>` bitwise identical to `<x>` and keeps composites
+//! seed-deterministic and thread-count invariant.  The
+//! [`Environment::step_into`] path reuses persistent scratch, so a
+//! composite steps alloc-free at steady state even at 100k+ devices.
+//!
+//! **Correlated shadowing**: with `env.shadow_std > 0`, every device's
+//! gain is multiplied by `exp(std · z_n)` where
+//! `z_n = sqrt(rho)·z_common + sqrt(1-rho)·z_own` — one log-normal
+//! field whose common component (`env.shadow_rho`) makes co-located
+//! devices fade together.  The field has its own forked RNG root, so
+//! enabling it never perturbs any child's trajectory.
+//!
+//! **Foresight**: `peek` previews the next round only when *every*
+//! child is action-independent; one `adv` child makes the composite's
+//! future depend on a selection the server has not made yet, so `peek`
+//! degrades to `None` and the oracle anchors lose their foresight —
+//! exactly as with a bare `adv`.
+
+use super::adversarial::AdversarialEnv;
+use super::availability::AvailabilityEnv;
+use super::drift::DriftEnv;
+use super::gilbert_elliott::GilbertElliottEnv;
+use super::scenario::{DiurnalEnv, FlashCrowdEnv, OutageEnv};
+use super::static_env::StaticEnv;
+use super::trace::TraceEnv;
+use super::{EnvInit, EnvSoA, Environment, RoundEnv};
+use crate::config::ComposeChild;
+use crate::rng::Rng;
+use crate::system::Device;
+use crate::Result;
+
+/// One instantiated child mechanism.
+enum Child {
+    Static(StaticEnv),
+    Ge(GilbertElliottEnv),
+    Avail(AvailabilityEnv),
+    Drift(DriftEnv),
+    Trace(TraceEnv),
+    Adv(AdversarialEnv),
+    Diurnal(DiurnalEnv),
+    FlashCrowd(FlashCrowdEnv),
+    Outage(OutageEnv),
+}
+
+impl Child {
+    fn build(kind: ComposeChild, init: &EnvInit<'_>) -> Result<Child> {
+        Ok(match kind {
+            ComposeChild::Static => Child::Static(StaticEnv::new(init)),
+            ComposeChild::GilbertElliott => Child::Ge(GilbertElliottEnv::new(init)),
+            ComposeChild::Availability => Child::Avail(AvailabilityEnv::new(init)),
+            ComposeChild::Drift => Child::Drift(DriftEnv::new(init)),
+            ComposeChild::Trace => Child::Trace(TraceEnv::new(init)?),
+            ComposeChild::Adversarial => Child::Adv(AdversarialEnv::new(init)),
+            ComposeChild::Diurnal => Child::Diurnal(DiurnalEnv::new(init)),
+            ComposeChild::FlashCrowd => Child::FlashCrowd(FlashCrowdEnv::new(init)),
+            ComposeChild::Outage => Child::Outage(OutageEnv::new(init)),
+        })
+    }
+
+    /// Channel-owner priority (lower wins): `ge` realizes its own fading
+    /// process, `trace` carries recorded gains, `adv` must pair its
+    /// degrade pass with its own base draw when nothing else shapes the
+    /// channel; everything else shares the identical static stream.
+    fn owner_rank(&self) -> u8 {
+        match self {
+            Child::Ge(_) => 0,
+            Child::Trace(_) => 1,
+            Child::Adv(_) => 2,
+            _ => 3,
+        }
+    }
+
+    /// Whether the next round is independent of the server's selection
+    /// (the `peek` foresight contract).
+    fn action_independent(&self) -> bool {
+        !matches!(self, Child::Adv(_))
+    }
+
+    fn try_clone(&self) -> Option<Child> {
+        Some(match self {
+            Child::Static(c) => Child::Static(c.clone()),
+            Child::Ge(c) => Child::Ge(c.clone()),
+            Child::Avail(c) => Child::Avail(c.clone()),
+            Child::Drift(c) => Child::Drift(c.clone()),
+            Child::Trace(c) => Child::Trace(c.clone()),
+            Child::Adv(_) => return None,
+            Child::Diurnal(c) => Child::Diurnal(c.clone()),
+            Child::FlashCrowd(c) => Child::FlashCrowd(c.clone()),
+            Child::Outage(c) => Child::Outage(c.clone()),
+        })
+    }
+}
+
+/// The correlated log-normal shadow field (module docs above).
+#[derive(Clone)]
+struct Shadow {
+    common: Rng,
+    streams: Vec<Rng>,
+    w_common: f64,
+    w_own: f64,
+    std: f64,
+    clip: (f64, f64),
+}
+
+impl Shadow {
+    fn new(init: &EnvInit<'_>) -> Shadow {
+        let n = init.sys.num_devices;
+        let mut root = Rng::new(init.seed ^ 0x51AD_0E00_F1E1_D005);
+        let streams = (0..n).map(|i| root.fork(i as u64)).collect();
+        Shadow {
+            common: root.fork(n as u64),
+            streams,
+            w_common: init.env.shadow_rho.sqrt(),
+            w_own: (1.0 - init.env.shadow_rho).sqrt(),
+            std: init.env.shadow_std,
+            clip: init.sys.channel_clip,
+        }
+    }
+
+    fn apply(&mut self, gains: &mut [f64]) {
+        let zc = self.common.normal();
+        let (lo, hi) = self.clip;
+        for (g, rng) in gains.iter_mut().zip(self.streams.iter_mut()) {
+            let z = self.w_common * zc + self.w_own * rng.normal();
+            *g = (*g * (self.std * z).exp()).clamp(lo, hi);
+        }
+    }
+}
+
+/// The `compose` environment: see the module docs for the merge
+/// semantics.
+pub struct CompositeEnv {
+    children: Vec<Child>,
+    /// Index of the channel-owning child (min `owner_rank`, ties by
+    /// spec order).
+    owner: usize,
+    shadow: Option<Shadow>,
+    n: usize,
+    min_online: usize,
+    // Persistent scratch, so steady-state stepping allocates nothing.
+    online: Vec<bool>,
+    child_online: Vec<bool>,
+    discard_gains: Vec<f64>,
+}
+
+impl CompositeEnv {
+    pub fn new(init: &EnvInit<'_>) -> Result<Self> {
+        let kinds = init.env.compose_children()?;
+        let children = kinds
+            .iter()
+            .map(|&k| Child::build(k, init))
+            .collect::<Result<Vec<_>>>()?;
+        let owner = children
+            .iter()
+            .enumerate()
+            .min_by_key(|(i, c)| (c.owner_rank(), *i))
+            .map(|(i, _)| i)
+            .expect("compose spec parsing guarantees at least one child");
+        let shadow = (init.env.shadow_std > 0.0).then(|| Shadow::new(init));
+        Ok(Self {
+            children,
+            owner,
+            shadow,
+            n: init.sys.num_devices,
+            min_online: init.sys.k.max(1),
+            online: Vec::new(),
+            child_online: Vec::new(),
+            discard_gains: Vec::new(),
+        })
+    }
+
+    /// Whether every child is action-independent (so `peek` can preview).
+    pub fn previewable(&self) -> bool {
+        self.children.iter().all(Child::action_independent)
+    }
+
+    fn clone_previewable(&self) -> Option<CompositeEnv> {
+        let children = self
+            .children
+            .iter()
+            .map(Child::try_clone)
+            .collect::<Option<Vec<_>>>()?;
+        Some(CompositeEnv {
+            children,
+            owner: self.owner,
+            shadow: self.shadow.clone(),
+            n: self.n,
+            min_online: self.min_online,
+            online: Vec::new(),
+            child_online: Vec::new(),
+            discard_gains: Vec::new(),
+        })
+    }
+}
+
+/// AND `mask` into `acc` elementwise.
+fn and_mask(acc: &mut [bool], mask: &[bool]) {
+    debug_assert_eq!(acc.len(), mask.len());
+    for (a, m) in acc.iter_mut().zip(mask) {
+        *a &= *m;
+    }
+}
+
+impl Environment for CompositeEnv {
+    fn name(&self) -> &'static str {
+        "compose"
+    }
+
+    fn next_round(&mut self, base: &[Device]) -> RoundEnv {
+        // One implementation: materialize the SoA step, so the two
+        // paths cannot diverge.
+        let mut soa = EnvSoA::new();
+        self.step_into(base, &mut soa);
+        let available = if soa.all_available {
+            None
+        } else {
+            Some(soa.available.clone())
+        };
+        let devices = soa.drifted.then(|| {
+            base.iter()
+                .enumerate()
+                .map(|(i, d)| {
+                    let mut d = d.clone();
+                    d.f_max_hz = soa.f_max_hz[i];
+                    d.alpha = soa.alpha[i];
+                    d
+                })
+                .collect()
+        });
+        RoundEnv {
+            gains: soa.gains,
+            available,
+            devices,
+        }
+    }
+
+    fn step_into(&mut self, base: &[Device], out: &mut EnvSoA) {
+        let CompositeEnv {
+            children,
+            owner,
+            shadow,
+            n,
+            min_online,
+            online,
+            child_online,
+            discard_gains,
+        } = self;
+        let (n, min_online, owner) = (*n, *min_online, *owner);
+
+        // 1. Gains from the channel owner.  A trace owner realizes its
+        //    gains together with its mask in the availability pass
+        //    below; every other owner draws here.  Non-owner channels
+        //    are never drawn — each child's channel lives on disjoint
+        //    forked streams, so skipping them perturbs nothing.
+        match &mut children[owner] {
+            Child::Static(c) => c.step_channel_into(&mut out.gains),
+            Child::Ge(c) => c.draw_gains_into(&mut out.gains),
+            Child::Avail(c) => c.step_channel_into(&mut out.gains),
+            Child::Drift(c) => c.step_channel_into(&mut out.gains),
+            Child::Trace(_) => {}
+            Child::Adv(c) => c.step_channel_into(&mut out.gains),
+            Child::Diurnal(c) => c.step_channel_into(&mut out.gains),
+            Child::FlashCrowd(c) => c.step_channel_into(&mut out.gains),
+            Child::Outage(c) => c.step_channel_into(&mut out.gains),
+        }
+
+        // 2. Availability: AND every child's candidate set.  `explicit`
+        //    mirrors each child's own reporting convention (avail-style
+        //    mechanisms always report N^t explicitly; trace only when
+        //    someone is actually off), so a single-child composite is
+        //    byte-identical to the child alone.
+        online.clear();
+        online.resize(n, true);
+        let mut explicit = false;
+        for (i, child) in children.iter_mut().enumerate() {
+            match child {
+                Child::Avail(c) => {
+                    and_mask(online, c.step_mask());
+                    explicit = true;
+                }
+                Child::Diurnal(c) => {
+                    and_mask(online, c.step_mask());
+                    explicit = true;
+                }
+                Child::FlashCrowd(c) => {
+                    and_mask(online, c.step_mask());
+                    explicit = true;
+                }
+                Child::Outage(c) => {
+                    and_mask(online, c.step_mask());
+                    explicit = true;
+                }
+                Child::Trace(c) => {
+                    let t = c.advance();
+                    let gains_buf = if i == owner {
+                        &mut out.gains
+                    } else {
+                        &mut *discard_gains
+                    };
+                    let any_off = c.realize_into(t, gains_buf, child_online);
+                    and_mask(online, child_online);
+                    explicit |= any_off;
+                }
+                Child::Static(_) | Child::Ge(_) | Child::Drift(_) | Child::Adv(_) => {}
+            }
+        }
+        if explicit {
+            // One K repair over the intersection (ascending id order) —
+            // a no-op for a single child, whose internal repair already
+            // guarantees the floor.
+            let mut count = online.iter().filter(|&&b| b).count();
+            for on in online.iter_mut() {
+                if count >= min_online {
+                    break;
+                }
+                if !*on {
+                    *on = true;
+                    count += 1;
+                }
+            }
+            out.available.clear();
+            out.available
+                .extend((0..n).filter(|&i| online[i]));
+            out.all_available = false;
+        } else {
+            out.set_all_available();
+        }
+
+        // 3. Drift overlay (at most one drift child — duplicates are
+        //    rejected at parse time).
+        out.set_undrifted();
+        for child in children.iter_mut() {
+            if let Child::Drift(c) = child {
+                let (m_f, m_a) = c.step_walks();
+                out.f_max_hz.clear();
+                out.f_max_hz.extend(
+                    base.iter()
+                        .enumerate()
+                        .map(|(i, d)| (d.f_max_hz * m_f[i]).max(d.f_min_hz)),
+                );
+                out.alpha.clear();
+                out.alpha
+                    .extend(base.iter().enumerate().map(|(i, d)| d.alpha * m_a[i]));
+                out.drifted = true;
+            }
+        }
+
+        // 4. Adversarial degrade on the *merged* gains — when adv is
+        //    the owner this is exactly its standalone base-then-degrade
+        //    order.
+        for child in children.iter() {
+            if let Child::Adv(c) = child {
+                c.degrade_gains(&mut out.gains);
+            }
+        }
+
+        // 5. Correlated shadowing, clamped back into the clip band.
+        if let Some(sh) = shadow {
+            sh.apply(&mut out.gains);
+        }
+    }
+
+    fn peek(&self, base: &[Device]) -> Option<RoundEnv> {
+        // Contract: foresight exists only when every child is
+        // action-independent; a selection-reactive child (adv) makes
+        // the next round depend on an action the server has not taken.
+        if !self.previewable() {
+            return None;
+        }
+        let mut preview = self
+            .clone_previewable()
+            .expect("previewable composites have only Clone children");
+        debug_assert!(
+            preview.previewable(),
+            "composite peek must stay None under action-dependent children"
+        );
+        Some(preview.next_round(base))
+    }
+
+    fn observe_selection(&mut self, selected: &[usize]) {
+        for child in self.children.iter_mut() {
+            if let Child::Adv(c) = child {
+                c.observe_selection(selected);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EnvConfig, SystemConfig};
+    use crate::env::{self, EnvKind};
+    use crate::system::Fleet;
+
+    fn setup(n: usize, k: usize, compose: &str) -> (SystemConfig, EnvConfig, Fleet) {
+        let sys = SystemConfig {
+            num_devices: n,
+            k,
+            ..SystemConfig::default()
+        };
+        let env_cfg = EnvConfig {
+            compose: compose.to_string(),
+            avail_p_drop: 0.3,
+            avail_p_join: 0.3,
+            drift_sigma: 0.05,
+            trace_path: crate::test_util::campus_fixture(),
+            ..EnvConfig::default()
+        };
+        let mut rng = Rng::new(4);
+        let fleet = Fleet::generate(&sys, (50, 100), &mut rng);
+        (sys, env_cfg, fleet)
+    }
+
+    /// `compose:<x>` must be byte-identical to `<x>` for every registry
+    /// child, on both the RoundEnv and the SoA path.
+    #[test]
+    fn single_child_composite_is_identical_to_the_child() {
+        for child in ["static", "ge", "avail", "drift", "trace", "adv"] {
+            let (sys, env_cfg, fleet) = setup(12, 2, child);
+            let kind = EnvKind::parse(child).unwrap();
+            let init = EnvInit {
+                sys: &sys,
+                env: &env_cfg,
+                seed: 29,
+            };
+            let mut solo = env::build(kind, &init).unwrap();
+            let mut comp = env::build(EnvKind::Composite, &init).unwrap();
+            let mut solo_soa = env::build(kind, &init).unwrap();
+            let mut comp_soa = env::build(EnvKind::Composite, &init).unwrap();
+            let (mut sa, mut sb) = (EnvSoA::new(), EnvSoA::new());
+            for round in 0..40 {
+                let ra = solo.next_round(&fleet.devices);
+                let rb = comp.next_round(&fleet.devices);
+                assert_eq!(ra.gains, rb.gains, "{child} gains, round {round}");
+                assert_eq!(ra.available, rb.available, "{child} availability");
+                match (&ra.devices, &rb.devices) {
+                    (None, None) => {}
+                    (Some(da), Some(db)) => {
+                        for (x, y) in da.iter().zip(db) {
+                            assert_eq!(x.f_max_hz, y.f_max_hz, "{child} f_max");
+                            assert_eq!(x.alpha, y.alpha, "{child} alpha");
+                        }
+                    }
+                    _ => panic!("{child}: devices overlay mismatch"),
+                }
+                solo_soa.step_into(&fleet.devices, &mut sa);
+                comp_soa.step_into(&fleet.devices, &mut sb);
+                assert_eq!(sa.gains, sb.gains, "{child} SoA gains");
+                assert_eq!(sa.available, sb.available, "{child} SoA availability");
+                assert_eq!(sa.all_available, sb.all_available, "{child} SoA flag");
+                // Feed both adversaries the same selection so the
+                // reactive paths stay comparable.
+                solo.observe_selection(&[0, 1]);
+                comp.observe_selection(&[0, 1]);
+                solo_soa.observe_selection(&[0, 1]);
+                comp_soa.observe_selection(&[0, 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn availability_is_the_and_of_the_children() {
+        // avail+outage: every device offline under the composite must be
+        // offline under at least one child run standalone with the same
+        // seed (before the final K repair can only add devices back).
+        let (sys, env_cfg, _fleet) = setup(40, 2, "avail+outage");
+        let init = EnvInit {
+            sys: &sys,
+            env: &env_cfg,
+            seed: 9,
+        };
+        let mut comp = CompositeEnv::new(&init).unwrap();
+        let mut avail = AvailabilityEnv::new(&init);
+        let mut outage = OutageEnv::new(&init);
+        let base: Vec<Device> = Vec::new();
+        let mut saw_joint_restriction = false;
+        for _ in 0..200 {
+            let got = comp.next_round(&base);
+            let on_a = avail.step_mask().to_vec();
+            let on_o = outage.step_mask().to_vec();
+            let sel = got.available.expect("avail child always reports N^t");
+            let both: Vec<usize> = (0..40).filter(|&i| on_a[i] && on_o[i]).collect();
+            // The composite set is `both` plus possibly K-repaired ids.
+            for &i in &both {
+                assert!(sel.contains(&i), "device {i} lost from the intersection");
+            }
+            assert!(sel.len() >= 2);
+            saw_joint_restriction |= sel.len() < on_a.iter().filter(|&&b| b).count();
+        }
+        assert!(saw_joint_restriction, "outage never tightened avail");
+    }
+
+    #[test]
+    fn peek_is_none_with_an_adversarial_child_and_exact_without() {
+        let (sys, env_cfg, fleet) = setup(10, 2, "ge+adv");
+        let init = EnvInit {
+            sys: &sys,
+            env: &env_cfg,
+            seed: 3,
+        };
+        let comp = CompositeEnv::new(&init).unwrap();
+        assert!(!comp.previewable());
+        assert!(comp.peek(&fleet.devices).is_none(), "adv child must kill foresight");
+
+        let (sys, env_cfg, fleet) = setup(10, 2, "avail+ge+drift");
+        let init = EnvInit {
+            sys: &sys,
+            env: &env_cfg,
+            seed: 3,
+        };
+        let mut comp = CompositeEnv::new(&init).unwrap();
+        for _ in 0..15 {
+            let peeked = comp.peek(&fleet.devices).expect("action-independent composite");
+            let actual = comp.next_round(&fleet.devices);
+            assert_eq!(peeked.gains, actual.gains);
+            assert_eq!(peeked.available, actual.available);
+        }
+    }
+
+    #[test]
+    fn adv_child_degrades_the_merged_fading_gains() {
+        // ge+adv: gains must come from the GE fading process with the
+        // degrade applied on top — compare against a solo GE stream.
+        let (sys, env_cfg, _fleet) = setup(10, 2, "ge+adv");
+        let init = EnvInit {
+            sys: &sys,
+            env: &env_cfg,
+            seed: 21,
+        };
+        let mut comp = CompositeEnv::new(&init).unwrap();
+        let mut ge = GilbertElliottEnv::new(&init);
+        let base: Vec<Device> = Vec::new();
+        for _ in 0..30 {
+            let got = comp.next_round(&base).gains;
+            let raw = ge.next_round(&base).gains;
+            let mut degraded = 0usize;
+            for (g, r) in got.iter().zip(&raw) {
+                if g == r {
+                    continue;
+                }
+                let want = (r * env_cfg.adv_degrade).max(sys.channel_clip.0);
+                assert_eq!(*g, want, "degraded gain off the ge base");
+                degraded += 1;
+            }
+            assert_eq!(degraded, 4.min(10), "budget 2K must bite on the merged gains");
+        }
+    }
+
+    #[test]
+    fn shadowing_correlates_the_fleet_and_stays_in_band() {
+        let mk = |rho: f64| {
+            let (sys, mut env_cfg, _fleet) = setup(400, 2, "static");
+            env_cfg.shadow_std = 0.6;
+            env_cfg.shadow_rho = rho;
+            let init = EnvInit {
+                sys: &sys,
+                env: &env_cfg,
+                seed: 17,
+            };
+            (CompositeEnv::new(&init).unwrap(), sys)
+        };
+        // Sample the mean log-gain per round; a strongly common field
+        // moves the whole fleet together, so the round means spread far
+        // more than under independent shadowing.
+        let spread = |rho: f64| {
+            let (mut env, sys) = mk(rho);
+            let base: Vec<Device> = Vec::new();
+            let mut means = Vec::new();
+            for _ in 0..60 {
+                let g = env.next_round(&base).gains;
+                for &h in &g {
+                    assert!((sys.channel_clip.0..=sys.channel_clip.1).contains(&h));
+                }
+                means.push(g.iter().map(|h| h.ln()).sum::<f64>() / g.len() as f64);
+            }
+            let m = means.iter().sum::<f64>() / means.len() as f64;
+            means.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / means.len() as f64
+        };
+        let (corr, indep) = (spread(0.95), spread(0.0));
+        assert!(
+            corr > 4.0 * indep,
+            "common shadow field must move round means: corr={corr} indep={indep}"
+        );
+    }
+
+    #[test]
+    fn zero_shadow_std_is_bitwise_inert() {
+        let (sys, mut env_cfg, fleet) = setup(12, 2, "ge");
+        let init = EnvInit {
+            sys: &sys,
+            env: &env_cfg,
+            seed: 8,
+        };
+        let mut plain = CompositeEnv::new(&init).unwrap();
+        env_cfg.shadow_rho = 0.9; // rho alone must change nothing
+        let init = EnvInit {
+            sys: &sys,
+            env: &env_cfg,
+            seed: 8,
+        };
+        let mut with_rho = CompositeEnv::new(&init).unwrap();
+        for _ in 0..20 {
+            assert_eq!(
+                plain.next_round(&fleet.devices).gains,
+                with_rho.next_round(&fleet.devices).gains
+            );
+        }
+    }
+
+    #[test]
+    fn presets_expand_and_run() {
+        for preset in ["diurnal", "flashcrowd", "outage"] {
+            let (sys, env_cfg, fleet) = setup(30, 2, preset);
+            let init = EnvInit {
+                sys: &sys,
+                env: &env_cfg,
+                seed: 12,
+            };
+            let mut env = CompositeEnv::new(&init).unwrap();
+            let mut saw_restriction = false;
+            for _ in 0..300 {
+                let re = env.next_round(&fleet.devices);
+                assert_eq!(re.gains.len(), 30);
+                if let Some(sel) = &re.available {
+                    assert!(sel.len() >= 2, "{preset} starved the server");
+                    saw_restriction |= sel.len() < 30;
+                }
+            }
+            assert!(saw_restriction, "{preset} never took anyone offline");
+        }
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        for bad in ["", "ge+ge", "avail+nope", "compose"] {
+            let (sys, env_cfg, _fleet) = setup(6, 2, bad);
+            let init = EnvInit {
+                sys: &sys,
+                env: &env_cfg,
+                seed: 1,
+            };
+            assert!(CompositeEnv::new(&init).is_err(), "spec {bad:?} should fail");
+        }
+    }
+}

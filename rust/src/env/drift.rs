@@ -62,6 +62,19 @@ impl DriftEnv {
             self.m_a[i] = (self.m_a[i] * (self.sigma * za).exp()).clamp(lo, hi);
         }
     }
+
+    /// Composite hook: advance only the walks (the composite's channel
+    /// owner supplies the gains) and expose the round's multipliers.
+    pub(crate) fn step_walks(&mut self) -> (&[f64], &[f64]) {
+        self.advance_walks();
+        (&self.m_f, &self.m_a)
+    }
+
+    /// Composite hook: the shared static-stream channel draw, used when
+    /// this child is the composite's channel owner.
+    pub(crate) fn step_channel_into(&mut self, out: &mut Vec<f64>) {
+        self.channel.next_round_into(out);
+    }
 }
 
 impl Environment for DriftEnv {

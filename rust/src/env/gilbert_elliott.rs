@@ -64,7 +64,7 @@ impl GilbertElliottEnv {
     /// per-device interleaving — transition draw, then gain draw, on one
     /// stream — is the single implementation both `next_round` and
     /// `step_into` consume, so the two paths cannot drift apart.
-    fn draw_gains_into(&mut self, out: &mut Vec<f64>) {
+    pub(crate) fn draw_gains_into(&mut self, out: &mut Vec<f64>) {
         let (p_bad, p_good) = (self.p_bad, self.p_good);
         let (good_mean, bad_mean, clip) = (self.good_mean, self.bad_mean, self.clip);
         out.clear();

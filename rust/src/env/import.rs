@@ -1,0 +1,532 @@
+//! `lroa trace import`: convert an external measurement log into the
+//! trace-replay schema.
+//!
+//! Real measurement campaigns rarely log in the replay format
+//! (`round,device,gain[,available]`, documented in
+//! `tests/fixtures/README.md`): columns carry campaign-specific names,
+//! signal strength arrives in dB, timestamps are seconds rather than
+//! round indices, and some samples record only presence (no gain).
+//! This module bridges that gap deterministically:
+//!
+//! * **column mapping** — `--round-col/--device-col/--gain-col/
+//!   --avail-col` locate the source columns by (case-insensitive)
+//!   header name; the availability column is auto-detected as
+//!   `available` when present and not named explicitly;
+//! * **unit conversion** — `--gain-db` converts dB power ratios to
+//!   linear (`10^(g/10)`), then `--gain-scale` multiplies (so
+//!   `--gain-db --gain-scale=2` means "dB, then doubled");
+//! * **time binning** — with `--round-per=F` the round column is a raw
+//!   timestamp and rounds become `floor(t / F)`; samples landing in the
+//!   same (round, device) bin aggregate (mean gain, AND availability);
+//!   without it the round column must already hold integers;
+//! * **gap interpolation** — a row with an empty gain field (or a bin
+//!   with only availability samples) keeps its availability step but
+//!   gets a gain linearly interpolated between the device's neighboring
+//!   measured bins (held flat at the ends), mirroring how the replayer
+//!   itself treats sparse rounds;
+//! * **normalization** — rounds are rebased so the earliest bin is
+//!   round 0, and device keys (arbitrary strings: ids, MACs, hostnames)
+//!   are remapped to contiguous track numbers in order of first
+//!   appearance.
+//!
+//! The converted body is round-tripped through the replay parser
+//! ([`super::trace`]) **before** anything is written, so an `import`ed
+//! file can never fail to load under `--envs=trace:<path>`.
+
+use std::path::PathBuf;
+
+use crate::Result;
+
+/// What to import and how to map it (the `lroa trace import` flags).
+#[derive(Clone, Debug)]
+pub struct ImportSpec {
+    /// Source measurement CSV.
+    pub input: PathBuf,
+    /// Destination trace CSV (`--out`).
+    pub output: PathBuf,
+    /// Source column holding the round index or timestamp.
+    pub round_col: String,
+    /// Source column holding the device key (any string).
+    pub device_col: String,
+    /// Source column holding the channel gain / signal measurement.
+    pub gain_col: String,
+    /// Source column holding on/off availability; `None` auto-detects a
+    /// column named `available` and otherwise imports availability-less.
+    pub avail_col: Option<String>,
+    /// Multiplier applied to gains after any dB conversion.
+    pub gain_scale: f64,
+    /// Treat the gain column as dB: convert via `10^(g/10)` first.
+    pub gain_db: bool,
+    /// Bin width for timestamp rounds (`round = floor(t / per)`);
+    /// `None` requires integer rounds.
+    pub round_per: Option<f64>,
+}
+
+impl ImportSpec {
+    /// Default mapping: the replay schema's own column names, linear
+    /// gains, integer rounds.
+    pub fn new(input: impl Into<PathBuf>, output: impl Into<PathBuf>) -> Self {
+        Self {
+            input: input.into(),
+            output: output.into(),
+            round_col: "round".into(),
+            device_col: "device".into(),
+            gain_col: "gain".into(),
+            avail_col: None,
+            gain_scale: 1.0,
+            gain_db: false,
+            round_per: None,
+        }
+    }
+}
+
+/// What an import produced — the `--json` report body.
+#[derive(Clone, Debug)]
+pub struct ImportStats {
+    /// Output tracks (devices after remapping).
+    pub devices: usize,
+    /// Distinct output rounds.
+    pub rounds: usize,
+    /// Output data rows.
+    pub rows: usize,
+    /// Gains filled by gap interpolation.
+    pub interpolated: usize,
+    /// Replay period of the output (max round + 1).
+    pub period: usize,
+    /// Whether the output carries an `available` column.
+    pub has_availability: bool,
+}
+
+/// One aggregated (round, device) bin.
+#[derive(Clone, Copy, Default)]
+struct Bin {
+    gain_sum: f64,
+    gain_n: usize,
+    /// AND of the bin's availability samples; `None` = no sample (on).
+    avail: Option<bool>,
+}
+
+/// Run the import: read, convert, verify against the replay parser,
+/// then write `spec.output`.
+pub fn import_csv(spec: &ImportSpec) -> Result<ImportStats> {
+    let text = std::fs::read_to_string(&spec.input)
+        .map_err(|e| anyhow::anyhow!("trace import {:?}: {e}", spec.input))?;
+    let (body, mut stats) = convert(spec, &text)?;
+    // Round-trip through the replay parser before any byte lands on
+    // disk: the import contract is "output always loads".
+    let (tracks, period) = super::trace::validate_trace(&body)
+        .map_err(|e| anyhow::anyhow!("internal: converted trace failed to re-parse: {e}"))?;
+    anyhow::ensure!(
+        tracks == stats.devices,
+        "internal: converted trace has {tracks} tracks, expected {}",
+        stats.devices
+    );
+    stats.period = period;
+    if let Some(parent) = spec.output.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(&spec.output, body)
+        .map_err(|e| anyhow::anyhow!("trace import --out={:?}: {e}", spec.output))?;
+    Ok(stats)
+}
+
+/// Pure conversion: measurement CSV text in, replay-schema CSV body +
+/// stats out.  Split from the I/O so tests can exercise every mapping
+/// without touching disk.
+fn convert(spec: &ImportSpec, text: &str) -> Result<(String, ImportStats)> {
+    let mut lines = text.lines().enumerate();
+    let header = loop {
+        match lines.next() {
+            Some((_, l)) if l.trim().is_empty() || l.trim_start().starts_with('#') => continue,
+            Some((_, l)) => break l.trim(),
+            None => anyhow::bail!("empty input file"),
+        }
+    };
+    let cols: Vec<&str> = header.split(',').map(str::trim).collect();
+    let find = |name: &str| cols.iter().position(|c| c.eq_ignore_ascii_case(name));
+    let need = |name: &str| {
+        find(name).ok_or_else(|| {
+            anyhow::anyhow!("input has no column {name:?} (header: {header:?})")
+        })
+    };
+    let round_i = need(&spec.round_col)?;
+    let device_i = need(&spec.device_col)?;
+    let gain_i = need(&spec.gain_col)?;
+    let avail_i = match &spec.avail_col {
+        Some(name) => Some(need(name)?),
+        None => find("available"),
+    };
+    anyhow::ensure!(
+        spec.gain_scale.is_finite() && spec.gain_scale > 0.0,
+        "--gain-scale must be finite and > 0"
+    );
+    if let Some(per) = spec.round_per {
+        anyhow::ensure!(
+            per.is_finite() && per > 0.0,
+            "--round-per must be finite and > 0"
+        );
+    }
+
+    // Device keys are arbitrary strings; tracks are numbered in order
+    // of first appearance (deterministic, and numeric keys keep their
+    // log order instead of sorting lexicographically).
+    let mut track_of: std::collections::HashMap<String, usize> = std::collections::HashMap::new();
+    let mut keys: Vec<String> = Vec::new();
+    let mut bins: Vec<std::collections::BTreeMap<u64, Bin>> = Vec::new();
+
+    for (lineno, raw) in lines {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        anyhow::ensure!(
+            fields.len() == cols.len(),
+            "line {}: expected {} fields, got {}",
+            lineno + 1,
+            cols.len(),
+            fields.len()
+        );
+        let t: f64 = fields[round_i].parse().map_err(|e| {
+            anyhow::anyhow!("line {}: bad {} value: {e}", lineno + 1, spec.round_col)
+        })?;
+        anyhow::ensure!(
+            t.is_finite() && t >= 0.0,
+            "line {}: {} must be finite and >= 0",
+            lineno + 1,
+            spec.round_col
+        );
+        let round = match spec.round_per {
+            Some(per) => (t / per).floor() as u64,
+            None => {
+                anyhow::ensure!(
+                    t.fract() == 0.0,
+                    "line {}: non-integer round {t} (pass --round-per=F to bin timestamps)",
+                    lineno + 1
+                );
+                t as u64
+            }
+        };
+        let key = fields[device_i];
+        anyhow::ensure!(!key.is_empty(), "line {}: empty device key", lineno + 1);
+        let track = *track_of.entry(key.to_string()).or_insert_with(|| {
+            keys.push(key.to_string());
+            bins.push(std::collections::BTreeMap::new());
+            keys.len() - 1
+        });
+        let bin = bins[track].entry(round).or_default();
+        if !fields[gain_i].is_empty() {
+            let mut g: f64 = fields[gain_i].parse().map_err(|e| {
+                anyhow::anyhow!("line {}: bad {} value: {e}", lineno + 1, spec.gain_col)
+            })?;
+            anyhow::ensure!(g.is_finite(), "line {}: non-finite gain", lineno + 1);
+            if spec.gain_db {
+                g = 10f64.powf(g / 10.0);
+            }
+            g *= spec.gain_scale;
+            anyhow::ensure!(
+                g.is_finite() && g > 0.0,
+                "line {}: gain must be finite and > 0 after conversion (got {g})",
+                lineno + 1
+            );
+            bin.gain_sum += g;
+            bin.gain_n += 1;
+        }
+        if let Some(ai) = avail_i {
+            let field = fields[ai];
+            if !field.is_empty() {
+                let on = if field == "1" || field.eq_ignore_ascii_case("true") {
+                    true
+                } else if field == "0" || field.eq_ignore_ascii_case("false") {
+                    false
+                } else {
+                    anyhow::bail!(
+                        "line {}: bad availability {field:?} (0|1|true|false)",
+                        lineno + 1
+                    );
+                };
+                // AND within the bin: one offline sample marks the bin.
+                bin.avail = Some(bin.avail.unwrap_or(true) && on);
+            }
+        }
+    }
+    anyhow::ensure!(!bins.is_empty(), "input has no data rows");
+
+    // Rebase rounds so the earliest bin is round 0.
+    let r0 = bins
+        .iter()
+        .filter_map(|b| b.keys().next().copied())
+        .min()
+        .expect("bins is non-empty");
+
+    let has_avail = avail_i.is_some();
+    let mut rows: Vec<(u64, usize, f64, bool)> = Vec::new();
+    let mut interpolated = 0usize;
+    for (track, device_bins) in bins.iter().enumerate() {
+        let rounds: Vec<u64> = device_bins.keys().map(|&r| r - r0).collect();
+        let means: Vec<Option<f64>> = device_bins
+            .values()
+            .map(|b| {
+                if b.gain_n > 0 {
+                    Some(b.gain_sum / b.gain_n as f64)
+                } else {
+                    None
+                }
+            })
+            .collect();
+        let avails: Vec<bool> = device_bins
+            .values()
+            .map(|b| b.avail.unwrap_or(true))
+            .collect();
+        let known: Vec<usize> = (0..means.len()).filter(|&i| means[i].is_some()).collect();
+        anyhow::ensure!(
+            !known.is_empty(),
+            "device {:?} has no gain samples to interpolate from",
+            keys[track]
+        );
+        for i in 0..rounds.len() {
+            let gain = match means[i] {
+                Some(g) => g,
+                None => {
+                    interpolated += 1;
+                    // Linear between the neighboring measured bins in
+                    // round time, held flat past the ends — the same
+                    // convention the replayer applies between rounds.
+                    let next = known.partition_point(|&k| k < i);
+                    if next == 0 {
+                        means[known[0]].unwrap()
+                    } else if next == known.len() {
+                        means[known[known.len() - 1]].unwrap()
+                    } else {
+                        let (il, ir) = (known[next - 1], known[next]);
+                        let (gl, gr) = (means[il].unwrap(), means[ir].unwrap());
+                        let frac =
+                            (rounds[i] - rounds[il]) as f64 / (rounds[ir] - rounds[il]) as f64;
+                        gl + (gr - gl) * frac
+                    }
+                }
+            };
+            rows.push((rounds[i], track, gain, avails[i]));
+        }
+    }
+    // Round-major, device-minor: per-device rounds stay ascending (the
+    // parser's requirement) and the file reads like a timeline.
+    rows.sort_by_key(|&(r, d, _, _)| (r, d));
+
+    let mut body = String::new();
+    body.push_str(if has_avail {
+        "round,device,gain,available\n"
+    } else {
+        "round,device,gain\n"
+    });
+    let mut distinct_rounds = 0usize;
+    let mut last_round: Option<u64> = None;
+    for &(r, d, g, a) in &rows {
+        if last_round != Some(r) {
+            distinct_rounds += 1;
+            last_round = Some(r);
+        }
+        if has_avail {
+            body.push_str(&format!("{r},{d},{g},{}\n", if a { 1 } else { 0 }));
+        } else {
+            body.push_str(&format!("{r},{d},{g}\n"));
+        }
+    }
+    let stats = ImportStats {
+        devices: keys.len(),
+        rounds: distinct_rounds,
+        rows: rows.len(),
+        interpolated,
+        period: 0, // filled from the round-trip parse in import_csv
+        has_availability: has_avail,
+    };
+    Ok((body, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EnvConfig, SystemConfig};
+    use crate::env::{EnvInit, Environment};
+
+    fn spec() -> ImportSpec {
+        ImportSpec::new("in.csv", "out.csv")
+    }
+
+    #[test]
+    fn identity_schema_passes_through() {
+        let (body, stats) = convert(
+            &spec(),
+            "round,device,gain,available\n0,0,0.1,1\n0,1,0.2,1\n1,0,0.3,0\n",
+        )
+        .unwrap();
+        assert_eq!(
+            body,
+            "round,device,gain,available\n0,0,0.1,1\n0,1,0.2,1\n1,0,0.3,0\n"
+        );
+        assert_eq!(stats.devices, 2);
+        assert_eq!(stats.rounds, 2);
+        assert_eq!(stats.rows, 3);
+        assert_eq!(stats.interpolated, 0);
+        assert!(stats.has_availability);
+    }
+
+    #[test]
+    fn column_mapping_db_conversion_and_scale() {
+        let mut s = spec();
+        s.round_col = "ts".into();
+        s.device_col = "node".into();
+        s.gain_col = "rssi".into();
+        s.avail_col = Some("up".into());
+        s.gain_db = true;
+        s.gain_scale = 2.0;
+        // Columns in scrambled order, extra column ignored, -10 dB = 0.1
+        // linear, then doubled.
+        let (body, stats) = convert(
+            &s,
+            "node,extra,rssi,up,ts\nmac-a,x,-10,1,0\nmac-b,x,0,true,0\n",
+        )
+        .unwrap();
+        let rows: Vec<Vec<&str>> = body.lines().map(|l| l.split(',').collect()).collect();
+        assert_eq!(rows[0], vec!["round", "device", "gain", "available"]);
+        assert_eq!((rows[1][0], rows[1][1], rows[1][3]), ("0", "0", "1"));
+        assert!((rows[1][2].parse::<f64>().unwrap() - 0.2).abs() < 1e-12);
+        assert_eq!((rows[2][0], rows[2][1], rows[2][3]), ("0", "1", "1"));
+        assert!((rows[2][2].parse::<f64>().unwrap() - 2.0).abs() < 1e-12);
+        assert_eq!(stats.devices, 2);
+        assert!(stats.has_availability);
+    }
+
+    #[test]
+    fn timestamps_bin_aggregate_and_rebase() {
+        let mut s = spec();
+        s.round_per = Some(10.0);
+        // Bins: t in [10,20) -> raw round 1, [20,30) -> 2; rebased so the
+        // earliest bin is round 0.  Two samples in one bin average (the
+        // values are binary-exact so the mean prints exactly).
+        let (body, stats) = convert(
+            &s,
+            "round,device,gain\n12.5,7,0.25\n17.0,7,0.75\n24.0,7,0.5\n",
+        )
+        .unwrap();
+        assert_eq!(body, "round,device,gain\n0,0,0.5\n1,0,0.5\n");
+        assert_eq!(stats.rounds, 2);
+        assert_eq!(stats.rows, 2);
+        // Without --round-per, fractional rounds are rejected with a
+        // pointer at the flag.
+        let err = convert(&spec(), "round,device,gain\n12.5,7,0.1\n").unwrap_err();
+        assert!(err.to_string().contains("--round-per"), "{err}");
+    }
+
+    #[test]
+    fn gaps_interpolate_between_measured_bins() {
+        // Device 0: measured 0.25 at round 0 and 0.75 at round 4; round 1
+        // has only an availability sample -> interpolated
+        // 0.25 + (0.75-0.25)/4 = 0.375 (binary-exact); round 6 is past
+        // the last measurement -> held flat at 0.75.
+        let (body, stats) = convert(
+            &spec(),
+            "round,device,gain,available\n\
+             0,0,0.25,1\n1,0,,0\n4,0,0.75,1\n6,0,,1\n",
+        )
+        .unwrap();
+        assert_eq!(
+            body,
+            "round,device,gain,available\n0,0,0.25,1\n1,0,0.375,0\n4,0,0.75,1\n6,0,0.75,1\n"
+        );
+        assert_eq!(stats.interpolated, 2);
+        // A device with availability rows but no gain at all cannot be
+        // interpolated.
+        let err = convert(
+            &spec(),
+            "round,device,gain,available\n0,a,0.1,1\n0,b,,1\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("no gain samples"), "{err}");
+    }
+
+    #[test]
+    fn bin_availability_is_the_and_of_its_samples() {
+        let mut s = spec();
+        s.round_per = Some(10.0);
+        let (body, _) = convert(
+            &s,
+            "round,device,gain,available\n0,0,0.25,1\n5,0,0.75,0\n9,0,0.5,1\n",
+        )
+        .unwrap();
+        assert_eq!(body, "round,device,gain,available\n0,0,0.5,0\n");
+    }
+
+    #[test]
+    fn bad_inputs_name_the_line_or_column() {
+        let cases: &[(&str, &str)] = &[
+            ("", "empty input"),
+            ("round,device\n0,0\n", "no column"),
+            ("round,device,gain\n", "no data rows"),
+            ("round,device,gain\n-1,0,0.1\n", ">= 0"),
+            ("round,device,gain\n0,,0.1\n", "empty device"),
+            ("round,device,gain\n0,0,nope\n", "bad gain"),
+            ("round,device,gain\n0,0,0\n", "> 0"),
+            ("round,device,gain,available\n0,0,0.1,maybe\n", "0|1"),
+        ];
+        for (text, needle) in cases {
+            let err = convert(&spec(), text).unwrap_err();
+            assert!(
+                err.to_string().contains(needle),
+                "input {text:?}: error {err} should mention {needle:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn imported_file_replays_through_the_trace_env() {
+        let dir = std::env::temp_dir().join("lroa_import_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let input = dir.join("field_log.csv");
+        std::fs::write(
+            &input,
+            "ts,node,rssi_db,up\n\
+             0,gw-1,-10,1\n0,gw-2,-3,1\n\
+             30,gw-1,-13,0\n30,gw-2,-3,1\n\
+             60,gw-1,-10,1\n60,gw-2,-6,1\n",
+        )
+        .unwrap();
+        let mut s = ImportSpec::new(&input, dir.join("imported.csv"));
+        s.round_col = "ts".into();
+        s.device_col = "node".into();
+        s.gain_col = "rssi_db".into();
+        s.avail_col = Some("up".into());
+        s.gain_db = true;
+        s.round_per = Some(30.0);
+        let stats = import_csv(&s).unwrap();
+        assert_eq!(stats.devices, 2);
+        assert_eq!(stats.period, 3);
+        assert!(stats.has_availability);
+
+        // The written file loads and replays under the trace env.
+        let sys = SystemConfig {
+            num_devices: 2,
+            k: 1,
+            ..SystemConfig::default()
+        };
+        let env_cfg = EnvConfig {
+            trace_path: s.output.to_string_lossy().into_owned(),
+            ..EnvConfig::default()
+        };
+        let mut env = crate::env::TraceEnv::new(&EnvInit {
+            sys: &sys,
+            env: &env_cfg,
+            seed: 0,
+        })
+        .unwrap();
+        let base: Vec<crate::system::Device> = Vec::new();
+        let r0 = env.next_round(&base);
+        assert!((r0.gains[0] - 0.1).abs() < 1e-12);
+        assert_eq!(r0.available, None);
+        let r1 = env.next_round(&base);
+        // gw-1 offline in bin 1 (K floor keeps gw-2's sibling count >= 1).
+        assert_eq!(r1.available, Some(vec![1]));
+    }
+}

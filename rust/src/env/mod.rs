@@ -16,16 +16,23 @@
 //! unreachable devices.  Adding an environment is one impl plus one
 //! [`REGISTRY`] line, mirroring [`crate::control::policy`].
 //!
-//! The six registered environments:
+//! The seven registered environments:
 //!
-//! | name     | channel                      | availability     | parameters |
-//! |----------|------------------------------|------------------|------------|
-//! | `static` | IID exponential (the paper)  | always-on        | fixed      |
-//! | `ge`     | Gilbert–Elliott Markov fading| always-on        | fixed      |
-//! | `avail`  | IID exponential              | Markov on/off    | fixed      |
-//! | `drift`  | IID exponential              | always-on        | random walk|
-//! | `trace`  | recorded CSV log (replayed)  | from the log     | fixed      |
-//! | `adv`    | adversarially degraded exp.  | always-on        | fixed      |
+//! | name      | channel                      | availability     | parameters |
+//! |-----------|------------------------------|------------------|------------|
+//! | `static`  | IID exponential (the paper)  | always-on        | fixed      |
+//! | `ge`      | Gilbert–Elliott Markov fading| always-on        | fixed      |
+//! | `avail`   | IID exponential              | Markov on/off    | fixed      |
+//! | `drift`   | IID exponential              | always-on        | random walk|
+//! | `trace`   | recorded CSV log (replayed)  | from the log     | fixed      |
+//! | `adv`     | adversarially degraded exp.  | always-on        | fixed      |
+//! | `compose` | from the child spec          | AND of children  | from drift |
+//!
+//! `compose` ([`CompositeEnv`]) layers any subset of the others — plus
+//! the composite-only scenario generators of [`scenario`] (diurnal
+//! cycles, flash crowds, regional outages) and an optional correlated
+//! shadow-fading field — into one round process, configured by
+//! `env.compose` / the `compose:<a>+<b>+...` axis syntax.
 //!
 //! `static` is bitwise-identical to the pre-env [`ChannelProcess`] path
 //! (`tests/policy_parity.rs` proves it), so the paper's figures are
@@ -50,15 +57,20 @@
 
 mod adversarial;
 mod availability;
+mod composite;
 mod drift;
 mod gilbert_elliott;
+pub mod import;
+pub mod scenario;
 mod static_env;
 mod trace;
 
 pub use adversarial::AdversarialEnv;
 pub use availability::AvailabilityEnv;
+pub use composite::CompositeEnv;
 pub use drift::DriftEnv;
 pub use gilbert_elliott::GilbertElliottEnv;
+pub use import::{import_csv, ImportSpec, ImportStats};
 pub use static_env::StaticEnv;
 pub use trace::TraceEnv;
 
@@ -275,6 +287,10 @@ fn build_adversarial(init: &EnvInit<'_>) -> Result<Box<dyn Environment>> {
     Ok(Box::new(AdversarialEnv::new(init)))
 }
 
+fn build_composite(init: &EnvInit<'_>) -> Result<Box<dyn Environment>> {
+    Ok(Box::new(CompositeEnv::new(init)?))
+}
+
 /// The name → constructor registry all dispatch goes through.
 pub const REGISTRY: &[EnvSpec] = &[
     EnvSpec {
@@ -306,6 +322,11 @@ pub const REGISTRY: &[EnvSpec] = &[
         id: EnvKind::Adversarial,
         name: "adv",
         build: build_adversarial,
+    },
+    EnvSpec {
+        id: EnvKind::Composite,
+        name: "compose",
+        build: build_composite,
     },
 ];
 
@@ -352,7 +373,10 @@ mod tests {
                 "{kind} missing from registry"
             );
         }
-        assert_eq!(names(), vec!["static", "ge", "avail", "drift", "trace", "adv"]);
+        assert_eq!(
+            names(),
+            vec!["static", "ge", "avail", "drift", "trace", "adv", "compose"]
+        );
     }
 
     #[test]
@@ -373,6 +397,8 @@ mod tests {
             "trace",
             "adv",
             "adversarial",
+            "compose",
+            "composite",
         ] {
             assert!(from_name(alias, &init).is_ok(), "{alias}");
         }

@@ -1,0 +1,398 @@
+//! Population-scale scenario generators: diurnal cycles, flash crowds,
+//! regional outages.
+//!
+//! These are *composite-only* availability mechanisms — they never
+//! appear in the env registry on their own, but any of them can be a
+//! child of [`crate::env::CompositeEnv`] (`--envs=compose:diurnal+ge`),
+//! and the named presets in [`crate::config::COMPOSE_PRESETS`] bundle
+//! them with fading/drift into ready-made scenarios:
+//!
+//! * [`DiurnalEnv`] — every device follows a day/night activity cycle
+//!   (period [`DIURNAL_PERIOD`] rounds), staggered across
+//!   [`DIURNAL_BUCKETS`] "timezones" so the fleet breathes instead of
+//!   blinking.  Per-device on/off Markov chains whose rates track the
+//!   cycle give persistence (a device that goes to sleep stays asleep
+//!   for a while).
+//! * [`FlashCrowdEnv`] — a sparse baseline fleet with periodic
+//!   mass-join windows (one [`FLASH_WINDOW`]-round burst per
+//!   [`FLASH_CYCLE`]-round cycle, at a seed-determined offset): the
+//!   population jumps from ~20% to ~95% online and drains back.
+//! * [`OutageEnv`] — devices are spread over [`OUTAGE_REGIONS`]
+//!   regions (interleaved by id); each region carries an up/down Markov
+//!   chain and a down region takes all of its devices offline at once —
+//!   the spatially correlated failure mode individual per-device chains
+//!   cannot produce.
+//!
+//! Shared conventions (same as the `avail` environment): channel gains
+//! come from the same-seed [`ChannelProcess`] construction, so the gain
+//! stream coincides with `static` round for round and masking is the
+//! only effect; if a mechanism leaves fewer than `K` devices online,
+//! offline devices are forced back on in ascending id order; all state
+//! advances through forked per-device/per-region RNG streams, so
+//! trajectories are bitwise seed-deterministic and independent of
+//! thread count.
+//!
+//! [`ChannelProcess`]: crate::system::ChannelProcess
+
+use super::{step_two_state, EnvInit};
+use crate::rng::Rng;
+use crate::system::ChannelProcess;
+
+/// Rounds per diurnal cycle (one "day").
+pub const DIURNAL_PERIOD: usize = 288;
+/// Distinct phase offsets ("timezones") devices are assigned to.
+pub const DIURNAL_BUCKETS: usize = 24;
+/// Mean online fraction of the diurnal cycle.
+const DIURNAL_BASE: f64 = 0.55;
+/// Peak-to-mean amplitude of the cycle (online fraction swings
+/// `BASE ± AMP`).
+const DIURNAL_AMP: f64 = 0.40;
+/// Relaxation rate of the per-device chains toward the cycle target.
+const DIURNAL_RATE: f64 = 0.3;
+
+/// Rounds per flash-crowd cycle.
+pub const FLASH_CYCLE: usize = 400;
+/// Length of the mass-join window inside each cycle.
+pub const FLASH_WINDOW: usize = 40;
+const FLASH_P_JOIN_IN: f64 = 0.65;
+const FLASH_P_DROP_IN: f64 = 0.02;
+const FLASH_P_JOIN_OUT: f64 = 0.03;
+const FLASH_P_DROP_OUT: f64 = 0.12;
+
+/// Number of outage regions devices are interleaved across.
+pub const OUTAGE_REGIONS: usize = 16;
+const OUTAGE_P_FAIL: f64 = 0.02;
+const OUTAGE_P_RECOVER: f64 = 0.12;
+
+/// Force offline devices back on in ascending id order until at least
+/// `min_online` are reachable — the registry-wide K-repair convention.
+fn repair(online: &mut [bool], min_online: usize) {
+    let mut count = online.iter().filter(|&&b| b).count();
+    for on in online.iter_mut() {
+        if count >= min_online {
+            break;
+        }
+        if !*on {
+            *on = true;
+            count += 1;
+        }
+    }
+}
+
+/// Timezone-staggered day/night availability cycles.
+#[derive(Clone)]
+pub struct DiurnalEnv {
+    channel: ChannelProcess,
+    streams: Vec<Rng>,
+    /// Timezone bucket of each device (phase offset `b/BUCKETS` cycles).
+    buckets: Vec<u16>,
+    online: Vec<bool>,
+    t: usize,
+    min_online: usize,
+}
+
+impl DiurnalEnv {
+    pub fn new(init: &EnvInit<'_>) -> Self {
+        let n = init.sys.num_devices;
+        let mut root = Rng::new(init.seed ^ 0xD1CA_11E5_D1A7_0001);
+        let mut streams: Vec<Rng> = (0..n).map(|i| root.fork(i as u64)).collect();
+        let mut buckets = Vec::with_capacity(n);
+        let mut online = Vec::with_capacity(n);
+        for rng in streams.iter_mut() {
+            let b = ((rng.f64() * DIURNAL_BUCKETS as f64) as usize).min(DIURNAL_BUCKETS - 1);
+            buckets.push(b as u16);
+            // Start from the cycle's round-0 stationary point, so the
+            // diurnal pattern is visible from the first round.
+            online.push(rng.f64() < cycle_target(0, b));
+        }
+        Self {
+            channel: ChannelProcess::new(init.sys, init.seed),
+            streams,
+            buckets,
+            online,
+            t: 0,
+            min_online: init.sys.k.max(1),
+        }
+    }
+
+    /// Advance every chain one round toward its bucket's cycle target,
+    /// then apply the K repair; returns the post-repair mask.
+    pub(crate) fn step_mask(&mut self) -> &[bool] {
+        let mut targets = [0.0f64; DIURNAL_BUCKETS];
+        for (b, target) in targets.iter_mut().enumerate() {
+            *target = cycle_target(self.t, b);
+        }
+        for i in 0..self.streams.len() {
+            let target = targets[self.buckets[i] as usize];
+            let p_drop = DIURNAL_RATE * (1.0 - target);
+            let p_join = DIURNAL_RATE * target;
+            self.online[i] = step_two_state(&mut self.streams[i], self.online[i], p_drop, p_join);
+        }
+        self.t += 1;
+        repair(&mut self.online, self.min_online);
+        &self.online
+    }
+
+    /// Composite hook: the shared static-stream channel draw.
+    pub(crate) fn step_channel_into(&mut self, out: &mut Vec<f64>) {
+        self.channel.next_round_into(out);
+    }
+}
+
+/// Target online fraction of bucket `b` at round `t`.
+fn cycle_target(t: usize, bucket: usize) -> f64 {
+    let phase = std::f64::consts::TAU
+        * (t as f64 / DIURNAL_PERIOD as f64 + bucket as f64 / DIURNAL_BUCKETS as f64);
+    DIURNAL_BASE + DIURNAL_AMP * phase.sin()
+}
+
+/// Sparse baseline fleet with periodic mass-join windows.
+#[derive(Clone)]
+pub struct FlashCrowdEnv {
+    channel: ChannelProcess,
+    streams: Vec<Rng>,
+    online: Vec<bool>,
+    /// Seed of the per-cycle window-offset hash (pure, clone-safe).
+    offset_seed: u64,
+    t: usize,
+    min_online: usize,
+}
+
+impl FlashCrowdEnv {
+    pub fn new(init: &EnvInit<'_>) -> Self {
+        let n = init.sys.num_devices;
+        let mut root = Rng::new(init.seed ^ 0xF1A5_8C80_3D11_0002);
+        let mut streams: Vec<Rng> = (0..n).map(|i| root.fork(i as u64)).collect();
+        // Baseline stationary occupancy outside a window.
+        let base = FLASH_P_JOIN_OUT / (FLASH_P_JOIN_OUT + FLASH_P_DROP_OUT);
+        let online = streams.iter_mut().map(|rng| rng.f64() < base).collect();
+        Self {
+            channel: ChannelProcess::new(init.sys, init.seed),
+            streams,
+            online,
+            offset_seed: init.seed ^ 0xF1A5_0FF5_E700_0003,
+            t: 0,
+            min_online: init.sys.k.max(1),
+        }
+    }
+
+    /// Whether round `t` falls inside its cycle's flash window (the
+    /// window offset is a pure hash of the cycle index, so replay and
+    /// peek need no extra state).
+    pub(crate) fn in_window(&self, t: usize) -> bool {
+        let cycle = (t / FLASH_CYCLE) as u64;
+        let mut h = Rng::new(self.offset_seed ^ cycle.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let offset = ((h.f64() * (FLASH_CYCLE - FLASH_WINDOW) as f64) as usize)
+            .min(FLASH_CYCLE - FLASH_WINDOW - 1);
+        let pos = t % FLASH_CYCLE;
+        (offset..offset + FLASH_WINDOW).contains(&pos)
+    }
+
+    /// Advance every chain one round (window rates if inside a flash),
+    /// then apply the K repair; returns the post-repair mask.
+    pub(crate) fn step_mask(&mut self) -> &[bool] {
+        let (p_drop, p_join) = if self.in_window(self.t) {
+            (FLASH_P_DROP_IN, FLASH_P_JOIN_IN)
+        } else {
+            (FLASH_P_DROP_OUT, FLASH_P_JOIN_OUT)
+        };
+        for (rng, on) in self.streams.iter_mut().zip(self.online.iter_mut()) {
+            *on = step_two_state(rng, *on, p_drop, p_join);
+        }
+        self.t += 1;
+        repair(&mut self.online, self.min_online);
+        &self.online
+    }
+
+    /// Composite hook: the shared static-stream channel draw.
+    pub(crate) fn step_channel_into(&mut self, out: &mut Vec<f64>) {
+        self.channel.next_round_into(out);
+    }
+}
+
+/// Correlated regional outages: a down region takes every one of its
+/// devices offline at once.
+#[derive(Clone)]
+pub struct OutageEnv {
+    channel: ChannelProcess,
+    /// One up/down chain per region.
+    region_streams: Vec<Rng>,
+    region_up: Vec<bool>,
+    online: Vec<bool>,
+    min_online: usize,
+}
+
+impl OutageEnv {
+    pub fn new(init: &EnvInit<'_>) -> Self {
+        let n = init.sys.num_devices;
+        let regions = OUTAGE_REGIONS.min(n.max(1));
+        let mut root = Rng::new(init.seed ^ 0x0A7A_6E00_4E61_0004);
+        Self {
+            channel: ChannelProcess::new(init.sys, init.seed),
+            region_streams: (0..regions).map(|r| root.fork(r as u64)).collect(),
+            region_up: vec![true; regions],
+            online: vec![true; n],
+            min_online: init.sys.k.max(1),
+        }
+    }
+
+    /// Region of device `i` (interleaved by id, so any id prefix spans
+    /// every region and the K repair never concentrates in one).
+    pub(crate) fn region_of(&self, i: usize) -> usize {
+        i % self.region_streams.len()
+    }
+
+    /// Advance every region chain one round, project onto devices, then
+    /// apply the K repair; returns the post-repair mask.
+    pub(crate) fn step_mask(&mut self) -> &[bool] {
+        for (rng, up) in self.region_streams.iter_mut().zip(self.region_up.iter_mut()) {
+            *up = step_two_state(rng, *up, OUTAGE_P_FAIL, OUTAGE_P_RECOVER);
+        }
+        let regions = self.region_up.len();
+        for (i, on) in self.online.iter_mut().enumerate() {
+            *on = self.region_up[i % regions];
+        }
+        self.t_repair();
+        &self.online
+    }
+
+    fn t_repair(&mut self) {
+        repair(&mut self.online, self.min_online);
+    }
+
+    /// Composite hook: the shared static-stream channel draw.
+    pub(crate) fn step_channel_into(&mut self, out: &mut Vec<f64>) {
+        self.channel.next_round_into(out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EnvConfig, SystemConfig};
+
+    fn init_for(n: usize, k: usize) -> (SystemConfig, EnvConfig) {
+        let sys = SystemConfig {
+            num_devices: n,
+            k,
+            ..SystemConfig::default()
+        };
+        (sys, EnvConfig::default())
+    }
+
+    fn online_count(mask: &[bool]) -> usize {
+        mask.iter().filter(|&&b| b).count()
+    }
+
+    #[test]
+    fn diurnal_cycles_and_respects_the_k_floor() {
+        let (sys, env_cfg) = init_for(200, 3);
+        let mut env = DiurnalEnv::new(&EnvInit {
+            sys: &sys,
+            env: &env_cfg,
+            seed: 7,
+        });
+        // Track the population over one full day: it must swing well
+        // above and below the mean and never starve the server.
+        let (mut lo, mut hi) = (usize::MAX, 0usize);
+        for _ in 0..DIURNAL_PERIOD {
+            let c = online_count(env.step_mask());
+            assert!(c >= 3, "fewer than K online");
+            lo = lo.min(c);
+            hi = hi.max(c);
+        }
+        assert!(
+            hi as f64 >= 200.0 * 0.7 && lo as f64 <= 200.0 * 0.45,
+            "no diurnal swing: lo={lo} hi={hi}"
+        );
+    }
+
+    #[test]
+    fn diurnal_is_seed_deterministic() {
+        let (sys, env_cfg) = init_for(50, 2);
+        let mk = |seed| {
+            DiurnalEnv::new(&EnvInit {
+                sys: &sys,
+                env: &env_cfg,
+                seed,
+            })
+        };
+        let (mut a, mut b, mut c) = (mk(3), mk(3), mk(4));
+        let mut diverged = false;
+        for _ in 0..100 {
+            let ma = a.step_mask().to_vec();
+            assert_eq!(ma, b.step_mask());
+            diverged |= ma != c.step_mask();
+        }
+        assert!(diverged, "different seeds gave identical masks");
+    }
+
+    #[test]
+    fn flash_crowd_bursts_above_the_baseline() {
+        let (sys, env_cfg) = init_for(300, 2);
+        let mut env = FlashCrowdEnv::new(&EnvInit {
+            sys: &sys,
+            env: &env_cfg,
+            seed: 11,
+        });
+        let mut in_peak = 0usize;
+        let mut out_sum = 0usize;
+        let mut out_rounds = 0usize;
+        for t in 0..FLASH_CYCLE {
+            let c = online_count(env.step_mask());
+            assert!(c >= 2);
+            if env.in_window(t) {
+                in_peak = in_peak.max(c);
+            } else {
+                out_sum += c;
+                out_rounds += 1;
+            }
+        }
+        let out_mean = out_sum as f64 / out_rounds as f64;
+        assert!(
+            in_peak as f64 > 2.0 * out_mean,
+            "no flash crowd: peak={in_peak} baseline mean={out_mean}"
+        );
+    }
+
+    #[test]
+    fn outage_takes_whole_regions_down_together() {
+        let (sys, env_cfg) = init_for(160, 2);
+        let mut env = OutageEnv::new(&EnvInit {
+            sys: &sys,
+            env: &env_cfg,
+            seed: 5,
+        });
+        let mut saw_outage = false;
+        for _ in 0..400 {
+            let mask = env.step_mask().to_vec();
+            assert!(online_count(&mask) >= 2);
+            // Offline devices must be explained by a down region (the K
+            // repair can only force devices ON, never off).
+            for (i, &on) in mask.iter().enumerate() {
+                if !on {
+                    assert!(!env.region_up[env.region_of(i)], "device {i} off in an up region");
+                    saw_outage = true;
+                }
+            }
+        }
+        assert!(saw_outage, "no region ever failed in 400 rounds");
+    }
+
+    #[test]
+    fn gains_match_the_static_channel_stream() {
+        use crate::system::ChannelProcess;
+        let (sys, env_cfg) = init_for(20, 2);
+        let mut env = DiurnalEnv::new(&EnvInit {
+            sys: &sys,
+            env: &env_cfg,
+            seed: 13,
+        });
+        let mut reference = ChannelProcess::new(&sys, 13);
+        let mut buf = Vec::new();
+        for _ in 0..20 {
+            env.step_channel_into(&mut buf);
+            assert_eq!(buf, reference.next_round());
+        }
+    }
+}

@@ -20,6 +20,12 @@ impl StaticEnv {
             channel: ChannelProcess::new(init.sys, init.seed),
         }
     }
+
+    /// Composite hook: the channel draw, used when this child is the
+    /// composite's channel owner.
+    pub(crate) fn step_channel_into(&mut self, out: &mut Vec<f64>) {
+        self.channel.next_round_into(out);
+    }
 }
 
 impl Environment for StaticEnv {

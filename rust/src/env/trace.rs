@@ -86,13 +86,16 @@ impl TraceEnv {
         self.period
     }
 
-    /// Realize round `t` — a pure function, shared by `next_round` and
-    /// `peek`.
-    fn round_env(&self, t: usize) -> RoundEnv {
+    /// Realize round `t` into caller-owned buffers (clear + extend, so
+    /// steady-state replay allocates nothing).  Returns `true` iff any
+    /// device is still offline after the K repair — the composite env
+    /// keys its explicit-list decision on exactly this flag, matching
+    /// the `available: None` fast path below.
+    pub(crate) fn realize_into(&self, t: usize, gains: &mut Vec<f64>, online: &mut Vec<bool>) -> bool {
         let t_eff = t % self.period;
         let (lo, hi) = self.clip;
-        let mut gains = Vec::with_capacity(self.num_devices);
-        let mut online = Vec::with_capacity(self.num_devices);
+        gains.clear();
+        online.clear();
         for i in 0..self.num_devices {
             let track = &self.tracks[i % self.tracks.len()];
             let (gain, avail) = sample_track(track, t_eff);
@@ -110,10 +113,31 @@ impl TraceEnv {
                 count += 1;
             }
         }
-        let available = if count == self.num_devices {
-            None
-        } else {
+        count < self.num_devices
+    }
+
+    /// Composite hook: consume and return the current round index.
+    pub(crate) fn advance(&mut self) -> usize {
+        let t = self.t;
+        self.t += 1;
+        t
+    }
+
+    /// Composite hook: the round index `advance` would consume next.
+    pub(crate) fn current_round(&self) -> usize {
+        self.t
+    }
+
+    /// Realize round `t` — a pure function, shared by `next_round` and
+    /// `peek`.
+    fn round_env(&self, t: usize) -> RoundEnv {
+        let mut gains = Vec::with_capacity(self.num_devices);
+        let mut online = Vec::with_capacity(self.num_devices);
+        let any_off = self.realize_into(t, &mut gains, &mut online);
+        let available = if any_off {
             Some((0..self.num_devices).filter(|&i| online[i]).collect())
+        } else {
+            None
         };
         RoundEnv {
             gains,
@@ -140,6 +164,21 @@ fn sample_track(track: &[Sample], t: usize) -> (f64, bool) {
     let frac = (t - left.round) as f64 / (right.round - left.round) as f64;
     let gain = left.gain + (right.gain - left.gain) * frac;
     (gain, left.available)
+}
+
+/// Validate a trace CSV body against the documented replay schema with
+/// the exact parser [`TraceEnv`] uses, returning `(tracks, period)`.
+/// `lroa trace import` round-trips its output through this before
+/// writing, so an imported file can never fail to replay.
+pub(crate) fn validate_trace(text: &str) -> Result<(usize, usize)> {
+    let tracks = parse_trace(text)?;
+    let period = tracks
+        .iter()
+        .flat_map(|t| t.iter().map(|s| s.round))
+        .max()
+        .expect("parse_trace guarantees at least one sample")
+        + 1;
+    Ok((tracks.len(), period))
 }
 
 /// Parse the `round,device,gain[,available]` CSV into per-track sample

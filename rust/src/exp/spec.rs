@@ -9,13 +9,19 @@ use crate::Result;
 
 /// One environment-axis entry: a kind plus the per-entry data some kinds
 /// carry (today: the trace log path, so `--envs=trace:campus.csv,adv`
-/// can put two differently-sourced environments on one axis).
+/// can put two differently-sourced environments on one axis, and the
+/// composite child spec, so `--envs=compose:diurnal,compose:outage` can
+/// sweep scenarios).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct EnvSel {
     pub kind: EnvKind,
     /// Trace log path; only meaningful for [`EnvKind::Trace`] (a bare
     /// `trace` entry relies on an `--env.trace_path=...` override).
     pub trace_path: Option<String>,
+    /// Composite child spec or preset name (stored verbatim, presets
+    /// unexpanded); only meaningful for [`EnvKind::Composite`] (a bare
+    /// `compose` entry keeps the base config's `env.compose`).
+    pub compose: Option<String>,
 }
 
 impl From<EnvKind> for EnvSel {
@@ -23,19 +29,32 @@ impl From<EnvKind> for EnvSel {
         Self {
             kind,
             trace_path: None,
+            compose: None,
         }
     }
 }
 
 impl EnvSel {
-    /// Parse one axis entry: an [`EnvKind`] name/alias, or
-    /// `trace:<path>`.
+    /// Parse one axis entry: an [`EnvKind`] name/alias, `trace:<path>`,
+    /// or `compose:<a>+<b>+...` / `compose:<preset>`.
     pub fn parse(s: &str) -> Result<EnvSel> {
         if let Some(path) = s.strip_prefix("trace:") {
             anyhow::ensure!(!path.is_empty(), "empty path in {s:?}");
             return Ok(EnvSel {
                 kind: EnvKind::Trace,
                 trace_path: Some(path.to_string()),
+                compose: None,
+            });
+        }
+        if let Some(spec) = s.strip_prefix("compose:") {
+            // Reject a bad child list at parse time, before a whole grid
+            // expands around it; the entry stores the verbatim spec so
+            // labels and hashes see exactly what the user typed.
+            crate::config::parse_compose_spec(spec)?;
+            return Ok(EnvSel {
+                kind: EnvKind::Composite,
+                trace_path: None,
+                compose: Some(spec.to_string()),
             });
         }
         Ok(EnvKind::parse(s)?.into())
@@ -56,6 +75,9 @@ impl EnvSel {
         cfg.env.kind = self.kind;
         if let Some(p) = &self.trace_path {
             cfg.env.trace_path = p.clone();
+        }
+        if let Some(c) = &self.compose {
+            cfg.env.compose = c.clone();
         }
     }
 }
@@ -293,6 +315,19 @@ impl SweepSpec {
                     .unwrap_or_default();
                 s.push_str(&format!("-{stem}"));
             }
+            // Likewise two composite entries with different child specs:
+            // disambiguate by the (verbatim) spec so
+            // `compose:diurnal,compose:outage` yields two groups.
+            if cfg.env.kind == EnvKind::Composite
+                && self
+                    .envs
+                    .iter()
+                    .filter(|e| e.kind == EnvKind::Composite)
+                    .count()
+                    > 1
+            {
+                s.push_str(&format!("-{}", cfg.env.compose));
+            }
         }
         if self.ks.len() > 1 {
             s.push_str(&format!("-K{}", cfg.system.k));
@@ -312,8 +347,9 @@ impl SweepSpec {
     /// Parse the `lroa sweep` / `lroa regret` command line.
     ///
     /// Recognized (all `--key=value`): `--datasets`, `--policies`,
-    /// `--envs` (comma list of environment names, `trace:<path>`
-    /// entries, or `all`), `--ks`, `--mus`, `--nus`, `--budget_spreads`
+    /// `--envs` (comma list of environment names, `trace:<path>` /
+    /// `compose:<a>+<b>` / `compose:<preset>` entries, or `all`),
+    /// `--ks`, `--mus`, `--nus`, `--budget_spreads`
     /// (energy-budget heterogeneity values), `--seeds` (comma
     /// list or `a..b` inclusive), `--rounds`, `--threads`,
     /// `--cell_timeout_s` (per-cell wall-clock budget),
@@ -440,6 +476,9 @@ pub fn manifest_json(scenarios: &[Scenario]) -> Json {
             ];
             if s.cfg.env.kind == EnvKind::Trace {
                 fields.push(("env_trace", Json::Str(s.cfg.env.trace_path.clone())));
+            }
+            if s.cfg.env.kind == EnvKind::Composite {
+                fields.push(("env_compose", Json::Str(s.cfg.env.compose.clone())));
             }
             if let Some(anchor) = &s.regret_vs {
                 fields.push(("regret_vs", Json::Str(anchor.clone())));
@@ -841,5 +880,72 @@ mod tests {
         assert_eq!(cells.len(), 1);
         assert_eq!(cells[0].cfg.system.budget_spread, 0.25);
         assert_eq!(cells[0].label, "LROA-cifar");
+    }
+
+    #[test]
+    fn compose_axis_entries_parse_pin_label_and_fingerprint() {
+        // Explicit child lists and preset names both parse; a bad child
+        // list fails at parse time, before the grid expands.
+        let sel = EnvSel::parse("compose:avail+ge+drift").unwrap();
+        assert_eq!(sel.kind, EnvKind::Composite);
+        assert_eq!(sel.compose.as_deref(), Some("avail+ge+drift"));
+        let preset = EnvSel::parse("compose:diurnal").unwrap();
+        assert_eq!(preset.compose.as_deref(), Some("diurnal"));
+        assert!(EnvSel::parse("compose:").is_err());
+        assert!(EnvSel::parse("compose:ge+nope").is_err());
+        assert!(EnvSel::parse("compose:ge+ge").is_err());
+        // `all` never implies a composite (it needs a child spec).
+        assert!(EnvSel::parse_list("all")
+            .unwrap()
+            .iter()
+            .all(|s| s.kind != EnvKind::Composite));
+
+        // Expansion pins kind + spec; two composite entries with
+        // different specs get distinct labels, groups, and fingerprints
+        // (the spec is config-hashed, so --resume re-runs edits).
+        let spec = SweepSpec {
+            datasets: vec!["cifar".into()],
+            envs: vec![
+                EnvSel::parse("compose:diurnal").unwrap(),
+                EnvSel::parse("compose:outage").unwrap(),
+            ],
+            rounds: Some(5),
+            ..SweepSpec::default()
+        };
+        let cells = spec.expand().unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].cfg.env.kind, EnvKind::Composite);
+        assert_eq!(cells[0].cfg.env.compose, "diurnal");
+        assert_eq!(cells[1].cfg.env.compose, "outage");
+        assert_eq!(cells[0].label, "LROA-cifar-compose-diurnal");
+        assert_eq!(cells[1].label, "LROA-cifar-compose-outage");
+        assert_ne!(cells[0].group, cells[1].group);
+        assert_ne!(cells[0].fingerprint(), cells[1].fingerprint());
+        // The manifest documents the child spec per composite cell.
+        let manifest = manifest_json(&cells);
+        let arr = manifest.get("cells").and_then(|c| c.as_arr()).unwrap();
+        assert_eq!(
+            arr[0].get("env_compose").unwrap().as_str().unwrap(),
+            "diurnal"
+        );
+        assert_eq!(
+            arr[1].get("env_compose").unwrap().as_str().unwrap(),
+            "outage"
+        );
+
+        // A single composite entry alongside another env keeps the plain
+        // kind segment, like a single trace entry.
+        let mixed = SweepSpec {
+            datasets: vec!["cifar".into()],
+            envs: vec![
+                EnvSel::parse("compose:flashcrowd").unwrap(),
+                EnvSel::from(EnvKind::Static),
+            ],
+            rounds: Some(5),
+            ..SweepSpec::default()
+        };
+        let cells = mixed.expand().unwrap();
+        assert_eq!(cells[0].label, "LROA-cifar-compose");
+        assert_eq!(cells[1].label, "LROA-cifar-static");
     }
 }

@@ -26,7 +26,7 @@
 //! | [`json`] | minimal JSON parser/serializer for manifests + metrics |
 //! | [`config`] | experiment configuration (file + CLI overrides) |
 //! | [`system`] | device fleet, wireless channel model, latency/energy (eqs. 5–17) |
-//! | [`env`] | dynamic edge environments: Markov fading, availability, compute drift, trace replay, adversarial channel (name → ctor registry; `peek`/`observe_selection` hooks) |
+//! | [`env`] | dynamic edge environments: Markov fading, availability, compute drift, trace replay, adversarial channel, composites (`compose:<a>+<b>` with scenario generators + correlated shadowing), measurement-log import (name → ctor registry; `peek`/`observe_selection` hooks) |
 //! | [`control`] | the paper's contribution: queues, Theorems 2–3, SUM, Algorithm 2 |
 //! | [`control::policy`] | the [`control::RoundPolicy`] trait, scheme impls, name → ctor registry |
 //! | [`sampling`] | client samplers: LROA adaptive, uniform, DivFL |

@@ -13,7 +13,8 @@
 //!   through the full sweep pipeline, emitting the N-vs-round-time
 //!   scaling curve (`scaling.json`) plus peak-RSS evidence;
 //! * `trace`  — summarize structured traces written by `--trace-out`
-//!   (see [`lroa::trace`]);
+//!   (see [`lroa::trace`]), or import an external measurement CSV into
+//!   the replay schema (`trace import`, see [`lroa::env::import`]);
 //! * `info`   — inspect artifacts, fleet, and the λ/V estimates;
 //! * `help`   — this text.
 //!
@@ -49,6 +50,8 @@ USAGE:
     lroa bench [--json] [--quick] [--out=FILE] [--baseline=FILE] [--max-regress=F]
     lroa scale [--ns=N1,N2,...] [--rounds=R] [--out=DIR] [--json]
     lroa trace summarize [DIR | --dir=DIR]
+    lroa trace import <csv> --out=FILE [--round-col=N --device-col=N --gain-col=N
+                      --avail-col=N --gain-scale=F --gain-db --round-per=F --json]
 
 SUBCOMMANDS:
     train   full federated training through the AOT artifacts
@@ -79,18 +82,31 @@ SUBCOMMANDS:
             --out/scaling.json (schema lroa-scale-v1); --json mirrors
             that object to stdout; at N >= 1e6 the q_min floor is
             auto-lowered to stay inside the q_min < 1/N validation bound
-    trace   inspect structured traces: `trace summarize [--dir=DIR]`
-            prints the per-cell phase-timing table (env_step/solve/train/
-            aggregate/observe min/p50/p95/max plus solver counters) from a
-            --trace-out run's trace_summary.json; load the sibling
-            trace.json in Perfetto or chrome://tracing for the timeline
+    trace   inspect structured traces, or import measurement logs:
+            `trace summarize [--dir=DIR]` prints the per-cell phase-timing
+            table (env_step/solve/train/aggregate/observe min/p50/p95/max
+            plus solver counters) from a --trace-out run's
+            trace_summary.json; load the sibling trace.json in Perfetto or
+            chrome://tracing for the timeline.
+            `trace import <csv> --out=FILE` converts an external
+            measurement CSV into the replay schema (tests/fixtures/
+            README.md) so it runs under --envs=trace:FILE: --round-col/
+            --device-col/--gain-col/--avail-col map source columns by
+            header name (device keys may be any string; tracks are
+            renumbered from 0), --gain-db converts dB to linear, then
+            --gain-scale multiplies, --round-per=F bins raw timestamps
+            into rounds of width F (same-bin samples aggregate: mean
+            gain, AND availability), rows with an empty gain keep their
+            availability and get a linearly interpolated gain, and the
+            output is verified against the replay parser before writing;
+            --json emits a one-object import report on stdout
     info    print artifact manifest, fleet summary, λ/V estimates
 
 SWEEP / REGRET FLAGS (all --key=value unless noted):
     --policies=lroa,uni-d,uni-s,divfl,greedy,rr,p2c,bandit,thompson,linucb,conv-aware|all
     --datasets=cifar,femnist
     --budget_spreads=0,0.3,0.6  (system.budget_spread heterogeneity axis)
-    --envs=static,ge,avail,drift,adv,trace:<log.csv>|all  (see below)
+    --envs=static,ge,avail,drift,adv,trace:<log.csv>,compose:<spec>|all  (below)
     --ks=2,4,6       --mus=0.1,1,10          --nus=1e4,1e5,1e6
     --seeds=1..30    --rounds=N              --threads=T (0 = cores)
     --cell_timeout_s=F (per-cell wall-clock budget; exceeding fails loudly)
@@ -119,7 +135,24 @@ ENVIRONMENTS (the --envs axis / --env.kind override):
             (schema: round,device,gain[,available] — tests/fixtures/README.md)
     adv     adversarial channel: degrades last round's selection and the
             gains a greedy scheduler would chase (--env.adv_degrade,
-            --env.adv_targets); `all` expands to every env except trace
+            --env.adv_targets)
+    compose composite of several mechanisms in one round process: on the
+            --envs axis write compose:<a>+<b>+... over children
+            static|ge|avail|drift|trace|adv plus the composite-only
+            scenario generators diurnal (time-of-day availability cycles),
+            flashcrowd (synchronized join bursts), outage (correlated
+            regional failures); standalone use --env.kind=compose with
+            --env.compose=SPEC.  Merge semantics: availability is the AND
+            of the children (with the K-floor repair applied once at the
+            end), gains come from the channel-owning child (ge > trace >
+            adv > first other) with adv degradation applied to the merged
+            vector, drift overlays f_max/alpha, and an optional correlated
+            log-normal shadow field multiplies the result
+            (--env.shadow_std > 0 turns it on, --env.shadow_rho sets the
+            common-vs-private weight).  Named presets expand as
+            compose:diurnal = diurnal+ge, compose:flashcrowd =
+            flashcrowd+ge, compose:outage = outage+ge+drift.
+            `all` expands to every env except trace and compose
 
 POLICIES: lroa uni-d uni-s divfl greedy rr p2c bandit thompson linucb
           conv-aware oracle oracle-e
@@ -149,9 +182,15 @@ COMMON OVERRIDES:
     --control.warm_start=true|false (default true: Algorithm 2 resumes from
                                      the previous round's fixed point; false
                                      restores the paper's cold midpoint init)
-    --train.seed=N                  --env.kind=static|ge|avail|drift|trace|adv
+    --train.seed=N        --env.kind=static|ge|avail|drift|trace|adv|compose
     --env.ge_p_bad=F --env.avail_p_drop=F --env.drift_sigma=F   (see config.rs)
     --env.trace_path=FILE --env.adv_degrade=F --env.adv_targets=N
+    --env.compose=SPEC    (composite child list `avail+ge+drift` or preset
+                           diurnal|flashcrowd|outage; compose kind only)
+    --env.shadow_std=F    (correlated shadow fading on composite gains:
+                           log-space std, 0 = off bitwise)
+    --env.shadow_rho=F    (shadow correlation in [0,1]: weight of the
+                           fleet-common component vs per-device)
     --bandit.ucb_c=F --bandit.temp=F --bandit.eps=F     (bandit policy only)
     --thompson.prior_std=F --thompson.temp=F --thompson.eps=F  (thompson only)
     --linucb.alpha=F --linucb.ridge=F --linucb.temp=F   (linucb only)
@@ -546,6 +585,38 @@ fn bench_cmd(args: &[String]) -> lroa::Result<()> {
         });
     }
 
+    // The composite step at the same scales: the default avail+ge+drift
+    // stack with shadowing on — one channel draw plus the availability
+    // AND, the drift overlay, and the shadow field, all alloc-free.  The
+    // drift child reads base devices, so this row steps a generated
+    // fleet.  Not part of the gated round_total.
+    for n in [10_000usize, 100_000] {
+        use lroa::config::{EnvConfig, EnvKind, SystemConfig};
+        use lroa::env::{self, EnvSoA};
+        let sys = SystemConfig {
+            num_devices: n,
+            ..SystemConfig::default()
+        };
+        let env_cfg = EnvConfig {
+            shadow_std: 0.3,
+            ..EnvConfig::default()
+        };
+        let mut env = env::build(
+            EnvKind::Composite,
+            &env::EnvInit {
+                sys: &sys,
+                env: &env_cfg,
+                seed: 13,
+            },
+        )?;
+        let mut rng = lroa::rng::Rng::new(13);
+        let fleet = lroa::system::Fleet::generate(&sys, (50, 400), &mut rng);
+        let mut soa = EnvSoA::new();
+        b.bench(&format!("kernel/env-step-composite/N={n}"), || {
+            env.step_into(&fleet.devices, &mut soa);
+        });
+    }
+
     // The Algorithm 2 solve isolated from the round loop, at three
     // fleet scales — the allocation-free SoA port's hot kernel.  Warm
     // starts engage after the first call, so these rows time the
@@ -878,6 +949,103 @@ fn scale_cmd(args: &[String]) -> lroa::Result<()> {
     Ok(())
 }
 
+/// `lroa trace import <csv> --out=FILE [...]`: convert an external
+/// measurement log into the replay schema ([`lroa::env::import`]) and
+/// report what the conversion did.  Flag errors exit 2; unreadable or
+/// malformed input exits 1, before any output byte is written.
+fn trace_import_cmd(args: &[String]) -> lroa::Result<()> {
+    let mut input: Option<String> = None;
+    let mut out: Option<String> = None;
+    let mut spec = lroa::env::ImportSpec::new("", "");
+    let mut json_out = false;
+    for a in args {
+        if a == "--json" {
+            json_out = true;
+        } else if a == "--gain-db" {
+            spec.gain_db = true;
+        } else if let Some(v) = a.strip_prefix("--out=") {
+            out = Some(v.to_string());
+        } else if let Some(v) = a.strip_prefix("--round-col=") {
+            spec.round_col = v.to_string();
+        } else if let Some(v) = a.strip_prefix("--device-col=") {
+            spec.device_col = v.to_string();
+        } else if let Some(v) = a.strip_prefix("--gain-col=") {
+            spec.gain_col = v.to_string();
+        } else if let Some(v) = a.strip_prefix("--avail-col=") {
+            spec.avail_col = Some(v.to_string());
+        } else if let Some(v) = a.strip_prefix("--gain-scale=") {
+            spec.gain_scale = v.parse().map_err(|e| {
+                lroa::usage_error(format!("trace import: bad --gain-scale value {v:?}: {e}"))
+            })?;
+            if !(spec.gain_scale.is_finite() && spec.gain_scale > 0.0) {
+                return Err(lroa::usage_error("trace import: --gain-scale must be > 0"));
+            }
+        } else if let Some(v) = a.strip_prefix("--round-per=") {
+            let per: f64 = v.parse().map_err(|e| {
+                lroa::usage_error(format!("trace import: bad --round-per value {v:?}: {e}"))
+            })?;
+            if !(per.is_finite() && per > 0.0) {
+                return Err(lroa::usage_error("trace import: --round-per must be > 0"));
+            }
+            spec.round_per = Some(per);
+        } else if a.starts_with("--") {
+            return Err(lroa::usage_error(format!(
+                "trace import: unknown flag {a:?} (--out=FILE --round-col=NAME \
+                 --device-col=NAME --gain-col=NAME --avail-col=NAME --gain-scale=F \
+                 --gain-db --round-per=F --json)"
+            )));
+        } else if input.is_none() {
+            input = Some(a.clone());
+        } else {
+            return Err(lroa::usage_error(format!(
+                "trace import: unexpected argument {a:?} (one input CSV)"
+            )));
+        }
+    }
+    let Some(input) = input else {
+        return Err(lroa::usage_error(
+            "trace import: expected an input CSV — `lroa trace import <csv> --out=FILE`",
+        ));
+    };
+    let Some(out) = out else {
+        return Err(lroa::usage_error("trace import: --out=FILE is required"));
+    };
+    spec.input = input.clone().into();
+    spec.output = out.clone().into();
+    let stats = lroa::env::import_csv(&spec)?;
+    let report = obj(vec![
+        ("schema", Json::Str("lroa-trace-import-v1".into())),
+        ("input", Json::Str(input)),
+        ("output", Json::Str(out.clone())),
+        ("devices", Json::Num(stats.devices as f64)),
+        ("rounds", Json::Num(stats.rounds as f64)),
+        ("rows", Json::Num(stats.rows as f64)),
+        ("interpolated", Json::Num(stats.interpolated as f64)),
+        ("period", Json::Num(stats.period as f64)),
+        ("has_availability", Json::Bool(stats.has_availability)),
+    ]);
+    if json_out {
+        println!("{report}");
+    } else {
+        println!(
+            "imported {} device track(s), {} round(s) (period {}), {} row(s), \
+             {} gain(s) gap-interpolated{}",
+            stats.devices,
+            stats.rounds,
+            stats.period,
+            stats.rows,
+            stats.interpolated,
+            if stats.has_availability {
+                ", with availability"
+            } else {
+                ""
+            },
+        );
+        println!("wrote {out} — replay with --envs=trace:{out}");
+    }
+    Ok(())
+}
+
 /// `lroa trace summarize`: the per-cell phase-timing table from a
 /// `trace_summary.json` written by a `--trace-out` run.
 fn trace_cmd(args: &[String]) -> lroa::Result<()> {
@@ -885,12 +1053,16 @@ fn trace_cmd(args: &[String]) -> lroa::Result<()> {
 
     let Some((op, rest)) = args.split_first() else {
         return Err(lroa::usage_error(
-            "trace: expected a subcommand — `lroa trace summarize [DIR | --dir=DIR]`",
+            "trace: expected a subcommand — `lroa trace summarize [DIR | --dir=DIR]` \
+             or `lroa trace import <csv> --out=FILE`",
         ));
     };
+    if op == "import" {
+        return trace_import_cmd(rest);
+    }
     if op != "summarize" {
         return Err(lroa::usage_error(format!(
-            "trace: unknown subcommand {op:?} (expected `summarize`)"
+            "trace: unknown subcommand {op:?} (expected `summarize` or `import`)"
         )));
     }
     let mut dir = "runs/sweep/trace".to_string();

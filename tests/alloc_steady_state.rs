@@ -120,6 +120,48 @@ fn env_step_into_is_alloc_free_at_steady_state() {
     }
 }
 
+/// The composite combinator must stay alloc-free even though it layers
+/// several child mechanisms plus the correlated-shadowing field: every
+/// child steps into persistent scratch columns and the merge writes the
+/// output SoA in place.  Pinned at population scale (100k devices) with
+/// the default `avail+ge+drift` stack and shadowing on so the gain
+/// merge, the AND-availability repair, and the shadow walk all churn.
+#[test]
+fn composite_step_into_is_alloc_free_at_100k_devices() {
+    let sys = sys(100_000);
+    let ecfg = EnvConfig {
+        shadow_std: 0.3,
+        shadow_rho: 0.5,
+        ..env_cfg()
+    };
+    let mut rng = Rng::new(5);
+    let fleet = Fleet::generate(&sys, (50, 100), &mut rng);
+    let mut env = env::build(
+        EnvKind::Composite,
+        &env::EnvInit {
+            sys: &sys,
+            env: &ecfg,
+            seed: 23,
+        },
+    )
+    .unwrap();
+    let mut soa = EnvSoA::new();
+    for _ in 0..3 {
+        env.step_into(&fleet.devices, &mut soa);
+    }
+    let before = alloc_calls();
+    for _ in 0..25 {
+        env.step_into(&fleet.devices, &mut soa);
+    }
+    let after = alloc_calls();
+    assert_eq!(
+        after - before,
+        0,
+        "composite step_into allocated {} time(s) over 25 steady-state rounds",
+        after - before
+    );
+}
+
 #[test]
 fn channel_next_round_into_is_alloc_free_at_steady_state() {
     let sys = sys(128);

@@ -82,6 +82,114 @@ fn invalid_config_is_a_runtime_error() {
 }
 
 #[test]
+fn trace_import_usage_errors_exit_two() {
+    // Missing --out: the invocation shape is wrong, so 2.
+    let out = lroa(&["trace", "import", "in.csv"]);
+    assert_eq!(exit_code(&out), 2);
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--out"), "stderr: {err}");
+
+    // Missing input positional.
+    assert_eq!(exit_code(&lroa(&["trace", "import", "--out=x.csv"])), 2);
+    // Unknown flag.
+    assert_eq!(
+        exit_code(&lroa(&["trace", "import", "in.csv", "--out=x.csv", "--bogus=1"])),
+        2
+    );
+    // Well-formed flags with out-of-domain values are still usage errors.
+    assert_eq!(
+        exit_code(&lroa(&["trace", "import", "in.csv", "--out=x.csv", "--gain-scale=0"])),
+        2
+    );
+    assert_eq!(
+        exit_code(&lroa(&["trace", "import", "in.csv", "--out=x.csv", "--round-per=-1"])),
+        2
+    );
+}
+
+#[test]
+fn trace_import_runtime_errors_exit_one() {
+    // Missing input file: well-formed invocation, runtime failure.
+    let out = lroa(&["trace", "import", "/definitely/not/a/log.csv", "--out=/tmp/x.csv"]);
+    assert_eq!(exit_code(&out), 1);
+
+    // Present but malformed input (no mappable gain column).
+    let dir = std::env::temp_dir().join(format!("lroa-import-bad-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let input = dir.join("bad.csv");
+    std::fs::write(&input, "round,device\n0,0\n").unwrap();
+    let out_flag = format!("--out={}", dir.join("out.csv").display());
+    let out = lroa(&["trace", "import", input.to_str().unwrap(), &out_flag]);
+    assert_eq!(exit_code(&out), 1);
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("no column"), "stderr: {err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn trace_import_json_is_one_object_and_the_output_replays() {
+    let dir = std::env::temp_dir().join(format!("lroa-import-rt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let input = dir.join("field_log.csv");
+    // Foreign schema: renamed columns, string device keys, a gap row.
+    std::fs::write(
+        &input,
+        "ts,node,rssi,up\n\
+         0,gw-a,0.25,1\n\
+         0,gw-b,0.5,1\n\
+         1,gw-a,,1\n\
+         1,gw-b,0.25,0\n\
+         2,gw-a,0.75,1\n\
+         2,gw-b,0.5,1\n",
+    )
+    .unwrap();
+    let imported = dir.join("imported.csv");
+    let out_flag = format!("--out={}", imported.display());
+    let out = lroa(&[
+        "trace",
+        "import",
+        input.to_str().unwrap(),
+        &out_flag,
+        "--round-col=ts",
+        "--device-col=node",
+        "--gain-col=rssi",
+        "--avail-col=up",
+        "--json",
+    ]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(exit_code(&out), 0, "stdout: {stdout}\nstderr: {stderr}");
+    // Exactly one JSON object on stdout.
+    let report = lroa::json::Json::parse(stdout.trim())
+        .unwrap_or_else(|e| panic!("stdout is not one JSON object: {e}\n---\n{stdout}"));
+    assert_eq!(
+        report.get("schema").and_then(|s| s.as_str()),
+        Some("lroa-trace-import-v1")
+    );
+    assert_eq!(report.get("devices").and_then(|d| d.as_f64()), Some(2.0));
+    assert_eq!(report.get("interpolated").and_then(|d| d.as_f64()), Some(1.0));
+
+    // Round-trip: the imported log must drive a trace environment sweep.
+    let sweep_dir = dir.join("sweep");
+    let envs_flag = format!("--envs=trace:{}", imported.display());
+    let sweep_out_flag = format!("--out={}", sweep_dir.display());
+    let out = lroa(&[
+        "sweep",
+        "--json",
+        &envs_flag,
+        "--policies=uni-s",
+        "--seeds=1",
+        "--rounds=3",
+        "--system.num_devices=4",
+        &sweep_out_flag,
+    ]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(exit_code(&out), 0, "stdout: {stdout}\nstderr: {stderr}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn sweep_json_stdout_is_exactly_one_json_object() {
     let dir = std::env::temp_dir().join(format!("lroa-exit-codes-{}", std::process::id()));
     let out_flag = format!("--out={}", dir.display());

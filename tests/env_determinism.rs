@@ -211,9 +211,50 @@ fn availability_varies_but_respects_the_k_floor() {
     assert!(saw_partial, "dropout never removed a device in 200 rounds");
 }
 
+/// A composite layered over every built-in mechanism behaves as one
+/// environment: a single-child `compose:<x>` must reproduce `<x>`'s
+/// trajectory bitwise through both realization paths (the composite
+/// materializes `next_round` via its own `step_into`, and each child is
+/// built with the same `EnvInit` it gets standalone).
+#[test]
+fn single_child_composite_matches_its_child_bitwise() {
+    let sys = sys(14);
+    let mut rng = Rng::new(4);
+    let fleet = Fleet::generate(&sys, (50, 150), &mut rng);
+    for child in ["static", "ge", "avail", "drift", "trace"] {
+        let mut ecfg = env_cfg();
+        ecfg.compose = child.into();
+        let kind = EnvKind::parse(child).unwrap();
+        let mut solo = build(kind, &sys, &ecfg, 9);
+        let mut comp = build(EnvKind::Composite, &sys, &ecfg, 9);
+        for t in 0..50 {
+            let a = solo.next_round(&fleet.devices);
+            let b = comp.next_round(&fleet.devices);
+            assert_eq!(a.gains, b.gains, "compose:{child} gains diverged at t={t}");
+            assert_eq!(
+                a.available, b.available,
+                "compose:{child} availability diverged at t={t}"
+            );
+            let overlay = |ds: Option<Vec<lroa::system::Device>>| {
+                ds.map(|ds| {
+                    ds.iter()
+                        .map(|d| (d.f_max_hz, d.alpha))
+                        .collect::<Vec<(f64, f64)>>()
+                })
+            };
+            assert_eq!(
+                overlay(a.devices),
+                overlay(b.devices),
+                "compose:{child} drift overlay diverged at t={t}"
+            );
+        }
+    }
+}
+
 fn grid_spec() -> SweepSpec {
     let mut envs: Vec<EnvSel> = EnvKind::SYNTHETIC.iter().map(|&k| k.into()).collect();
     envs.push(EnvSel::parse(&format!("trace:{}", fixture_path())).unwrap());
+    envs.push(EnvSel::parse("compose:diurnal").unwrap());
     SweepSpec {
         datasets: vec!["cifar".into()],
         policies: vec![Policy::Lroa, Policy::RoundRobin],
@@ -236,7 +277,7 @@ fn policy_by_env_grid_is_thread_count_invariant() {
     // pins the fleet-scale stepping path at two pool widths end to end.
     let seq = exp::run_scenarios(grid_spec().expand().unwrap(), 1).unwrap();
     let par = exp::run_scenarios(grid_spec().expand().unwrap(), 4).unwrap();
-    assert_eq!(seq.len(), 2 * 6);
+    assert_eq!(seq.len(), 2 * 7);
     for (a, b) in seq.iter().zip(&par) {
         assert_eq!(a.scenario.label, b.scenario.label);
         for (ra, rb) in a.recorder.rounds.iter().zip(&b.recorder.rounds) {
@@ -257,7 +298,7 @@ fn policy_by_env_grid_is_thread_count_invariant() {
     };
     let stat = &seq[0];
     assert_eq!(stat.scenario.cfg.env.kind, EnvKind::Static);
-    for r in &seq[1..6] {
+    for r in &seq[1..7] {
         assert_ne!(
             series(stat),
             series(r),
@@ -273,12 +314,12 @@ fn sweep_manifest_covers_the_whole_env_grid() {
     let cells = spec.expand().unwrap();
     let manifest = exp::manifest_json(&cells);
     let arr = manifest.get("cells").and_then(|c| c.as_arr()).unwrap();
-    assert_eq!(arr.len(), 12);
+    assert_eq!(arr.len(), 14);
     let envs: Vec<&str> = arr
         .iter()
         .map(|c| c.get("env").unwrap().as_str().unwrap())
         .collect();
-    for name in ["static", "ge", "avail", "drift", "trace", "adv"] {
+    for name in ["static", "ge", "avail", "drift", "trace", "adv", "compose"] {
         assert_eq!(
             envs.iter().filter(|&&e| e == name).count(),
             2,
@@ -295,6 +336,15 @@ fn sweep_manifest_covers_the_whole_env_grid() {
         .and_then(|t| t.as_str())
         .unwrap()
         .ends_with("campus.csv"));
+    // Composite cells record their child spec verbatim (preset unexpanded).
+    let compose_cell = arr
+        .iter()
+        .find(|c| c.get("env").unwrap().as_str() == Some("compose"))
+        .unwrap();
+    assert_eq!(
+        compose_cell.get("env_compose").and_then(|t| t.as_str()),
+        Some("diurnal")
+    );
     let columns = manifest.get("columns").and_then(|c| c.as_arr()).unwrap();
     assert!(columns.iter().any(|c| c.as_str() == Some("regret")));
 }

@@ -92,6 +92,17 @@ fn check_pair(pspec: &policy::PolicySpec, espec: &env::EnvSpec, seed: u64, warm:
     cfg.env.trace_path = common::campus_fixture();
     cfg.env.avail_p_drop = 0.35; // make the candidate set actually move
     cfg.env.avail_p_join = 0.3;
+    if espec.id == EnvKind::Composite {
+        // Rotate the child spec with the seed so the cross-product also
+        // covers the scenario presets, and turn correlated shadowing on
+        // so the merged gain field runs under the invariants too.
+        cfg.env.compose = match seed % 3 {
+            0 => "flashcrowd".into(),
+            1 => "diurnal".into(),
+            _ => "outage".into(),
+        };
+        cfg.env.shadow_std = 0.2;
+    }
     cfg.control.warm_start = warm;
     cfg.validate().unwrap_or_else(|e| panic!("{tag}: bad scenario config: {e:#}"));
 
